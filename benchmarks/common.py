@@ -1,0 +1,107 @@
+"""Shared benchmark infrastructure: cached profiles, workload factories,
+and the standard experiment grid (paper §6.1)."""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.core.carbon import CarbonModel
+from repro.core.kvstore import KVStore
+from repro.core.policies import POLICIES
+from repro.core.profiler import Profile, run_profiler
+from repro.serving.engine import ServingEngine
+from repro.serving.perfmodel import SERVING_MODELS, ServingModel
+from repro.workloads.conversations import ConversationWorkload
+from repro.workloads.documents import DocumentWorkload
+from repro.workloads.traces import make_poisson_arrivals
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "results")
+GRIDS = ["FR", "FI", "ES", "CISO"]
+TASKS = {
+    "conversation": dict(policy="lcs_chat",
+                         factory=lambda s: ConversationWorkload(seed=s)),
+    "doc_a04": dict(policy="lcs_doc",
+                    factory=lambda s: DocumentWorkload(seed=s,
+                                                       zipf_alpha=0.4)),
+    "doc_a07": dict(policy="lcs_doc",
+                    factory=lambda s: DocumentWorkload(seed=s,
+                                                       zipf_alpha=0.7)),
+}
+# profiled operating ranges (rates scaled to each platform's capacity)
+RATE_GRID = {
+    ("llama3-70b", "conversation"): [0.2, 0.6, 1.0, 1.3, 1.6],
+    ("llama3-70b", "doc_a04"): [0.1, 0.25, 0.45, 0.65],
+    ("llama3-70b", "doc_a07"): [0.1, 0.25, 0.45, 0.65],
+    ("llama3-8b", "conversation"): [0.5, 1.5, 2.5, 3.5, 4.5],
+    ("llama3-8b", "doc_a04"): [0.3, 0.8, 1.5, 2.2],
+    ("llama3-8b", "doc_a07"): [0.3, 0.8, 1.5, 2.2],
+}
+SIZE_GRID = {"llama3-70b": [0, 1, 2, 4, 8, 12, 16],
+             "llama3-8b": [0, 1, 2, 4, 6, 8]}
+WARMUP = {"conversation": 12000, "doc_a04": 6000, "doc_a07": 6000}
+
+CARBON = CarbonModel()
+
+
+def task_name_for_slo(task: str) -> str:
+    return task if task == "conversation" else "document"
+
+
+@functools.lru_cache(maxsize=None)
+def get_profile(model_name: str, task: str) -> Profile:
+    m = SERVING_MODELS[model_name]
+    t = TASKS[task]
+    return run_profiler(
+        m, task_name_for_slo(task), t["factory"], CARBON,
+        rates=RATE_GRID[(model_name, task)], sizes_tb=SIZE_GRID[model_name],
+        warmup_prompts=WARMUP[task], policy=t["policy"])
+
+
+def measure_cell(model_name: str, task: str, *, cache_tb: float,
+                 rate: float, ci: float, policy: str | None = None,
+                 warm: int | None = None, n_seconds: float = 400.0,
+                 seed: int = 1, hw=None):
+    """One steady-state measurement (used by Figs 3, 5-8, 15, 19, 20)."""
+    m = SERVING_MODELS[model_name]
+    carbon = CarbonModel(hw=hw) if hw is not None else CARBON
+    t = TASKS[task]
+    policy = policy or t["policy"]
+    store = KVStore(cache_tb * 1e12, POLICIES[policy], m.kv_bytes_per_token)
+    eng = ServingEngine(m, store, carbon)
+    wl = t["factory"](seed)
+    warm = WARMUP[task] if warm is None else warm
+    n_meas = max(int(rate * n_seconds), 150)
+    arr = make_poisson_arrivals(np.full(96, rate), seed=seed + 1,
+                                max_requests=warm + n_meas)
+    reqs = [wl.sample(tt) for tt in arr]
+    eng.warm(reqs[:warm])
+    store.stats.lookups = store.stats.hits = 0
+    store.stats.hit_tokens = store.stats.lookup_tokens = 0
+    res = eng.run(reqs[warm:warm + n_meas], ci_fn=lambda _: ci,
+                  cache_tb=cache_tb)
+    return res
+
+
+def save_result(name: str, payload: Dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.time() - self.t0
+
+    @property
+    def us_per_call(self) -> float:
+        return self.elapsed * 1e6

@@ -1,0 +1,39 @@
+"""Fig 11: profiler heatmaps — TTFT, TPOT and carbon savings over
+(request rate × cache size) for both tasks (ES grid)."""
+from __future__ import annotations
+
+from repro.core.carbon import GRID_CI
+
+from benchmarks.common import CARBON, get_profile, save_result
+
+
+def run():
+    out = []
+    payload = {}
+    for task in ["conversation", "doc_a04"]:
+        prof = get_profile("llama3-70b", task)
+        grid = []
+        base = {}
+        for r in prof.rates:
+            base[r] = prof.cells[(r, 0)].carbon_per_req_g(GRID_CI["ES"],
+                                                          CARBON)
+        for (r, s), cell in sorted(prof.cells.items()):
+            saving = base[r] / max(
+                cell.carbon_per_req_g(GRID_CI["ES"], CARBON), 1e-12)
+            grid.append({"rate": r, "cache_tb": s,
+                         "avg_ttft": cell.avg_ttft,
+                         "avg_tpot": cell.avg_tpot,
+                         "slo_frac": cell.slo_frac,
+                         "carbon_saving_ratio": saving})
+        payload[task] = grid
+        best = max(grid, key=lambda g: g["carbon_saving_ratio"])
+        out.append((f"fig11/{task}/max_carbon_saving_ratio",
+                    best["carbon_saving_ratio"],
+                    f"at rate={best['rate']} size={best['cache_tb']}TB"))
+        hi_rate = max(prof.rates)
+        big = [g for g in grid if g["rate"] == hi_rate]
+        out.append((f"fig11/{task}/ttft_improves_with_size",
+                    float(big[-1]["avg_ttft"] < big[0]["avg_ttft"]),
+                    "larger cache -> lower TTFT at peak rate"))
+    save_result("fig11_profile_heatmaps", payload)
+    return out

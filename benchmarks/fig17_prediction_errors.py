@@ -1,0 +1,45 @@
+"""Fig 17: impact of predictor/profiler errors — GreenCache with real
+predictors vs an oracle given groundtruth rate/CI. Paper: errors cost
+≤ ~0.8 % of carbon savings on average. Also reports predictor MAPEs
+(paper §6.5: load 4.3 %; CI 6.8-15.3 %)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.predictors import CIPredictor, LoadPredictor, mape
+from repro.workloads.traces import azure_rate_trace, ci_trace
+
+from benchmarks.common import GRIDS, save_result
+from benchmarks.fig12_carbon_slo import run_one
+
+
+def run():
+    out = []
+    payload = {}
+    # predictor MAPEs
+    hist = azure_rate_trace(1.6, days=3, seed=0, noise=0.04)
+    truth = azure_rate_trace(1.6, days=1, seed=9, noise=0.04)
+    load_mape = mape(LoadPredictor().fit(hist).predict(24), truth)
+    out.append(("fig17/load_mape", load_mape, "paper: 0.043"))
+    for grid in GRIDS:
+        h = ci_trace(grid, days=6, seed=1)
+        t = ci_trace(grid, days=1, seed=7)
+        m = mape(CIPredictor().fit(h).predict(24), t)
+        payload[f"ci_mape_{grid}"] = m
+        out.append((f"fig17/ci_mape_{grid}", m, "paper: 0.068-0.153"))
+
+    # end-to-end: predicted vs oracle decisions
+    deltas = []
+    for grid in ["FR", "CISO"]:
+        pred = run_one("llama3-70b", "conversation", grid, "greencache")
+        orac = run_one("llama3-70b", "conversation", grid, "oracle")
+        d = (pred.carbon_per_request_g - orac.carbon_per_request_g) \
+            / max(orac.carbon_per_request_g, 1e-12)
+        deltas.append(d)
+        out.append((f"fig17/{grid}/carbon_penalty_vs_oracle", d,
+                    "prediction-error cost (paper: <1%)"))
+        payload[f"penalty_{grid}"] = d
+    payload["load_mape"] = load_mape
+    save_result("fig17_prediction_errors", payload)
+    out.append(("fig17/avg_penalty", float(np.mean(deltas)), "avg"))
+    return out

@@ -1,0 +1,46 @@
+"""Fig 18: carbon savings vs cache-resize interval (1h default; longer
+intervals must hold a larger size for the whole interval, reducing
+savings)."""
+from __future__ import annotations
+
+from repro.core.controller import GreenCacheController
+from repro.serving.perfmodel import SERVING_MODELS
+from repro.workloads.traces import azure_rate_trace, ci_trace
+
+from benchmarks.common import (CARBON, TASKS, WARMUP, get_profile,
+                               save_result)
+
+INTERVALS = [1, 2, 4, 8]
+
+
+def run():
+    m = SERVING_MODELS["llama3-70b"]
+    prof = get_profile("llama3-70b", "conversation")
+    rates = azure_rate_trace(1.6, seed=3)
+    out = []
+    rows = []
+    for grid in ["FR", "CISO"]:
+        cis = ci_trace(grid, seed=4)
+        full = GreenCacheController(
+            m, prof, CARBON, "conversation", mode="full",
+            policy="lcs_chat", warm_requests=WARMUP["conversation"],
+            max_requests_per_hour=1000).run_day(
+                TASKS["conversation"]["factory"], rates, cis)
+        for iv in INTERVALS:
+            gc = GreenCacheController(
+                m, prof, CARBON, "conversation", mode="greencache",
+                policy="lcs_chat", warm_requests=WARMUP["conversation"],
+                resize_interval_h=iv, max_requests_per_hour=1000).run_day(
+                    TASKS["conversation"]["factory"], rates, cis)
+            saving = 1 - gc.carbon_per_request_g / full.carbon_per_request_g
+            rows.append({"grid": grid, "interval_h": iv, "saving": saving,
+                         "avg_cache_tb": gc.avg_cache_tb})
+            out.append((f"fig18/{grid}/interval{iv}h/saving", saving,
+                        f"cache={gc.avg_cache_tb:.1f}TB"))
+    save_result("fig18_resize_interval", {"rows": rows})
+    for grid in ["FR", "CISO"]:
+        g = [r for r in rows if r["grid"] == grid]
+        out.append((f"fig18/{grid}/longer_interval_not_better",
+                    float(g[0]["saving"] >= g[-1]["saving"] - 0.02),
+                    "1h >= 8h savings"))
+    return out

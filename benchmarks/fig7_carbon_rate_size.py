@@ -1,0 +1,51 @@
+"""Fig 7: per-request carbon (a) vs request rate in the ES grid, and
+(b) vs cache size across grid average CIs (Takeaways 4-5)."""
+from __future__ import annotations
+
+from repro.core.carbon import GRID_CI
+
+from benchmarks.common import measure_cell, save_result
+
+
+def run():
+    # (a) rate sweep, ES grid, 16 TB vs none
+    rate_rows = []
+    for rate in [0.4, 0.8, 1.2, 1.6]:
+        nc = measure_cell("llama3-70b", "conversation", cache_tb=0,
+                          rate=rate, ci=GRID_CI["ES"])
+        c = measure_cell("llama3-70b", "conversation", cache_tb=16,
+                         rate=rate, ci=GRID_CI["ES"])
+        rate_rows.append({"rate": rate,
+                          "carbon_no_cache": nc.carbon_per_request_g,
+                          "carbon_cached": c.carbon_per_request_g,
+                          "ratio": c.carbon_per_request_g
+                          / nc.carbon_per_request_g})
+    # (b) size sweep × 4 grids
+    size_rows = []
+    for grid in ["FR", "FI", "ES", "CISO"]:
+        for s in [0, 1, 4, 8, 16]:
+            r = measure_cell("llama3-70b", "conversation", cache_tb=s,
+                             rate=1.5, ci=GRID_CI[grid])
+            size_rows.append({"grid": grid, "cache_tb": s,
+                              "carbon_g": r.carbon_per_request_g,
+                              "operational_g": r.operational_g
+                              / max(r.num_requests, 1),
+                              "embodied_cache_g": r.embodied_cache_g
+                              / max(r.num_requests, 1)})
+    save_result("fig7_carbon_rate_size", {"rate_rows": rate_rows,
+                                          "size_rows": size_rows})
+    out = []
+    for r in rate_rows:
+        out.append((f"fig7a/rate{r['rate']}/cached_over_nocache",
+                    r["ratio"], "ES grid"))
+    out.append(("fig7a/savings_grow_with_rate",
+                float(rate_rows[-1]["ratio"] < rate_rows[0]["ratio"]),
+                "Takeaway 4 reproduced"))
+    by_grid = {}
+    for r in size_rows:
+        if r["cache_tb"] in (0, 16):
+            by_grid.setdefault(r["grid"], {})[r["cache_tb"]] = r["carbon_g"]
+    for g, d in by_grid.items():
+        out.append((f"fig7b/{g}/16tb_ratio", d[16] / d[0],
+                    "vs no-cache at grid-average CI"))
+    return out

@@ -1,0 +1,50 @@
+"""Fig 8: (a) carbon savings from a 16 TB cache across 12 grids (ratio < 1
+means reduction); (b) savings over a day in the CISO grid as CI varies.
+Paper anchors: FR ≈ +16.5 %, MISO ≈ −7.5 %."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.carbon import FIG8_GRIDS, GRID_CI
+from repro.workloads.traces import ci_trace
+
+from benchmarks.common import measure_cell, save_result
+
+
+def run():
+    rows = []
+    # measure once per CI (engine sim is CI-independent in perf terms)
+    nc = measure_cell("llama3-70b", "conversation", cache_tb=0, rate=1.5,
+                      ci=1.0)
+    c16 = measure_cell("llama3-70b", "conversation", cache_tb=16, rate=1.5,
+                       ci=1.0)
+
+    def carbon_at(res, ci):
+        op = res.operational_g / 1.0 * ci          # op measured at CI=1
+        return (op + res.embodied_cache_g + res.embodied_compute_g) \
+            / max(res.num_requests, 1)
+
+    for grid in FIG8_GRIDS:
+        ci = GRID_CI[grid]
+        ratio = carbon_at(c16, ci) / carbon_at(nc, ci)
+        rows.append({"grid": grid, "ci": ci, "ratio_16tb": ratio})
+
+    # (b) CISO day: hourly CI trace
+    ciso = ci_trace("CISO", days=1, seed=0)
+    day = [{"hour": h, "ci": float(ciso[h]),
+            "ratio_16tb": carbon_at(c16, float(ciso[h]))
+            / carbon_at(nc, float(ciso[h]))} for h in range(24)]
+    save_result("fig8_grids", {"grids": rows, "ciso_day": day})
+
+    out = [(f"fig8a/{r['grid']}/ratio", r["ratio_16tb"],
+            f"CI={r['ci']:.0f}") for r in rows]
+    fr = next(r for r in rows if r["grid"] == "FR")["ratio_16tb"]
+    miso = next(r for r in rows if r["grid"] == "MISO")["ratio_16tb"]
+    out.append(("fig8a/FR_increases_carbon", float(fr > 1.0),
+                "paper: +16.5%"))
+    out.append(("fig8a/MISO_decreases_carbon", float(miso < 1.0),
+                "paper: -7.5%"))
+    ratios = [d["ratio_16tb"] for d in day]
+    out.append(("fig8b/ciso_daily_swing", max(ratios) - min(ratios),
+                "cache benefit swings within a day"))
+    return out

@@ -1,0 +1,48 @@
+"""Roofline table from the multi-pod dry-run artifacts
+(experiments/dryrun.json): the three terms, dominant bottleneck, and
+MODEL_FLOPS/HLO_FLOPs per (arch × shape × mesh). See EXPERIMENTS.md
+§Roofline."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import save_result
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "dryrun.json")
+
+
+def load():
+    if not os.path.exists(DRYRUN):
+        return []
+    with open(DRYRUN) as f:
+        return json.load(f)
+
+
+def run():
+    recs = [r for r in load() if "error" not in r]
+    out = []
+    if not recs:
+        return [("roofline/dryrun_missing", 0.0,
+                 "run python -m repro.launch.dryrun first")]
+    single = [r for r in recs if r["mesh"] == "single"]
+    multi = [r for r in recs if r["mesh"] == "multi"]
+    out.append(("roofline/combos_single_ok", float(len(single)),
+                "of 40 (arch x shape)"))
+    out.append(("roofline/combos_multi_ok", float(len(multi)),
+                "of 40 — multi-pod 512-chip mesh lowers"))
+    dom = {}
+    for r in single:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+        key = f"roofline/{r['arch']}/{r['shape']}"
+        tot = r["compute_s"] + 1e-30
+        out.append((key + "/dominant_term_s",
+                    r[f"{r['dominant']}_s"],
+                    f"{r['dominant']}-bound; useful_flops_ratio="
+                    f"{r['useful_flops_ratio']:.2f}"))
+    for k, v in sorted(dom.items()):
+        out.append((f"roofline/dominant_{k}_count", float(v),
+                    "single-pod baselines"))
+    save_result("roofline_report", {"records": recs})
+    return out

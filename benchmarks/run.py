@@ -1,0 +1,64 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,value,derived`` CSV rows (value column doubles as
+us_per_call for the *_bench_time rows) and saves JSON payloads under
+experiments/results/.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig8,table3]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig3_context_length",
+    "fig4_context_distribution",
+    "fig5_request_rate",
+    "fig6_cache_size",
+    "fig7_carbon_rate_size",
+    "fig8_grids",
+    "fig11_profile_heatmaps",
+    "fig12_carbon_slo",
+    "table3_hit_rate",
+    "fig15_ablation_adaptive",
+    "fig16_solver_overhead",
+    "fig17_prediction_errors",
+    "fig18_resize_interval",
+    "fig19_ssd_lifetime",
+    "fig20_ssd_embodied",
+    "roofline_report",
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    selected = [m for m in MODULES
+                if not args.only or any(s in m
+                                        for s in args.only.split(","))]
+    print("name,value,derived")
+    failures = 0
+    for name in selected:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"{name}/ERROR,nan,{type(e).__name__}: {str(e)[:120]}")
+            failures += 1
+            continue
+        dt = time.time() - t0
+        for metric, value, derived in rows:
+            print(f"{metric},{value:.6g},{derived}")
+        print(f"{name}/_bench_time,{dt * 1e6:.0f},us_per_call "
+              f"(whole benchmark)")
+        sys.stdout.flush()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,39 @@
+"""Table 3: token hit rates of FIFO / LRU / LCS across cache sizes and
+tasks. Paper anchors (ShareGPT, LCS): 1TB 0.08, 2TB 0.17, 16TB 0.71; LCS
+outperforms LRU/FIFO especially at small sizes."""
+from __future__ import annotations
+
+from benchmarks.common import measure_cell, save_result
+
+SIZES = [1, 2, 4, 8, 16]
+POLS = {"fifo": "fifo", "lru": "lru"}
+TASK_POLS = {"conversation": "lcs_chat", "doc_a04": "lcs_doc",
+             "doc_a07": "lcs_doc"}
+RATE = {"conversation": 1.5, "doc_a04": 0.4, "doc_a07": 0.4}
+
+
+def run():
+    table = {}
+    out = []
+    for task in ["conversation", "doc_a04", "doc_a07"]:
+        for pol_name in ["fifo", "lru", "lcs"]:
+            policy = TASK_POLS[task] if pol_name == "lcs" else pol_name
+            for size in SIZES:
+                r = measure_cell("llama3-70b", task, cache_tb=size,
+                                 rate=RATE[task], ci=0.0, policy=policy,
+                                 n_seconds=300)
+                table[f"{task}/{pol_name}/{size}"] = r.token_hit_rate
+    save_result("table3_hit_rate", table)
+    for size in SIZES:
+        lcs = table[f"conversation/lcs/{size}"]
+        lru = table[f"conversation/lru/{size}"]
+        fifo = table[f"conversation/fifo/{size}"]
+        out.append((f"table3/chat/{size}tb/lcs", lcs,
+                    f"lru={lru:.2f} fifo={fifo:.2f}"))
+    wins = sum(1 for k, v in table.items()
+               if "/lcs/" in k and v + 1e-9 >=
+               table[k.replace("/lcs/", "/lru/")] - 0.02)
+    total = sum(1 for k in table if "/lcs/" in k)
+    out.append(("table3/lcs_geq_lru_fraction", wins / total,
+                "LCS >= LRU in most cells (paper: vast majority)"))
+    return out

@@ -1,0 +1,30 @@
+"""End-to-end serving driver: a 24-hour GreenCache day in the FR grid —
+profiles the task, forecasts load/CI hourly, solves the ILP, resizes the
+cache, and reports carbon vs the Full-Cache and No-Cache baselines
+(paper Figs 12-14).
+
+    PYTHONPATH=src python examples/serve_day.py [--grid FR] [--task conversation]
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grid", default="FR")
+    ap.add_argument("--task", default="conversation")
+    a = ap.parse_args()
+    results = {}
+    for mode in ["none", "full", "greencache"]:
+        print(f"\n### mode={mode}")
+        results[mode] = serve_main([
+            "--model", "llama3-70b", "--task", a.task, "--grid", a.grid,
+            "--mode", mode, "--warmup", "10000"])
+    gc, fc = results["greencache"], results["full"]
+    red = 1 - gc.carbon_per_request_g / fc.carbon_per_request_g
+    print(f"\nGreenCache vs Full-Cache: {red * 100:.1f}% carbon reduction "
+          f"at {gc.slo_attainment * 100:.1f}% SLO attainment "
+          f"(paper: 15.1% avg in FR, >90% SLO)")

@@ -1,0 +1,96 @@
+"""Generate the §Dry-run / §Roofline / §Perf markdown tables for
+EXPERIMENTS.md from experiments/*.json.
+
+    PYTHONPATH=src python experiments/make_report.py > experiments/report.md
+"""
+import json
+import os
+import sys
+
+HERE = os.path.dirname(__file__)
+
+
+def load(name):
+    p = os.path.join(HERE, name)
+    if not os.path.exists(p):
+        return []
+    with open(p) as f:
+        return json.load(f)
+
+
+def fmt(x):
+    return f"{x:.3g}" if isinstance(x, float) else str(x)
+
+
+def dryrun_tables():
+    recs = [r for r in load("dryrun.json") if "error" not in r]
+    single = sorted([r for r in recs if r["mesh"] == "single"],
+                    key=lambda r: (r["arch"], r["shape"]))
+    multi = [r for r in recs if r["mesh"] == "multi"]
+    print(f"### §Dry-run summary\n")
+    print(f"- single-pod (16×16 = 256 chips): **{len(single)}/40** "
+          f"(arch × shape) lower + compile OK")
+    print(f"- multi-pod (2×16×16 = 512 chips): **{len(multi)}/40** OK — "
+          f"the `pod` axis shards\n")
+    print("| arch | shape | compile_s | temp GB/dev | args GB/dev | "
+          "collectives (count) |")
+    print("|---|---|---|---|---|---|")
+    for r in single:
+        cc = r.get("collective_counts", {})
+        ccs = " ".join(f"{k.split('-')[1] if '-' in k else k}:{v}"
+                       for k, v in sorted(cc.items()))
+        tmp = r.get("temp_size_in_bytes", 0) / 1e9
+        arg = r.get("argument_size_in_bytes", 0) / 1e9
+        print(f"| {r['arch']} | {r['shape']} | {r['compile_s']} | "
+              f"{tmp:.2f} | {arg:.2f} | {ccs} |")
+    print()
+
+    print("### §Roofline (single-pod baselines, per-device terms)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant "
+          "| MODEL_FLOPS/HLO | note |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in single:
+        note = ""
+        if r["shape"] == "long_500k" and r["arch"] not in (
+                "rwkv6-1.6b", "recurrentgemma-2b", "h2o-danube-1.8b"):
+            note = "SWA long-context variant"
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+              f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+              f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | {note} |")
+    print()
+
+
+def hillclimb_table():
+    recs = load("hillclimb.json")
+    if not recs:
+        return
+    print("### §Perf iteration measurements\n")
+    print("| pair | variant | compute_s | memory_s | collective_s | "
+          "dominant |")
+    print("|---|---|---|---|---|---|")
+    for r in recs:
+        print(f"| {r['pair']} | {r['variant']} | {r['compute_s']:.3e} | "
+              f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+              f"{r['dominant']} |")
+    print()
+
+
+def bench_summary():
+    rows = load("results/fig12_carbon_slo.json")
+    if not rows:
+        return
+    rows = rows["rows"]
+    print("### Main-evaluation summary (Fig 12)\n")
+    print("| model | task | grid | mode | carbon g/req | SLO | cache TB |")
+    print("|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['model']} | {r['task']} | {r['grid']} | {r['mode']} | "
+              f"{r['carbon_per_req_g']:.4f} | {r['slo']:.3f} | "
+              f"{r['avg_cache_tb']:.1f} |")
+    print()
+
+
+if __name__ == "__main__":
+    dryrun_tables()
+    hillclimb_table()
+    bench_summary()

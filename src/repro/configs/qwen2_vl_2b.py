@@ -1,0 +1,22 @@
+"""qwen2-vl-2b — VLM language backbone with M-RoPE (temporal/h/w rotary
+sections) and dynamic-resolution vision tokens. The ViT encoder + projector is
+a stub: ``input_specs`` supplies precomputed patch embeddings.
+[arXiv:2409.12191]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151936,
+    activation="silu",
+    gated_mlp=True,
+    mrope=True,
+    vision_tokens=1024,
+    source="arXiv:2409.12191",
+)

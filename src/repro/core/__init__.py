@@ -1,0 +1,9 @@
+"""GreenCache core — the paper's contribution: carbon-aware KV cache
+resource management (carbon model, cache store + LCS policy, profiler,
+predictors, ILP solver, controller)."""
+from repro.core.carbon import CarbonModel, GRID_CI, HardwareSpec
+from repro.core.kvstore import CacheEntry, KVStore
+from repro.core.policies import POLICIES, lcs_score
+
+__all__ = ["CarbonModel", "HardwareSpec", "GRID_CI", "KVStore", "CacheEntry",
+           "POLICIES", "lcs_score"]

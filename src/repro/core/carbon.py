@@ -1,0 +1,91 @@
+"""Carbon accounting (paper §2.3, §3.2.1 — Eqs. 1–5).
+
+    C = E·CI  +  S_alloc·(T/LT)·C_e,SSD_unit  +  Σ_comp (T/LT)·C_e,comp
+
+Units: energy kWh, CI gCO₂e/kWh, embodied carbon kgCO₂e (converted to g),
+time seconds, storage TB.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+SECONDS_PER_YEAR = 365.25 * 24 * 3600
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """Paper Table 1 platform (4×L40 server) by default; TPU v5e variant
+    provided for the hardware-adaptation scenario."""
+    name: str = "l40-server"
+    embodied_gpu_kg: float = 106.4          # 4× NVIDIA L40
+    embodied_cpu_kg: float = 9.3            # AMD 7453
+    embodied_mem_kg: float = 30.8           # 512 GB DDR4
+    ssd_kg_per_tb: float = 30.0             # ACT model (sensitivity: 30–90)
+    lifetime_years: float = 5.0
+    ssd_lifetime_years: float = 5.0
+    max_ssd_tb: float = 16.0
+    # operational power (W)
+    gpu_power_max_w: float = 1200.0         # 4× 300 W TDP
+    gpu_power_idle_w: float = 420.0         # serving-loaded baseline
+    cpu_power_w: float = 225.0
+    mem_power_w: float = 40.0
+    ssd_power_w_per_tb: float = 1.5         # enterprise NVMe ~12 W / 8 TB
+
+    @property
+    def embodied_compute_kg(self) -> float:
+        return self.embodied_gpu_kg + self.embodied_cpu_kg + self.embodied_mem_kg
+
+
+TPU_V5E_SPEC = HardwareSpec(
+    name="tpu-v5e-4",
+    embodied_gpu_kg=70.0,                   # 4× v5e chips + board (ACT-style)
+    embodied_cpu_kg=9.3, embodied_mem_kg=30.8,
+    gpu_power_max_w=4 * 220.0, gpu_power_idle_w=4 * 60.0,
+)
+
+# 2024 grid average carbon intensities, gCO2e/kWh (paper Fig 2a + Fig 8)
+GRID_CI: Dict[str, float] = {
+    "FR": 33.0, "SE": 45.0, "FI": 79.0, "ES": 124.0, "GB": 211.0,
+    "CISO": 230.0, "NL": 268.0, "DE": 344.0, "PJM": 396.0, "TX": 431.0,
+    "PL": 662.0, "MISO": 485.0,
+}
+
+# ordering used for the 12-grid sweep in Fig 8 (ascending CI)
+FIG8_GRIDS = sorted(GRID_CI, key=GRID_CI.get)
+
+
+@dataclass
+class CarbonModel:
+    hw: HardwareSpec = field(default_factory=HardwareSpec)
+
+    # ---- Eq (2): operational ----
+    def operational_g(self, energy_kwh: float, ci: float) -> float:
+        return energy_kwh * ci
+
+    # ---- Eq (4): cache (SSD) embodied, proportional to allocation ----
+    def cache_embodied_g(self, alloc_tb: float, seconds: float) -> float:
+        lt = self.hw.ssd_lifetime_years * SECONDS_PER_YEAR
+        return alloc_tb * (seconds / lt) * self.hw.ssd_kg_per_tb * 1000.0
+
+    # ---- non-storage embodied, amortized over lifetime ----
+    def compute_embodied_g(self, seconds: float) -> float:
+        lt = self.hw.lifetime_years * SECONDS_PER_YEAR
+        return (seconds / lt) * self.hw.embodied_compute_kg * 1000.0
+
+    # ---- Eq (5): total ----
+    def total_g(self, energy_kwh: float, ci: float, alloc_tb: float,
+                seconds: float) -> float:
+        return (self.operational_g(energy_kwh, ci)
+                + self.cache_embodied_g(alloc_tb, seconds)
+                + self.compute_embodied_g(seconds))
+
+    # ---- power → energy helper ----
+    def energy_kwh(self, gpu_util: float, seconds: float,
+                   ssd_tb: float = 0.0) -> float:
+        hw = self.hw
+        gpu_w = hw.gpu_power_idle_w + gpu_util * (hw.gpu_power_max_w
+                                                  - hw.gpu_power_idle_w)
+        w = gpu_w + hw.cpu_power_w + hw.mem_power_w \
+            + ssd_tb * hw.ssd_power_w_per_tb
+        return w * seconds / 3.6e6

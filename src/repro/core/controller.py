@@ -1,0 +1,193 @@
+"""GreenCache controller (paper Fig. 10): ties together the profiler,
+predictors, constraint solver and cache manager into the hourly
+reconfiguration loop, and runs the 24-hour evaluation.
+
+Comparison points (paper §6.1): No-Cache, Full-Cache, GreenCache
+(+ "LRU + Optimal" for the §6.3.1 ablation: adaptive sizing with the
+original LRU replacement policy).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.carbon import CarbonModel
+from repro.core.kvstore import KVStore
+from repro.core.policies import POLICIES
+from repro.core.predictors import CIPredictor, LoadPredictor
+from repro.core.profiler import Profile, _slo_for
+from repro.core.solver import SolveResult, solve_cache_schedule
+from repro.serving.engine import ServingEngine, SimResult
+from repro.serving.perfmodel import ServingModel
+from repro.workloads.traces import make_poisson_arrivals
+
+
+@dataclass
+class HourRecord:
+    hour: int
+    cache_tb: float
+    rate: float
+    ci: float
+    carbon_g: float
+    operational_g: float
+    embodied_cache_g: float
+    embodied_compute_g: float
+    p90_ttft: float
+    p90_tpot: float
+    slo_frac: float
+    hit_rate: float
+    num_requests: int
+    solve_time_s: float = 0.0
+    pred_rate: float = 0.0
+    pred_ci: float = 0.0
+
+
+@dataclass
+class RunResult:
+    name: str
+    hours: List[HourRecord]
+
+    @property
+    def total_carbon_g(self) -> float:
+        return sum(h.carbon_g for h in self.hours)
+
+    @property
+    def carbon_per_request_g(self) -> float:
+        n = sum(h.num_requests for h in self.hours)
+        return self.total_carbon_g / max(n, 1)
+
+    @property
+    def slo_attainment(self) -> float:
+        n = sum(h.num_requests for h in self.hours)
+        ok = sum(h.slo_frac * h.num_requests for h in self.hours)
+        return ok / max(n, 1)
+
+    @property
+    def avg_cache_tb(self) -> float:
+        return float(np.mean([h.cache_tb for h in self.hours]))
+
+
+class GreenCacheController:
+    """mode: "greencache" (predictive ILP sizing), "full" (max cache),
+    "none" (no cache), "oracle" (ILP with groundtruth rate/CI)."""
+
+    def __init__(self, model: ServingModel, profile: Profile,
+                 carbon: CarbonModel, task: str, *,
+                 mode: str = "greencache", policy: str = "lcs",
+                 sizes_tb: Optional[Sequence[float]] = None,
+                 horizon: int = 24, resize_interval_h: int = 1,
+                 warm_requests: int = 20000, seed: int = 0,
+                 max_requests_per_hour: int = 1200,
+                 rho_margin: float = 0.04):
+        self.model = model
+        self.profile = profile
+        self.carbon = carbon
+        self.task = task
+        self.mode = mode
+        self.policy = policy
+        self.sizes = list(sizes_tb) if sizes_tb is not None else \
+            list(profile.sizes)
+        self.max_requests_per_hour = max_requests_per_hour
+        self.rho_margin = rho_margin
+        self.horizon = horizon
+        self.resize_interval_h = resize_interval_h
+        self.warm_requests = warm_requests
+        self.seed = seed
+        self.slo = _slo_for(model.name, task)
+
+    # ------------------------------------------------------------------ #
+    def run_day(self, workload_factory: Callable, rate_trace: np.ndarray,
+                ci_trace: np.ndarray, *,
+                history_days: int = 3,
+                rate_history: Optional[np.ndarray] = None,
+                ci_history: Optional[np.ndarray] = None) -> RunResult:
+        """Simulate 24 h (len(rate_trace) hours) of serving with hourly
+        decisions. Histories default to noisy repeats of the day (the paper
+        feeds 3 days of history to the predictors)."""
+        H = len(rate_trace)
+        rng = np.random.default_rng(self.seed)
+        if rate_history is None:
+            rate_history = np.concatenate(
+                [rate_trace * (1 + 0.05 * rng.standard_normal(H))
+                 for _ in range(history_days)])
+        if ci_history is None:
+            ci_history = np.concatenate(
+                [ci_trace * (1 + 0.05 * rng.standard_normal(H))
+                 for _ in range(history_days)])
+
+        load_pred = LoadPredictor().fit(rate_history)
+        ci_pred = CIPredictor().fit(ci_history)
+
+        max_tb = self.model.max_cache_tb
+        store = KVStore(max_tb * 1e12, POLICIES[self.policy],
+                        self.model.kv_bytes_per_token)
+        engine = ServingEngine(self.model, store, self.carbon)
+        wl = workload_factory(self.seed)
+
+        # warm the cache at full size, then resize to the first decision
+        arr0 = make_poisson_arrivals(np.full(6, max(rate_trace.mean(), 0.2)),
+                                     seed=self.seed + 5,
+                                     max_requests=self.warm_requests)
+        engine.warm([wl.sample(t - arr0[-1] - 1.0) for t in arr0])
+
+        hours: List[HourRecord] = []
+        current_tb = max_tb if self.mode != "none" else 0.0
+        pending_schedule: List[float] = []
+
+        for h in range(H):
+            t_solve = 0.0
+            pred_rate = pred_ci = 0.0
+            if self.mode in ("greencache", "oracle", "lru_optimal") \
+                    and h % self.resize_interval_h == 0:
+                if self.mode == "oracle":
+                    rates = list(rate_trace[h:h + self.horizon])
+                    cis = list(ci_trace[h:h + self.horizon])
+                else:
+                    rates = list(load_pred.predict(self.horizon))
+                    cis = list(ci_pred.predict(self.horizon))
+                res = solve_cache_schedule(
+                    self.profile, rates, cis, self.slo, self.carbon,
+                    sizes_tb=self.sizes,
+                    rho=min(self.slo.rho + self.rho_margin, 0.995))
+                pending_schedule = list(res.sizes_tb)
+                t_solve = res.solve_time_s
+                pred_rate, pred_ci = rates[0], cis[0]
+            if self.mode == "full":
+                current_tb = max_tb
+            elif self.mode == "none":
+                current_tb = 0.0
+            elif pending_schedule:
+                # hold the decided size for the whole resize interval
+                # (paper §6.6.1: pick a size large enough for the interval)
+                k = min(self.resize_interval_h, len(pending_schedule))
+                current_tb = max(pending_schedule[:k])
+                pending_schedule = pending_schedule[1:]
+
+            store.resize(current_tb * 1e12, now=h * 3600.0)
+
+            # simulate this hour
+            lam = float(rate_trace[h])
+            arr = make_poisson_arrivals(
+                np.array([lam]), seed=self.seed + h,
+                max_requests=self.max_requests_per_hour)
+            reqs = [wl.sample(h * 3600.0 + t) for t in arr]
+            ci_now = float(ci_trace[h])
+            res = engine.run(reqs, ci_fn=lambda t: ci_now,
+                             cache_tb=current_tb, rate_hint=lam)
+            hours.append(HourRecord(
+                hour=h, cache_tb=current_tb, rate=lam, ci=ci_now,
+                carbon_g=res.carbon_g, operational_g=res.operational_g,
+                embodied_cache_g=res.embodied_cache_g,
+                embodied_compute_g=res.embodied_compute_g,
+                p90_ttft=res.p90("ttft"), p90_tpot=res.p90("tpot"),
+                slo_frac=res.slo_attainment(self.slo),
+                hit_rate=res.token_hit_rate, num_requests=res.num_requests,
+                solve_time_s=t_solve, pred_rate=pred_rate, pred_ci=pred_ci))
+
+            # online predictor updates (paper §5.3)
+            load_pred.update(lam)
+            ci_pred.update(ci_now)
+
+        return RunResult(self.mode, hours)

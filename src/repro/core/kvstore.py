@@ -1,0 +1,173 @@
+"""Context KV-cache store (LMCache-style) with resizable capacity and
+pluggable replacement policy.
+
+Entries are keyed by context id (conversation id or document id) and hold the
+KV cache of that context's token prefix. ``lookup`` implements token-prefix
+matching: a hit returns the number of reusable cached tokens (the entry may
+hold fewer tokens than the query prefix — partial hit).
+
+The store tracks everything the LCS policy (paper Eq. 7–9) needs: hit counts,
+accumulated hit tokens, entry size, age, conversation turn.
+
+``payload`` optionally holds a *real* stacked KV pytree (real-execution mode:
+``repro.serving.engine`` stores actual JAX arrays and restores them on hit);
+the simulation mode leaves it None and accounts bytes analytically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+TB = 1e12
+
+
+@dataclass
+class CacheEntry:
+    key: str
+    num_tokens: int                 # cached context length (tokens)
+    size_bytes: float               # KV bytes (num_tokens × kv_bytes/token)
+    created_at: float
+    last_access: float
+    hits: int = 0
+    hit_tokens: int = 0             # accumulated tokens served from this entry
+    turn: int = 1                   # conversation turn depth (chat tasks)
+    payload: Any = None             # optional real KV arrays
+
+
+@dataclass
+class KVStoreStats:
+    lookups: int = 0
+    hits: int = 0
+    hit_tokens: int = 0
+    lookup_tokens: int = 0
+    insertions: int = 0
+    evictions: int = 0
+    evicted_bytes: float = 0.0
+
+    @property
+    def token_hit_rate(self) -> float:
+        """Paper's hit-rate definition: reused tokens / total input tokens."""
+        return self.hit_tokens / self.lookup_tokens if self.lookup_tokens else 0.0
+
+    @property
+    def request_hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+
+class KVStore:
+    def __init__(self, capacity_bytes: float,
+                 policy: Callable[[CacheEntry, float], float],
+                 kv_bytes_per_token: float):
+        self.capacity_bytes = float(capacity_bytes)
+        self.policy = policy
+        self.kv_bytes_per_token = float(kv_bytes_per_token)
+        self.entries: Dict[str, CacheEntry] = {}
+        self.used_bytes = 0.0
+        self.stats = KVStoreStats()
+
+    # ------------------------------------------------------------------ #
+    def lookup(self, key: str, context_tokens: int, now: float
+               ) -> Optional[CacheEntry]:
+        """Prefix lookup: returns the entry if present (hit), updating
+        hit statistics. Reusable tokens = min(entry.num_tokens, query)."""
+        self.stats.lookups += 1
+        self.stats.lookup_tokens += context_tokens
+        e = self.entries.get(key)
+        if e is None:
+            return None
+        reused = min(e.num_tokens, context_tokens)
+        e.hits += 1
+        e.hit_tokens += reused
+        e.last_access = now
+        self.stats.hits += 1
+        self.stats.hit_tokens += reused
+        return e
+
+    def reusable_tokens(self, key: str, context_tokens: int) -> int:
+        e = self.entries.get(key)
+        return min(e.num_tokens, context_tokens) if e else 0
+
+    # ------------------------------------------------------------------ #
+    def insert(self, key: str, num_tokens: int, now: float, *,
+               turn: int = 1, payload: Any = None,
+               size_bytes: Optional[float] = None) -> Optional[CacheEntry]:
+        """Insert/extend the cache entry for ``key`` with a prefix of
+        ``num_tokens`` tokens. Evicts per policy to fit; returns the entry
+        (None if it cannot fit even after eviction). ``size_bytes`` overrides
+        the token-proportional size (state-snapshot entries of recurrent
+        archs have constant size)."""
+        size = size_bytes if size_bytes is not None \
+            else num_tokens * self.kv_bytes_per_token
+        if size > self.capacity_bytes:
+            return None
+        old = self.entries.get(key)
+        delta = size - (old.size_bytes if old else 0.0)
+        if delta > 0:
+            self._make_room(delta, now, protect=key)
+            if self.used_bytes + delta > self.capacity_bytes + 1e-6:
+                return None
+        if old:
+            if delta > 0:       # entries only grow (longer prefix cached)
+                self.used_bytes += delta
+            old.num_tokens = max(old.num_tokens, num_tokens)
+            old.size_bytes = max(old.size_bytes, size)
+            old.last_access = now
+            old.turn = max(old.turn, turn)
+            if payload is not None:
+                old.payload = payload
+            return old
+        e = CacheEntry(key=key, num_tokens=num_tokens, size_bytes=size,
+                       created_at=now, last_access=now, turn=turn,
+                       payload=payload)
+        self.entries[key] = e
+        self.used_bytes += size
+        self.stats.insertions += 1
+        return e
+
+    # ------------------------------------------------------------------ #
+    def _make_room(self, need_bytes: float, now: float,
+                   protect: Optional[str] = None):
+        if self.used_bytes + need_bytes <= self.capacity_bytes:
+            return
+        # batch eviction: free an extra ~3% so the O(n log n) sort amortizes
+        # over many inserts instead of running per-insert
+        slack = max(need_bytes, 0.03 * self.capacity_bytes)
+        target = self.capacity_bytes - slack
+        victims = sorted(
+            (e for k, e in self.entries.items() if k != protect),
+            key=lambda e: self.policy(e, now))
+        for v in victims:
+            if self.used_bytes <= target:
+                break
+            self._evict(v.key)
+
+    def _evict(self, key: str):
+        e = self.entries.pop(key)
+        self.used_bytes -= e.size_bytes
+        self.stats.evictions += 1
+        self.stats.evicted_bytes += e.size_bytes
+
+    # ------------------------------------------------------------------ #
+    def resize(self, capacity_bytes: float, now: float):
+        """GreenCache cache manager: shrink evicts lowest-score entries,
+        then spare capacity is released (paper §5.5)."""
+        self.capacity_bytes = float(capacity_bytes)
+        if self.used_bytes > self.capacity_bytes:
+            victims = sorted(self.entries.values(),
+                             key=lambda e: self.policy(e, now))
+            for v in victims:
+                if self.used_bytes <= self.capacity_bytes:
+                    break
+                self._evict(v.key)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def used_tb(self) -> float:
+        return self.used_bytes / TB
+
+    @property
+    def capacity_tb(self) -> float:
+        return self.capacity_bytes / TB
+
+    def __len__(self):
+        return len(self.entries)

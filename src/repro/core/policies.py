@@ -1,0 +1,59 @@
+"""Cache replacement policies (paper §5.5).
+
+Score = priority to KEEP; eviction removes the lowest-scoring entries.
+
+LCS (Least Carbon Savings, Eq. 7):     (#Token · #Hit) / (Size · Age)
+  chat variant (Eq. 8):                (CurTurn · #AccuToken) / (Size · Age)
+  document variant (Eq. 9):            (#Hit · AccuDocLen) / (Size · Age)
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.core.kvstore import CacheEntry
+
+EPS = 1e-9
+
+
+def fifo_score(e: CacheEntry, now: float) -> float:
+    return e.created_at                       # oldest evicted first
+
+
+def lru_score(e: CacheEntry, now: float) -> float:
+    return e.last_access
+
+
+def lfu_score(e: CacheEntry, now: float) -> float:
+    return float(e.hits)
+
+
+def _age(e: CacheEntry, now: float) -> float:
+    return max(now - e.created_at, 1.0)
+
+
+def lcs_score(e: CacheEntry, now: float) -> float:
+    """Generic LCS (Eq. 7)."""
+    return (e.hit_tokens * max(e.hits, 1)) / (e.size_bytes * _age(e, now) + EPS)
+
+
+def lcs_chat_score(e: CacheEntry, now: float) -> float:
+    """Multi-turn conversation variant (Eq. 8)."""
+    return (max(e.turn, 1) * max(e.hit_tokens, e.num_tokens)) \
+        / (e.size_bytes * _age(e, now) + EPS)
+
+
+def lcs_doc_score(e: CacheEntry, now: float) -> float:
+    """Document comprehension variant (Eq. 9)."""
+    accu_doc_len = e.num_tokens * max(e.hits, 1)
+    return (max(e.hits, 1) * accu_doc_len) \
+        / (e.size_bytes * _age(e, now) + EPS)
+
+
+POLICIES: Dict[str, Callable[[CacheEntry, float], float]] = {
+    "fifo": fifo_score,
+    "lru": lru_score,
+    "lfu": lfu_score,
+    "lcs": lcs_score,
+    "lcs_chat": lcs_chat_score,
+    "lcs_doc": lcs_doc_score,
+}

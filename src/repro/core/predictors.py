@@ -1,0 +1,159 @@
+"""Load and carbon-intensity predictors (paper §5.3, §6.1).
+
+LoadPredictor — SARIMA-lite: seasonal differencing (period 24 h) followed by
+an AR(p) model fit with least squares on the differenced series; recursive
+multi-step forecasting; hourly online updates (the paper uses pmdarima's
+SARIMA — same model class, auto-fit replaced by ridge-regularized LS).
+
+CIPredictor — EnsembleCI-lite: an ensemble of {persistence, seasonal-naive,
+seasonal-AR} forecasters combined with weights ∝ inverse recent MAPE, mirror-
+ing EnsembleCI's ensemble-selection idea [Yan+ e-Energy'25].
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Sequence
+
+import numpy as np
+
+SEASON = 24
+
+
+def _ar_fit(series: np.ndarray, p: int, ridge: float = 1e-3) -> np.ndarray:
+    """Least-squares AR(p) coefficients (with intercept appended last)."""
+    n = len(series)
+    if n <= p + 2:
+        return np.zeros(p + 1)
+    X = np.stack([series[i:n - p + i] for i in range(p)], axis=1)[:, ::-1]
+    X = np.concatenate([X, np.ones((X.shape[0], 1))], axis=1)
+    y = series[p:]
+    A = X.T @ X + ridge * np.eye(p + 1)
+    return np.linalg.solve(A, X.T @ y)
+
+
+def _ar_forecast(series: np.ndarray, coef: np.ndarray, steps: int
+                 ) -> np.ndarray:
+    p = len(coef) - 1
+    hist = list(series[-p:]) if p else []
+    out = []
+    for _ in range(steps):
+        x = np.array(hist[-p:][::-1] + [1.0]) if p else np.array([1.0])
+        v = float(x @ coef)
+        out.append(v)
+        hist.append(v)
+    return np.array(out)
+
+
+@dataclass
+class SarimaLite:
+    """Seasonal-differenced AR model: y_t - y_{t-24} ~ AR(p)."""
+    p: int = 6
+    season: int = SEASON
+    history: List[float] = field(default_factory=list)
+    _coef: np.ndarray | None = None
+
+    def fit(self, history: Sequence[float]):
+        self.history = list(history)
+        self._refit()
+        return self
+
+    def _refit(self):
+        h = np.asarray(self.history, dtype=np.float64)
+        if len(h) > self.season + self.p + 2:
+            d = h[self.season:] - h[:-self.season]
+            self._coef = _ar_fit(d, self.p)
+        else:
+            self._coef = None
+
+    def update(self, value: float):
+        """Hourly online step-ahead update (paper §5.3)."""
+        self.history.append(float(value))
+        self._refit()
+
+    def predict(self, steps: int) -> np.ndarray:
+        h = np.asarray(self.history, dtype=np.float64)
+        if self._coef is None or len(h) < self.season:
+            last = h[-1] if len(h) else 0.0
+            return np.full(steps, last)
+        d = h[self.season:] - h[:-self.season]
+        dfut = _ar_forecast(d, self._coef, steps)
+        out = []
+        hist = list(h)
+        for i in range(steps):
+            out.append(hist[-self.season] + dfut[i])
+            hist.append(out[-1])
+        return np.maximum(np.array(out), 0.0)
+
+
+class LoadPredictor(SarimaLite):
+    pass
+
+
+@dataclass
+class _Member:
+    name: str
+
+    def predict(self, history: np.ndarray, steps: int) -> np.ndarray:
+        if self.name == "persistence":
+            return np.full(steps, history[-1])
+        if self.name == "seasonal":
+            if len(history) >= SEASON:
+                seas = history[-SEASON:]
+                reps = int(np.ceil(steps / SEASON))
+                return np.tile(seas, reps)[:steps]
+            return np.full(steps, history[-1])
+        if self.name == "seasonal_ar":
+            return SarimaLite(p=4).fit(history).predict(steps)
+        raise ValueError(self.name)
+
+
+class CIPredictor:
+    """Inverse-MAPE-weighted ensemble over a rolling evaluation window."""
+
+    def __init__(self, window: int = 72):
+        self.members = [_Member("persistence"), _Member("seasonal"),
+                        _Member("seasonal_ar")]
+        self.window = window
+        self.history: List[float] = []
+        self.weights = np.ones(len(self.members)) / len(self.members)
+
+    def fit(self, history: Sequence[float]):
+        self.history = list(history)
+        self._reweight()
+        return self
+
+    def update(self, value: float):
+        self.history.append(float(value))
+        self._reweight()
+
+    def _reweight(self):
+        h = np.asarray(self.history, dtype=np.float64)
+        if len(h) < SEASON * 2 + 4:
+            return
+        # evaluate each member's 1-step-ahead error over the trailing window
+        errs = np.zeros(len(self.members))
+        start = max(SEASON + 2, len(h) - self.window)
+        for i, m in enumerate(self.members):
+            es = []
+            for t in range(start, len(h)):
+                pred = m.predict(h[:t], 1)[0]
+                denom = max(abs(h[t]), 1e-9)
+                es.append(abs(pred - h[t]) / denom)
+            errs[i] = np.mean(es) if es else 1.0
+        inv = 1.0 / np.maximum(errs, 1e-6)
+        self.weights = inv / inv.sum()
+
+    def predict(self, steps: int) -> np.ndarray:
+        h = np.asarray(self.history, dtype=np.float64)
+        if len(h) == 0:
+            return np.zeros(steps)
+        preds = np.stack([m.predict(h, steps) for m in self.members])
+        out = (self.weights[:, None] * preds).sum(axis=0)
+        return np.maximum(out, 0.0)
+
+
+def mape(pred: np.ndarray, truth: np.ndarray) -> float:
+    truth = np.asarray(truth, dtype=np.float64)
+    pred = np.asarray(pred, dtype=np.float64)[:len(truth)]
+    denom = np.maximum(np.abs(truth), 1e-9)
+    return float(np.mean(np.abs(pred - truth) / denom))

@@ -1,0 +1,151 @@
+"""Constraint solver (paper §5.4): choose the hourly cache size S_t that
+minimizes predicted total carbon subject to the global SLO-attainment
+constraint (≥ρ of requests meet TTFT and TPOT SLOs over the horizon).
+
+    argmin_{S_t}  Σ_t n_t · [ p·TTFT·CI_t  +  (TTFT/LT)·S_t·C_unit
+                              + Σ_comp (TTFT/LT)·C_comp ]
+    s.t.          Σ_t n_t·sloF(S_t, j_t)  ≥  ρ · Σ_t n_t        (per metric)
+
+This is a multiple-choice knapsack (NP-hard — paper Appendix A reduces 0-1
+KNAPSACK to it); at 1 TB × 24 h granularity it is tractable. Primary solver:
+PuLP + COIN-OR CBC (as in the paper). Fallback: exact dynamic program over
+discretized satisfied-request counts (no external solver needed).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.carbon import CarbonModel
+from repro.core.profiler import Profile
+from repro.serving.perfmodel import SLO
+
+
+@dataclass
+class SolveResult:
+    sizes_tb: List[float]             # chosen S_t per hour
+    objective_g: float
+    feasible: bool
+    solve_time_s: float
+    solver: str
+
+
+def _cell_metrics(profile: Profile, rate: float, size: float,
+                  ci: float, carbon: CarbonModel):
+    c = profile.interpolate(rate, size)
+    carbon_req = c.carbon_per_req_g(ci, carbon)
+    return carbon_req, c.slo_frac
+
+
+def solve_cache_schedule(profile: Profile, pred_rates: Sequence[float],
+                         pred_cis: Sequence[float], slo: SLO,
+                         carbon: CarbonModel, *,
+                         sizes_tb: Optional[Sequence[float]] = None,
+                         rho: Optional[float] = None,
+                         use_ilp: bool = True) -> SolveResult:
+    """pred_rates/pred_cis: per-hour forecasts over the horizon."""
+    t_start = time.time()
+    rho = rho if rho is not None else slo.rho
+    sizes = list(sizes_tb) if sizes_tb is not None else list(profile.sizes)
+    T = len(pred_rates)
+    n = np.array([max(r, 1e-3) * 3600.0 for r in pred_rates])   # requests/hr
+
+    # carbon[t][s], slo_frac[t][s]
+    C = np.zeros((T, len(sizes)))
+    F = np.zeros((T, len(sizes)))
+    for t in range(T):
+        for si, s in enumerate(sizes):
+            C[t, si], F[t, si] = _cell_metrics(
+                profile, pred_rates[t], s, pred_cis[t], carbon)
+
+    if use_ilp:
+        try:
+            return _solve_ilp(C, F, n, sizes, rho, t_start)
+        except Exception:       # CBC unavailable/failed -> exact DP
+            pass
+    return _solve_dp(C, F, n, sizes, rho, t_start)
+
+
+def _solve_ilp(C, F, n, sizes, rho, t_start) -> SolveResult:
+    import pulp
+    T, S = C.shape
+    prob = pulp.LpProblem("greencache", pulp.LpMinimize)
+    x = [[pulp.LpVariable(f"x_{t}_{s}", cat="Binary") for s in range(S)]
+         for t in range(T)]
+    prob += pulp.lpSum(n[t] * C[t][s] * x[t][s]
+                       for t in range(T) for s in range(S))
+    for t in range(T):
+        prob += pulp.lpSum(x[t]) == 1
+    prob += pulp.lpSum(n[t] * F[t][s] * x[t][s]
+                       for t in range(T) for s in range(S)) \
+        >= rho * float(n.sum())
+    status = prob.solve(pulp.PULP_CBC_CMD(msg=0))
+    feasible = pulp.LpStatus[status] == "Optimal"
+    if not feasible:
+        choice = [_best_effort(F[t], C[t]) for t in range(T)]
+    else:
+        choice = [max(range(S), key=lambda s: pulp.value(x[t][s]) or 0.0)
+                  for t in range(T)]
+    obj = float(sum(n[t] * C[t][c] for t, c in enumerate(choice)))
+    return SolveResult([sizes[c] for c in choice], obj, feasible,
+                       time.time() - t_start, "cbc")
+
+
+def _best_effort(Ft, Ct) -> int:
+    """Infeasible fallback: maximize SLO; among near-ties (<2 %), min carbon."""
+    fmax = float(np.max(Ft))
+    cand = [s for s in range(len(Ft)) if Ft[s] >= fmax - 0.02]
+    return min(cand, key=lambda s: Ct[s])
+
+
+def _solve_dp(C, F, n, sizes, rho, t_start, buckets: int = 400
+              ) -> SolveResult:
+    """Exact-to-discretization DP: state = hours processed × satisfied-count
+    bucket; value = min carbon. O(T·S·buckets)."""
+    T, S = C.shape
+    total = float(n.sum())
+    target = rho * total
+    # satisfied counts scaled to bucket units
+    scale = buckets / max(total, 1e-9)
+    NEG = -1
+    INF = float("inf")
+    dp = np.full(buckets + 1, INF)
+    dp[0] = 0.0
+    back = np.full((T, buckets + 1), NEG, dtype=int)
+    for t in range(T):
+        ndp = np.full(buckets + 1, INF)
+        for b in range(buckets + 1):
+            if dp[b] == INF:
+                continue
+            for s in range(S):
+                add = n[t] * F[t, s] * scale
+                nb = min(int(b + add), buckets)
+                cost = dp[b] + n[t] * C[t, s]
+                if cost < ndp[nb]:
+                    ndp[nb] = cost
+                    back[t, nb] = b * S + s
+        dp = ndp
+    tb = int(np.floor(target * scale))
+    best_b, best_cost = -1, INF
+    for b in range(tb, buckets + 1):
+        if dp[b] < best_cost:
+            best_b, best_cost = b, dp[b]
+    feasible = best_b >= 0
+    if not feasible:
+        choice = [_best_effort(F[t], C[t]) for t in range(T)]
+        obj = float(sum(n[t] * C[t][c] for t, c in enumerate(choice)))
+        return SolveResult([sizes[c] for c in choice], obj, False,
+                           time.time() - t_start, "dp")
+    # backtrack
+    choice = [0] * T
+    b = best_b
+    for t in range(T - 1, -1, -1):
+        enc = back[t, b]
+        choice[t] = enc % S
+        b = enc // S
+    obj = float(sum(n[t] * C[t][c] for t, c in enumerate(choice)))
+    return SolveResult([sizes[c] for c in choice], obj, True,
+                       time.time() - t_start, "dp")

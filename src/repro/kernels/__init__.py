@@ -1,0 +1,4 @@
+from repro.kernels.ops import (decode_attention, flash_attention, rglru_scan,
+                               wkv6)
+
+__all__ = ["flash_attention", "decode_attention", "rglru_scan", "wkv6"]

@@ -1,0 +1,62 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Backend selection: on TPU the compiled kernels run natively; elsewhere
+(this CPU container) they execute in ``interpret=True`` mode, which runs the
+kernel body in Python/XLA-CPU for correctness validation. ``use_reference``
+forces the pure-jnp oracle (fastest on CPU — the model code defaults to it
+off-TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pl
+from repro.kernels.flash_attention import flash_attention as _flash_pl
+from repro.kernels.rglru import rglru_scan as _rglru_pl
+from repro.kernels.wkv6 import wkv6 as _wkv6_pl
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+@functools.partial(jax.jit, static_argnames=("q_offset", "causal", "window",
+                                             "use_reference"))
+def flash_attention(q, k, v, *, q_offset: int = 0, causal: bool = True,
+                    window: Optional[int] = None, use_reference: bool = False):
+    if use_reference:
+        return ref.flash_attention_ref(q, k, v, q_offset=q_offset,
+                                       causal=causal, window=window)
+    return _flash_pl(q, k, v, q_offset=q_offset, causal=causal,
+                     window=window, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("use_reference",))
+def decode_attention(q, k_cache, v_cache, valid, *,
+                     use_reference: bool = False):
+    if use_reference:
+        return ref.decode_attention_ref(q, k_cache, v_cache, valid)
+    return _decode_pl(q, k_cache, v_cache, valid, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("use_reference",))
+def rglru_scan(a, b, h0, *, use_reference: bool = False):
+    if use_reference:
+        return ref.rglru_scan_ref(a, b, h0)
+    return _rglru_pl(a, b, h0, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("use_reference",))
+def wkv6(r, k, v, w, u, s0, *, use_reference: bool = False):
+    if use_reference:
+        return ref.wkv6_ref(r, k, v, w, u, s0)
+    return _wkv6_pl(r, k, v, w, u, s0, interpret=_interpret())

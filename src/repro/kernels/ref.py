@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (kernel-layout signatures).
+
+Each mirrors the corresponding kernel's contract exactly; tests sweep
+shapes/dtypes and assert_allclose kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, q_offset: int = 0, causal: bool = True,
+                        window: Optional[int] = None):
+    """q: (B,H,Sq,hd); k,v: (B,KV,Sk,hd) -> (B,H,Sq,hd)."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, kf) * hd ** -0.5
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid):
+    """q: (B,H,hd); caches: (B,KV,W,hd); valid: (W,) -> (B,H,hd)."""
+    B, H, hd = q.shape
+    KV, W = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bkwd->bkgw", qg,
+                   k_cache.astype(jnp.float32)) * hd ** -0.5
+    s = jnp.where((valid > 0)[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgw,bkwd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def rglru_scan_ref(a, b, h0):
+    """a,b: (B,S,D); h0: (B,D) -> (y (B,S,D), h_last (B,D))."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    hn, ys = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), hn
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """r,k,v,w: (B,H,S,hd); u: (H,hd); s0: (B,H,hd,hd)."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp                               # (B,H,hd)
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        eff = s + u[None, :, :, None] * kv
+        yt = jnp.einsum("bhij,bhi->bhj", eff, rt)
+        s = s * wt[..., None] + kv
+        return s, yt
+
+    xs = tuple(x.swapaxes(0, 2).swapaxes(1, 2) for x in (r, k, v, w))
+    # -> (S, B, H, hd)
+    sn, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 2, 0, 3), sn

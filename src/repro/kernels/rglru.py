@@ -1,0 +1,58 @@
+"""RG-LRU linear-recurrence Pallas kernel (RecurrentGemma hot-spot).
+
+    h_t = a_t ⊙ h_{t-1} + b_t
+
+The gate/decay computation (sigmoid/softplus matmuls) is dense XLA work;
+the kernel handles the inherently-sequential scan, blocked over channels so
+each grid step keeps a (block_d,) state vector in VMEM while streaming
+(S, block_d) tiles of a and b. Channels are embarrassingly parallel (grid
+axis 0/1 parallel, time loop in-kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, hn_ref, *, seq_len: int):
+    def body(t, h):
+        h = a_ref[0, t, :] * h + b_ref[0, t, :]
+        y_ref[0, t, :] = h
+        return h
+
+    h = jax.lax.fori_loop(0, seq_len, body, h0_ref[0, :])
+    hn_ref[0, :] = h
+
+
+def rglru_scan(a, b, h0, *, block_d: int = 512, interpret: bool = False):
+    """a, b: (B, S, D) fp32 decay/input; h0: (B, D). Returns (y, h_last)."""
+    B, S, D = a.shape
+    block_d = min(block_d, D)
+    assert D % block_d == 0
+    nd = D // block_d
+
+    y, hn = pl.pallas_call(
+        functools.partial(_rglru_kernel, seq_len=S),
+        grid=(B, nd),
+        in_specs=[
+            pl.BlockSpec((1, S, block_d), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, S, block_d), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, block_d), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), a.dtype),
+            jax.ShapeDtypeStruct((B, D), a.dtype),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(a, b, h0)
+    return y, hn

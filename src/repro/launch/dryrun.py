@@ -1,0 +1,147 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+combination on the production meshes, record memory / cost / collective
+analysis for the roofline report.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch all --shape all --mesh single,multi \
+        --out experiments/dryrun.json
+
+Results are written incrementally (resumable): combos already present in
+--out are skipped unless --force.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.launch.specs import input_specs
+from repro.models import partition
+from repro.roofline import analysis as ra
+
+
+def skip_reason(arch: str, shape_name: str):
+    """Pairs that are intentionally not run (documented in DESIGN.md)."""
+    return None  # all 10 assigned archs run all 4 shapes (SWA in long mode)
+
+
+def run_combo(arch: str, shape_name: str, mesh, mesh_name: str) -> dict:
+    spec = input_specs(arch, shape_name)
+    axes = mesh_axis_sizes(mesh)
+    pspecs = spec["pspec_fn"](axes)
+    in_sh = partition.to_named(pspecs, mesh)
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(spec["fn"], in_shardings=in_sh).lower(*spec["args"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    from repro.roofline.hlo_cost import analyze_hlo
+    hlo_text = compiled.as_text()
+    cost = analyze_hlo(hlo_text)
+    terms = ra.RooflineTerms(
+        flops=cost.flops, hbm_bytes=cost.bytes_struct,
+        collective_bytes=cost.comm, chips=int(mesh.devices.size),
+        model_flops=ra.model_flops(spec["cfg"], spec["shape"]),
+        hbm_bytes_upper=cost.bytes)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": int(mesh.devices.size),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "collective_counts": cost.comm_counts or {},
+        "collective_bytes_by_op": cost.comm_by_op or {},
+        "xla_cost_analysis_flops": float(ca.get("flops", 0.0)),
+        "xla_cost_analysis_bytes": float(ca.get("bytes accessed", 0.0)),
+        **terms.as_dict(),
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--baseline", action="store_true",
+                    help="disable §Perf-adopted sharding optimizations")
+    args = ap.parse_args()
+    if args.baseline:
+        from repro.launch import specs as _specs
+        _specs.OPTIMIZED = False
+        import repro.models.rwkv6 as _rw
+        _rw.WKV_IMPL = "scan"
+
+    archs = list(ASSIGNED_ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if "error" not in r}
+
+    mesh_objs = {}
+    for m in meshes:
+        mesh_objs[m] = make_production_mesh(multi_pod=(m == "multi"))
+
+    for mesh_name in meshes:
+        mesh = mesh_objs[mesh_name]
+        for arch in archs:
+            for shape_name in shapes:
+                key = (arch, shape_name, mesh_name)
+                if key in done:
+                    continue
+                reason = skip_reason(arch, shape_name)
+                if reason:
+                    print(f"SKIP {key}: {reason}", flush=True)
+                    continue
+                print(f"RUN  {key} ...", flush=True)
+                try:
+                    rec = run_combo(arch, shape_name, mesh, mesh_name)
+                    print(f"  ok: compile={rec['compile_s']}s "
+                          f"flops={rec['flops']:.3e} "
+                          f"coll={rec['collective_bytes']:.3e}B "
+                          f"dominant={rec['dominant']}", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "error": str(e)[:2000]}
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    errs = [r for r in results if "error" in r]
+    print(f"\n{len(results) - len(errs)} ok, {len(errs)} failed")
+    for r in errs:
+        print("FAILED:", r["arch"], r["shape"], r["mesh"])
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

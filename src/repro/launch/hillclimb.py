@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver: lowers + compiles named variants of the three
+chosen (arch × shape) pairs and records the roofline terms of each
+(hypothesis → change → before/after in EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python -m repro.launch.hillclimb \
+        --pair rwkv6-prefill --out experiments/hillclimb.json
+
+Pairs and variants
+------------------
+yi-decode   (yi-6b × decode_32k — most representative of the paper's
+             serving/KV-cache technique; memory/collective-bound)
+  kv_hd_shard   cache head_dim→model (the refuted first attempt)
+  base          cache seq→model, FSDP weights        [baseline]
+  no_fsdp       weights pure-TP (no data-axis sharding): kills the
+                per-layer FSDP all-gathers that dominate decode comm
+
+dbrx-train  (dbrx-132b × train_4k — the paper's §7 MoE case;
+             collective-heavy)
+  base          expert-parallel experts (16e → model axis)  [baseline]
+  moe_tp        tensor-parallel experts (d_ff→model) instead of EP
+  loss_bf16     loss-chunk logits kept bf16 (halve loss HBM traffic)
+
+rwkv6-prefill (rwkv6-1.6b × prefill_32k — worst roofline fraction:
+               per-token WKV state round-trips)
+  base          per-token lax.scan WKV                [baseline]
+  chunked       chunk-parallel WKV (16-token chunks, MXU matmuls,
+                state carried once per chunk)
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.tree_util as jtu
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.launch.specs import input_specs
+from repro.models import partition
+from repro.roofline import analysis as ra
+from repro.roofline.hlo_cost import analyze_hlo
+
+
+def _is_p(x):
+    return isinstance(x, P)
+
+
+def _rewrite(tree, fn):
+    return jtu.tree_map_with_path(fn, tree, is_leaf=_is_p)
+
+
+def _names(path):
+    return [p.key for p in path if isinstance(p, jtu.DictKey)]
+
+
+# ---------------- pspec rewrites ----------------
+
+def kv_hd_shard(pspecs):
+    def fn(path, ps):
+        if _names(path) and _names(path)[-1] in ("k", "v"):
+            return P(None, "data", None, None, "model")
+        return ps
+    return (pspecs[0], _rewrite(pspecs[1], fn)) + tuple(pspecs[2:])
+
+
+def no_fsdp(pspecs):
+    """Drop the 'data' axis from every weight spec (pure tensor-parallel)."""
+    def fn(path, ps):
+        return P(*[None if a == "data" else a for a in ps])
+    return (_rewrite(pspecs[0], fn),) + tuple(pspecs[1:])
+
+
+def moe_tp(pspecs):
+    def fn(path, ps):
+        names = _names(path)
+        if "moe" in names and names[-1] in ("w_up", "w_gate"):
+            return P(None, None, "data", "model")
+        if "moe" in names and names[-1] == "w_down":
+            return P(None, None, "model", "data")
+        return ps
+    return tuple(_rewrite(p, fn) for p in pspecs)
+
+
+VARIANTS = {
+    "yi-decode": {
+        "arch": "yi-6b", "shape": "decode_32k",
+        "variants": [
+            ("kv_hd_shard", dict(pspec_fn=kv_hd_shard)),
+            ("base", dict()),
+            ("no_fsdp", dict(pspec_fn=no_fsdp)),
+        ]},
+    "dbrx-train": {
+        "arch": "dbrx-132b", "shape": "train_4k",
+        "variants": [
+            ("base", dict()),
+            ("moe_tp", dict(pspec_fn=moe_tp)),
+            ("loss_bf16", dict(flags={"repro.train.steps.LOGITS_F32":
+                                      False})),
+            ("buf_constraint", dict(flags={"repro.models.moe.BUF_CONSTRAINT":
+                                           True})),
+        ]},
+    "rwkv6-prefill": {
+        "arch": "rwkv6-1.6b", "shape": "prefill_32k",
+        "variants": [
+            ("base", dict(flags={"repro.models.rwkv6.WKV_IMPL": "scan"})),
+            ("chunked", dict(flags={"repro.models.rwkv6.WKV_IMPL":
+                                    "chunked"})),
+            # chunked + pure-TP weights: FSDP in-dim sharding makes GSPMD
+            # all-reduce full activations per matmul; dropping the data axis
+            # (1.6B params fit replicated) should convert those to the 2
+            # standard megatron all-reduces per block
+            ("chunked_no_fsdp", dict(
+                flags={"repro.models.rwkv6.WKV_IMPL": "chunked"},
+                pspec_fn=no_fsdp)),
+        ]},
+    # bonus pair: train-side rwkv (chunked WKV helps the backward too)
+    "rwkv6-train": {
+        "arch": "rwkv6-1.6b", "shape": "train_4k",
+        "variants": [
+            ("base", dict(flags={"repro.models.rwkv6.WKV_IMPL": "scan"})),
+            ("chunked", dict(flags={"repro.models.rwkv6.WKV_IMPL":
+                                    "chunked"})),
+        ]},
+}
+
+
+def set_flag(dotted: str, value):
+    mod_name, attr = dotted.rsplit(".", 1)
+    import importlib
+    mod = importlib.import_module(mod_name)
+    setattr(mod, attr, value)
+
+
+def run_variant(arch, shape, name, spec_mod, mesh):
+    axes = mesh_axis_sizes(mesh)
+    flags = spec_mod.get("flags", {})
+    saved = {}
+    for k, v in flags.items():
+        mod_name, attr = k.rsplit(".", 1)
+        import importlib
+        m = importlib.import_module(mod_name)
+        saved[k] = getattr(m, attr)
+        setattr(m, attr, v)
+    try:
+        spec = input_specs(arch, shape)
+        pspecs = spec["pspec_fn"](axes)
+        if "pspec_fn" in spec_mod:
+            pspecs = spec_mod["pspec_fn"](tuple(pspecs))
+        in_sh = partition.to_named(tuple(pspecs), mesh)
+        t0 = time.time()
+        with mesh:
+            compiled = jax.jit(spec["fn"], in_shardings=in_sh).lower(
+                *spec["args"]).compile()
+        cost = analyze_hlo(compiled.as_text())
+        terms = ra.RooflineTerms(
+            flops=cost.flops, hbm_bytes=cost.bytes_struct,
+            collective_bytes=cost.comm, chips=mesh.devices.size,
+            model_flops=ra.model_flops(spec["cfg"], spec["shape"]),
+            hbm_bytes_upper=cost.bytes)
+        rec = {"variant": name, "arch": arch, "shape": shape,
+               "compile_s": round(time.time() - t0, 1),
+               "collective_counts": cost.comm_counts or {},
+               "collective_bytes_by_op": cost.comm_by_op or {},
+               **terms.as_dict()}
+        print(f"  {name:12s} compute={terms.compute_s:.3e}s "
+              f"mem={terms.memory_s:.3e}s coll={terms.collective_s:.3e}s "
+              f"dominant={terms.dominant}", flush=True)
+        return rec
+    finally:
+        for k, v in saved.items():
+            set_flag(k, v)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default="all")
+    ap.add_argument("--out", default="experiments/hillclimb.json")
+    args = ap.parse_args()
+    pairs = list(VARIANTS) if args.pair == "all" else args.pair.split(",")
+    mesh = make_production_mesh()
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["pair"], r["variant"]) for r in results}
+    for pair in pairs:
+        cfg = VARIANTS[pair]
+        print(f"== {pair} ({cfg['arch']} x {cfg['shape']})", flush=True)
+        for name, mod in cfg["variants"]:
+            if (pair, name) in done:
+                continue
+            rec = run_variant(cfg["arch"], cfg["shape"], name, mod, mesh)
+            rec["pair"] = pair
+            results.append(rec)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

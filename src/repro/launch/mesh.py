@@ -1,0 +1,35 @@
+"""Production meshes. Kept as functions so importing never touches jax
+device state."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{max(n, 512)} (see launch/dryrun.py)")
+    # more devices than needed (e.g. 512 placeholders, single-pod mesh)
+    from jax.sharding import Mesh
+    arr = np.asarray(devs[:n]).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for CPU smoke runs."""
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,139 @@
+"""ShapeDtypeStruct input specs + step functions for every
+(architecture × input shape) combination — used by the multi-pod dry-run
+(no device allocation) and by the benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models import partition
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_params, prefill)
+from repro.train.optimizer import adamw_init
+from repro.train.steps import make_train_step
+
+F = jnp.bfloat16
+I = jnp.int32
+
+# Ship the §Perf-adopted sharding improvements by default; set False to
+# reproduce the pre-hillclimb baseline table (repro.launch.dryrun --baseline).
+OPTIMIZED = True
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_shapes(cfg: ModelConfig, dtype=F):
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg, dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, *, with_labels: bool):
+    """Model inputs for a full-sequence pass (train or prefill)."""
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        vt = min(cfg.vision_tokens, S // 2)
+        batch["tokens"] = sds((B, S - vt), I)
+        batch["patches"] = sds((B, vt, cfg.d_model), F)
+        batch["positions"] = sds((B, S, 3), I)
+        if with_labels:
+            batch["labels"] = sds((B, S - vt), I)
+    else:
+        batch["tokens"] = sds((B, S), I)
+        if with_labels:
+            batch["labels"] = sds((B, S), I)
+        if cfg.family == "encdec":
+            batch["frames"] = sds((B, cfg.source_len, cfg.d_model), F)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, dtype=F):
+    return jax.eval_shape(functools.partial(
+        init_cache, cfg, shape.global_batch, shape.seq_len, dtype,
+        long_context=shape.long_context))
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, Any]:
+    """Returns {"args": tuple of ShapeDtypeStruct pytrees, "fn": step fn,
+    "pspec_fn": axes -> tuple of PartitionSpec pytrees}."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    params = param_shapes(cfg)
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, long_context=shape.long_context)
+        opt = jax.eval_shape(adamw_init, params)
+        batch = batch_specs(cfg, shape, with_labels=True)
+        args = (params, opt, batch)
+
+        def pspecs(axes):
+            pp = partition.param_pspecs(params, axes)
+            from jax.sharding import PartitionSpec as P
+            op = type(opt)(step=P(),
+                           mu=partition.param_pspecs(opt.mu, axes),
+                           nu=partition.param_pspecs(opt.nu, axes))
+            bp = partition.batch_pspecs(batch, axes)
+            return (pp, op, bp)
+
+        return {"fn": step, "args": args, "pspec_fn": pspecs, "cfg": cfg,
+                "shape": shape}
+
+    if shape.kind == "prefill":
+        batch = batch_specs(cfg, shape, with_labels=False)
+
+        def fn(params, batch):
+            return prefill(params, cfg, batch, max_len=shape.seq_len,
+                           long_context=shape.long_context)
+
+        args = (params, batch)
+
+        def pspecs(axes):
+            return (partition.param_pspecs(params, axes),
+                    partition.batch_pspecs(batch, axes))
+
+        return {"fn": fn, "args": args, "pspec_fn": pspecs, "cfg": cfg,
+                "shape": shape}
+
+    # decode: one new token against a seq_len-deep cache
+    cache = cache_specs(cfg, shape)
+    B = shape.global_batch
+    tokens = sds((B, 1), I)
+    pos = sds((), I)
+
+    def fn(params, cache, tokens, pos):
+        return decode_step(params, cfg, cache, tokens, pos,
+                           long_context=shape.long_context)
+
+    args = (params, cache, tokens, pos)
+
+    def pspecs(axes):
+        from jax.sharding import PartitionSpec as P
+        pp = partition.param_pspecs(params, axes)
+        # §Perf-adopted optimization: batched decode wants pure
+        # tensor-parallel weights (no FSDP data-axis sharding) — eliminates
+        # per-layer weight all-gathers (28x lower collective term on
+        # yi-6b × decode_32k). Conditions (both measured, see §Perf):
+        #   * TP-sharded weights fit HBM (grok-314B does not), and
+        #   * batch large enough to amortize the bigger per-chip weight
+        #     reads — at B=1 (long_500k) FSDP's 256-way weight sharding
+        #     gives lower per-chip HBM traffic than 16-way TP, so the
+        #     roofline choice flips back.
+        params_bytes = 2 * cfg.param_count
+        if OPTIMIZED and B >= 8 and \
+                params_bytes / max(axes.get("model", 1), 1) < 8e9:
+            pp = partition.drop_axis(pp, "data")
+        return (pp,
+                partition.cache_pspecs(cache, axes),
+                P(partition.batch_axes(B, axes), None),
+                P())
+
+    return {"fn": fn, "args": args, "pspec_fn": pspecs, "cfg": cfg,
+            "shape": shape}

@@ -1,0 +1,81 @@
+"""Training driver.
+
+CPU example (the ~100M end-to-end run):
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
+        --d-model 512 --layers 8 --batch 8 --seq 256 --steps 300
+
+Production (dry-run validated via repro.launch.dryrun): the same step
+lowers on the (data, model) / (pod, data, model) meshes with the shardings
+from repro.models.partition.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train.data import batch_iterator
+from repro.train.optimizer import AdamWConfig
+from repro.train.steps import init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (CPU-scale) variant")
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--restore", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(num_layers=args.layers, d_model=args.d_model)
+    print(f"arch={cfg.name} family={cfg.family} params≈{cfg.param_count/1e6:.1f}M")
+
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 20, 10))
+    params, opt_state = init_train_state(
+        jax.random.PRNGKey(args.seed), cfg, dtype=jnp.float32)
+    start_step = 0
+    if args.restore and args.checkpoint:
+        params, start_step = restore_checkpoint(args.checkpoint, params)
+        print(f"restored step {start_step}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    it = batch_iterator(cfg, args.batch, args.seq, seed=args.seed)
+
+    t0 = time.time()
+    losses = []
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)", flush=True)
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params, step=args.steps)
+        print(f"saved {args.checkpoint}")
+    print(f"first-10 mean loss {sum(losses[:10])/min(len(losses),10):.4f} -> "
+          f"last-10 mean {sum(losses[-10:])/min(len(losses),10):.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

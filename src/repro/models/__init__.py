@@ -1,0 +1,4 @@
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_params, prefill)
+
+__all__ = ["init_params", "forward", "init_cache", "prefill", "decode_step"]

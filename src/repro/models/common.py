@@ -1,0 +1,235 @@
+"""Shared model components: norms, rotary embeddings (incl. M-RoPE), MLPs,
+GQA attention (full / sliding-window / query-chunked / decode-with-cache).
+
+Everything is functional: params are pytrees of jnp arrays, built by
+``init_*`` helpers, consumed by pure apply functions.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+NEG_INF = -1e30          # finite mask value (avoids NaN from -inf softmax rows)
+Q_CHUNK = 1024           # query-chunk size for long-sequence attention
+
+
+# --------------------------------------------------------------------------- #
+# init helpers
+# --------------------------------------------------------------------------- #
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+
+def init_rmsnorm(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_groupnorm(heads: int, hd: int, dtype):
+    return {"scale": jnp.ones((heads, hd), dtype),
+            "bias": jnp.zeros((heads, hd), dtype)}
+
+
+def groupnorm_heads(params, x, eps: float = 64e-5):
+    """LayerNorm per head — x: (..., H, hd). Used by RWKV6."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------------- #
+# rotary embeddings
+# --------------------------------------------------------------------------- #
+
+def _rope_angles(positions, half: int, theta: float):
+    """positions: (...,) -> (..., half) angles."""
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    ang = _rope_angles(positions, half, theta)               # (S, half) or (B,S,half)
+    if ang.ndim == 2:
+        ang = ang[None]                                      # (1, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    if 2 * half < hd:                                        # odd head_dim tail
+        rot = jnp.concatenate([rot, x[..., 2 * half:]], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def mrope_sections(half: int):
+    """Split of rotary pair-dims among (temporal, height, width) sections."""
+    s1 = half // 4
+    s2 = (half - s1) // 2
+    return (s1, s2, half - s1 - s2)
+
+
+def apply_mrope(x, positions, theta: float = 10_000.0):
+    """Qwen2-VL multimodal RoPE. x: (B,S,H,hd); positions: (B,S,3) int."""
+    hd = x.shape[-1]
+    half = hd // 2
+    secs = mrope_sections(half)
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    # per-pair position id chosen by section
+    sec_id = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                              for i, s in enumerate(secs)])  # (half,)
+    p = positions.astype(jnp.float32)                         # (B,S,3)
+    pos_per_pair = p[..., sec_id]                             # (B,S,half)
+    ang = pos_per_pair * freqs[None, None, :]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return rot.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# MLP
+# --------------------------------------------------------------------------- #
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None):
+    d, dff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d, dff, dtype),
+         "w_down": dense_init(ks[1], dff, d, dtype)}
+    if cfg.gated_mlp:
+        p["w_gate"] = dense_init(ks[2], d, dff, dtype)
+    return p
+
+
+def mlp(params, x, cfg: ModelConfig):
+    act = activation_fn(cfg.activation)
+    h = act(x @ params["w_up"])
+    if cfg.gated_mlp:
+        h = h * (x @ params["w_gate"])
+    return h @ params["w_down"]
+
+
+# --------------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------------- #
+
+def init_attention(key, cfg: ModelConfig, dtype, num_heads=None, num_kv=None,
+                   head_dim=None):
+    H = num_heads or cfg.num_heads
+    KV = num_kv or cfg.num_kv_heads
+    hd = head_dim or cfg.head_dim
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, H * hd, dtype),
+        "wk": dense_init(ks[1], d, KV * hd, dtype),
+        "wv": dense_init(ks[2], d, KV * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, d, dtype, scale=1.0 / math.sqrt(H * hd)),
+    }
+
+
+def _attend(q, k, v, qpos, kpos, *, window=None, causal=True):
+    """Grouped-query attention core.
+
+    q: (B, Sq, KV, G, hd)  k,v: (B, Sk, KV, hd)
+    qpos: (Sq,) absolute query positions; kpos: (Sk,) key positions
+    (kpos < 0 means empty slot).
+    """
+    hd = q.shape[-1]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32)
+    s *= hd ** -0.5
+    mask = kpos[None, :] >= 0
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+
+
+def attention(q, k, v, *, q_offset=0, window=None, causal=True,
+              chunk=Q_CHUNK):
+    """Full-sequence attention with query chunking for long S.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd). Returns (B, Sq, H, hd).
+    q_offset: absolute position of q[0] (cached-prefix prefill).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    kpos = jnp.arange(Sk)
+
+    if Sq <= chunk or Sq % chunk != 0:
+        qpos = q_offset + jnp.arange(Sq)
+        out = _attend(qg, k, v, qpos, kpos, window=window, causal=causal)
+        return out.reshape(B, Sq, H, hd)
+
+    nq = Sq // chunk
+    qc = qg.reshape(B, nq, chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    qpos = (q_offset + jnp.arange(Sq)).reshape(nq, chunk)
+
+    def body(args):
+        qi, pi = args
+        return _attend(qi, k, v, pi, kpos, window=window, causal=causal)
+
+    out = jax.lax.map(body, (qc, qpos))                       # (nq,B,chunk,KV,G,hd)
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd)
+
+
+def decode_attend(q, k_cache, v_cache, kpos, pos, *, window=None):
+    """Single-token decode attention against a (ring or linear) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, W, KV, hd); kpos: (W,) slot->abs position
+    (-1 empty); pos: scalar current position.
+    """
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache).astype(jnp.float32)
+    s *= hd ** -0.5
+    mask = (kpos >= 0) & (kpos <= pos)
+    if window is not None:
+        mask &= kpos > pos - window
+    s = jnp.where(mask[None, None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache)
+    return out.reshape(B, 1, H, hd)

@@ -1,0 +1,120 @@
+"""Griffin / RecurrentGemma recurrent block: conv1d + RG-LRU gated linear
+recurrence, plus the local-attention block used in the 2:1 hybrid pattern.
+
+RG-LRU (Real-Gated Linear Recurrent Unit):
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    a_t = exp(-c · softplus(Λ) · r_t)     per-channel decay, c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses an associative scan (parallel, sub-quadratic); decode is a
+single-step update. ``repro.kernels.rglru`` holds the Pallas TPU kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+RG_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig, dtype):
+    d, dr = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(key, 8)
+    return {
+        "w_in_y": dense_init(ks[0], d, dr, dtype),     # recurrent branch in
+        "w_in_gate": dense_init(ks[1], d, dr, dtype),  # gelu gate branch
+        "w_out": dense_init(ks[2], dr, d, dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, dr))
+                   * (cfg.conv_width ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "wa": dense_init(ks[4], dr, dr, dtype, scale=1e-2),
+        "ba": jnp.zeros((dr,), jnp.float32),
+        "wx": dense_init(ks[5], dr, dr, dtype, scale=1e-2),
+        "bx": jnp.zeros((dr,), jnp.float32),
+        # Λ init so that a ∈ (0.9, 0.999) at r=1 (per Griffin paper)
+        "lam": jax.random.uniform(ks[6], (dr,), jnp.float32,
+                                  minval=0.0013, maxval=0.1320),
+    }
+
+
+def _causal_conv(p, x, x_hist):
+    """Depthwise causal conv1d, width cfg.conv_width.
+    x: (B,S,dr); x_hist: (B, width-1, dr) previous inputs."""
+    w = p["conv_w"]                                    # (W, dr)
+    W = w.shape[0]
+    xfull = jnp.concatenate([x_hist.astype(x.dtype), x], axis=1)
+    out = sum(xfull[:, i:i + x.shape[1]] * w[i][None, None]
+              for i in range(W))
+    new_hist = xfull[:, x.shape[1]:]                   # last W-1 inputs
+    return out + p["conv_b"][None, None], new_hist
+
+
+def _rglru_coeffs(p, x):
+    """x: (..., dr) -> decay a and scaled input (both fp32)."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(x32 @ p["wx"].astype(jnp.float32) + p["bx"])
+    log_a = -RG_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * i * x32
+    return a, gated
+
+
+def rglru_scan(p, x, h0):
+    """Associative-scan linear recurrence. x: (B,S,dr); h0: (B,dr)."""
+    a, b = _rglru_coeffs(p, x)                         # (B,S,dr) fp32
+
+    # h_t = a_t h_{t-1} + b_t; fold h0 into first step
+    b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh.astype(x.dtype), hh[:, -1]
+
+
+def rglru_step(p, x_t, h):
+    """Decode step. x_t: (B,dr); h: (B,dr)."""
+    a, b = _rglru_coeffs(p, x_t)
+    h = a * h.astype(jnp.float32) + b
+    return h.astype(x_t.dtype), h
+
+
+def rglru_block(p, x, state):
+    """Full-seq recurrent block. x: (B,S,d);
+    state: {"h": (B,dr), "conv": (B,W-1,dr)}."""
+    gate = jax.nn.gelu(x @ p["w_in_gate"])
+    y = x @ p["w_in_y"]
+    y, conv_hist = _causal_conv(p, y, state["conv"])
+    y, h = rglru_scan(p, y, state["h"])
+    out = (y * gate) @ p["w_out"]
+    return out, {"h": h, "conv": conv_hist}
+
+
+def rglru_block_step(p, x_t, state):
+    """Decode step. x_t: (B,d)."""
+    gate = jax.nn.gelu(x_t @ p["w_in_gate"])
+    y = x_t @ p["w_in_y"]
+    # conv via history buffer
+    w = p["conv_w"]
+    W = w.shape[0]
+    hist = state["conv"]                               # (B, W-1, dr)
+    xfull = jnp.concatenate([hist.astype(y.dtype), y[:, None]], axis=1)
+    y = jnp.einsum("bwd,wd->bd", xfull, w) + p["conv_b"][None]
+    new_hist = xfull[:, 1:]
+    y, h = rglru_step(p, y, state["h"])
+    out = (y * gate) @ p["w_out"]
+    return out, {"h": h, "conv": new_hist}
+
+
+def init_recurrent_state(cfg: ModelConfig, batch: int, dtype):
+    return {"h": jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_width),
+                              dtype)}

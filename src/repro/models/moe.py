@@ -1,0 +1,136 @@
+"""Mixture-of-Experts FFN with capacity-based scatter dispatch (GShard-style).
+
+Dispatch is implemented with scatter/gather (not a dense (T,E,C) one-hot
+einsum) so the dispatch buffers stay O(E·C·d) — the pattern GSPMD lowers to
+the expert-parallel all-to-all we analyze in the roofline.
+
+Sharding modes (set by whether num_experts divides the model axis):
+  * EP  — experts sharded 1-per-device over `model` (dbrx: 16e on 16-way)
+  * TP  — experts replicated, d_ff sharded over `model` (grok: 8e on 16-way)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import activation_fn, dense_init
+
+
+# §Perf experiment: constrain dispatch buffers to expert-parallel sharding
+# so GSPMD reduce-scatters the token contributions instead of all-reducing
+# the full (E, C, d) buffer (see EXPERIMENTS.md §Perf pair 3).
+BUF_CONSTRAINT = False
+
+
+def _maybe_constrain(x, spec):
+    if not BUF_CONSTRAINT:
+        return x
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def moe_capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    c = int(cfg.moe_capacity_factor * num_tokens * cfg.experts_per_token
+            / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8, keep a floor
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, dff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),  # router kept fp32
+        "w_up": _expert_init(ks[1], E, d, dff, dtype),
+        "w_down": _expert_init(ks[2], E, dff, d, dtype),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = _expert_init(ks[3], E, d, dff, dtype)
+    return p
+
+
+def _expert_init(key, E, d_in, d_out, dtype):
+    scale = 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (E, d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def moe_ffn(params, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (B, S, d), plus aux losses dict."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    C = moe_capacity(cfg, T)
+    xt = x.reshape(T, d)
+
+    logits = xt.astype(jnp.float32) @ params["router"]        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                    # (T, K)
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # flatten (token, slot) assignments
+    eid = top_e.reshape(T * K)                                # expert id
+    gate = top_p.reshape(T * K)
+    tok = jnp.repeat(jnp.arange(T), K)
+
+    # position of each assignment within its expert (capacity check)
+    onehot = jax.nn.one_hot(eid, E, dtype=jnp.int32)          # (T*K, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.take_along_axis(pos_all, eid[:, None], axis=1)[:, 0]
+    keep = pos < C
+    pos = jnp.where(keep, pos, 0)
+
+    # scatter tokens into (E, C, d) expert buffers
+    contrib = jnp.where(keep[:, None], xt[tok], 0).astype(x.dtype)
+    buf = jnp.zeros((E, C, d), x.dtype).at[eid, pos].add(
+        contrib, mode="drop")
+    buf = _maybe_constrain(buf, ("model", None, None))
+
+    # per-expert FFN, batched over E
+    act = activation_fn(cfg.activation)
+    h = act(jnp.einsum("ecd,edf->ecf", buf, params["w_up"]))
+    if cfg.gated_mlp:
+        h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])  # (E, C, d)
+
+    # gather back and combine weighted by gate
+    gathered = out_buf[eid, pos]                               # (T*K, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    weighted = gathered * gate[:, None].astype(gathered.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[tok].add(weighted.astype(x.dtype))
+
+    # load-balance auxiliary loss (Switch-style)
+    me = probs.mean(axis=0)                                    # (E,)
+    ce = (jnp.sum(jax.nn.one_hot(top_e, E), axis=(0, 1)) / (T * K))
+    aux = {"load_balance_loss": E * jnp.sum(me * ce),
+           "router_z_loss": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+           "dropped_frac": 1.0 - keep.mean()}
+    return y.reshape(B, S, d), aux
+
+
+def moe_ffn_ref(params, x, cfg: ModelConfig):
+    """Oracle: per-token dense routing (computes every expert on every token).
+    Used only in tests to validate the dispatch path (with capacity high
+    enough that nothing drops)."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    xt = x.reshape(-1, d)
+    logits = xt.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+    act = activation_fn(cfg.activation)
+    h = act(jnp.einsum("td,edf->tef", xt, params["w_up"]))
+    if cfg.gated_mlp:
+        h = h * jnp.einsum("td,edf->tef", xt, params["w_gate"])
+    all_out = jnp.einsum("tef,efd->ted", h, params["w_down"])  # (T, E, d)
+    w = jnp.zeros(probs.shape, jnp.float32)
+    w = jnp.take_along_axis(
+        jnp.zeros_like(probs).at[
+            jnp.arange(xt.shape[0])[:, None], top_e].set(top_p),
+        jnp.arange(E)[None, :], axis=1)
+    y = jnp.einsum("ted,te->td", all_out.astype(jnp.float32), w)
+    return y.reshape(B, S, d).astype(x.dtype)

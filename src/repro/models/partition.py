@@ -1,0 +1,163 @@
+"""Partition specs for params, caches and batches.
+
+Strategy (baseline — §Perf iterates on this):
+  * weights: FSDP over ``data`` on the non-parallel dim × tensor-parallel over
+    ``model`` on the parallel dim (heads / d_ff / vocab)
+  * MoE experts: expert-parallel over ``model`` when num_experts divides the
+    axis (dbrx), else tensor-parallel d_ff sharding (grok)
+  * batch dims: sharded over (``pod``, ``data``) when divisible
+  * decode KV caches: batch→data-ish, kv-heads→model when divisible else
+    head_dim→model (contraction sharding), else replicated
+  * a dim is sharded only if divisible by the axis size — otherwise None
+
+All rules are name/shape based so they apply uniformly to every family.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# leading-axis stacked containers (scan-over-layers)
+_STACK_KEYS = {"layers", "units", "tail", "encoder", "decoder"}
+# 2D weights whose *input* dim is the parallel one
+_REVERSED = {"wo", "w_down", "w_out"}
+_MOE_W = {"w_up", "w_gate", "w_down"}
+
+
+def _axis(n: int, size: int, name):
+    return name if (size > 1 and n % size == 0) else None
+
+
+def _base_spec(path_names, name: str, shape, axes: Dict[str, int]):
+    """PartitionSpec for an *unstacked* leaf."""
+    dm, dd = axes.get("model", 1), axes.get("data", 1)
+    nd = len(shape)
+    if name == "embed":
+        return P(_axis(shape[0], dm, "model"), _axis(shape[1], dd, "data"))
+    if name == "unembed":
+        return P(_axis(shape[0], dd, "data"), _axis(shape[1], dm, "model"))
+    if name == "router":
+        return P(_axis(shape[0], dd, "data"), None)
+    if "moe" in path_names and name in _MOE_W and nd == 3:
+        E = shape[0]
+        ep = E % dm == 0 and dm > 1
+        if name == "w_down":
+            if ep:
+                return P("model", None, _axis(shape[2], dd, "data"))
+            return P(None, _axis(shape[1], dm, "model"),
+                     _axis(shape[2], dd, "data"))
+        if ep:
+            return P("model", _axis(shape[1], dd, "data"), None)
+        return P(None, _axis(shape[1], dd, "data"),
+                 _axis(shape[2], dm, "model"))
+    if name == "conv_w":
+        return P(None, _axis(shape[1], dm, "model"))
+    if name == "ts_w2":
+        return P(None, None, _axis(shape[2], dd, "data"))
+    if nd == 2:
+        if name in _REVERSED:
+            return P(_axis(shape[0], dm, "model"), _axis(shape[1], dd, "data"))
+        return P(_axis(shape[0], dd, "data"), _axis(shape[1], dm, "model"))
+    return P(*([None] * nd))  # 1D scales/biases etc: replicated
+
+
+def param_pspecs(params_tree, axes: Dict[str, int]):
+    """Map a params pytree (arrays or ShapeDtypeStructs) -> PartitionSpecs."""
+
+    def rule(path, leaf):
+        names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        name = names[-1]
+        shape = leaf.shape
+        stacked = any(n in _STACK_KEYS for n in names[:-1])
+        if stacked:
+            base = _base_spec(names, name, shape[1:], axes)
+            return P(*((None,) + tuple(base)))
+        return _base_spec(names, name, shape, axes)
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+# --------------------------------------------------------------------------- #
+# batch / cache specs
+# --------------------------------------------------------------------------- #
+
+def batch_axes(B: int, axes: Dict[str, int]):
+    """Largest (pod?,data?) combination that divides the batch."""
+    names = []
+    size = 1
+    for a in ("pod", "data"):
+        if a in axes:
+            names.append(a)
+            size *= axes[a]
+    while names and B % size != 0:
+        a = names.pop(0)
+        size //= axes[a]
+    if not names:
+        return None
+    return tuple(names) if len(names) > 1 else names[0]
+
+
+def batch_pspecs(batch_tree, axes: Dict[str, int]):
+    def rule(path, leaf):
+        b = batch_axes(leaf.shape[0], axes)
+        return P(*((b,) + (None,) * (len(leaf.shape) - 1)))
+    return jax.tree_util.tree_map_with_path(rule, batch_tree)
+
+
+def cache_pspecs(cache_tree, axes: Dict[str, int]):
+    """Decode/prefill cache shardings. Leaves are (L, B, ...) stacked."""
+    dm, dd = axes.get("model", 1), axes.get("data", 1)
+
+    def rule(path, leaf):
+        names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        name = names[-1]
+        s = leaf.shape
+        B = s[1]
+        ba = batch_axes(B, axes)
+        if name in ("k", "v", "self_k", "self_v", "cross_k", "cross_v"):
+            # (L, B, W, KV, hd): batch->data; kv-heads->model when divisible,
+            # else sequence->model (measured 19x lower collective bytes than
+            # head_dim->model, which triggers involuntary SPMD remat).
+            kv = _axis(s[3], dm, "model")
+            if ba is None:
+                # B=1 (long-context): shard sequence over everything possible
+                both = dd * dm
+                if kv is None and s[2] % both == 0 and dd > 1:
+                    return P(None, None, ("data", "model"), None, None)
+                return P(None, None, _axis(s[2], dd, "data"), kv, None)
+            seq = None if kv else _axis(s[2], dm, "model")
+            return P(None, ba, seq, kv, None)
+        if name == "wkv":                       # (L, B, H, hd, hd)
+            return P(None, ba, _axis(s[2], dm, "model"), None, None)
+        if name in ("x_tm", "x_cm"):            # (L, B, d)
+            return P(None, ba, _axis(s[2], dm, "model"))
+        if name in ("rec1_h", "rec2_h", "h"):   # (U, B, dr)
+            return P(None, ba, _axis(s[2], dm, "model"))
+        if name in ("rec1_conv", "rec2_conv", "conv"):  # (U, B, cw-1, dr)
+            return P(None, ba, None, _axis(s[3], dm, "model"))
+        return P(*([None] * len(s)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
+def drop_axis(tree_pspecs, axis: str):
+    """Remove one mesh axis from every spec (e.g. drop FSDP for decode)."""
+    def fn(ps):
+        def strip(a):
+            if a == axis:
+                return None
+            if isinstance(a, tuple):
+                rest = tuple(x for x in a if x != axis)
+                return rest if len(rest) > 1 else (rest[0] if rest else None)
+            return a
+        return P(*[strip(a) for a in ps])
+    return jax.tree.map(fn, tree_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def to_named(tree_pspecs, mesh):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), tree_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

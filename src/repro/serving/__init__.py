@@ -1,0 +1,5 @@
+from repro.serving.perfmodel import SERVING_MODELS, ServingModel, SLO
+from repro.serving.engine import ServingEngine, SimResult
+
+__all__ = ["ServingModel", "SERVING_MODELS", "SLO", "ServingEngine",
+           "SimResult"]

@@ -1,0 +1,127 @@
+"""Real-execution serving: an actual JAX model behind the GreenCache store.
+
+This is the paper's mechanism running for real (at reduced scale on CPU,
+full scale on TPU): KV caches of context prefixes are *stored as arrays* in
+the KVStore payload and *restored on hit*, so a cache hit prefills only the
+uncached suffix (queries at offset ``prefix_len``) — numerically identical
+to full prefill (tests assert this).
+
+Recurrent/hybrid families use state-snapshot caching (DESIGN.md
+§Arch-applicability): the fixed-size recurrent state after the prefix is
+stored instead of per-token KV.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.kvstore import KVStore
+from repro.models.transformer import (decode_step, init_cache, prefill)
+
+
+@dataclass
+class GenerationResult:
+    tokens: List[int]
+    prefill_tokens_computed: int      # uncached tokens actually prefilled
+    reused_tokens: int
+    prefill_time_s: float
+    decode_time_s: float
+
+
+class RealExecutionEngine:
+    def __init__(self, cfg: ModelConfig, params, store: KVStore, *,
+                 max_len: int = 512, dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.store = store
+        self.max_len = max_len
+        self.dtype = dtype
+        self._prefill_cached = {}
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+
+    # ------------------------------------------------------------------ #
+    def _prefill(self, tokens: jnp.ndarray, prefix_cache=None,
+                 prefix_len: int = 0):
+        key = (tokens.shape[1], prefix_len)
+        if key not in self._prefill_cached:
+            cfgl = self.cfg
+            if prefix_len:
+                fn = lambda p, b, pc: prefill(p, cfgl, b, self.max_len,
+                                              prefix_cache=pc,
+                                              prefix_len=prefix_len)
+            else:
+                fn = lambda p, b: prefill(p, cfgl, b, self.max_len)
+            self._prefill_cached[key] = jax.jit(fn)
+        fn = self._prefill_cached[key]
+        batch = {"tokens": tokens}
+        if prefix_len:
+            return fn(self.params, batch, prefix_cache)
+        return fn(self.params, batch)
+
+    # ------------------------------------------------------------------ #
+    def generate(self, context_key: str, prompt_tokens: List[int],
+                 num_new: int = 8, now: Optional[float] = None
+                 ) -> GenerationResult:
+        """Serve one request: reuse the cached prefix KV for ``context_key``
+        if present, prefill the suffix, then greedy-decode ``num_new``."""
+        now = time.time() if now is None else now
+        recurrent = self.cfg.family in ("ssm", "hybrid")
+        entry = self.store.lookup(context_key, len(prompt_tokens), now)
+        prefix_len = 0
+        prefix_cache = None
+        if entry is not None and entry.payload is not None:
+            plen, pcache = entry.payload
+            if plen <= len(prompt_tokens):
+                prefix_len, prefix_cache = plen, pcache
+
+        t0 = time.time()
+        if recurrent:
+            # state-snapshot caching: restore state, run the suffix through
+            # decode steps (prefill from state not implemented for brevity —
+            # suffix processed token by token, still skipping prefix compute)
+            if prefix_cache is not None:
+                cache = prefix_cache
+            else:
+                cache = init_cache(self.cfg, 1, self.max_len, self.dtype)
+                prefix_len = 0
+            logits = None
+            pos = prefix_len
+            for t in prompt_tokens[prefix_len:]:
+                logits, cache = self._decode(
+                    self.params, cache, jnp.array([[t]], jnp.int32),
+                    jnp.asarray(pos))
+                pos += 1
+        else:
+            suffix = jnp.asarray(prompt_tokens[prefix_len:],
+                                 jnp.int32)[None]
+            logits, cache = self._prefill(suffix, prefix_cache, prefix_len)
+            pos = len(prompt_tokens)
+        t_prefill = time.time() - t0
+
+        # store the full-prompt cache back (extends the prefix entry)
+        self.store.insert(context_key, len(prompt_tokens), now,
+                          payload=(len(prompt_tokens), cache))
+
+        # greedy decode
+        t1 = time.time()
+        out = []
+        tok = int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size]))
+        for _ in range(num_new):
+            out.append(tok)
+            logits, cache = self._decode(
+                self.params, cache, jnp.array([[tok]], jnp.int32),
+                jnp.asarray(pos))
+            pos += 1
+            tok = int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size]))
+        return GenerationResult(
+            tokens=out,
+            prefill_tokens_computed=len(prompt_tokens) - prefix_len,
+            reused_tokens=prefix_len,
+            prefill_time_s=t_prefill,
+            decode_time_s=time.time() - t1)

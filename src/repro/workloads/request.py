@@ -1,0 +1,24 @@
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: float              # seconds
+    context_key: str            # conversation/document id (cache key)
+    context_tokens: int         # reusable prefix length (history / document)
+    new_tokens: int             # tokens unique to this request
+    output_tokens: int
+    turn: int = 1               # conversation turn / question index
+
+    # filled by the engine
+    reused_tokens: int = 0
+    ttft: float = 0.0
+    tpot: float = 0.0
+    energy_kwh: float = 0.0
+
+    @property
+    def prompt_tokens(self) -> int:
+        return self.context_tokens + self.new_tokens

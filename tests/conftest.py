@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benchmarks must see 1 device (the 512-device placeholder mesh is only
+# for repro.launch.dryrun).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

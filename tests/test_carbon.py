@@ -1,0 +1,75 @@
+"""Unit + property tests for the carbon model (paper Eqs. 1-5)."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.carbon import (GRID_CI, CarbonModel, HardwareSpec,
+                               SECONDS_PER_YEAR)
+
+
+def test_operational_eq2():
+    cm = CarbonModel()
+    assert cm.operational_g(2.0, 124.0) == pytest.approx(248.0)
+
+
+def test_cache_embodied_eq4():
+    cm = CarbonModel()
+    # 16 TB for one full SSD lifetime = full embodied carbon (480 kg)
+    lt = cm.hw.ssd_lifetime_years * SECONDS_PER_YEAR
+    assert cm.cache_embodied_g(16.0, lt) == pytest.approx(480_000.0)
+    # zero allocation -> zero embodied
+    assert cm.cache_embodied_g(0.0, 3600.0) == 0.0
+
+
+def test_compute_embodied_amortization():
+    cm = CarbonModel()
+    lt = cm.hw.lifetime_years * SECONDS_PER_YEAR
+    assert cm.compute_embodied_g(lt) == pytest.approx(
+        cm.hw.embodied_compute_kg * 1000.0)
+
+
+def test_total_eq5_decomposes():
+    cm = CarbonModel()
+    tot = cm.total_g(1.5, 33.0, 4.0, 7200.0)
+    assert tot == pytest.approx(cm.operational_g(1.5, 33.0)
+                                + cm.cache_embodied_g(4.0, 7200.0)
+                                + cm.compute_embodied_g(7200.0))
+
+
+def test_ssd_fraction_of_embodied_matches_paper():
+    """Paper §2.3: SSD = 76.6 % of server embodied carbon at 16 TB."""
+    hw = HardwareSpec()
+    ssd = hw.ssd_kg_per_tb * hw.max_ssd_tb
+    frac = ssd / (ssd + hw.embodied_compute_kg)
+    assert 0.74 < frac < 0.79
+
+
+@given(e=st.floats(0, 1e3), ci=st.floats(0, 1e3))
+@settings(max_examples=50, deadline=None)
+def test_operational_bilinear(e, ci):
+    cm = CarbonModel()
+    assert cm.operational_g(e, ci) == pytest.approx(e * ci)
+    assert cm.operational_g(2 * e, ci) == pytest.approx(2 * cm.operational_g(e, ci))
+
+
+@given(tb=st.floats(0, 16), s1=st.floats(0, 1e6), s2=st.floats(0, 1e6))
+@settings(max_examples=50, deadline=None)
+def test_embodied_additive_in_time(tb, s1, s2):
+    cm = CarbonModel()
+    a = cm.cache_embodied_g(tb, s1) + cm.cache_embodied_g(tb, s2)
+    b = cm.cache_embodied_g(tb, s1 + s2)
+    assert a == pytest.approx(b, rel=1e-9, abs=1e-12)
+
+
+@given(u1=st.floats(0, 1), u2=st.floats(0, 1), sec=st.floats(1, 1e5))
+@settings(max_examples=50, deadline=None)
+def test_energy_monotone_in_utilization(u1, u2, sec):
+    cm = CarbonModel()
+    lo, hi = min(u1, u2), max(u1, u2)
+    assert cm.energy_kwh(lo, sec) <= cm.energy_kwh(hi, sec) + 1e-12
+
+
+def test_grid_ci_ordering():
+    assert GRID_CI["FR"] < GRID_CI["FI"] < GRID_CI["ES"] < GRID_CI["CISO"]

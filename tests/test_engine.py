@@ -1,0 +1,81 @@
+"""Serving-engine simulation invariants (paper Takeaways 1-4)."""
+import numpy as np
+import pytest
+
+from repro.core.carbon import CarbonModel
+from repro.core.kvstore import KVStore
+from repro.core.policies import POLICIES
+from repro.serving.engine import ServingEngine
+from repro.serving.perfmodel import SERVING_MODELS
+from repro.workloads.conversations import ConversationWorkload
+from repro.workloads.traces import make_poisson_arrivals
+
+M = SERVING_MODELS["llama3-70b"]
+CM = CarbonModel()
+
+
+def run(cache_tb, rate=1.2, n_meas=400, warm=15000, seed=1):
+    store = KVStore(cache_tb * 1e12, POLICIES["lcs_chat"],
+                    M.kv_bytes_per_token)
+    eng = ServingEngine(M, store, CM)
+    wl = ConversationWorkload(seed=seed)
+    arr = make_poisson_arrivals(np.full(48, rate), seed=seed + 1,
+                                max_requests=warm + n_meas)
+    reqs = [wl.sample(t) for t in arr]
+    eng.warm(reqs[:warm])
+    store.stats.__init__()
+    return eng.run(reqs[warm:warm + n_meas], ci_fn=lambda t: 124.0,
+                   cache_tb=cache_tb)
+
+
+def test_cache_reduces_ttft():
+    r0, r16 = run(0), run(16)
+    assert r16.ttft.mean() < r0.ttft.mean()
+    assert r16.p90("ttft") < r0.p90("ttft")
+
+
+def test_hit_rate_monotone_in_cache_size():
+    hits = [run(s).token_hit_rate for s in (0, 2, 8, 16)]
+    assert hits[0] == 0.0
+    assert all(b >= a - 0.02 for a, b in zip(hits, hits[1:]))
+
+
+def test_takeaway2_higher_rate_bigger_benefit():
+    """Prefill latency reduction from caching grows with request rate."""
+    lo = run(16, rate=0.4).ttft.mean() / max(run(0, rate=0.4).ttft.mean(), 1e-9)
+    hi = run(16, rate=1.5).ttft.mean() / max(run(0, rate=1.5).ttft.mean(), 1e-9)
+    assert hi < lo
+
+
+def test_decode_benefits_indirectly():
+    r0, r16 = run(0, rate=1.5), run(16, rate=1.5)
+    assert r16.tpot.mean() <= r0.tpot.mean()
+
+
+def test_energy_and_carbon_positive_and_decomposed():
+    r = run(8)
+    assert r.energy_kwh > 0
+    assert r.carbon_g == pytest.approx(
+        r.operational_g + r.embodied_cache_g + r.embodied_compute_g)
+    assert r.embodied_cache_g > 0
+
+
+def test_no_cache_has_no_embodied_cache_carbon():
+    r = run(0)
+    assert r.embodied_cache_g == 0.0
+
+
+def test_lcs_beats_fifo_hit_rate():
+    """Paper Table 3: LCS ≥ FIFO at small cache sizes."""
+    def hit(policy):
+        store = KVStore(2e12, POLICIES[policy], M.kv_bytes_per_token)
+        eng = ServingEngine(M, store, CM)
+        wl = ConversationWorkload(seed=3)
+        arr = make_poisson_arrivals(np.full(48, 1.2), seed=5,
+                                    max_requests=25000)
+        reqs = [wl.sample(t) for t in arr]
+        eng.warm(reqs[:24000])
+        store.stats.__init__()
+        res = eng.run(reqs[24000:], ci_fn=lambda t: 0.0, cache_tb=2)
+        return res.token_hit_rate
+    assert hit("lcs_chat") >= hit("fifo") - 0.01

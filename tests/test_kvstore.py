@@ -1,0 +1,81 @@
+"""KV store behaviour + hypothesis invariants."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.kvstore import KVStore
+from repro.core.policies import POLICIES
+
+BPT = 1000.0  # bytes per token
+
+
+def mk(capacity_tokens=100, policy="lru"):
+    return KVStore(capacity_tokens * BPT, POLICIES[policy], BPT)
+
+
+def test_miss_then_hit():
+    s = mk()
+    assert s.lookup("a", 10, now=0.0) is None
+    s.insert("a", 10, now=0.0)
+    e = s.lookup("a", 10, now=1.0)
+    assert e is not None and e.hits == 1 and e.hit_tokens == 10
+    assert s.stats.token_hit_rate == pytest.approx(0.5)  # 10 of 20 looked-up
+
+
+def test_partial_prefix_hit():
+    s = mk()
+    s.insert("a", 10, now=0.0)
+    e = s.lookup("a", 25, now=1.0)     # query longer than cached prefix
+    assert e.hit_tokens == 10
+    assert s.reusable_tokens("a", 5) == 5
+
+
+def test_eviction_lru_order():
+    s = mk(capacity_tokens=30, policy="lru")
+    s.insert("a", 10, now=0.0)
+    s.insert("b", 10, now=1.0)
+    s.lookup("a", 10, now=2.0)          # refresh a
+    s.insert("c", 25, now=3.0)          # forces eviction; b is LRU
+    assert "b" not in s.entries
+    assert "c" in s.entries
+
+
+def test_resize_shrink_evicts_lowest_score():
+    s = mk(capacity_tokens=100, policy="lfu")
+    s.insert("hot", 40, now=0.0)
+    s.insert("cold", 40, now=0.0)
+    for t in range(5):
+        s.lookup("hot", 40, now=1.0 + t)
+    s.resize(50 * BPT, now=10.0)
+    assert "hot" in s.entries and "cold" not in s.entries
+    assert s.used_bytes <= s.capacity_bytes
+
+
+def test_entry_larger_than_capacity_rejected():
+    s = mk(capacity_tokens=10)
+    assert s.insert("big", 50, now=0.0) is None
+
+
+def test_extend_entry_grows_not_duplicates():
+    s = mk()
+    s.insert("a", 10, now=0.0, turn=1)
+    s.insert("a", 30, now=1.0, turn=2)
+    assert len(s) == 1
+    assert s.entries["a"].num_tokens == 30
+    assert s.entries["a"].turn == 2
+
+
+@given(st.lists(st.tuples(st.integers(0, 19), st.integers(1, 40)),
+                min_size=1, max_size=200))
+@settings(max_examples=30, deadline=None)
+def test_invariants_random_workload(ops):
+    s = mk(capacity_tokens=120, policy="lcs")
+    for i, (kid, toks) in enumerate(ops):
+        key = f"k{kid}"
+        s.lookup(key, toks, now=float(i))
+        s.insert(key, toks, now=float(i))
+        # invariant: accounting consistent and capacity respected
+        assert s.used_bytes <= s.capacity_bytes + 1e-6
+        assert s.used_bytes == pytest.approx(
+            sum(e.size_bytes for e in s.entries.values()))
+    assert s.stats.hit_tokens <= s.stats.lookup_tokens

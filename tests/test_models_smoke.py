@@ -1,0 +1,106 @@
+"""REQUIRED per-architecture smoke tests: every assigned arch instantiates a
+reduced variant (≤2-4 layers, d_model ≤ 512, ≤4 experts) and runs one
+forward + one train step on CPU, asserting output shapes and no NaNs.
+Full-size configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_params, prefill)
+from repro.train.data import make_batch_for
+from repro.train.optimizer import AdamWConfig
+from repro.train.steps import init_train_state, make_train_step
+
+B, S = 2, 16
+
+
+def reduced_cfg(arch):
+    nl = 4 if get_config(arch).family == "hybrid" else 2
+    return get_config(arch).reduced(num_layers=nl, d_model=256)
+
+
+def mk_batch(cfg, with_labels=True):
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, size=(B, S)).astype(np.int32)
+    labels = rng.integers(0, cfg.vocab_size, size=(B, S)).astype(np.int32)
+    batch = make_batch_for(cfg, toks, labels)
+    if not with_labels:
+        batch.pop("labels")
+    return {k: jnp.asarray(v) for k, v in batch.items()}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_shapes_no_nan(arch):
+    cfg = reduced_cfg(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    batch = mk_batch(cfg, with_labels=False)
+    logits = forward(params, cfg, batch, remat=False)
+    S_total = S + (cfg.vision_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, S_total, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_one_train_step(arch):
+    cfg = reduced_cfg(arch)
+    params, opt = init_train_state(jax.random.PRNGKey(0), cfg,
+                                   dtype=jnp.float32)
+    step = make_train_step(cfg, AdamWConfig(lr=1e-3, total_steps=10,
+                                            warmup_steps=1))
+    batch = mk_batch(cfg)
+    params2, opt2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    l0 = jax.tree.leaves(params)[0]
+    l1 = jax.tree.leaves(params2)[0]
+    assert not bool(jnp.allclose(l0, l1))
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-1.6b",
+                                  "recurrentgemma-2b", "qwen2-vl-2b"])
+def test_prefill_decode_consistency(arch):
+    """decode continuation matches teacher-forced forward."""
+    cfg = reduced_cfg(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    batch = mk_batch(cfg, with_labels=False)
+    logits, cache = prefill(params, cfg, batch, max_len=32)
+    new = jnp.full((B, 1), 5, jnp.int32)
+    pos = logits.shape[1]
+    lg, _ = decode_step(params, cfg, cache, new, jnp.asarray(pos))
+    b2 = dict(batch, tokens=jnp.concatenate([batch["tokens"], new], axis=1))
+    if cfg.family == "vlm":
+        St = b2["tokens"].shape[1] + cfg.vision_tokens
+        b2["positions"] = jnp.broadcast_to(
+            jnp.arange(St)[None, :, None], (B, St, 3))
+    full = forward(params, cfg, b2, remat=False)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(full[:, -1]), atol=5e-4)
+
+
+def test_sliding_window_limits_attention():
+    """SWA arch: tokens beyond the window do not affect the output."""
+    cfg = reduced_cfg("h2o-danube-1.8b")   # reduced window = 64 > S; shrink
+    import dataclasses
+    cfg = dataclasses.replace(cfg, window_size=8)
+    params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 24)), jnp.int32)
+    out1 = forward(params, cfg, {"tokens": toks}, remat=False)
+    toks2 = toks.at[:, 0].set((toks[:, 0] + 1) % cfg.vocab_size)
+    out2 = forward(params, cfg, {"tokens": toks2}, remat=False)
+    # last position is > window away from position 0 (2 layers widen the
+    # receptive field to 2*window; 24 > 2*8 only marginally — check pos -1)
+    np.testing.assert_allclose(np.asarray(out1[:, -1]),
+                               np.asarray(out2[:, -1]), atol=1e-4)
+
+
+def test_cache_width_ring_buffer_decode():
+    """long-context mode: dense decode uses a ring buffer of window size."""
+    cfg = reduced_cfg("yi-6b")
+    cache = init_cache(cfg, 1, max_len=1024, dtype=jnp.float32,
+                       long_context=True)
+    assert cache["k"].shape[2] == cfg.long_context_window  # 128 in reduced

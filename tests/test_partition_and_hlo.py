@@ -1,0 +1,102 @@
+"""Partition specs validity for all archs + HLO cost-model unit tests."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch.specs import cache_specs, param_shapes
+from repro.models import partition
+from repro.roofline.hlo_cost import HloCostModel, analyze_hlo, \
+    shape_numel_bytes
+
+AXES = {"data": 16, "model": 16}
+AXES_MP = {"pod": 2, "data": 16, "model": 16}
+
+
+def _check_divisibility(shapes, specs, axes):
+    def check(leaf, spec):
+        for dim, names in zip(leaf.shape, spec):
+            if names is None:
+                continue
+            ns = names if isinstance(names, tuple) else (names,)
+            size = 1
+            for n in ns:
+                size *= axes[n]
+            assert dim % size == 0, f"{leaf.shape} vs {spec}"
+    jax.tree.map(check, shapes, specs,
+                 is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_pspecs_divisible(arch):
+    cfg = get_config(arch)
+    shapes = param_shapes(cfg)
+    specs = partition.param_pspecs(shapes, AXES)
+    _check_divisibility(shapes, specs, AXES)
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "grok-1-314b", "rwkv6-1.6b",
+                                  "recurrentgemma-2b"])
+@pytest.mark.parametrize("shape", ["decode_32k", "long_500k"])
+def test_cache_pspecs_divisible(arch, shape):
+    cfg = get_config(arch)
+    cs = cache_specs(cfg, INPUT_SHAPES[shape])
+    specs = partition.cache_pspecs(cs, AXES)
+    _check_divisibility(cs, specs, AXES)
+
+
+def test_batch_axes_selection():
+    assert partition.batch_axes(256, AXES_MP) == ("pod", "data")
+    assert partition.batch_axes(16, AXES) == "data"
+    assert partition.batch_axes(1, AXES) is None
+    assert partition.batch_axes(3, AXES) is None
+
+
+def test_moe_expert_sharding_modes():
+    """dbrx 16e -> expert-parallel; grok 8e -> tensor-parallel d_ff."""
+    dbrx = partition.param_pspecs(param_shapes(get_config("dbrx-132b")),
+                                  AXES)
+    spec = dbrx["layers"]["moe"]["w_up"]
+    assert spec[1] == "model"                      # experts sharded
+    grok = partition.param_pspecs(param_shapes(get_config("grok-1-314b")),
+                                  AXES)
+    spec = grok["layers"]["moe"]["w_up"]
+    assert spec[1] is None and spec[3] == "model"  # d_ff sharded
+
+
+# ---------------- HLO cost model ----------------
+
+def test_shape_parse():
+    n, b = shape_numel_bytes("bf16[8,128]{1,0}")
+    assert n == 1024 and b == 2048
+    n, b = shape_numel_bytes("(f32[4,4]{1,0}, s32[])")
+    assert n == 17 and b == 68
+
+
+def test_scan_trip_count_multiplied():
+    def g(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    cost = analyze_hlo(jax.jit(g).lower(a, ws).compile().as_text())
+    expect = 8 * 2 * 256 ** 3
+    assert 0.9 * expect < cost.flops < 1.3 * expect
+
+
+def test_plain_matmul_flops():
+    f = lambda a, b: a @ b
+    a = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    cost = analyze_hlo(jax.jit(f).lower(a, a).compile().as_text())
+    expect = 2 * 512 ** 3
+    assert 0.95 * expect < cost.flops < 1.1 * expect
+
+
+def test_no_collectives_on_single_device():
+    f = lambda a, b: a @ b
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    cost = analyze_hlo(jax.jit(f).lower(a, a).compile().as_text())
+    assert cost.comm == 0.0

@@ -1,0 +1,69 @@
+"""LCS replacement policy (paper Eqs. 7-9) scoring properties."""
+import dataclasses
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.kvstore import CacheEntry
+from repro.core.policies import (lcs_chat_score, lcs_doc_score, lcs_score,
+                                 lfu_score, lru_score)
+
+
+def entry(**kw):
+    base = dict(key="k", num_tokens=100, size_bytes=1e5, created_at=0.0,
+                last_access=0.0, hits=1, hit_tokens=100, turn=1)
+    base.update(kw)
+    return CacheEntry(**base)
+
+
+NOW = 100.0
+
+
+def test_insight_i_more_hit_tokens_higher_score():
+    assert lcs_score(entry(hit_tokens=2000), NOW) > \
+        lcs_score(entry(hit_tokens=100), NOW)
+
+
+def test_insight_ii_more_hits_higher_score():
+    assert lcs_score(entry(hits=10), NOW) > lcs_score(entry(hits=1), NOW)
+
+
+def test_insight_iii_smaller_entries_preferred():
+    assert lcs_score(entry(size_bytes=1e4), NOW) > \
+        lcs_score(entry(size_bytes=1e6), NOW)
+
+
+def test_insight_iv_staleness_penalized():
+    assert lcs_score(entry(created_at=90.0), NOW) > \
+        lcs_score(entry(created_at=0.0), NOW)
+
+
+def test_chat_variant_prefers_deeper_turns():
+    assert lcs_chat_score(entry(turn=8), NOW) > \
+        lcs_chat_score(entry(turn=1), NOW)
+
+
+def test_doc_variant_prefers_reused_docs():
+    assert lcs_doc_score(entry(hits=6), NOW) > \
+        lcs_doc_score(entry(hits=1), NOW)
+
+
+@given(hits=st.integers(1, 100), toks=st.integers(1, 10000),
+       size=st.floats(1e3, 1e9), age=st.floats(1.0, 1e6))
+@settings(max_examples=60, deadline=None)
+def test_lcs_monotonicity(hits, toks, size, age):
+    e = entry(hits=hits, hit_tokens=toks, size_bytes=size,
+              created_at=NOW + 200 - age)
+    s = lcs_score(e, NOW + 200)
+    assert s >= 0
+    assert lcs_score(entry(hits=hits + 1, hit_tokens=toks, size_bytes=size,
+                           created_at=NOW + 200 - age), NOW + 200) >= s
+    assert lcs_score(entry(hits=hits, hit_tokens=toks, size_bytes=size * 2,
+                           created_at=NOW + 200 - age), NOW + 200) <= s
+
+
+def test_baseline_policies_orderings():
+    old = entry(created_at=0.0, last_access=5.0)
+    new = entry(created_at=50.0, last_access=60.0)
+    assert lru_score(new, NOW) > lru_score(old, NOW)
+    assert lfu_score(entry(hits=7), NOW) > lfu_score(entry(hits=2), NOW)

@@ -1,0 +1,52 @@
+"""Load (SARIMA-lite) and CI (EnsembleCI-lite) predictor accuracy."""
+import numpy as np
+import pytest
+
+from repro.core.predictors import CIPredictor, LoadPredictor, mape
+from repro.workloads.traces import azure_rate_trace, ci_trace
+
+
+def test_load_predictor_diurnal_pattern():
+    """3 days history -> 24 h forecast (paper: hold-out eval, MAPE 4.3%)."""
+    hist = azure_rate_trace(2.0, days=3, seed=0, noise=0.03)
+    truth = azure_rate_trace(2.0, days=1, seed=9, noise=0.03)
+    pred = LoadPredictor().fit(hist).predict(24)
+    assert mape(pred, truth) < 0.15
+
+
+def test_load_predictor_online_update_improves():
+    hist = azure_rate_trace(2.0, days=3, seed=0)
+    lp = LoadPredictor().fit(hist)
+    day = azure_rate_trace(2.0, days=1, seed=2)
+    errs = []
+    for h in range(24):
+        p = lp.predict(1)[0]
+        errs.append(abs(p - day[h]) / max(day[h], 1e-9))
+        lp.update(day[h])
+    assert np.mean(errs) < 0.2
+
+
+@pytest.mark.parametrize("grid", ["FR", "FI", "ES", "CISO"])
+def test_ci_predictor_mape_in_paper_range(grid):
+    """Paper §6.5: CI MAPE 6.8-15.3 % across the four grids."""
+    hist = ci_trace(grid, days=6, seed=1)
+    truth = ci_trace(grid, days=1, seed=7)
+    pred = CIPredictor().fit(hist).predict(24)
+    assert mape(pred, truth) < 0.25
+
+
+def test_ci_ensemble_not_worse_than_persistence():
+    hist = ci_trace("CISO", days=6, seed=1)
+    truth = ci_trace("CISO", days=1, seed=7)
+    ens = CIPredictor().fit(hist)
+    pred = ens.predict(24)
+    persist = np.full(24, hist[-1])
+    assert mape(pred, truth) <= mape(persist, truth) + 0.02
+
+
+def test_predictor_handles_short_history():
+    lp = LoadPredictor().fit([1.0, 2.0])
+    out = lp.predict(5)
+    assert out.shape == (5,) and np.all(out >= 0)
+    cp = CIPredictor().fit([100.0])
+    assert cp.predict(3).shape == (3,)

@@ -1,0 +1,75 @@
+"""Real-execution mode: actual JAX model with KV-prefix reuse — the cached
+path must be numerically identical to recomputing the full prompt."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.kvstore import KVStore
+from repro.core.policies import POLICIES
+from repro.models.transformer import init_params, prefill
+from repro.serving.realexec import RealExecutionEngine
+
+
+def make_engine(arch, seed=0):
+    nl = 4 if get_config(arch).family == "hybrid" else 2
+    cfg = get_config(arch).reduced(num_layers=nl, d_model=128)
+    params = init_params(jax.random.PRNGKey(seed), cfg, jnp.float32)
+    store = KVStore(64e6, POLICIES["lcs"], max(cfg.kv_bytes_per_token, 1.0))
+    return cfg, params, RealExecutionEngine(cfg, params, store, max_len=128)
+
+
+def test_prefix_prefill_matches_full_prefill():
+    """prefill(suffix | cached prefix KV) == prefill(full prompt)."""
+    cfg, params, _ = make_engine("yi-6b")
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 24)), jnp.int32)
+    full_logits, full_cache = prefill(params, cfg, {"tokens": toks},
+                                      max_len=64)
+    pre_logits, pre_cache = prefill(params, cfg, {"tokens": toks[:, :16]},
+                                    max_len=64)
+    suf_logits, suf_cache = prefill(params, cfg, {"tokens": toks[:, 16:]},
+                                    max_len=64, prefix_cache=pre_cache,
+                                    prefix_len=16)
+    np.testing.assert_allclose(np.asarray(suf_logits),
+                               np.asarray(full_logits[:, 16:]), atol=3e-4)
+    np.testing.assert_allclose(np.asarray(suf_cache["k"][:, :, :24]),
+                               np.asarray(full_cache["k"][:, :, :24]),
+                               atol=3e-4)
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-1.6b",
+                                  "recurrentgemma-2b"])
+def test_multi_turn_reuse_identical_output(arch):
+    """Generation with cache reuse == generation without (greedy tokens)."""
+    cfg, params, eng = make_engine(arch)
+    rng = np.random.default_rng(1)
+    ctx = [int(t) for t in rng.integers(0, cfg.vocab_size, 20)]
+
+    r1 = eng.generate("c", ctx, num_new=3)
+    assert r1.reused_tokens == 0
+    ctx2 = ctx + r1.tokens + [int(t) for t in
+                              rng.integers(0, cfg.vocab_size, 6)]
+    r2 = eng.generate("c", ctx2, num_new=3)
+    # the stored prefix covers the first turn's prompt (20 tokens)
+    assert r2.reused_tokens == len(ctx)
+    assert r2.prefill_tokens_computed == len(ctx2) - len(ctx)
+
+    # fresh engine, no cache: same tokens expected
+    cfg_, params_, eng_cold = make_engine(arch)
+    rc = eng_cold.generate("other", ctx2, num_new=3)
+    assert rc.reused_tokens == 0
+    assert rc.tokens == r2.tokens
+
+
+def test_store_tracks_real_payload_bytes():
+    cfg, params, eng = make_engine("yi-6b")
+    rng = np.random.default_rng(2)
+    ctx = [int(t) for t in rng.integers(0, cfg.vocab_size, 12)]
+    eng.generate("a", ctx, num_new=2)
+    assert len(eng.store.entries) == 1
+    e = eng.store.entries["a"]
+    assert e.payload is not None
+    assert e.num_tokens == 12 + 0  # prompt cached (decode tokens excluded
+    # from the key count is implementation detail: prompt_tokens inserted)

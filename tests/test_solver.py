@@ -1,0 +1,98 @@
+"""ILP constraint solver (paper §5.4): correctness, ILP↔DP agreement,
+carbon/SLO tradeoff behaviour."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.carbon import CarbonModel
+from repro.core.profiler import Profile, ProfileCell
+from repro.core.solver import (_solve_dp, _solve_ilp, solve_cache_schedule)
+from repro.serving.perfmodel import SLO
+
+
+def synth_profile(sizes=(0, 4, 8, 16), rates=(0.5, 1.0, 2.0)):
+    """Hand-built profile: bigger cache -> better SLO, more embodied; higher
+    rate -> worse SLO without cache."""
+    prof = Profile("m", "t", rates=list(rates), sizes=list(sizes))
+    for r in rates:
+        for s in sizes:
+            slo = min(1.0, 0.3 + 0.05 * s + 0.4 / max(r, 0.3) * (0.2 + 0.05 * s))
+            energy = (2.0e-4) * (1.0 - 0.006 * s)       # cache saves energy
+            prof.cells[(r, s)] = ProfileCell(
+                rate=r, cache_tb=s, avg_ttft=1.0, p90_ttft=2.0,
+                avg_tpot=0.1, p90_tpot=0.15, slo_frac=slo,
+                hit_rate=0.04 * s, energy_per_req_kwh=energy,
+                duration_per_req_s=1.0 / r, avg_power_w=1000.0)
+    return prof
+
+
+def test_low_ci_prefers_small_cache():
+    prof = synth_profile()
+    cm = CarbonModel()
+    res = solve_cache_schedule(prof, [0.5] * 4, [5.0] * 4, SLO(2.5, 0.2, 0.5),
+                               cm)
+    assert res.feasible
+    assert np.mean(res.sizes_tb) <= 8
+
+
+def test_high_ci_prefers_large_cache():
+    prof = synth_profile()
+    cm = CarbonModel()
+    lo = solve_cache_schedule(prof, [1.5] * 4, [5.0] * 4, SLO(2.5, 0.2, 0.5), cm)
+    hi = solve_cache_schedule(prof, [1.5] * 4, [800.0] * 4, SLO(2.5, 0.2, 0.5), cm)
+    assert np.mean(hi.sizes_tb) >= np.mean(lo.sizes_tb)
+
+
+def test_slo_constraint_forces_cache():
+    prof = synth_profile()
+    cm = CarbonModel()
+    # relaxed rho -> smallest cache; strict rho -> bigger
+    loose = solve_cache_schedule(prof, [2.0] * 6, [5.0] * 6,
+                                 SLO(2.5, 0.2, 0.3), cm)
+    strict = solve_cache_schedule(prof, [2.0] * 6, [5.0] * 6,
+                                  SLO(2.5, 0.2, 0.9), cm)
+    assert np.mean(strict.sizes_tb) >= np.mean(loose.sizes_tb)
+
+
+def test_ilp_and_dp_agree():
+    prof = synth_profile()
+    cm = CarbonModel()
+    rates = [0.5, 1.0, 2.0, 1.0]
+    cis = [30.0, 120.0, 480.0, 60.0]
+    a = solve_cache_schedule(prof, rates, cis, SLO(2.5, 0.2, 0.8), cm,
+                             use_ilp=True)
+    b = solve_cache_schedule(prof, rates, cis, SLO(2.5, 0.2, 0.8), cm,
+                             use_ilp=False)
+    assert a.feasible and b.feasible
+    # DP discretizes the satisfied-count axis; objectives should be close
+    assert b.objective_g <= a.objective_g * 1.05 + 1e-9
+    assert a.objective_g <= b.objective_g * 1.05 + 1e-9
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_dp_never_beats_ilp_by_much_random(seed):
+    rng = np.random.default_rng(seed)
+    T, S = 5, 4
+    sizes = [0, 2, 8, 16]
+    C = rng.uniform(0.001, 1.0, (T, S))
+    F = np.sort(rng.uniform(0.2, 1.0, (T, S)), axis=1)  # bigger cache better
+    n = rng.uniform(100, 5000, T)
+    rho = 0.6
+    ia = _solve_ilp(C, F, n, sizes, rho, 0.0)
+    db = _solve_dp(C, F, n, sizes, rho, 0.0, buckets=4000)
+    if ia.feasible and db.feasible:
+        assert db.objective_g >= ia.objective_g - 1e-6  # ILP is optimal
+        # DP discretizes the satisfied-request axis: with 4000 buckets the
+        # slack on adversarial random instances stays below ~10 %
+        # (measured worst 1.08 over 400 seeds)
+        assert db.objective_g <= ia.objective_g * 1.15 + 1e-6
+
+
+def test_infeasible_falls_back_to_best_effort():
+    prof = synth_profile()
+    cm = CarbonModel()
+    res = solve_cache_schedule(prof, [5.0] * 3, [100.0] * 3,
+                               SLO(2.5, 0.2, 0.999), cm)
+    assert len(res.sizes_tb) == 3     # still returns a schedule

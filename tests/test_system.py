@@ -1,0 +1,90 @@
+"""End-to-end system test: profiler → predictors → ILP → controller over a
+short day — GreenCache must meet SLO while not exceeding Full-Cache carbon
+in a low-CI grid (the paper's headline behaviour, Fig 12)."""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core.carbon import CarbonModel
+from repro.core.controller import GreenCacheController
+from repro.core.profiler import run_profiler
+from repro.serving.perfmodel import SERVING_MODELS
+from repro.workloads.conversations import ConversationWorkload
+from repro.workloads.documents import DocumentWorkload
+from repro.workloads.traces import azure_rate_trace, ci_trace
+
+
+@functools.lru_cache(maxsize=None)
+def small_profile():
+    m = SERVING_MODELS["llama3-70b"]
+    cm = CarbonModel()
+    return run_profiler(
+        m, "conversation", lambda s: ConversationWorkload(seed=s), cm,
+        rates=[0.3, 0.8, 1.3, 1.6], sizes_tb=[0, 1, 2, 4, 8, 16],
+        meas_seconds=700, ramp_seconds=240, warmup_prompts=8000)
+
+
+def run_mode(mode, grid="FR"):
+    m = SERVING_MODELS["llama3-70b"]
+    cm = CarbonModel()
+    ctl = GreenCacheController(
+        m, small_profile(), cm, "conversation", mode=mode,
+        policy="lcs_chat", warm_requests=8000, max_requests_per_hour=900)
+    rates = azure_rate_trace(1.6, seed=3)
+    cis = ci_trace(grid, seed=4)
+    return ctl.run_day(lambda s: ConversationWorkload(seed=s), rates, cis)
+
+
+def test_profile_is_sane():
+    prof = small_profile()
+    c = prof.cells
+    # SLO attainment improves with cache at high rate
+    assert c[(1.6, 16)].slo_frac > c[(1.6, 0)].slo_frac
+    # hit rate grows with size
+    assert c[(1.3, 16)].hit_rate > c[(1.3, 1)].hit_rate > 0
+    # caching reduces TTFT
+    assert c[(1.3, 16)].avg_ttft < c[(1.3, 0)].avg_ttft
+
+
+def test_greencache_beats_full_cache_in_low_ci_grid():
+    full = run_mode("full", "FR")
+    gc = run_mode("greencache", "FR")
+    assert gc.carbon_per_request_g < full.carbon_per_request_g
+    assert gc.avg_cache_tb < full.avg_cache_tb
+
+
+def test_greencache_slo_attainment():
+    gc = run_mode("greencache", "FR")
+    assert gc.slo_attainment >= 0.85   # paper targets >90 %; short-sim noise
+
+
+def test_no_cache_violates_slo():
+    nc = run_mode("none", "FR")
+    assert nc.slo_attainment < 0.85
+
+
+def test_adaptive_sizes_vary_with_load():
+    gc = run_mode("greencache", "FR")
+    sizes = [h.cache_tb for h in gc.hours]
+    night = np.mean(sizes[0:6])
+    day = np.mean(sizes[9:18])
+    assert day >= night          # larger caches under higher load
+
+
+def test_document_task_pipeline_runs():
+    m = SERVING_MODELS["llama3-70b"]
+    cm = CarbonModel()
+    prof = run_profiler(
+        m, "document", lambda s: DocumentWorkload(seed=s, zipf_alpha=0.7),
+        cm, rates=[0.2, 0.5], sizes_tb=[0, 4, 16],
+        meas_seconds=500, ramp_seconds=150, warmup_prompts=4000)
+    ctl = GreenCacheController(m, prof, cm, "document", mode="greencache",
+                               policy="lcs_doc", warm_requests=4000,
+                               max_requests_per_hour=400)
+    rates = azure_rate_trace(0.5, seed=1)[:8]
+    cis = ci_trace("ES", seed=2)[:8]
+    res = ctl.run_day(lambda s: DocumentWorkload(seed=s, zipf_alpha=0.7),
+                      rates, cis)
+    assert len(res.hours) == 8
+    assert res.carbon_per_request_g > 0

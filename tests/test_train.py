@@ -1,0 +1,78 @@
+"""Training substrate: loss decreases, checkpoint round-trip, optimizer."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train.data import SyntheticCorpus, batch_iterator
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   global_norm, lr_schedule)
+from repro.train.steps import init_train_state, make_train_step
+
+
+def test_loss_decreases_tiny_model():
+    cfg = get_config("yi-6b").reduced(num_layers=2, d_model=64)
+    params, opt = init_train_state(jax.random.PRNGKey(0), cfg, jnp.float32)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(
+        lr=2e-3, total_steps=60, warmup_steps=5)))
+    it = batch_iterator(cfg, batch=4, seq=32, seed=0)
+    losses = []
+    for _ in range(45):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.1
+
+
+def test_adamw_moves_toward_minimum():
+    params = {"w": jnp.asarray([4.0, -3.0])}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=1000, min_lr_frac=1.0)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}          # d/dw of w^2
+        params, opt, _ = adamw_update(cfg, grads, opt, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_lr_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in
+           [0, 5, 10, 50, 100]]
+    assert lrs[0] < lrs[1] < lrs[2]
+    assert lrs[2] >= lrs[3] >= lrs[4]
+    assert lrs[4] >= cfg.lr * cfg.min_lr_frac * 0.99
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((2, 2)), "b": jnp.ones((3,))}
+    assert float(global_norm(t)) == np.sqrt(7.0).astype(np.float32)
+
+
+def test_checkpoint_roundtrip():
+    cfg = get_config("rwkv6-1.6b").reduced(num_layers=2, d_model=64)
+    params, _ = init_train_state(jax.random.PRNGKey(1), cfg, jnp.float32)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, params, step=42)
+        restored, step = restore_checkpoint(d, params)
+        assert step == 42
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_synthetic_corpus_learnable_structure():
+    c = SyntheticCorpus(256, seed=0)
+    s = c.stream(0)
+    toks = [next(s) for _ in range(5000)]
+    # Markov structure: successor entropy < uniform
+    import collections
+    pairs = collections.Counter(zip(toks[:-1], toks[1:]))
+    succ = collections.defaultdict(set)
+    for (a, b), _ in pairs.items():
+        succ[a].add(b)
+    avg_succ = np.mean([len(v) for v in succ.values()])
+    assert avg_succ < 64          # far fewer than vocab=256

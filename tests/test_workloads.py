@@ -1,0 +1,77 @@
+"""Workload generators match the paper's published statistics."""
+import numpy as np
+
+from repro.workloads.conversations import ConversationWorkload
+from repro.workloads.documents import DocumentWorkload
+from repro.workloads.traces import (azure_rate_trace, ci_trace,
+                                    make_poisson_arrivals)
+
+
+def test_sharegpt_context_distribution():
+    """Paper Fig 4a: 77.2 % of prompts have > 1000 context tokens."""
+    wl = ConversationWorkload(seed=0)
+    reqs = [wl.sample(float(i)) for i in range(8000)]
+    frac = np.mean([r.context_tokens > 1000 for r in reqs])
+    assert 0.6 < frac < 0.9
+    assert max(r.prompt_tokens for r in reqs) <= 8192 + 4096  # window-capped
+
+
+def test_conversation_turns_accumulate_context():
+    wl = ConversationWorkload(seed=1, active_pool=1)
+    r1 = wl.sample(0.0)
+    r2 = wl.sample(1.0)
+    if r2.context_key == r1.context_key:     # same conversation continued
+        assert r2.turn == r1.turn + 1
+        assert r2.context_tokens >= r1.context_tokens
+
+
+def test_triviaqa_doc_lengths():
+    """Paper: average context ~5880 tokens."""
+    wl = DocumentWorkload(seed=0)
+    mean_len = np.mean(wl.doc_len)
+    assert 4000 < mean_len < 7500
+
+
+def test_zipf_skew_alpha_04():
+    """Paper §6.1: alpha=0.4 -> top 10 % of docs get ~25 % of prompts."""
+    wl = DocumentWorkload(seed=0, num_docs=2000, zipf_alpha=0.4)
+    reqs = [wl.sample(float(i)) for i in range(20000)]
+    counts = np.zeros(2000)
+    for r in reqs:
+        counts[int(r.context_key.split("-")[1])] += 1
+    top = np.sort(counts)[::-1][:200].sum() / counts.sum()
+    assert 0.20 < top < 0.32
+
+
+def test_zipf_skew_alpha_07():
+    """alpha=0.7 -> top 10 % get ~50 %."""
+    wl = DocumentWorkload(seed=0, num_docs=2000, zipf_alpha=0.7)
+    reqs = [wl.sample(float(i)) for i in range(20000)]
+    counts = np.zeros(2000)
+    for r in reqs:
+        counts[int(r.context_key.split("-")[1])] += 1
+    top = np.sort(counts)[::-1][:200].sum() / counts.sum()
+    assert 0.42 < top < 0.60
+
+
+def test_azure_trace_diurnal():
+    tr = azure_rate_trace(2.0, days=2, seed=0)
+    assert tr.shape == (48,)
+    assert tr.max() == 2.0
+    day = tr[:24]
+    assert day[3] < day[12]            # night < midday
+
+
+def test_ci_trace_shapes_and_means():
+    for grid, lo, hi in [("FR", 20, 50), ("CISO", 150, 320)]:
+        tr = ci_trace(grid, days=2, seed=0)
+        assert tr.shape == (48,)
+        assert lo < tr.mean() < hi
+    ciso = ci_trace("CISO", days=1, seed=0)
+    assert ciso[np.argmin(ciso)] < 0.45 * ciso.max()   # duck curve
+
+
+def test_poisson_arrival_rate():
+    arr = make_poisson_arrivals(np.full(4, 2.0), seed=0)
+    assert abs(len(arr) / (4 * 3600) - 2.0) < 0.15
+    assert np.all(np.diff(arr) > 0)
