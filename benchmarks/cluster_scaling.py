@@ -1,0 +1,102 @@
+"""Multi-replica cluster scaling: router comparison and vectorized-engine
+speedup (new in the cluster-engine PR; no direct paper figure).
+
+Sweeps n_replicas x router for the 70B chat task at proportionally scaled
+rates, with the cache partitioned per replica — the regime where routing
+matters: cache_affinity keeps repeated contexts on the replica holding
+their KV, so its token hit rate should approach the shared-cache ceiling
+while round_robin scatters contexts across partitions. Also reports the
+single-replica vectorized-vs-seed-loop engine speedup on a common trace.
+"""
+from __future__ import annotations
+
+import copy
+import time
+
+import numpy as np
+
+from repro.core.carbon import CarbonModel
+from repro.core.kvstore import KVStore
+from repro.core.policies import POLICIES
+from repro.serving.engine import ServingEngine
+from repro.serving.cluster import ClusterEngine
+from repro.serving.perfmodel import SERVING_MODELS, SLOS
+
+from benchmarks.common import measure_cell, save_result
+
+MODEL = "llama3-70b"
+BASE_RATE = 1.2           # per-replica arrival rate (req/s)
+CACHE_TB_PER_REPLICA = 4.0
+REPLICAS = [1, 2, 4]
+ROUTERS = ["round_robin", "least_loaded", "cache_affinity"]
+
+
+def _speedup_row(n_requests: int = 24000, warm: int = 12000, reps: int = 3):
+    """Single-replica vectorized engine vs the seed per-request loop."""
+    from repro.workloads.conversations import ConversationWorkload
+    from repro.workloads.traces import make_poisson_arrivals
+
+    m = SERVING_MODELS[MODEL]
+    cm = CarbonModel()
+    wl = ConversationWorkload(seed=7)
+    arr = make_poisson_arrivals(np.full(48, 1.5), seed=8,
+                                max_requests=n_requests)
+    base = [wl.sample(t) for t in arr]
+
+    def run_once(engine_cls, cache_tb=4.0):
+        reqs = [copy.copy(r) for r in base]
+        store = KVStore(cache_tb * 1e12, POLICIES["lcs_chat"],
+                        m.kv_bytes_per_token)
+        eng = engine_cls(m, store, cm)
+        eng.warm(reqs[:warm])
+        t0 = time.perf_counter()
+        res = eng.run(reqs[warm:], ci_fn=lambda t: 50.0, cache_tb=cache_tb)
+        return time.perf_counter() - t0, res
+
+    t_seed = min(run_once(ServingEngine)[0] for _ in range(reps))
+    t_clus, res = min((run_once(ClusterEngine) for _ in range(reps)),
+                      key=lambda x: x[0])
+    return t_seed, t_clus, res
+
+
+def run():
+    out = []
+    rows = []
+    slo = SLOS[(MODEL, "chat")]
+    for n in REPLICAS:
+        for router in ROUTERS:
+            if n == 1 and router != "round_robin":
+                continue            # one replica: routing is moot
+            res = measure_cell(
+                MODEL, "conversation", cache_tb=CACHE_TB_PER_REPLICA * n,
+                rate=BASE_RATE * n, ci=124.0, n_replicas=n,
+                router=router if n > 1 else None, partitioned=(n > 1),
+                n_seconds=300.0)
+            rows.append({
+                "n_replicas": n, "router": router if n > 1 else "single",
+                "hit_rate": res.token_hit_rate,
+                "p90_ttft": res.p90("ttft"),
+                "carbon_per_req_g": res.carbon_per_request_g,
+                "slo": res.slo_attainment(slo),
+            })
+            out.append((f"cluster/{n}rep/{rows[-1]['router']}/hit_rate",
+                        res.token_hit_rate,
+                        f"p90_ttft={res.p90('ttft'):.2f}s "
+                        f"slo={rows[-1]['slo']:.3f}"))
+    # affinity must retain hits under partitioning; round-robin scatters
+    for n in (2, 4):
+        aff = next(r for r in rows if r["n_replicas"] == n
+                   and r["router"] == "cache_affinity")
+        rr = next(r for r in rows if r["n_replicas"] == n
+                  and r["router"] == "round_robin")
+        out.append((f"cluster/{n}rep/affinity_hit_gain",
+                    aff["hit_rate"] - rr["hit_rate"],
+                    "cache_affinity - round_robin token hit rate"))
+
+    t_seed, t_clus, res = _speedup_row()
+    out.append(("cluster/engine_speedup_vs_seed", t_seed / max(t_clus, 1e-9),
+                f"seed {t_seed:.2f}s -> vectorized {t_clus:.2f}s "
+                f"({res.num_requests} reqs)"))
+    save_result("cluster_scaling", {"rows": rows,
+                                    "speedup": t_seed / max(t_clus, 1e-9)})
+    return out

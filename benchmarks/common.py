@@ -11,10 +11,9 @@ from typing import Callable, Dict
 import numpy as np
 
 from repro.core.carbon import CarbonModel
-from repro.core.kvstore import KVStore
 from repro.core.policies import POLICIES
 from repro.core.profiler import Profile, run_profiler
-from repro.serving.engine import ServingEngine
+from repro.serving.cluster import make_cluster
 from repro.serving.perfmodel import SERVING_MODELS, ServingModel
 from repro.workloads.conversations import ConversationWorkload
 from repro.workloads.documents import DocumentWorkload
@@ -23,15 +22,21 @@ from repro.workloads.traces import make_poisson_arrivals
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                            "results")
 GRIDS = ["FR", "FI", "ES", "CISO"]
+# factories accept a load ``scale`` so multi-replica scenarios widen the
+# working set proportionally to the scaled-up request rate
 TASKS = {
-    "conversation": dict(policy="lcs_chat",
-                         factory=lambda s: ConversationWorkload(seed=s)),
-    "doc_a04": dict(policy="lcs_doc",
-                    factory=lambda s: DocumentWorkload(seed=s,
-                                                       zipf_alpha=0.4)),
-    "doc_a07": dict(policy="lcs_doc",
-                    factory=lambda s: DocumentWorkload(seed=s,
-                                                       zipf_alpha=0.7)),
+    "conversation": dict(
+        policy="lcs_chat",
+        factory=lambda s, scale=1.0: ConversationWorkload(seed=s,
+                                                          load_scale=scale)),
+    "doc_a04": dict(
+        policy="lcs_doc",
+        factory=lambda s, scale=1.0: DocumentWorkload(seed=s, zipf_alpha=0.4,
+                                                      load_scale=scale)),
+    "doc_a07": dict(
+        policy="lcs_doc",
+        factory=lambda s, scale=1.0: DocumentWorkload(seed=s, zipf_alpha=0.7,
+                                                      load_scale=scale)),
 }
 # profiled operating ranges (rates scaled to each platform's capacity)
 RATE_GRID = {
@@ -66,23 +71,29 @@ def get_profile(model_name: str, task: str) -> Profile:
 def measure_cell(model_name: str, task: str, *, cache_tb: float,
                  rate: float, ci: float, policy: str | None = None,
                  warm: int | None = None, n_seconds: float = 400.0,
-                 seed: int = 1, hw=None):
-    """One steady-state measurement (used by Figs 3, 5-8, 15, 19, 20)."""
+                 seed: int = 1, hw=None, n_replicas: int = 1,
+                 router: str | None = None, partitioned: bool = False):
+    """One steady-state measurement (used by Figs 3, 5-8, 15, 19, 20).
+    ``n_replicas``/``router``/``partitioned`` select a multi-replica cluster
+    (``cache_tb`` stays the cluster-total allocation; ``rate`` the cluster
+    arrival rate)."""
     m = SERVING_MODELS[model_name]
     carbon = CarbonModel(hw=hw) if hw is not None else CARBON
     t = TASKS[task]
     policy = policy or t["policy"]
-    store = KVStore(cache_tb * 1e12, POLICIES[policy], m.kv_bytes_per_token)
-    eng = ServingEngine(m, store, carbon)
-    wl = t["factory"](seed)
+    eng = make_cluster(m, carbon, cache_tb=cache_tb,
+                       policy=POLICIES[policy], n_replicas=n_replicas,
+                       router=router, partitioned=partitioned)
+    wl = t["factory"](seed, scale=max(float(n_replicas), 1.0))
     warm = WARMUP[task] if warm is None else warm
     n_meas = max(int(rate * n_seconds), 150)
     arr = make_poisson_arrivals(np.full(96, rate), seed=seed + 1,
                                 max_requests=warm + n_meas)
     reqs = [wl.sample(tt) for tt in arr]
     eng.warm(reqs[:warm])
-    store.stats.lookups = store.stats.hits = 0
-    store.stats.hit_tokens = store.stats.lookup_tokens = 0
+    for store in eng.stores:
+        store.stats.lookups = store.stats.hits = 0
+        store.stats.hit_tokens = store.stats.lookup_tokens = 0
     res = eng.run(reqs[warm:warm + n_meas], ci_fn=lambda _: ci,
                   cache_tb=cache_tb)
     return res

@@ -17,19 +17,27 @@ from benchmarks.common import (CARBON, GRIDS, RATE_GRID, TASKS, WARMUP,
                                get_profile, save_result, task_name_for_slo)
 
 MODES = ["none", "full", "greencache"]
+# compact cluster slice: co-decide (cache, replicas) at 3x load, FR grid
+CLUSTER_REPLICAS = [1, 2, 3, 4]
+CLUSTER_SCALE = 3.0
 
 
-def run_one(model_name: str, task: str, grid: str, mode: str, seed=3):
+def run_one(model_name: str, task: str, grid: str, mode: str, seed=3,
+            n_replicas=1, router=None):
     m = SERVING_MODELS[model_name]
     prof = get_profile(model_name, task)
     peak = RATE_GRID[(model_name, task)][-1]
-    rates = azure_rate_trace(peak, seed=seed)
+    scale = float(max(n_replicas) if isinstance(n_replicas, list)
+                  else n_replicas)
+    rates = azure_rate_trace(peak * scale, seed=seed)
     cis = ci_trace(grid, seed=seed + 1)
     ctl = GreenCacheController(
         m, prof, CARBON, task_name_for_slo(task), mode=mode,
         policy=TASKS[task]["policy"], warm_requests=WARMUP[task],
-        max_requests_per_hour=1500)
-    res = ctl.run_day(TASKS[task]["factory"], rates, cis)
+        max_requests_per_hour=int(1500 * scale),
+        n_replicas=n_replicas, router=router)
+    res = ctl.run_day(lambda s: TASKS[task]["factory"](s, scale=scale),
+                      rates, cis)
     return res
 
 
@@ -93,4 +101,24 @@ def run(models=("llama3-70b", "llama3-8b"),
                 "target >= 0.9"))
     out.append(("fig13/nocache_mean_slo", float(np.mean(nc_slo)),
                 "no-cache violates SLO"))
+
+    # cluster slice: hourly (cache, replicas) co-decision with affinity
+    # routing vs a fixed max-replica fleet, 70B chat at 3x load in FR
+    fixed = run_one("llama3-70b", "conversation", "FR", "full",
+                    n_replicas=max(CLUSTER_REPLICAS),
+                    router="cache_affinity")
+    codec = run_one("llama3-70b", "conversation", "FR", "greencache",
+                    n_replicas=CLUSTER_REPLICAS, router="cache_affinity")
+    red = 1 - codec.carbon_per_request_g / fixed.carbon_per_request_g
+    out.append(("fig12/cluster/codecide_reduction_vs_fixed_fleet", red,
+                f"slo={codec.slo_attainment:.3f} "
+                f"avg_replicas={codec.avg_replicas:.2f} "
+                f"avg_cache={codec.avg_cache_tb:.1f}TB"))
+    save_result("fig12_cluster", {
+        "fixed_fleet": {"carbon_per_req_g": fixed.carbon_per_request_g,
+                        "slo": fixed.slo_attainment},
+        "codecide": {"carbon_per_req_g": codec.carbon_per_request_g,
+                     "slo": codec.slo_attainment,
+                     "replicas": [h.n_replicas for h in codec.hours],
+                     "cache_tb": [h.cache_tb for h in codec.hours]}})
     return out

@@ -28,6 +28,7 @@ MODULES = [
     "fig18_resize_interval",
     "fig19_ssd_lifetime",
     "fig20_ssd_embodied",
+    "cluster_scaling",
     "roofline_report",
 ]
 

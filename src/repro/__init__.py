@@ -1,0 +1,4 @@
+"""GreenCache reproduction: carbon-aware KV-cache management for LLM
+serving (simulation + real-execution JAX/Pallas substrate)."""
+
+__version__ = "0.1.0"

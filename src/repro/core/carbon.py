@@ -69,23 +69,30 @@ class CarbonModel:
         return alloc_tb * (seconds / lt) * self.hw.ssd_kg_per_tb * 1000.0
 
     # ---- non-storage embodied, amortized over lifetime ----
-    def compute_embodied_g(self, seconds: float) -> float:
+    def compute_embodied_g(self, seconds: float, n_replicas: int = 1) -> float:
+        """Embodied carbon of the GPU/CPU/DRAM fleet; each serving replica
+        is a full server, so the amortized share scales with replica count
+        (the knob the cluster solver trades against cache size)."""
         lt = self.hw.lifetime_years * SECONDS_PER_YEAR
-        return (seconds / lt) * self.hw.embodied_compute_kg * 1000.0
+        return n_replicas * (seconds / lt) * self.hw.embodied_compute_kg \
+            * 1000.0
 
     # ---- Eq (5): total ----
     def total_g(self, energy_kwh: float, ci: float, alloc_tb: float,
-                seconds: float) -> float:
+                seconds: float, n_replicas: int = 1) -> float:
         return (self.operational_g(energy_kwh, ci)
                 + self.cache_embodied_g(alloc_tb, seconds)
-                + self.compute_embodied_g(seconds))
+                + self.compute_embodied_g(seconds, n_replicas))
 
     # ---- power → energy helper ----
     def energy_kwh(self, gpu_util: float, seconds: float,
-                   ssd_tb: float = 0.0) -> float:
+                   ssd_tb: float = 0.0, n_servers: int = 1) -> float:
+        """Fleet energy: ``n_servers`` replicas at the given (average) GPU
+        utilization each draw server power; the SSD pool is a cluster-wide
+        allocation and is counted once."""
         hw = self.hw
         gpu_w = hw.gpu_power_idle_w + gpu_util * (hw.gpu_power_max_w
                                                   - hw.gpu_power_idle_w)
-        w = gpu_w + hw.cpu_power_w + hw.mem_power_w \
+        w = n_servers * (gpu_w + hw.cpu_power_w + hw.mem_power_w) \
             + ssd_tb * hw.ssd_power_w_per_tb
         return w * seconds / 3.6e6

@@ -18,7 +18,9 @@ from repro.core.kvstore import KVStore
 from repro.core.policies import POLICIES
 from repro.core.predictors import CIPredictor, LoadPredictor
 from repro.core.profiler import Profile, _slo_for
-from repro.core.solver import SolveResult, solve_cache_schedule
+from repro.core.solver import (SolveResult, solve_cache_schedule,
+                               solve_cluster_schedule)
+from repro.serving.cluster import ClusterEngine
 from repro.serving.engine import ServingEngine, SimResult
 from repro.serving.perfmodel import ServingModel
 from repro.workloads.traces import make_poisson_arrivals
@@ -42,6 +44,7 @@ class HourRecord:
     solve_time_s: float = 0.0
     pred_rate: float = 0.0
     pred_ci: float = 0.0
+    n_replicas: int = 1
 
 
 @dataclass
@@ -68,10 +71,21 @@ class RunResult:
     def avg_cache_tb(self) -> float:
         return float(np.mean([h.cache_tb for h in self.hours]))
 
+    @property
+    def avg_replicas(self) -> float:
+        return float(np.mean([h.n_replicas for h in self.hours]))
+
 
 class GreenCacheController:
     """mode: "greencache" (predictive ILP sizing), "full" (max cache),
-    "none" (no cache), "oracle" (ILP with groundtruth rate/CI)."""
+    "none" (no cache), "oracle" (ILP with groundtruth rate/CI).
+
+    ``n_replicas``: an int pins the prefill replica count; a sequence of
+    candidate counts lets the solver co-decide (cache_tb, n_replicas) per
+    hour in "greencache"/"oracle" modes (fixed modes use the largest
+    candidate). ``router`` defaults to "single" for one replica and
+    "cache_affinity" otherwise. ``engine="legacy"`` keeps the seed
+    single-server ``ServingEngine`` (parity/debugging only)."""
 
     def __init__(self, model: ServingModel, profile: Profile,
                  carbon: CarbonModel, task: str, *,
@@ -80,7 +94,9 @@ class GreenCacheController:
                  horizon: int = 24, resize_interval_h: int = 1,
                  warm_requests: int = 20000, seed: int = 0,
                  max_requests_per_hour: int = 1200,
-                 rho_margin: float = 0.04):
+                 rho_margin: float = 0.04,
+                 n_replicas=1, router: Optional[str] = None,
+                 engine: str = "cluster"):
         self.model = model
         self.profile = profile
         self.carbon = carbon
@@ -96,6 +112,13 @@ class GreenCacheController:
         self.warm_requests = warm_requests
         self.seed = seed
         self.slo = _slo_for(model.name, task)
+        self.replica_choices = sorted(set(int(k) for k in n_replicas)) \
+            if isinstance(n_replicas, (list, tuple)) else [int(n_replicas)]
+        self.router = router if router is not None else \
+            ("single" if max(self.replica_choices) == 1 else "cache_affinity")
+        self.engine_kind = engine
+        if engine == "legacy" and self.replica_choices != [1]:
+            raise ValueError("engine='legacy' supports n_replicas=1 only")
 
     # ------------------------------------------------------------------ #
     def run_day(self, workload_factory: Callable, rate_trace: np.ndarray,
@@ -123,7 +146,13 @@ class GreenCacheController:
         max_tb = self.model.max_cache_tb
         store = KVStore(max_tb * 1e12, POLICIES[self.policy],
                         self.model.kv_bytes_per_token)
-        engine = ServingEngine(self.model, store, self.carbon)
+        fixed_n = max(self.replica_choices)
+        if self.engine_kind == "legacy":
+            engine = ServingEngine(self.model, store, self.carbon)
+        else:
+            engine = ClusterEngine(self.model, store, self.carbon,
+                                   n_replicas=fixed_n, router=self.router)
+        co_decide = len(self.replica_choices) > 1
         wl = workload_factory(self.seed)
 
         # warm the cache at full size, then resize to the first decision
@@ -134,7 +163,9 @@ class GreenCacheController:
 
         hours: List[HourRecord] = []
         current_tb = max_tb if self.mode != "none" else 0.0
+        current_n = fixed_n
         pending_schedule: List[float] = []
+        pending_replicas: List[int] = []
 
         for h in range(H):
             t_solve = 0.0
@@ -147,10 +178,17 @@ class GreenCacheController:
                 else:
                     rates = list(load_pred.predict(self.horizon))
                     cis = list(ci_pred.predict(self.horizon))
-                res = solve_cache_schedule(
-                    self.profile, rates, cis, self.slo, self.carbon,
-                    sizes_tb=self.sizes,
-                    rho=min(self.slo.rho + self.rho_margin, 0.995))
+                rho = min(self.slo.rho + self.rho_margin, 0.995)
+                if co_decide:
+                    res = solve_cluster_schedule(
+                        self.profile, rates, cis, self.slo, self.carbon,
+                        sizes_tb=self.sizes, replicas=self.replica_choices,
+                        rho=rho)
+                    pending_replicas = list(res.replicas)
+                else:
+                    res = solve_cache_schedule(
+                        self.profile, rates, cis, self.slo, self.carbon,
+                        sizes_tb=self.sizes, rho=rho)
                 pending_schedule = list(res.sizes_tb)
                 t_solve = res.solve_time_s
                 pred_rate, pred_ci = rates[0], cis[0]
@@ -164,7 +202,13 @@ class GreenCacheController:
                 k = min(self.resize_interval_h, len(pending_schedule))
                 current_tb = max(pending_schedule[:k])
                 pending_schedule = pending_schedule[1:]
+                if pending_replicas:
+                    current_n = max(pending_replicas[:k])
+                    pending_replicas = pending_replicas[1:]
 
+            if isinstance(engine, ClusterEngine) \
+                    and current_n != engine.n_replicas:
+                engine.set_replicas(current_n)
             store.resize(current_tb * 1e12, now=h * 3600.0)
 
             # simulate this hour
@@ -184,7 +228,8 @@ class GreenCacheController:
                 p90_ttft=res.p90("ttft"), p90_tpot=res.p90("tpot"),
                 slo_frac=res.slo_attainment(self.slo),
                 hit_rate=res.token_hit_rate, num_requests=res.num_requests,
-                solve_time_s=t_solve, pred_rate=pred_rate, pred_ci=pred_ci))
+                solve_time_s=t_solve, pred_rate=pred_rate, pred_ci=pred_ci,
+                n_replicas=current_n))
 
             # online predictor updates (paper §5.3)
             load_pred.update(lam)

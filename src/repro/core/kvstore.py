@@ -16,7 +16,9 @@ the simulation mode leaves it None and accounts bytes analytically.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
 
 TB = 1e12
 
@@ -32,6 +34,7 @@ class CacheEntry:
     hit_tokens: int = 0             # accumulated tokens served from this entry
     turn: int = 1                   # conversation turn depth (chat tasks)
     payload: Any = None             # optional real KV arrays
+    slot: int = -1                  # columnar-index slot (vector-evict mode)
 
 
 @dataclass
@@ -54,6 +57,124 @@ class KVStoreStats:
         return self.hits / self.lookups if self.lookups else 0.0
 
 
+class _ColumnIndex:
+    """Columnar mirror of ``CacheEntry`` fields for batch-eviction scoring.
+
+    Columns live in ``array.array('d')`` buffers: scalar writes from the
+    per-request hot path cost ~a list store (no NumPy boxing), while a
+    scoring pass gets zero-copy float64 views via ``np.frombuffer``. Scores
+    are one vectorized expression over the active slots, ordered by
+    ``lexsort((seq, score))`` — ``seq`` is the entry creation sequence, so
+    tie-breaks match the scalar path's stable sort in dict insertion order.
+    Field values stay exactly representable in float64 at simulation
+    magnitudes, so vector scores match the scalar policy bit-for-bit.
+
+    ``order_by`` supports partial selection: with ``need_hint`` victims
+    expected, it ``argpartition``s the smallest ~2x hint by score and sorts
+    only entries scoring at or below that boundary — every entry scoring
+    strictly inside the boundary is included, so the returned sequence is
+    exactly the global eviction-order prefix (the caller falls back to a
+    full sort if it runs off the end)."""
+
+    FIELDS = ("created_at", "last_access", "size_bytes",
+              "hits", "hit_tokens", "num_tokens", "turn")
+
+    def __init__(self, entries=(), cap: int = 1024):
+        import array
+        self._next_seq = 0
+        self.cap = max(cap, 16)
+        self.cols: Dict[str, "array.array"] = {
+            f: array.array("d", bytes(8 * self.cap)) for f in self.FIELDS}
+        self.seq = np.zeros(self.cap, dtype=np.int64)
+        self.active = np.zeros(self.cap, dtype=bool)
+        self.ents: List[Optional[CacheEntry]] = [None] * self.cap
+        self.free: List[int] = list(range(self.cap - 1, -1, -1))
+        for e in entries:           # dict order -> insertion-order sequence
+            self.add(e)
+
+    def _grow(self):
+        cap = self.cap
+        for col in self.cols.values():
+            col.frombytes(bytes(8 * cap))       # append cap zeros
+        self.seq = np.concatenate([self.seq, np.zeros(cap, dtype=np.int64)])
+        self.active = np.concatenate([self.active,
+                                      np.zeros(cap, dtype=bool)])
+        self.ents.extend([None] * cap)
+        self.free.extend(range(2 * cap - 1, cap - 1, -1))
+        self.cap = 2 * cap
+
+    def add(self, e: "CacheEntry"):
+        if not self.free:
+            self._grow()
+        s = self.free.pop()
+        e.slot = s
+        self.ents[s] = e
+        self.active[s] = True
+        self.seq[s] = self._next_seq
+        self._next_seq += 1
+        c = self.cols
+        c["created_at"][s] = e.created_at
+        c["last_access"][s] = e.last_access
+        c["size_bytes"][s] = e.size_bytes
+        c["hits"][s] = e.hits
+        c["hit_tokens"][s] = e.hit_tokens
+        c["num_tokens"][s] = e.num_tokens
+        c["turn"][s] = e.turn
+
+    def write_hit(self, e: "CacheEntry"):
+        c = self.cols
+        s = e.slot
+        c["hits"][s] = e.hits
+        c["hit_tokens"][s] = e.hit_tokens
+        c["last_access"][s] = e.last_access
+
+    def write_grow(self, e: "CacheEntry"):
+        c = self.cols
+        s = e.slot
+        c["num_tokens"][s] = e.num_tokens
+        c["size_bytes"][s] = e.size_bytes
+        c["last_access"][s] = e.last_access
+        c["turn"][s] = e.turn
+
+    def remove(self, e: "CacheEntry"):
+        s = e.slot
+        if s >= 0:
+            self.active[s] = False
+            self.ents[s] = None
+            self.free.append(s)
+        e.slot = -1
+
+    def order_by(self, vector_policy: Callable, now: float,
+                 skip: Optional["CacheEntry"] = None,
+                 need_hint: Optional[int] = None
+                 ) -> Tuple[List["CacheEntry"], bool]:
+        """Entries in eviction order; second element is True when the list
+        is a (exact-prefix) partial selection rather than the full order."""
+        idx = np.nonzero(self.active)[0]
+        if skip is not None and skip.slot >= 0:
+            idx = idx[idx != skip.slot]
+        m = len(idx)
+        if not m:
+            return [], False
+        fields = {f: np.frombuffer(col, dtype=np.float64,
+                                   count=self.cap)[idx]
+                  for f, col in self.cols.items()}
+        scores = vector_policy(fields, now)
+        partial = False
+        sel = np.arange(m)
+        if need_hint is not None:
+            k = 2 * need_hint + 8
+            if 2 * k < m:
+                part = np.argpartition(scores, k)[:k + 1]
+                thresh = scores[part].max()
+                sel = np.nonzero(scores <= thresh)[0]
+                partial = len(sel) < m
+        sub_scores = scores[sel]
+        order = np.lexsort((self.seq[idx[sel]], sub_scores))
+        ents = self.ents
+        return [ents[i] for i in idx[sel[order]].tolist()], partial
+
+
 class KVStore:
     def __init__(self, capacity_bytes: float,
                  policy: Callable[[CacheEntry, float], float],
@@ -64,6 +185,45 @@ class KVStore:
         self.entries: Dict[str, CacheEntry] = {}
         self.used_bytes = 0.0
         self.stats = KVStoreStats()
+        self._vector_policy = None
+        self._ix: Optional["_ColumnIndex"] = None
+
+    def enable_vector_evict(self) -> bool:
+        """Switch eviction scoring to the policy's vectorized twin (see
+        ``repro.core.policies.VECTOR_POLICIES``): entry fields are mirrored
+        into a columnar index kept up to date on every lookup/insert, so a
+        batch eviction is one NumPy scoring pass instead of a Python-callback
+        sort — same victims in the same order (lexsort on score + insertion
+        sequence == the scalar path's stable sort in dict order). No-op
+        (returns False) if the policy has no registered twin."""
+        from repro.core.policies import VECTOR_POLICIES
+        vp = VECTOR_POLICIES.get(self.policy)
+        if vp is None:
+            self._vector_policy = None
+            self._ix = None
+            return False
+        if self._vector_policy is not vp or self._ix is None:
+            self._vector_policy = vp
+            self._ix = _ColumnIndex(self.entries.values())
+        return True
+
+    def _victims_sorted(self, now: float, protect=None,
+                        deficit_bytes: Optional[float] = None):
+        """Entries in ascending keep-priority (eviction order); returns
+        ``(victims, partial)`` where ``partial`` means the list is an exact
+        prefix of the full order (vector path, sized from the byte deficit)
+        and the caller must re-request the full order if it runs dry."""
+        if self._vector_policy is None:
+            return sorted(
+                (e for k, e in self.entries.items() if k != protect),
+                key=lambda e: self.policy(e, now)), False
+        prot = self.entries.get(protect) if protect is not None else None
+        hint = None
+        if deficit_bytes is not None and self.entries:
+            avg = self.used_bytes / len(self.entries)
+            hint = int(deficit_bytes / max(avg, 1.0)) + 1
+        return self._ix.order_by(self._vector_policy, now, skip=prot,
+                                 need_hint=hint)
 
     # ------------------------------------------------------------------ #
     def lookup(self, key: str, context_tokens: int, now: float
@@ -79,6 +239,8 @@ class KVStore:
         e.hits += 1
         e.hit_tokens += reused
         e.last_access = now
+        if self._ix is not None:
+            self._ix.write_hit(e)
         self.stats.hits += 1
         self.stats.hit_tokens += reused
         return e
@@ -115,14 +277,94 @@ class KVStore:
             old.turn = max(old.turn, turn)
             if payload is not None:
                 old.payload = payload
+            if self._ix is not None:
+                self._ix.write_grow(old)
             return old
         e = CacheEntry(key=key, num_tokens=num_tokens, size_bytes=size,
                        created_at=now, last_access=now, turn=turn,
                        payload=payload)
         self.entries[key] = e
         self.used_bytes += size
+        if self._ix is not None:
+            self._ix.add(e)
         self.stats.insertions += 1
         return e
+
+    # ------------------------------------------------------------------ #
+    def account(self, key: str, context_tokens: int, prompt_tokens: int,
+                now: float, turn: int = 1, collect_stats: bool = True) -> int:
+        """Fused ``lookup`` + ``insert`` for the simulation hot path: one
+        dict probe per request instead of two calls. State transitions are
+        identical to ``lookup(key, context_tokens, now)`` followed by
+        ``insert(key, prompt_tokens, now, turn=turn)`` — an eviction
+        triggered by the grow scores entries post-lookup/pre-grow, exactly
+        as in the two-call sequence.
+
+        Returns the reused token count (>= 0) on hit, -1 on miss with a new
+        entry inserted, -2 on miss where the entry could not fit. With
+        ``collect_stats=False`` the per-request ``stats`` updates are
+        skipped so a batch caller can apply them in one shot from the
+        encoded return values (see ``ClusterEngine._account``)."""
+        ix = self._ix
+        cap = self.capacity_bytes
+        e = self.entries.get(key)
+        size = prompt_tokens * self.kv_bytes_per_token
+        if e is not None:
+            reused = min(e.num_tokens, context_tokens)
+            e.hits += 1
+            e.hit_tokens += reused
+            e.last_access = now
+            if collect_stats:
+                st = self.stats
+                st.lookups += 1
+                st.lookup_tokens += context_tokens
+                st.hits += 1
+                st.hit_tokens += reused
+            if ix is not None:
+                ix.write_hit(e)     # hit updates visible to any eviction sort
+            if size > cap:
+                return reused
+            delta = size - e.size_bytes
+            if delta > 0:
+                if self.used_bytes + delta > cap:   # _make_room early-exit,
+                    self._make_room(delta, now, protect=key)   # inlined
+                    if self.used_bytes + delta > cap + 1e-6:
+                        return reused
+                self.used_bytes += delta
+            self._grow_entry(e, prompt_tokens, size, now, turn)
+            if ix is not None:
+                ix.write_grow(e)
+            return reused
+        if collect_stats:
+            st = self.stats
+            st.lookups += 1
+            st.lookup_tokens += context_tokens
+        if size > cap:
+            return -2
+        if size > 0 and self.used_bytes + size > cap:
+            self._make_room(size, now, protect=key)
+            if self.used_bytes + size > cap + 1e-6:
+                return -2
+        e = CacheEntry(key=key, num_tokens=prompt_tokens, size_bytes=size,
+                       created_at=now, last_access=now, turn=turn)
+        self.entries[key] = e
+        self.used_bytes += size
+        if ix is not None:
+            ix.add(e)
+        if collect_stats:
+            self.stats.insertions += 1
+        return -1
+
+    @staticmethod
+    def _grow_entry(e: CacheEntry, prompt_tokens: int, size: float,
+                    now: float, turn: int):
+        if prompt_tokens > e.num_tokens:
+            e.num_tokens = prompt_tokens
+        if size > e.size_bytes:
+            e.size_bytes = size
+        e.last_access = now
+        if turn > e.turn:
+            e.turn = turn
 
     # ------------------------------------------------------------------ #
     def _make_room(self, need_bytes: float, now: float,
@@ -133,17 +375,27 @@ class KVStore:
         # over many inserts instead of running per-insert
         slack = max(need_bytes, 0.03 * self.capacity_bytes)
         target = self.capacity_bytes - slack
-        victims = sorted(
-            (e for k, e in self.entries.items() if k != protect),
-            key=lambda e: self.policy(e, now))
+        victims, partial = self._victims_sorted(
+            now, protect=protect, deficit_bytes=self.used_bytes - target)
         for v in victims:
             if self.used_bytes <= target:
                 break
             self._evict(v.key)
+        if partial and self.used_bytes > target:
+            # partial selection ran dry (skewed entry sizes): finish with
+            # the full order — already-evicted entries are simply gone, so
+            # the combined sequence still matches the scalar path
+            victims, _ = self._victims_sorted(now, protect=protect)
+            for v in victims:
+                if self.used_bytes <= target:
+                    break
+                self._evict(v.key)
 
     def _evict(self, key: str):
         e = self.entries.pop(key)
         self.used_bytes -= e.size_bytes
+        if self._ix is not None:
+            self._ix.remove(e)
         self.stats.evictions += 1
         self.stats.evicted_bytes += e.size_bytes
 
@@ -153,12 +405,18 @@ class KVStore:
         then spare capacity is released (paper §5.5)."""
         self.capacity_bytes = float(capacity_bytes)
         if self.used_bytes > self.capacity_bytes:
-            victims = sorted(self.entries.values(),
-                             key=lambda e: self.policy(e, now))
+            victims, partial = self._victims_sorted(
+                now, deficit_bytes=self.used_bytes - self.capacity_bytes)
             for v in victims:
                 if self.used_bytes <= self.capacity_bytes:
                     break
                 self._evict(v.key)
+            if partial and self.used_bytes > self.capacity_bytes:
+                victims, _ = self._victims_sorted(now)
+                for v in victims:
+                    if self.used_bytes <= self.capacity_bytes:
+                        break
+                    self._evict(v.key)
 
     # ------------------------------------------------------------------ #
     @property

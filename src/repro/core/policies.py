@@ -5,10 +5,18 @@ Score = priority to KEEP; eviction removes the lowest-scoring entries.
 LCS (Least Carbon Savings, Eq. 7):     (#Token · #Hit) / (Size · Age)
   chat variant (Eq. 8):                (CurTurn · #AccuToken) / (Size · Age)
   document variant (Eq. 9):            (#Hit · AccuDocLen) / (Size · Age)
+
+Each scalar policy has a vectorized twin in ``VECTOR_POLICIES`` operating on
+field arrays (one element per entry, same iteration order); the cluster
+engine enables these for batched eviction scoring. A vectorized scorer MUST
+produce the same float64 values as its scalar twin so victim selection is
+identical (stable argsort == stable ``sorted``).
 """
 from __future__ import annotations
 
 from typing import Callable, Dict
+
+import numpy as np
 
 from repro.core.kvstore import CacheEntry
 
@@ -56,4 +64,50 @@ POLICIES: Dict[str, Callable[[CacheEntry, float], float]] = {
     "lcs": lcs_score,
     "lcs_chat": lcs_chat_score,
     "lcs_doc": lcs_doc_score,
+}
+
+
+# --------------------------------------------------------------------- #
+# Vectorized scorers: ``f`` maps field name -> np.ndarray over entries.
+# --------------------------------------------------------------------- #
+def _v_age(f, now: float) -> np.ndarray:
+    return np.maximum(now - f["created_at"], 1.0)
+
+
+def _v_fifo(f, now):
+    return f["created_at"].astype(float)
+
+
+def _v_lru(f, now):
+    return f["last_access"].astype(float)
+
+
+def _v_lfu(f, now):
+    return f["hits"].astype(float)
+
+
+def _v_lcs(f, now):
+    return (f["hit_tokens"] * np.maximum(f["hits"], 1)) \
+        / (f["size_bytes"] * _v_age(f, now) + EPS)
+
+
+def _v_lcs_chat(f, now):
+    return (np.maximum(f["turn"], 1)
+            * np.maximum(f["hit_tokens"], f["num_tokens"])) \
+        / (f["size_bytes"] * _v_age(f, now) + EPS)
+
+
+def _v_lcs_doc(f, now):
+    accu = f["num_tokens"] * np.maximum(f["hits"], 1)
+    return (np.maximum(f["hits"], 1) * accu) \
+        / (f["size_bytes"] * _v_age(f, now) + EPS)
+
+
+VECTOR_POLICIES: Dict[Callable, Callable] = {
+    fifo_score: _v_fifo,
+    lru_score: _v_lru,
+    lfu_score: _v_lfu,
+    lcs_score: _v_lcs,
+    lcs_chat_score: _v_lcs_chat,
+    lcs_doc_score: _v_lcs_doc,
 }

@@ -31,6 +31,7 @@ class SolveResult:
     feasible: bool
     solve_time_s: float
     solver: str
+    replicas: Optional[List[int]] = None   # chosen N_t (cluster co-decision)
 
 
 def _cell_metrics(profile: Profile, rate: float, size: float,
@@ -67,6 +68,63 @@ def solve_cache_schedule(profile: Profile, pred_rates: Sequence[float],
         except Exception:       # CBC unavailable/failed -> exact DP
             pass
     return _solve_dp(C, F, n, sizes, rho, t_start)
+
+
+def _cluster_cell_metrics(profile: Profile, rate: float, size: float,
+                          n_rep: int, ci: float, carbon: CarbonModel):
+    """Predicted per-request carbon and SLO fraction for ``n_rep`` replicas
+    sharing a ``size``-TB cache at cluster arrival rate ``rate``.
+
+    Approximation (affinity/shared routing): each replica sees ~rate/n of
+    the stream, so latency/SLO/energy-per-request follow the single-server
+    profile cell at (rate/n, size). Per-request embodied compute is
+    n · embodied(duration) / (n · requests) — the same expression as the
+    single-server cell — while the shared cache allocation amortizes over
+    n× the requests (the /n term the solver trades against SLO headroom)."""
+    c = profile.interpolate(rate / n_rep, size)
+    op = carbon.operational_g(c.energy_per_req_kwh, ci)
+    emb_cache = carbon.cache_embodied_g(size, c.duration_per_req_s) / n_rep
+    emb_comp = carbon.compute_embodied_g(c.duration_per_req_s)
+    return op + emb_cache + emb_comp, c.slo_frac
+
+
+def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
+                           pred_cis: Sequence[float], slo: SLO,
+                           carbon: CarbonModel, *,
+                           sizes_tb: Optional[Sequence[float]] = None,
+                           replicas: Sequence[int] = (1,),
+                           rho: Optional[float] = None,
+                           use_ilp: bool = True) -> SolveResult:
+    """Joint hourly plan over (cache size, replica count): the option set is
+    the cross product sizes × replicas and the same multiple-choice knapsack
+    machinery picks one option per hour (paper §5.4 extended with the
+    EcoServe-style provisioning axis)."""
+    t_start = time.time()
+    rho = rho if rho is not None else slo.rho
+    sizes = list(sizes_tb) if sizes_tb is not None else list(profile.sizes)
+    reps = sorted(set(int(k) for k in replicas)) or [1]
+    options = [(s, k) for k in reps for s in sizes]
+    T = len(pred_rates)
+    n = np.array([max(r, 1e-3) * 3600.0 for r in pred_rates])
+
+    C = np.zeros((T, len(options)))
+    F = np.zeros((T, len(options)))
+    for t in range(T):
+        for oi, (s, k) in enumerate(options):
+            C[t, oi], F[t, oi] = _cluster_cell_metrics(
+                profile, pred_rates[t], s, k, pred_cis[t], carbon)
+
+    if use_ilp:
+        try:
+            res = _solve_ilp(C, F, n, options, rho, t_start)
+        except Exception:
+            res = _solve_dp(C, F, n, options, rho, t_start)
+    else:
+        res = _solve_dp(C, F, n, options, rho, t_start)
+    chosen = list(res.sizes_tb)       # option tuples, split into the plan
+    return SolveResult([s for s, _ in chosen], res.objective_g,
+                       res.feasible, time.time() - t_start, res.solver,
+                       replicas=[k for _, k in chosen])
 
 
 def _solve_ilp(C, F, n, sizes, rho, t_start) -> SolveResult:

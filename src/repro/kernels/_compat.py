@@ -1,0 +1,12 @@
+"""Pallas-TPU API compatibility across jax versions.
+
+jax >= 0.5 exposes ``pallas.tpu.CompilerParams``; 0.4.x calls the same
+dataclass ``TPUCompilerParams``. The kernels target the new name — resolve
+it once here so they run on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

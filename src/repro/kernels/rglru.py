@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, hn_ref, *, seq_len: int):
     def body(t, h):
@@ -51,7 +53,7 @@ def rglru_scan(a, b, h0, *, block_d: int = 512, interpret: bool = False):
             jax.ShapeDtypeStruct((B, S, D), a.dtype),
             jax.ShapeDtypeStruct((B, D), a.dtype),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(a, b, h0)

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sn_ref,
                 state_ref, *, seq_len: int):
@@ -70,7 +72,7 @@ def wkv6(r, k, v, w, u, s0, *, interpret: bool = False):
             jax.ShapeDtypeStruct((B * H, hd, hd), r.dtype),
         ],
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(rr, kk, vv, ww, uu, ss)

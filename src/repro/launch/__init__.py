@@ -1,0 +1,1 @@
+"""Entry points: serving drivers, training launcher, mesh/dry-run tools."""

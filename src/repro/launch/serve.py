@@ -26,30 +26,40 @@ def run_simulation(args):
 
     model = SERVING_MODELS[args.model]
     carbon = CarbonModel()
+    max_rep = max(args.replicas) if isinstance(args.replicas, list) \
+        else args.replicas
+    scale = float(max_rep)
     if args.task == "conversation":
-        wf = lambda s: ConversationWorkload(seed=s)
+        wf = lambda s: ConversationWorkload(seed=s, load_scale=scale)
         policy = "lcs_chat"
     else:
-        wf = lambda s: DocumentWorkload(seed=s, zipf_alpha=args.zipf)
+        wf = lambda s: DocumentWorkload(seed=s, zipf_alpha=args.zipf,
+                                        load_scale=scale)
         policy = "lcs_doc"
     sizes = [0, 1, 2, 4, 8, 12, 16] if model.max_cache_tb >= 16 else \
         [0, 1, 2, 4, 6, 8]
     rates = [0.2, 0.6, 1.0, 1.3, 1.6] if args.model == "llama3-70b" else \
         [0.5, 2.0, 4.0, 6.0, 8.0]
     print("profiling ...")
-    prof = run_profiler(model, args.task, wf, carbon, rates=rates,
-                        sizes_tb=sizes, warmup_prompts=args.warmup)
-    rate_trace = azure_rate_trace(rates[-1], seed=3)
+    prof = run_profiler(model, args.task, lambda s: wf(s), carbon,
+                        rates=rates, sizes_tb=sizes,
+                        warmup_prompts=args.warmup)
+    rate_trace = azure_rate_trace(rates[-1] * scale, seed=3)
     cis = ci_trace(args.grid, seed=4)
     ctl = GreenCacheController(model, prof, carbon, args.task,
                                mode=args.mode, policy=policy,
-                               warm_requests=args.warmup)
+                               warm_requests=args.warmup,
+                               n_replicas=args.replicas, router=args.router,
+                               max_requests_per_hour=int(1200 * scale))
     res = ctl.run_day(wf, rate_trace, cis)
     print(f"mode={args.mode} grid={args.grid} task={args.task}")
     print(f"  carbon/request: {res.carbon_per_request_g:.4f} g")
     print(f"  SLO attainment: {res.slo_attainment:.3f}")
     print(f"  avg cache size: {res.avg_cache_tb:.1f} TB")
     print(f"  hourly sizes:   {[int(h.cache_tb) for h in res.hours]}")
+    if max_rep > 1:
+        print(f"  avg replicas:   {res.avg_replicas:.2f}")
+        print(f"  hourly replicas:{[h.n_replicas for h in res.hours]}")
     return res
 
 
@@ -94,9 +104,19 @@ def main(argv=None):
     ap.add_argument("--mode", default="greencache",
                     choices=["greencache", "full", "none", "oracle"])
     ap.add_argument("--warmup", type=int, default=12000)
+    ap.add_argument("--replicas", type=int, nargs="+", default=1,
+                    help="prefill replica count; several values let the "
+                         "solver co-decide (cache_tb, n_replicas) hourly")
+    ap.add_argument("--router", default=None,
+                    choices=[None, "single", "round_robin", "least_loaded",
+                             "cache_affinity"],
+                    help="cluster router (default: single for 1 replica, "
+                         "cache_affinity otherwise)")
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--arch", default="yi-6b")
     args = ap.parse_args(argv)
+    if isinstance(args.replicas, list) and len(args.replicas) == 1:
+        args.replicas = args.replicas[0]
     if args.real:
         return run_real(args)
     return run_simulation(args)

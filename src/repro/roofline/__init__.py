@@ -1,0 +1,1 @@
+"""Roofline analysis over optimized HLO (loop-aware cost model)."""

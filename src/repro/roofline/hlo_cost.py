@@ -46,6 +46,7 @@ _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)\s*$")
 
 COLLECTIVE_OPS = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                   "collective-permute", "all-gather-start", "all-reduce-start",
@@ -102,9 +103,10 @@ class Inst:
         ops.append(cur)
         names = []
         for o in ops:
-            o = o.strip()
-            if o.startswith("%"):
-                names.append(o[1:])
+            # operands print as "%name" or (newer XLA) "f32[..]{..} %name"
+            m = _OPERAND_RE.search(o)
+            if m:
+                names.append(m.group(1))
         return names
 
 

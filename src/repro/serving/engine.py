@@ -43,6 +43,7 @@ class SimResult:
     token_hit_rate: float
     gpu_util: float
     num_requests: int
+    n_replicas: int = 1
 
     @property
     def carbon_per_request_g(self) -> float:

@@ -1,0 +1,1 @@
+"""Training substrate: data, optimizer, train steps, checkpointing."""

@@ -31,9 +31,13 @@ class ConversationWorkload:
 
     def __init__(self, seed: int = 0, active_pool: int = 12000,
                  mean_turns: float = 16.0, mean_user_tokens: float = 150.0,
-                 mean_reply_tokens: float = 500.0):
+                 mean_reply_tokens: float = 500.0, load_scale: float = 1.0):
+        """``load_scale`` widens the active-conversation pool for cluster
+        scenarios: N replicas serving N× the request rate should draw from
+        N× the concurrent users, keeping per-context reuse statistics (and
+        thus achievable hit rates) comparable to the single-server case."""
         self.rng = np.random.default_rng(seed)
-        self.active_pool = active_pool
+        self.active_pool = max(int(active_pool * load_scale), 1)
         self.mean_turns = mean_turns
         self.mean_user = mean_user_tokens
         self.mean_reply = mean_reply_tokens

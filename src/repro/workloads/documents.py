@@ -17,10 +17,13 @@ class DocumentWorkload:
     def __init__(self, seed: int = 0, num_docs: int = 20000,
                  zipf_alpha: float = 0.4, mean_doc_tokens: float = 5880.0,
                  mean_question_tokens: float = 35.0,
-                 mean_answer_tokens: float = 60.0):
+                 mean_answer_tokens: float = 60.0, load_scale: float = 1.0):
+        """``load_scale`` widens the document corpus for cluster scenarios
+        (N replicas at N× rate query N× the documents, preserving the Zipf
+        reuse skew per unit of traffic)."""
         self.rng = np.random.default_rng(seed)
         self.alpha = zipf_alpha
-        self.num_docs = num_docs
+        self.num_docs = num_docs = max(int(num_docs * load_scale), 1)
         sigma = 0.55
         mu = np.log(mean_doc_tokens) - sigma ** 2 / 2
         self.doc_len = np.clip(

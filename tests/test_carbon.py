@@ -2,6 +2,10 @@
 import math
 
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the optional hypothesis dev dependency")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

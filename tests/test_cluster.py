@@ -1,0 +1,241 @@
+"""Multi-replica cluster engine: single-replica parity with the seed
+``ServingEngine``, router behaviour, batched-eviction equivalence, the
+vectorized-vs-loop speedup, and the (cache, replicas) co-decision."""
+import copy
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.carbon import CarbonModel
+from repro.core.kvstore import KVStore
+from repro.core.policies import POLICIES
+from repro.core.profiler import Profile, ProfileCell
+from repro.core.solver import solve_cluster_schedule
+from repro.serving.cluster import ClusterEngine, HashRing, make_cluster
+from repro.serving.engine import ServingEngine
+from repro.serving.perfmodel import SERVING_MODELS, SLO
+from repro.workloads.conversations import ConversationWorkload
+from repro.workloads.traces import make_poisson_arrivals
+
+M = SERVING_MODELS["llama3-70b"]
+CM = CarbonModel()
+
+
+def make_requests(n=12000, rate=1.4, seed=1, load_scale=1.0):
+    wl = ConversationWorkload(seed=seed, load_scale=load_scale)
+    arr = make_poisson_arrivals(np.full(48, rate), seed=seed + 1,
+                                max_requests=n)
+    return [wl.sample(t) for t in arr]
+
+
+def run_engine(engine_cls, reqs, cache_tb, warm=6000, policy="lcs_chat",
+               **kw):
+    reqs = [copy.copy(r) for r in reqs]
+    store = KVStore(cache_tb * 1e12, POLICIES[policy], M.kv_bytes_per_token)
+    eng = engine_cls(M, store, CM, **kw)
+    eng.warm(reqs[:warm])
+    res = eng.run(reqs[warm:], ci_fn=lambda t: 124.0, cache_tb=cache_tb)
+    return res, store
+
+
+# ------------------------------------------------------------------ #
+# single-replica parity vs the seed engine
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("cache_tb", [0, 2, 16])
+def test_single_replica_parity(cache_tb):
+    reqs = make_requests()
+    r_seed, s_seed = run_engine(ServingEngine, reqs, cache_tb)
+    r_clus, s_clus = run_engine(ClusterEngine, reqs, cache_tb)
+    # deterministic queueing: TTFT sequence matches to float noise
+    assert np.allclose(r_seed.ttft, r_clus.ttft, atol=1e-6)
+    # identical cache trajectory (hits, evictions, stats)
+    assert s_seed.stats == s_clus.stats
+    assert r_seed.token_hit_rate == pytest.approx(r_clus.token_hit_rate)
+    # carbon within 5 % (tpot noise stream differs; acceptance tolerance)
+    assert r_clus.carbon_g == pytest.approx(r_seed.carbon_g, rel=0.05)
+    assert r_clus.energy_kwh == pytest.approx(r_seed.energy_kwh, rel=0.05)
+    assert r_clus.tpot.mean() == pytest.approx(r_seed.tpot.mean(), rel=0.05)
+
+
+def test_vectorized_eviction_same_victims():
+    """Scalar-policy sort and columnar lexsort must pick identical victims
+    (the cluster engine's batched eviction cannot change simulation
+    results)."""
+    a = KVStore(1.5e12, POLICIES["lcs_chat"], M.kv_bytes_per_token)
+    b = KVStore(1.5e12, POLICIES["lcs_chat"], M.kv_bytes_per_token)
+    assert b.enable_vector_evict()
+    rng = np.random.default_rng(0)
+    for i in range(4000):
+        key = f"c-{rng.integers(800)}"
+        toks = int(rng.integers(100, 8000))
+        turn = int(rng.integers(1, 9))
+        now = float(i)
+        for s in (a, b):
+            s.lookup(key, toks, now)
+            s.insert(key, toks + 50, now, turn=turn)
+    assert a.stats == b.stats
+    assert set(a.entries) == set(b.entries)
+    assert a.used_bytes == pytest.approx(b.used_bytes)
+
+
+# ------------------------------------------------------------------ #
+# speed: vectorized event core vs seed per-request loop
+# ------------------------------------------------------------------ #
+def test_vectorized_faster_than_loop():
+    reqs = make_requests(n=16000, rate=1.5)
+
+    def timed(engine_cls):
+        best = np.inf
+        for _ in range(2):
+            rs = [copy.copy(r) for r in reqs]
+            store = KVStore(4e12, POLICIES["lcs_chat"], M.kv_bytes_per_token)
+            eng = engine_cls(M, store, CM)
+            eng.warm(rs[:8000])
+            t0 = time.perf_counter()
+            eng.run(rs[8000:], ci_fn=lambda t: 50.0, cache_tb=4)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_seed = timed(ServingEngine)
+    t_clus = timed(ClusterEngine)
+    # acceptance target is >=5x at serve_day scale; assert a conservative
+    # floor here so a noisy CI box does not flake
+    assert t_seed / t_clus > 2.0, (t_seed, t_clus)
+
+
+# ------------------------------------------------------------------ #
+# routers
+# ------------------------------------------------------------------ #
+def test_affinity_beats_round_robin_hit_rate():
+    """With per-replica (partitioned) caches, consistent-hash routing keeps
+    a conversation on the replica holding its KV; round-robin scatters it."""
+    n_rep = 4
+    reqs = make_requests(n=16000, rate=1.4 * n_rep, load_scale=n_rep)
+
+    def hit_rate(router):
+        rs = [copy.copy(r) for r in reqs]
+        eng = make_cluster(M, CM, cache_tb=4.0 * n_rep,
+                           policy=POLICIES["lcs_chat"], n_replicas=n_rep,
+                           router=router, partitioned=True)
+        eng.warm(rs[:8000])
+        res = eng.run(rs[8000:], ci_fn=lambda t: 50.0,
+                      cache_tb=4.0 * n_rep)
+        return res.token_hit_rate
+
+    assert hit_rate("cache_affinity") > hit_rate("round_robin") + 0.05
+
+
+def test_more_replicas_reduce_ttft():
+    rate = 2.8
+    reqs = make_requests(n=9000, rate=rate, load_scale=2.0)
+    r1, _ = run_engine(ClusterEngine, reqs, 4)
+    r2, _ = run_engine(ClusterEngine, reqs, 4, n_replicas=2,
+                       router="round_robin")
+    assert r2.p90("ttft") < r1.p90("ttft")
+    assert r2.n_replicas == 2
+
+
+def test_least_loaded_balances_under_skew():
+    """least_loaded drains a bursty stream with lower tail latency than
+    round-robin (it can route around a replica stuck on a long prefill)."""
+    reqs = make_requests(n=6000, rate=3.0, load_scale=2.0)
+    r_rr, _ = run_engine(ClusterEngine, reqs, 0, n_replicas=3,
+                         router="round_robin")
+    r_ll, _ = run_engine(ClusterEngine, reqs, 0, n_replicas=3,
+                         router="least_loaded")
+    assert r_ll.p90("ttft") <= r_rr.p90("ttft") * 1.02
+
+
+def test_replica_energy_and_embodied_scale():
+    reqs = make_requests(n=5000, rate=1.0)
+    r1, _ = run_engine(ClusterEngine, reqs, 2, warm=2000)
+    r3, _ = run_engine(ClusterEngine, reqs, 2, warm=2000, n_replicas=3,
+                       router="round_robin")
+    # same wall-clock window, 3x the servers: embodied compute scales ~3x
+    assert r3.embodied_compute_g == pytest.approx(
+        3 * r1.embodied_compute_g * r3.duration_s / r1.duration_s, rel=0.05)
+    assert r3.energy_kwh > r1.energy_kwh
+
+
+def test_hash_ring_stability_and_balance():
+    ring3 = HashRing(3)
+    keys = [f"conv-{i}" for i in range(6000)]
+    owners3 = np.array([ring3.owner(k) for k in keys])
+    shares = np.bincount(owners3, minlength=3) / len(keys)
+    assert shares.max() < 0.45          # vnode dispersion keeps shares sane
+    # growing the ring remaps only a bounded fraction of the key space
+    ring4 = HashRing(4)
+    owners4 = np.array([ring4.owner(k) for k in keys])
+    moved = float(np.mean(owners3 != owners4))
+    assert moved < 0.5
+
+
+def test_set_replicas_rescales_shared_cluster():
+    store = KVStore(4e12, POLICIES["lcs_chat"], M.kv_bytes_per_token)
+    eng = ClusterEngine(M, store, CM, n_replicas=2, router="round_robin")
+    eng.set_replicas(4)
+    assert eng.n_replicas == 4
+    eng.set_replicas(1)
+    assert eng.n_replicas == 1
+    stores = [KVStore(1e12, POLICIES["lcs_chat"], M.kv_bytes_per_token)
+              for _ in range(2)]
+    part = ClusterEngine(M, stores, CM, router="cache_affinity")
+    with pytest.raises(ValueError):
+        part.set_replicas(3)
+
+
+# ------------------------------------------------------------------ #
+# solver co-decision
+# ------------------------------------------------------------------ #
+def synth_profile(sizes=(0, 4, 8, 16), rates=(0.5, 1.0, 2.0, 4.0)):
+    """Bigger cache -> better SLO, more embodied; higher per-server rate ->
+    worse SLO and longer queues."""
+    prof = Profile("m", "t", rates=list(rates), sizes=list(sizes))
+    for r in rates:
+        for s in sizes:
+            # load dominates: beyond ~1 req/s per server the SLO collapses
+            # and no cache size can recover it — only more replicas can
+            slo = float(np.clip(1.2 - 0.28 * r + 0.02 * s, 0.0, 1.0))
+            prof.cells[(r, s)] = ProfileCell(
+                rate=r, cache_tb=s, avg_ttft=0.5 + 0.5 * r, p90_ttft=1 + r,
+                avg_tpot=0.05, p90_tpot=0.08, slo_frac=slo,
+                hit_rate=min(0.1 * s, 0.8),
+                energy_per_req_kwh=2e-4 * (1 + 1 / max(r, 0.1)),
+                duration_per_req_s=1.0 / max(r, 0.1), avg_power_w=800.0)
+    return prof
+
+
+def test_solver_codecides_replicas_with_load():
+    prof = synth_profile()
+    slo = SLO(2.5, 0.2, rho=0.85)
+    lo = [0.6] * 6
+    hi = [3.8] * 6
+    res_lo = solve_cluster_schedule(prof, lo, [50.0] * 6, slo, CM,
+                                    sizes_tb=[0, 4, 8, 16],
+                                    replicas=[1, 2, 4])
+    res_hi = solve_cluster_schedule(prof, hi, [50.0] * 6, slo, CM,
+                                    sizes_tb=[0, 4, 8, 16],
+                                    replicas=[1, 2, 4])
+    assert len(res_lo.replicas) == 6 and len(res_hi.replicas) == 6
+    # high load needs more replicas to stay feasible
+    assert max(res_hi.replicas) > max(res_lo.replicas) or \
+        np.mean(res_hi.replicas) > np.mean(res_lo.replicas)
+    # low load should not over-provision the fleet
+    assert np.mean(res_lo.replicas) <= np.mean(res_hi.replicas)
+    assert res_hi.feasible
+
+
+def test_solver_single_replica_matches_plain_schedule():
+    from repro.core.solver import solve_cache_schedule
+    prof = synth_profile()
+    slo = SLO(2.5, 0.2, rho=0.85)
+    rates = [0.6, 1.2, 2.0]
+    cis = [40.0, 80.0, 120.0]
+    a = solve_cache_schedule(prof, rates, cis, slo, CM,
+                             sizes_tb=[0, 4, 8, 16], use_ilp=False)
+    b = solve_cluster_schedule(prof, rates, cis, slo, CM,
+                               sizes_tb=[0, 4, 8, 16], replicas=[1],
+                               use_ilp=False)
+    assert a.sizes_tb == b.sizes_tb
+    assert b.replicas == [1, 1, 1]

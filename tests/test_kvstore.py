@@ -1,5 +1,9 @@
 """KV store behaviour + hypothesis invariants."""
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the optional hypothesis dev dependency")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -16,6 +16,10 @@ from repro.train.steps import init_train_state, make_train_step
 
 B, S = 2, 16
 
+# real JAX execution / end-to-end simulation: excluded from the fast CI
+# tier (run with `pytest -m ""` or `-m slow` for the full suite)
+pytestmark = pytest.mark.slow
+
 
 def reduced_cfg(arch):
     nl = 4 if get_config(arch).family == "hybrid" else 2

@@ -1,6 +1,11 @@
 """LCS replacement policy (paper Eqs. 7-9) scoring properties."""
 import dataclasses
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the optional hypothesis dev dependency")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -11,6 +11,10 @@ from repro.core.policies import POLICIES
 from repro.models.transformer import init_params, prefill
 from repro.serving.realexec import RealExecutionEngine
 
+# real JAX execution / end-to-end simulation: excluded from the fast CI
+# tier (run with `pytest -m ""` or `-m slow` for the full suite)
+pytestmark = pytest.mark.slow
+
 
 def make_engine(arch, seed=0):
     nl = 4 if get_config(arch).family == "hybrid" else 2

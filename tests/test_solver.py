@@ -2,6 +2,10 @@
 carbon/SLO tradeoff behaviour."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the optional hypothesis dev dependency")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

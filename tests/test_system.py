@@ -14,6 +14,10 @@ from repro.workloads.conversations import ConversationWorkload
 from repro.workloads.documents import DocumentWorkload
 from repro.workloads.traces import azure_rate_trace, ci_trace
 
+# real JAX execution / end-to-end simulation: excluded from the fast CI
+# tier (run with `pytest -m ""` or `-m slow` for the full suite)
+pytestmark = pytest.mark.slow
+
 
 @functools.lru_cache(maxsize=None)
 def small_profile():

@@ -5,6 +5,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.train.checkpoint import restore_checkpoint, save_checkpoint
@@ -12,6 +13,10 @@ from repro.train.data import SyntheticCorpus, batch_iterator
 from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
                                    global_norm, lr_schedule)
 from repro.train.steps import init_train_state, make_train_step
+
+# real JAX execution / end-to-end simulation: excluded from the fast CI
+# tier (run with `pytest -m ""` or `-m slow` for the full suite)
+pytestmark = pytest.mark.slow
 
 
 def test_loss_decreases_tiny_model():
