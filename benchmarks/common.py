@@ -72,19 +72,27 @@ def measure_cell(model_name: str, task: str, *, cache_tb: float,
                  rate: float, ci: float, policy: str | None = None,
                  warm: int | None = None, n_seconds: float = 400.0,
                  seed: int = 1, hw=None, n_replicas: int = 1,
-                 router: str | None = None, partitioned: bool = False):
+                 router: str | None = None, partitioned: bool = False,
+                 types=None, balance_eps: float | None = 0.15):
     """One steady-state measurement (used by Figs 3, 5-8, 15, 19, 20).
     ``n_replicas``/``router``/``partitioned`` select a multi-replica cluster
     (``cache_tb`` stays the cluster-total allocation; ``rate`` the cluster
-    arrival rate)."""
+    arrival rate). ``types`` selects a heterogeneous fleet — one
+    ``ReplicaType`` name per replica, overriding ``n_replicas`` — and
+    ``balance_eps`` tunes (or, with None, disables) the cache_affinity
+    router's bounded-load spill."""
+    from repro.core.carbon import fleet_capacity
     m = SERVING_MODELS[model_name]
     carbon = CarbonModel(hw=hw) if hw is not None else CARBON
     t = TASKS[task]
     policy = policy or t["policy"]
     eng = make_cluster(m, carbon, cache_tb=cache_tb,
                        policy=POLICIES[policy], n_replicas=n_replicas,
-                       router=router, partitioned=partitioned)
-    wl = t["factory"](seed, scale=max(float(n_replicas), 1.0))
+                       router=router, partitioned=partitioned,
+                       types=types, balance_eps=balance_eps)
+    scale = fleet_capacity(types) if types is not None \
+        else max(float(n_replicas), 1.0)
+    wl = t["factory"](seed, scale=max(scale, 1.0))
     warm = WARMUP[task] if warm is None else warm
     n_meas = max(int(rate * n_seconds), 150)
     arr = make_poisson_arrivals(np.full(96, rate), seed=seed + 1,

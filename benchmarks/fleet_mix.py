@@ -1,0 +1,131 @@
+"""Heterogeneous fleet mix: homogeneous-new vs homogeneous-old vs
+solver-chosen mix (GreenLLM-style old/new-generation tradeoff; no direct
+paper figure).
+
+Runs the same 24-hour Azure-shaped day through three fleet policies on two
+grids — FR (clean: embodied carbon dominates, favouring already-amortized
+old a100 servers) and TX (dirty: operational carbon dominates, favouring
+efficient new h100 servers):
+
+  * ``h100 x N``  — pinned homogeneous new-generation fleet
+  * ``a100 x M``  — pinned homogeneous old-generation fleet (same nominal
+                    capacity band)
+  * ``solver``    — hourly (cache_tb, fleet) co-decision over every mix of
+                    {a100, h100} up to MAX_REPLICAS (`enumerate_fleets`)
+
+All three see the identical request stream (same workload seed and rate
+trace); the cache size is solver-adapted (mode="greencache") in every run
+so the only difference is the fleet policy. The derived column reports
+whether the solver mix beats both pinned fleets on total gCO2e at equal
+SLO attainment: the mix must meet the task's required attainment rho AND
+Pareto-dominate each baseline (no worse SLO within EPS_SLO, strictly
+lower carbon) — so a policy can never "win" carbon by under-provisioning
+its way below the SLO bar.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.carbon import CarbonModel, fleet_capacity
+from repro.core.controller import GreenCacheController
+from repro.core.profiler import _slo_for
+from repro.core.solver import enumerate_fleets
+from repro.serving.perfmodel import SERVING_MODELS
+
+from benchmarks.common import (RATE_GRID, SIZE_GRID, TASKS, WARMUP,
+                               save_result)
+
+MODEL = "llama3-70b"
+TASK = "conversation"
+GRIDS = ["FR", "TX"]
+MAX_REPLICAS = 3
+HOMO_NEW = ("h100", "h100")                  # capacity 4.8 reference units
+HOMO_OLD = ("a100", "a100", "a100")          # capacity 4.2 reference units
+EPS_SLO = 0.02
+PEAK_RATE = 1.25                             # per reference unit at peak
+
+
+_PROF_CACHE = {}
+
+
+def _profile():
+    """Reference-platform profile measured on the *cluster-scale* workload
+    (load_scale = the biggest candidate fleet's capacity): the widened
+    working set gives realistic hit rates, so the solver's
+    capacity-normalized SLO predictions match what the fleet simulation
+    serves (``benchmarks.common.get_profile`` profiles the scale-1
+    workload and would over-promise here)."""
+    if "p" not in _PROF_CACHE:
+        from repro.core.profiler import run_profiler
+        scale = fleet_capacity(HOMO_NEW)
+        t = TASKS[TASK]
+        _PROF_CACHE["p"] = run_profiler(
+            SERVING_MODELS[MODEL], TASK,
+            lambda s: t["factory"](s, scale=scale), CarbonModel(),
+            rates=RATE_GRID[(MODEL, TASK)], sizes_tb=SIZE_GRID[MODEL],
+            warmup_prompts=WARMUP[TASK], policy=t["policy"])
+    return _PROF_CACHE["p"]
+
+
+def _day(grid: str, fleets, seed: int = 11):
+    from repro.workloads.traces import azure_rate_trace, ci_trace
+
+    prof = _profile()
+    model = SERVING_MODELS[MODEL]
+    carbon = CarbonModel()
+    scale = fleet_capacity(HOMO_NEW)          # same stream for every policy
+    wf = lambda s: TASKS[TASK]["factory"](s, scale=scale)   # noqa: E731
+    ctl = GreenCacheController(
+        model, prof, carbon, TASK, mode="greencache",
+        policy=TASKS[TASK]["policy"], fleets=fleets,
+        warm_requests=8000, seed=seed, max_requests_per_hour=900,
+        # the scale-matched profile is already conservative about shared-
+        # cache hit rates (a lone server at rate/cap sees the working set
+        # spread thinner than N replicas sharing one store), so the
+        # default +0.04 safety margin would double-hedge and buy idle
+        # capacity
+        rho_margin=0.0)
+    rate_trace = azure_rate_trace(PEAK_RATE * scale, seed=3)
+    cis = ci_trace(grid, seed=4)
+    return ctl.run_day(wf, rate_trace, cis)
+
+
+def run():
+    out = []
+    payload = {}
+    mixes = enumerate_fleets(["a100", "h100"], MAX_REPLICAS)
+    for grid in GRIDS:
+        rows = {}
+        for name, fleets in [("homo_new", list(HOMO_NEW)),
+                             ("homo_old", list(HOMO_OLD)),
+                             ("solver_mix", mixes)]:
+            res = _day(grid, fleets)
+            rows[name] = {
+                "total_g": res.total_carbon_g,
+                "carbon_per_req_g": res.carbon_per_request_g,
+                "slo": res.slo_attainment,
+                "avg_cache_tb": res.avg_cache_tb,
+                "avg_capacity": res.avg_fleet_capacity,
+                "hourly_fleets": [h.fleet for h in res.hours],
+            }
+            out.append((f"fleet_mix/{grid}/{name}/total_g",
+                        res.total_carbon_g,
+                        f"slo={res.slo_attainment:.3f} "
+                        f"avg_cap={res.avg_fleet_capacity:.2f}"))
+        mix, new, old = rows["solver_mix"], rows["homo_new"], rows["homo_old"]
+        slo_floor = _slo_for(MODEL, TASK).rho - EPS_SLO
+        # equal-SLO comparison via Pareto dominance: the mix must clear
+        # the required attainment AND be no worse on SLO than each
+        # baseline while strictly cheaper — beating an SLO-violating
+        # baseline on carbon alone would not count, and a baseline cannot
+        # "win" by under-provisioning below the bar
+        beats = (mix["slo"] >= slo_floor
+                 and all(mix["slo"] >= r["slo"] - EPS_SLO
+                         and mix["total_g"] < r["total_g"]
+                         for r in (new, old)))
+        out.append((f"fleet_mix/{grid}/mix_beats_both", float(beats),
+                    f"mix={mix['total_g']:.0f}g vs new={new['total_g']:.0f}g"
+                    f" old={old['total_g']:.0f}g at slo>={slo_floor:.3f}"))
+        payload[grid] = rows
+    save_result("fleet_mix", payload)
+    return out

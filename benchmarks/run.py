@@ -29,6 +29,7 @@ MODULES = [
     "fig19_ssd_lifetime",
     "fig20_ssd_embodied",
     "cluster_scaling",
+    "fleet_mix",
     "roofline_report",
 ]
 

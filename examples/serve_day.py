@@ -19,14 +19,19 @@ if __name__ == "__main__":
     ap.add_argument("--replicas", type=int, nargs="+", default=[1],
                     help="e.g. --replicas 1 2 3 4 for hourly cluster "
                          "co-decision with cache-affinity routing")
+    ap.add_argument("--fleet", nargs="+", default=None,
+                    help="heterogeneous mix spec(s) like a100:2,l40:4; "
+                         "several specs let the solver pick the mix hourly")
     a = ap.parse_args()
     results = {}
     for mode in ["none", "full", "greencache"]:
         print(f"\n### mode={mode}")
-        results[mode] = serve_main([
-            "--model", "llama3-70b", "--task", a.task, "--grid", a.grid,
-            "--mode", mode, "--warmup", "10000",
-            "--replicas", *[str(k) for k in a.replicas]])
+        argv = ["--model", "llama3-70b", "--task", a.task, "--grid", a.grid,
+                "--mode", mode, "--warmup", "10000",
+                "--replicas", *[str(k) for k in a.replicas]]
+        if a.fleet:
+            argv += ["--fleet", *a.fleet]
+        results[mode] = serve_main(argv)
     gc, fc = results["greencache"], results["full"]
     red = 1 - gc.carbon_per_request_g / fc.carbon_per_request_g
     print(f"\nGreenCache vs Full-Cache: {red * 100:.1f}% carbon reduction "

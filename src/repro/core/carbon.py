@@ -4,11 +4,21 @@
 
 Units: energy kWh, CI gCO₂e/kWh, embodied carbon kgCO₂e (converted to g),
 time seconds, storage TB.
+
+Fleets may be *heterogeneous*: a ``ReplicaType`` bundles a per-generation
+``HardwareSpec`` (TDP, embodied kgCO₂e, service lifetime) with a
+``perf_scale`` relative to the reference platform and an ``amortized_frac``
+— the share of the server's embodied carbon already written off by prior
+service (GreenLLM's argument for keeping old-generation GPUs in the mix).
+``CarbonModel.energy_kwh`` / ``compute_embodied_g`` accept either a bare
+replica count (homogeneous reference fleet, the seed behaviour) or a
+``types`` list naming one ``ReplicaType`` per replica.
 """
 from __future__ import annotations
 
+from collections import Counter
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, Optional, Sequence, Tuple
 
 SECONDS_PER_YEAR = 365.25 * 24 * 3600
 
@@ -44,6 +54,106 @@ TPU_V5E_SPEC = HardwareSpec(
     gpu_power_max_w=4 * 220.0, gpu_power_idle_w=4 * 60.0,
 )
 
+
+# --------------------------------------------------------------------- #
+# Heterogeneous replica types
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class ReplicaType:
+    """One hardware generation a serving replica can run on.
+
+    ``perf_scale`` is the throughput multiplier vs the reference platform
+    (the 4×L40 server the performance profile is calibrated to): prefill
+    compute and decode step time are divided by it. ``amortized_frac`` is
+    the share of the server's embodied carbon already amortized by prior
+    service, so only ``(1 - amortized_frac)`` of ``embodied_compute_kg``
+    is charged over the remaining ``hw.lifetime_years`` — the reason an
+    old-generation fleet can be the greener choice on clean grids even
+    though it burns more energy per token.
+    """
+    name: str
+    hw: HardwareSpec
+    perf_scale: float = 1.0
+    amortized_frac: float = 0.0
+
+    @property
+    def effective_embodied_kg(self) -> float:
+        return (1.0 - self.amortized_frac) * self.hw.embodied_compute_kg
+
+    def embodied_g(self, seconds: float) -> float:
+        """Amortized embodied share of one replica over ``seconds``."""
+        lt = self.hw.lifetime_years * SECONDS_PER_YEAR
+        return (seconds / lt) * self.effective_embodied_kg * 1000.0
+
+    def server_power_w(self, gpu_util: float) -> float:
+        """Whole-server draw (GPU + CPU + DRAM; SSD pool counted once at
+        the cluster level) at the given average accelerator utilization."""
+        hw = self.hw
+        gpu_w = hw.gpu_power_idle_w + gpu_util * (hw.gpu_power_max_w
+                                                  - hw.gpu_power_idle_w)
+        return gpu_w + hw.cpu_power_w + hw.mem_power_w
+
+
+# Registry of fleet generations. ``l40`` is the paper's reference platform
+# (Table 1) and MUST keep perf_scale=1.0 / amortized_frac=0.0 so an
+# all-l40 fleet bit-reproduces the homogeneous engine. a100 is the
+# "old generation": slower per watt, but most of its embodied carbon is
+# already written off (GreenLLM, arXiv 2412.20322). h100 is the "new
+# generation": ~2.4x the throughput at higher TDP and a bigger embodied
+# bill (HBM3 + larger die, full charge).
+REPLICA_TYPES: Dict[str, ReplicaType] = {
+    "l40": ReplicaType("l40", HardwareSpec()),
+    "a100": ReplicaType(
+        "a100",
+        HardwareSpec(name="a100-server",
+                     embodied_gpu_kg=150.0,          # 4× A100-80G (ACT-style)
+                     gpu_power_max_w=4 * 400.0, gpu_power_idle_w=4 * 140.0),
+        perf_scale=1.4, amortized_frac=0.6),          # ~3y into a 5y life
+    "h100": ReplicaType(
+        "h100",
+        HardwareSpec(name="h100-server",
+                     embodied_gpu_kg=190.0,          # 4× H100 SXM + HBM3
+                     gpu_power_max_w=4 * 700.0, gpu_power_idle_w=4 * 180.0),
+        perf_scale=2.4),
+    "tpu_v5e": ReplicaType("tpu_v5e", TPU_V5E_SPEC, perf_scale=1.1),
+}
+
+
+def get_replica_type(name: str) -> ReplicaType:
+    try:
+        return REPLICA_TYPES[name]
+    except KeyError:
+        raise KeyError(f"unknown replica type {name!r}; one of "
+                       f"{sorted(REPLICA_TYPES)}") from None
+
+
+def parse_fleet(spec: str) -> Tuple[str, ...]:
+    """Parse a CLI fleet spec like ``"a100:2,l40:4"`` (or bare ``"h100"``
+    for a single replica) into a per-replica type tuple."""
+    out = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, count = part.partition(":")
+        name = name.strip()
+        get_replica_type(name)                       # validate early
+        out.extend([name] * (int(count) if count else 1))
+    if not out:
+        raise ValueError(f"empty fleet spec {spec!r}")
+    return tuple(out)
+
+
+def fleet_str(types: Sequence[str]) -> str:
+    """Canonical compact rendering of a fleet mix (``"a100:2,l40:4"``)."""
+    counts = Counter(types)
+    return ",".join(f"{n}:{counts[n]}" for n in sorted(counts))
+
+
+def fleet_capacity(types: Sequence[str]) -> float:
+    """Total throughput in reference-server units (sum of perf scales)."""
+    return float(sum(get_replica_type(t).perf_scale for t in types))
+
 # 2024 grid average carbon intensities, gCO2e/kWh (paper Fig 2a + Fig 8)
 GRID_CI: Dict[str, float] = {
     "FR": 33.0, "SE": 45.0, "FI": 79.0, "ES": 124.0, "GB": 211.0,
@@ -69,27 +179,51 @@ class CarbonModel:
         return alloc_tb * (seconds / lt) * self.hw.ssd_kg_per_tb * 1000.0
 
     # ---- non-storage embodied, amortized over lifetime ----
-    def compute_embodied_g(self, seconds: float, n_replicas: int = 1) -> float:
-        """Embodied carbon of the GPU/CPU/DRAM fleet; each serving replica
-        is a full server, so the amortized share scales with replica count
-        (the knob the cluster solver trades against cache size)."""
+    def compute_embodied_g(self, seconds: float, n_replicas: int = 1,
+                           types: Optional[Sequence[str]] = None) -> float:
+        """Embodied carbon of the GPU/CPU/DRAM fleet over ``seconds``.
+
+        Homogeneous form (``types=None``): each of ``n_replicas`` serving
+        replicas is a full reference server (``self.hw``), so the amortized
+        share scales linearly with the count — the knob the cluster solver
+        trades against cache size.
+
+        Typed form: ``types`` names one ``ReplicaType`` per replica; each
+        type's *unamortized* embodied carbon is charged over its own
+        remaining lifetime and summed (``n_replicas`` is ignored). Grouped
+        by type so an all-reference fleet reproduces the homogeneous value
+        bit-for-bit.
+        """
+        if types is not None:
+            return sum(c * get_replica_type(n).embodied_g(seconds)
+                       for n, c in Counter(types).items())
         lt = self.hw.lifetime_years * SECONDS_PER_YEAR
         return n_replicas * (seconds / lt) * self.hw.embodied_compute_kg \
             * 1000.0
 
     # ---- Eq (5): total ----
     def total_g(self, energy_kwh: float, ci: float, alloc_tb: float,
-                seconds: float, n_replicas: int = 1) -> float:
+                seconds: float, n_replicas: int = 1,
+                types: Optional[Sequence[str]] = None) -> float:
         return (self.operational_g(energy_kwh, ci)
                 + self.cache_embodied_g(alloc_tb, seconds)
-                + self.compute_embodied_g(seconds, n_replicas))
+                + self.compute_embodied_g(seconds, n_replicas, types=types))
 
     # ---- power → energy helper ----
     def energy_kwh(self, gpu_util: float, seconds: float,
-                   ssd_tb: float = 0.0, n_servers: int = 1) -> float:
-        """Fleet energy: ``n_servers`` replicas at the given (average) GPU
-        utilization each draw server power; the SSD pool is a cluster-wide
-        allocation and is counted once."""
+                   ssd_tb: float = 0.0, n_servers: int = 1,
+                   types: Optional[Sequence[str]] = None) -> float:
+        """Fleet energy: each replica draws whole-server power at the given
+        (average) accelerator utilization; the SSD pool is a cluster-wide
+        allocation and is counted once. With ``types``, per-replica power
+        comes from each replica's own ``ReplicaType`` spec (grouped by type;
+        ``n_servers`` is ignored); otherwise ``n_servers`` reference
+        servers (``self.hw``) are assumed."""
+        if types is not None:
+            w = sum(c * get_replica_type(n).server_power_w(gpu_util)
+                    for n, c in Counter(types).items()) \
+                + ssd_tb * self.hw.ssd_power_w_per_tb
+            return w * seconds / 3.6e6
         hw = self.hw
         gpu_w = hw.gpu_power_idle_w + gpu_util * (hw.gpu_power_max_w
                                                   - hw.gpu_power_idle_w)

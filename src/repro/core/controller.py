@@ -1,10 +1,23 @@
-"""GreenCache controller (paper Fig. 10): ties together the profiler,
-predictors, constraint solver and cache manager into the hourly
-reconfiguration loop, and runs the 24-hour evaluation.
+"""GreenCache controller (paper Fig. 10): the hourly reconfiguration loop.
+
+Each simulated hour the controller (1) refreshes the load and
+carbon-intensity forecasts, (2) re-solves the multiple-choice knapsack
+over the remaining horizon for the cache size — and, in cluster mode, the
+replica count or heterogeneous fleet mix — (3) applies the first decision
+(``KVStore.resize`` + ``ClusterEngine.set_replicas``/``set_fleet``), and
+(4) simulates the hour of traffic against the live cache, recording
+carbon, latency percentiles, SLO attainment and hit rate per hour.
 
 Comparison points (paper §6.1): No-Cache, Full-Cache, GreenCache
 (+ "LRU + Optimal" for the §6.3.1 ablation: adaptive sizing with the
-original LRU replacement policy).
+original LRU replacement policy; "oracle" feeds ground-truth rate/CI to
+the solver to isolate predictor error).
+
+Fleet mode: pass ``fleets=[...]`` — a single mix (list of
+``ReplicaType`` names) pins the fleet; a list of mixes (e.g. from
+``repro.core.solver.enumerate_fleets``) lets the solver co-decide
+``(cache_tb, fleet)`` hourly, trading new-generation efficiency against
+old-generation already-amortized embodied carbon.
 """
 from __future__ import annotations
 
@@ -13,7 +26,8 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.carbon import CarbonModel
+from repro.core.carbon import (CarbonModel, fleet_capacity, fleet_str,
+                               parse_fleet)
 from repro.core.kvstore import KVStore
 from repro.core.policies import POLICIES
 from repro.core.predictors import CIPredictor, LoadPredictor
@@ -45,6 +59,7 @@ class HourRecord:
     pred_rate: float = 0.0
     pred_ci: float = 0.0
     n_replicas: int = 1
+    fleet: str = ""                   # compact mix, e.g. "a100:2,l40:4"
 
 
 @dataclass
@@ -75,6 +90,14 @@ class RunResult:
     def avg_replicas(self) -> float:
         return float(np.mean([h.n_replicas for h in self.hours]))
 
+    @property
+    def avg_fleet_capacity(self) -> float:
+        """Mean fleet throughput in reference-server units (fleet mode;
+        homogeneous hours count their replica number)."""
+        return float(np.mean([fleet_capacity(parse_fleet(h.fleet))
+                              if h.fleet else float(h.n_replicas)
+                              for h in self.hours]))
+
 
 class GreenCacheController:
     """mode: "greencache" (predictive ILP sizing), "full" (max cache),
@@ -83,8 +106,13 @@ class GreenCacheController:
     ``n_replicas``: an int pins the prefill replica count; a sequence of
     candidate counts lets the solver co-decide (cache_tb, n_replicas) per
     hour in "greencache"/"oracle" modes (fixed modes use the largest
-    candidate). ``router`` defaults to "single" for one replica and
-    "cache_affinity" otherwise. ``engine="legacy"`` keeps the seed
+    candidate). ``fleets``: a single heterogeneous mix (list of
+    ``ReplicaType`` names) pins the fleet; a list of mixes lets the solver
+    co-decide (cache_tb, fleet) instead — overrides ``n_replicas``.
+    ``router`` defaults to "single" for one replica and "cache_affinity"
+    otherwise. ``balance_eps`` is the bounded-load spill factor of the
+    cache_affinity router (None disables spill: pure affinity, best hit
+    rate, worst p90 TTFT under skew). ``engine="legacy"`` keeps the seed
     single-server ``ServingEngine`` (parity/debugging only)."""
 
     def __init__(self, model: ServingModel, profile: Profile,
@@ -96,6 +124,7 @@ class GreenCacheController:
                  max_requests_per_hour: int = 1200,
                  rho_margin: float = 0.04,
                  n_replicas=1, router: Optional[str] = None,
+                 fleets=None, balance_eps: Optional[float] = 0.15,
                  engine: str = "cluster"):
         self.model = model
         self.profile = profile
@@ -111,14 +140,29 @@ class GreenCacheController:
         self.resize_interval_h = resize_interval_h
         self.warm_requests = warm_requests
         self.seed = seed
+        self.balance_eps = balance_eps
         self.slo = _slo_for(model.name, task)
-        self.replica_choices = sorted(set(int(k) for k in n_replicas)) \
-            if isinstance(n_replicas, (list, tuple)) else [int(n_replicas)]
+        if fleets is not None:
+            if fleets and isinstance(fleets[0], str):
+                fleets = [fleets]                  # single pinned mix
+            self.fleet_choices = [tuple(f) for f in fleets]
+            if not self.fleet_choices:
+                raise ValueError("fleets must name at least one mix")
+            self.replica_choices = sorted({len(f)
+                                           for f in self.fleet_choices})
+        else:
+            self.fleet_choices = None
+            self.replica_choices = sorted(set(int(k) for k in n_replicas)) \
+                if isinstance(n_replicas, (list, tuple)) else \
+                [int(n_replicas)]
         self.router = router if router is not None else \
-            ("single" if max(self.replica_choices) == 1 else "cache_affinity")
+            ("single" if max(self.replica_choices) == 1
+             and self.fleet_choices is None else "cache_affinity")
         self.engine_kind = engine
-        if engine == "legacy" and self.replica_choices != [1]:
-            raise ValueError("engine='legacy' supports n_replicas=1 only")
+        if engine == "legacy" and (self.replica_choices != [1]
+                                   or self.fleet_choices is not None):
+            raise ValueError("engine='legacy' supports a single untyped "
+                             "replica only")
 
     # ------------------------------------------------------------------ #
     def run_day(self, workload_factory: Callable, rate_trace: np.ndarray,
@@ -146,13 +190,23 @@ class GreenCacheController:
         max_tb = self.model.max_cache_tb
         store = KVStore(max_tb * 1e12, POLICIES[self.policy],
                         self.model.kv_bytes_per_token)
-        fixed_n = max(self.replica_choices)
+        fleet_mode = self.fleet_choices is not None
+        if fleet_mode:
+            # fixed modes (and the pre-solve warm window) run the
+            # largest-capacity candidate mix
+            fixed_fleet = max(self.fleet_choices, key=fleet_capacity)
+            fixed_n = len(fixed_fleet)
+        else:
+            fixed_fleet = None
+            fixed_n = max(self.replica_choices)
         if self.engine_kind == "legacy":
             engine = ServingEngine(self.model, store, self.carbon)
         else:
             engine = ClusterEngine(self.model, store, self.carbon,
-                                   n_replicas=fixed_n, router=self.router)
-        co_decide = len(self.replica_choices) > 1
+                                   n_replicas=fixed_n, router=self.router,
+                                   types=fixed_fleet,
+                                   balance_eps=self.balance_eps)
+        co_decide = not fleet_mode and len(self.replica_choices) > 1
         wl = workload_factory(self.seed)
 
         # warm the cache at full size, then resize to the first decision
@@ -164,8 +218,10 @@ class GreenCacheController:
         hours: List[HourRecord] = []
         current_tb = max_tb if self.mode != "none" else 0.0
         current_n = fixed_n
+        current_fleet = fixed_fleet
         pending_schedule: List[float] = []
         pending_replicas: List[int] = []
+        pending_fleets: List[tuple] = []
 
         for h in range(H):
             t_solve = 0.0
@@ -179,7 +235,16 @@ class GreenCacheController:
                     rates = list(load_pred.predict(self.horizon))
                     cis = list(ci_pred.predict(self.horizon))
                 rho = min(self.slo.rho + self.rho_margin, 0.995)
-                if co_decide:
+                if fleet_mode:
+                    # even a pinned single mix sizes its cache through the
+                    # capacity-normalized fleet metrics (the raw cluster
+                    # rate would be far outside the per-server profile)
+                    res = solve_cluster_schedule(
+                        self.profile, rates, cis, self.slo, self.carbon,
+                        sizes_tb=self.sizes, fleets=self.fleet_choices,
+                        rho=rho)
+                    pending_fleets = list(res.fleets)
+                elif co_decide:
                     res = solve_cluster_schedule(
                         self.profile, rates, cis, self.slo, self.carbon,
                         sizes_tb=self.sizes, replicas=self.replica_choices,
@@ -205,10 +270,19 @@ class GreenCacheController:
                 if pending_replicas:
                     current_n = max(pending_replicas[:k])
                     pending_replicas = pending_replicas[1:]
+                if pending_fleets:
+                    current_fleet = max(pending_fleets[:k],
+                                        key=fleet_capacity)
+                    current_n = len(current_fleet)
+                    pending_fleets = pending_fleets[1:]
 
-            if isinstance(engine, ClusterEngine) \
-                    and current_n != engine.n_replicas:
-                engine.set_replicas(current_n)
+            if isinstance(engine, ClusterEngine):
+                if current_fleet is not None \
+                        and list(current_fleet) != engine.types:
+                    engine.set_fleet(current_fleet)
+                elif current_fleet is None \
+                        and current_n != engine.n_replicas:
+                    engine.set_replicas(current_n)
             store.resize(current_tb * 1e12, now=h * 3600.0)
 
             # simulate this hour
@@ -229,7 +303,8 @@ class GreenCacheController:
                 slo_frac=res.slo_attainment(self.slo),
                 hit_rate=res.token_hit_rate, num_requests=res.num_requests,
                 solve_time_s=t_solve, pred_rate=pred_rate, pred_ci=pred_ci,
-                n_replicas=current_n))
+                n_replicas=current_n,
+                fleet=fleet_str(current_fleet) if current_fleet else ""))
 
             # online predictor updates (paper §5.3)
             load_pred.update(lam)

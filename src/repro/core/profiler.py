@@ -83,13 +83,27 @@ def run_profiler(model: ServingModel, task: str, workload_factory: Callable,
                  rates: List[float], sizes_tb: List[float],
                  meas_seconds: float = 1200.0, ramp_seconds: float = 420.0,
                  warmup_prompts: int = 30000,
-                 policy: str = "lcs", seed: int = 0) -> Profile:
+                 policy: str = "lcs", seed: int = 0,
+                 replica_type: Optional[str] = None) -> Profile:
     """Profile each (rate, size) cell on a warmed cache (paper: profiling is
     collected after warm-up with the LCS policy; distinct prompt sets for
     profiling vs evaluation — we use a distinct seed). The measurement is a
     fixed *time window* (not a fixed prompt count) so steady-state queueing
-    at high rates is captured."""
+    at high rates is captured.
+
+    ``replica_type`` profiles on a specific hardware generation: the
+    serving model's compute throughput is rescaled by the type's
+    ``perf_scale`` and energy is metered against the type's power specs.
+    Default (None) is the reference platform — the profile the fleet
+    solver's capacity-normalized interpolation expects."""
+    from repro.core.carbon import get_replica_type
     from repro.workloads.traces import make_poisson_arrivals
+
+    if replica_type is not None:
+        rt = get_replica_type(replica_type)
+        model = model.scaled(rt.perf_scale)
+        if rt.hw != carbon.hw:
+            carbon = CarbonModel(hw=rt.hw)
 
     prof = Profile(model.name, task, rates=list(rates), sizes=list(sizes_tb))
     for size in sizes_tb:

@@ -1,6 +1,8 @@
-"""Constraint solver (paper §5.4): choose the hourly cache size S_t that
-minimizes predicted total carbon subject to the global SLO-attainment
-constraint (≥ρ of requests meet TTFT and TPOT SLOs over the horizon).
+"""Constraint solver (paper §5.4 + cluster/fleet extensions).
+
+The paper's core decision is the hourly cache size S_t that minimizes
+predicted total carbon subject to the global SLO-attainment constraint
+(≥ρ of requests meet TTFT and TPOT SLOs over the horizon):
 
     argmin_{S_t}  Σ_t n_t · [ p·TTFT·CI_t  +  (TTFT/LT)·S_t·C_unit
                               + Σ_comp (TTFT/LT)·C_comp ]
@@ -10,16 +12,28 @@ This is a multiple-choice knapsack (NP-hard — paper Appendix A reduces 0-1
 KNAPSACK to it); at 1 TB × 24 h granularity it is tractable. Primary solver:
 PuLP + COIN-OR CBC (as in the paper). Fallback: exact dynamic program over
 discretized satisfied-request counts (no external solver needed).
+
+Two cluster generalizations reuse the same machinery by enlarging the
+per-hour option set (the knapsack classes stay one-choice-per-hour):
+
+* ``solve_cluster_schedule(..., replicas=[1,2,4])`` — options are
+  sizes × homogeneous replica counts (EcoServe-style provisioning axis).
+* ``solve_cluster_schedule(..., fleets=enumerate_fleets(...))`` — options
+  are sizes × heterogeneous fleet mixes; each mix's carbon sums per-type
+  power and (amortization-discounted) embodied rates, the GreenLLM-style
+  old-vs-new-generation tradeoff. Predicted load/SLO for a mix uses the
+  capacity-normalized rate (see ``_fleet_cell_metrics``).
 """
 from __future__ import annotations
 
+import itertools
 import time
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.carbon import CarbonModel
+from repro.core.carbon import CarbonModel, fleet_capacity, get_replica_type
 from repro.core.profiler import Profile
 from repro.serving.perfmodel import SLO
 
@@ -32,6 +46,7 @@ class SolveResult:
     solve_time_s: float
     solver: str
     replicas: Optional[List[int]] = None   # chosen N_t (cluster co-decision)
+    fleets: Optional[List[Tuple[str, ...]]] = None  # chosen mix per hour
 
 
 def _cell_metrics(profile: Profile, rate: float, size: float,
@@ -70,6 +85,19 @@ def solve_cache_schedule(profile: Profile, pred_rates: Sequence[float],
     return _solve_dp(C, F, n, sizes, rho, t_start)
 
 
+def _saturated_slo(profile: Profile, norm_rate: float,
+                   slo_frac: float) -> float:
+    """Penalize per-replica rates beyond the profiled envelope: the queue
+    is saturated and attainment collapses at least quadratically
+    (``Profile.interpolate`` clamps to the last cell, which would
+    otherwise let the solver under-provision small fleets far past their
+    capacity)."""
+    rs_max = max(profile.rates)
+    if norm_rate > rs_max:
+        slo_frac *= (rs_max / norm_rate) ** 2
+    return slo_frac
+
+
 def _cluster_cell_metrics(profile: Profile, rate: float, size: float,
                           n_rep: int, ci: float, carbon: CarbonModel):
     """Predicted per-request carbon and SLO fraction for ``n_rep`` replicas
@@ -85,7 +113,68 @@ def _cluster_cell_metrics(profile: Profile, rate: float, size: float,
     op = carbon.operational_g(c.energy_per_req_kwh, ci)
     emb_cache = carbon.cache_embodied_g(size, c.duration_per_req_s) / n_rep
     emb_comp = carbon.compute_embodied_g(c.duration_per_req_s)
-    return op + emb_cache + emb_comp, c.slo_frac
+    return op + emb_cache + emb_comp, \
+        _saturated_slo(profile, rate / n_rep, c.slo_frac)
+
+
+def enumerate_fleets(type_names: Sequence[str], max_replicas: int,
+                     min_replicas: int = 1) -> List[Tuple[str, ...]]:
+    """Bounded enumeration of fleet mixes: every multiset of the given
+    replica types with ``min_replicas``..``max_replicas`` members, sorted
+    by (size, capacity) so option indices are stable. The option count is
+    C(|types|+n-1, n) summed over n — e.g. 2 types × ≤6 replicas → 27
+    mixes, well within the knapsack's per-hour budget."""
+    for t in type_names:
+        get_replica_type(t)
+    out: List[Tuple[str, ...]] = []
+    for n in range(max(min_replicas, 1), max_replicas + 1):
+        out.extend(itertools.combinations_with_replacement(type_names, n))
+    out.sort(key=lambda f: (len(f), fleet_capacity(f), f))
+    return out
+
+
+def _ref_util(cell, carbon: CarbonModel) -> float:
+    """Invert the profiled average server power back to the reference
+    platform's accelerator utilization (the profile stores whole-fleet
+    power incl. the small SSD term; clamping absorbs that skew)."""
+    hw = carbon.hw
+    base = hw.gpu_power_idle_w + hw.cpu_power_w + hw.mem_power_w
+    span = hw.gpu_power_max_w - hw.gpu_power_idle_w
+    return float(np.clip((cell.avg_power_w - base) / max(span, 1e-9),
+                         0.0, 1.0))
+
+
+def _fleet_cell_metrics(profile: Profile, rate: float, size: float,
+                        fleet: Sequence[str], ci: float,
+                        carbon: CarbonModel):
+    """Predicted per-request carbon and SLO fraction for a heterogeneous
+    ``fleet`` sharing a ``size``-TB cache at cluster arrival rate ``rate``.
+
+    Approximation: the router splits load in proportion to capacity, so
+    every replica runs at the same *normalized* per-unit-capacity rate
+    ``rate / Σ perf_scale`` and the reference profile cell at that rate
+    describes each replica's queueing behaviour (a replica that is s×
+    faster serving s× the arrivals is the reference server under time
+    rescaling). Energy then scales by the fleet's summed per-type power
+    relative to ``cap`` reference servers at the cell's operating point,
+    and embodied compute sums each type's amortization-discounted rate —
+    the terms that make an old-generation mix win on clean grids."""
+    cap = fleet_capacity(fleet)
+    norm_rate = rate / cap
+    c = profile.interpolate(norm_rate, size)
+    slo_frac = _saturated_slo(profile, norm_rate, c.slo_frac)
+    util = _ref_util(c, carbon)
+    hw = carbon.hw            # the platform the profile was measured on
+    ref_w = hw.gpu_power_idle_w \
+        + util * (hw.gpu_power_max_w - hw.gpu_power_idle_w) \
+        + hw.cpu_power_w + hw.mem_power_w
+    fleet_w = sum(get_replica_type(t).server_power_w(util) for t in fleet)
+    op = carbon.operational_g(c.energy_per_req_kwh, ci) \
+        * fleet_w / (cap * ref_w)
+    emb_cache = carbon.cache_embodied_g(size, c.duration_per_req_s) / cap
+    emb_comp = sum(get_replica_type(t).embodied_g(c.duration_per_req_s)
+                   for t in fleet) / cap
+    return op + emb_cache + emb_comp, slo_frac
 
 
 def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
@@ -93,17 +182,27 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
                            carbon: CarbonModel, *,
                            sizes_tb: Optional[Sequence[float]] = None,
                            replicas: Sequence[int] = (1,),
+                           fleets: Optional[Sequence[Sequence[str]]] = None,
                            rho: Optional[float] = None,
                            use_ilp: bool = True) -> SolveResult:
-    """Joint hourly plan over (cache size, replica count): the option set is
-    the cross product sizes × replicas and the same multiple-choice knapsack
-    machinery picks one option per hour (paper §5.4 extended with the
-    EcoServe-style provisioning axis)."""
+    """Joint hourly plan over (cache size, fleet): the option set is the
+    cross product sizes × fleet choices and the same multiple-choice
+    knapsack machinery picks one option per hour (paper §5.4 extended with
+    the EcoServe-style provisioning axis).
+
+    ``replicas`` enumerates homogeneous reference-platform counts;
+    ``fleets`` (e.g. from ``enumerate_fleets``) enumerates heterogeneous
+    mixes instead and populates ``SolveResult.fleets`` alongside the
+    per-hour replica counts."""
     t_start = time.time()
     rho = rho if rho is not None else slo.rho
     sizes = list(sizes_tb) if sizes_tb is not None else list(profile.sizes)
-    reps = sorted(set(int(k) for k in replicas)) or [1]
-    options = [(s, k) for k in reps for s in sizes]
+    if fleets is not None:
+        mixes = [tuple(f) for f in fleets] or [("l40",)]
+        options = [(s, f) for f in mixes for s in sizes]
+    else:
+        reps = sorted(set(int(k) for k in replicas)) or [1]
+        options = [(s, k) for k in reps for s in sizes]
     T = len(pred_rates)
     n = np.array([max(r, 1e-3) * 3600.0 for r in pred_rates])
 
@@ -111,8 +210,12 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
     F = np.zeros((T, len(options)))
     for t in range(T):
         for oi, (s, k) in enumerate(options):
-            C[t, oi], F[t, oi] = _cluster_cell_metrics(
-                profile, pred_rates[t], s, k, pred_cis[t], carbon)
+            if fleets is not None:
+                C[t, oi], F[t, oi] = _fleet_cell_metrics(
+                    profile, pred_rates[t], s, k, pred_cis[t], carbon)
+            else:
+                C[t, oi], F[t, oi] = _cluster_cell_metrics(
+                    profile, pred_rates[t], s, k, pred_cis[t], carbon)
 
     if use_ilp:
         try:
@@ -122,6 +225,11 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
     else:
         res = _solve_dp(C, F, n, options, rho, t_start)
     chosen = list(res.sizes_tb)       # option tuples, split into the plan
+    if fleets is not None:
+        return SolveResult([s for s, _ in chosen], res.objective_g,
+                           res.feasible, time.time() - t_start, res.solver,
+                           replicas=[len(f) for _, f in chosen],
+                           fleets=[f for _, f in chosen])
     return SolveResult([s for s, _ in chosen], res.objective_g,
                        res.feasible, time.time() - t_start, res.solver,
                        replicas=[k for _, k in chosen])

@@ -5,6 +5,12 @@ or the real-execution demo (actual JAX model with KV-prefix reuse).
     PYTHONPATH=src python -m repro.launch.serve --model llama3-70b \
         --task conversation --grid FR --mode greencache
 
+    # heterogeneous fleet: pin a mix, or give several for hourly
+    # (cache, fleet) co-decision
+    PYTHONPATH=src python -m repro.launch.serve --fleet a100:2,l40:4
+    PYTHONPATH=src python -m repro.launch.serve \
+        --fleet h100:2 a100:4 a100:2,h100:1
+
     # real execution with a reduced model:
     PYTHONPATH=src python -m repro.launch.serve --real --arch yi-6b
 """
@@ -16,7 +22,7 @@ import numpy as np
 
 
 def run_simulation(args):
-    from repro.core.carbon import CarbonModel
+    from repro.core.carbon import CarbonModel, fleet_capacity, parse_fleet
     from repro.core.controller import GreenCacheController
     from repro.core.profiler import run_profiler
     from repro.serving.perfmodel import SERVING_MODELS
@@ -26,9 +32,14 @@ def run_simulation(args):
 
     model = SERVING_MODELS[args.model]
     carbon = CarbonModel()
-    max_rep = max(args.replicas) if isinstance(args.replicas, list) \
-        else args.replicas
-    scale = float(max_rep)
+    fleets = [parse_fleet(f) for f in args.fleet] if args.fleet else None
+    if fleets:
+        scale = max(fleet_capacity(f) for f in fleets)
+        max_rep = max(len(f) for f in fleets)
+    else:
+        max_rep = max(args.replicas) if isinstance(args.replicas, list) \
+            else args.replicas
+        scale = float(max_rep)
     if args.task == "conversation":
         wf = lambda s: ConversationWorkload(seed=s, load_scale=scale)
         policy = "lcs_chat"
@@ -50,6 +61,8 @@ def run_simulation(args):
                                mode=args.mode, policy=policy,
                                warm_requests=args.warmup,
                                n_replicas=args.replicas, router=args.router,
+                               fleets=fleets,
+                               balance_eps=args.balance_eps,
                                max_requests_per_hour=int(1200 * scale))
     res = ctl.run_day(wf, rate_trace, cis)
     print(f"mode={args.mode} grid={args.grid} task={args.task}")
@@ -57,7 +70,11 @@ def run_simulation(args):
     print(f"  SLO attainment: {res.slo_attainment:.3f}")
     print(f"  avg cache size: {res.avg_cache_tb:.1f} TB")
     print(f"  hourly sizes:   {[int(h.cache_tb) for h in res.hours]}")
-    if max_rep > 1:
+    if fleets:
+        print(f"  avg fleet cap:  {res.avg_fleet_capacity:.2f} "
+              f"(reference-server units)")
+        print(f"  hourly fleets:  {[h.fleet for h in res.hours]}")
+    elif max_rep > 1:
         print(f"  avg replicas:   {res.avg_replicas:.2f}")
         print(f"  hourly replicas:{[h.n_replicas for h in res.hours]}")
     return res
@@ -107,6 +124,16 @@ def main(argv=None):
     ap.add_argument("--replicas", type=int, nargs="+", default=1,
                     help="prefill replica count; several values let the "
                          "solver co-decide (cache_tb, n_replicas) hourly")
+    ap.add_argument("--fleet", nargs="+", default=None,
+                    help="heterogeneous fleet mix spec(s) like "
+                         "'a100:2,l40:4' (replica types from "
+                         "repro.core.carbon.REPLICA_TYPES); several specs "
+                         "let the solver co-decide (cache_tb, fleet) "
+                         "hourly; overrides --replicas")
+    ap.add_argument("--balance-eps", type=float, default=0.15,
+                    help="bounded-load spill factor of the cache_affinity "
+                         "router; negative disables spill (pure affinity: "
+                         "best hit rate, worst p90 TTFT under skew)")
     ap.add_argument("--router", default=None,
                     choices=[None, "single", "round_robin", "least_loaded",
                              "cache_affinity"],
@@ -117,6 +144,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if isinstance(args.replicas, list) and len(args.replicas) == 1:
         args.replicas = args.replicas[0]
+    if args.balance_eps is not None and args.balance_eps < 0:
+        args.balance_eps = None
     if args.real:
         return run_real(args)
     return run_simulation(args)

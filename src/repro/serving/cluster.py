@@ -29,6 +29,15 @@ via ``np.cumsum`` + ``np.maximum.accumulate``. Decode batching, energy and
 carbon are computed on whole arrays. At ``n_replicas=1`` this reproduces the
 seed engine's TTFT sequence exactly and runs ~10x faster (the seed spends
 most of its time constructing one ``np.random.Generator`` per request).
+
+Heterogeneous fleets: pass ``types=["h100", "a100", ...]`` (one
+``repro.core.carbon.ReplicaType`` name per replica) instead of a bare
+``n_replicas``. Each replica's prefill compute and decode step scale with
+its type's ``perf_scale`` (KV loads stay SSD-bandwidth-bound), energy sums
+per-type server power, and embodied compute carbon sums each type's
+amortized share. An all-reference-type (``l40``) fleet is bit-identical to
+the untyped engine; mixes additionally weight the bounded-load spill caps
+and the ``least_loaded`` rule by per-replica capacity.
 """
 from __future__ import annotations
 
@@ -38,7 +47,7 @@ from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.carbon import CarbonModel
+from repro.core.carbon import CarbonModel, get_replica_type
 from repro.core.kvstore import KVStore
 from repro.serving.engine import SimResult
 from repro.serving.perfmodel import ServingModel
@@ -105,12 +114,21 @@ class ClusterEngine:
                  stores: Union[KVStore, Sequence[KVStore]],
                  carbon: CarbonModel, *,
                  n_replicas: int = 1, router: str = "single",
-                 balance_eps: Optional[float] = 0.15):
+                 balance_eps: Optional[float] = 0.15,
+                 types: Optional[Sequence[str]] = None):
         if router not in ROUTERS:
             raise ValueError(f"unknown router {router!r}; one of {ROUTERS}")
         self.model = model
         self.carbon = carbon
         self.balance_eps = balance_eps
+        if types is not None:
+            types = [str(t) for t in types]
+            for t in types:
+                get_replica_type(t)
+            if isinstance(stores, KVStore) and n_replicas != 1 \
+                    and n_replicas != len(types):
+                raise ValueError("n_replicas must match len(types)")
+            n_replicas = len(types)
         if isinstance(stores, KVStore):
             self.shared = True
             self.stores = [stores]
@@ -123,15 +141,34 @@ class ClusterEngine:
             if n_replicas not in (1, len(self.stores)):
                 raise ValueError("n_replicas must match len(stores)")
             self.n_replicas = len(self.stores)
+        if types is not None and len(types) != self.n_replicas:
+            raise ValueError("len(types) must match the replica count")
         if router == "single" and self.n_replicas != 1:
             raise ValueError("router='single' requires n_replicas=1")
         self.router = router
+        self._set_types(types)
         for st in self.stores:      # batched eviction scoring (same victims)
             st.enable_vector_evict()
         self._free = [0.0] * self.n_replicas
         self._ring = HashRing(self.n_replicas) \
             if router == "cache_affinity" else None
         self._rr_next = 0
+
+    def _set_types(self, types: Optional[Sequence[str]]):
+        """Install the per-replica type list and derived capacity arrays.
+        ``_hetero`` is True only for a *mixed* fleet — uniform fleets keep
+        the unscaled code paths (and their bit-exact parity) whenever the
+        uniform scale is 1."""
+        self.types = list(types) if types is not None else None
+        if self.types is None:
+            self._scales = np.ones(self.n_replicas)
+        else:
+            self._scales = np.array(
+                [get_replica_type(t).perf_scale for t in self.types])
+        self._hetero = self.types is not None \
+            and len(set(self.types)) > 1
+        self._uniform_scale = float(self._scales[0]) if not self._hetero \
+            else None
 
     # ------------------------------------------------------------------ #
     @property
@@ -149,11 +186,15 @@ class ClusterEngine:
 
     # ------------------------------------------------------------------ #
     def set_replicas(self, n_replicas: int):
-        """Scale the replica set between simulation windows (hourly plan).
-        Only valid in shared-store mode — partitioned stores would need a
-        KV redistribution pass, which the hourly controller does not model.
-        New replicas join idle; removed replicas' queues are assumed drained
-        (the controller reconfigures at hour boundaries)."""
+        """Scale a homogeneous replica set between simulation windows
+        (hourly plan). Only valid in shared-store mode — partitioned stores
+        would need a KV redistribution pass, which the hourly controller
+        does not model. New replicas join idle; removed replicas' queues
+        are assumed drained (the controller reconfigures at hour
+        boundaries). Typed clusters resize via ``set_fleet`` (a bare count
+        does not say which hardware generation joins or leaves)."""
+        if self.types is not None:
+            raise ValueError("typed cluster: use set_fleet, not set_replicas")
         n_replicas = int(n_replicas)
         if n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
@@ -161,15 +202,42 @@ class ClusterEngine:
             raise ValueError("cannot rescale a partitioned-store cluster")
         if n_replicas == self.n_replicas:
             return
-        if n_replicas > self.n_replicas:
-            self._free.extend([0.0] * (n_replicas - self.n_replicas))
-        else:
-            self._free = sorted(self._free)[:n_replicas]
+        self._resize_free(n_replicas)
         self.n_replicas = n_replicas
+        self._set_types(None)
         if self.router == "single" and n_replicas > 1:
             self.router = "round_robin"
         if self._ring is not None:
             self._ring = HashRing(n_replicas)
+
+    def set_fleet(self, types: Sequence[str]):
+        """Apply an hourly fleet-mix change (shared-store mode only): the
+        new fleet replaces the old one wholesale — replicas keep their
+        backlogs positionally (sorted busiest-last so a shrink drops the
+        longest queues, matching ``set_replicas``), new replicas join
+        idle."""
+        types = [str(t) for t in types]
+        if not types:
+            raise ValueError("fleet must have at least one replica")
+        for t in types:
+            get_replica_type(t)
+        if not self.shared:
+            raise ValueError("cannot rescale a partitioned-store cluster")
+        n_new = len(types)
+        if n_new != self.n_replicas:
+            self._resize_free(n_new)
+            self.n_replicas = n_new
+            if self._ring is not None:
+                self._ring = HashRing(n_new)
+        if self.router == "single" and n_new > 1:
+            self.router = "round_robin"
+        self._set_types(types)
+
+    def _resize_free(self, n_new: int):
+        if n_new > self.n_replicas:
+            self._free.extend([0.0] * (n_new - self.n_replicas))
+        else:
+            self._free = sorted(self._free)[:n_new]
 
     def reset_clock(self):
         self._free = [0.0] * self.n_replicas
@@ -223,7 +291,13 @@ class ClusterEngine:
             assign = self._route_static(requests, n)
             reused = self._account(requests, assign, arrival, ctx, prompt)
             uncached = prompt - reused
-            service = (m.prefill_base_s + uncached / m.prefill_tok_per_s
+            # per-replica capacity: compute scales with the assigned
+            # replica's perf_scale; KV loads stay SSD-bandwidth-bound.
+            # (x / 1.0 is exact, so a uniform reference fleet keeps bit
+            # parity with the untyped engine.)
+            service = ((m.prefill_base_s + uncached / m.prefill_tok_per_s)
+                       / (self._scales[assign] if self.types is not None
+                          else 1.0)
                        + reused * m.kv_bytes_per_token
                        / (m.ssd_read_gbps * 1e9))
             ttft = np.empty(n)
@@ -247,12 +321,20 @@ class ClusterEngine:
 
         lookup_tokens = int(prompt.sum())
         hit_tokens = int(reused.sum())
-        busy_prefill = float(m.prefill_base_s * n
-                             + (uncached / m.prefill_tok_per_s).sum()
-                             + hit_tokens * m.kv_bytes_per_token
-                             / (m.ssd_read_gbps * 1e9))
-        busy_compute = float(m.prefill_base_s * n
-                             + (uncached / m.prefill_tok_per_s).sum())
+        kv_busy = hit_tokens * m.kv_bytes_per_token / (m.ssd_read_gbps * 1e9)
+        if self._hetero:
+            # mixed fleet: compute-busy seconds depend on which replica
+            # served each request
+            compute_s = (m.prefill_base_s + uncached / m.prefill_tok_per_s) \
+                / self._scales[assign]
+            busy_compute = float(compute_s.sum())
+        else:
+            # uniform fleet: scalar aggregate (÷1.0 is exact, preserving
+            # bit parity with the untyped engine at perf_scale 1)
+            busy_compute = float(m.prefill_base_s * n
+                                 + (uncached / m.prefill_tok_per_s).sum()) \
+                / self._uniform_scale
+        busy_prefill = busy_compute + kv_busy
 
         duration = max(finish_max, float(arrival[-1])) - t0
         prefill_util = min(busy_prefill / max(K * duration, 1e-9), 1.0)
@@ -262,10 +344,15 @@ class ClusterEngine:
         span = max(float(arrival[-1]) - t0, 1.0)
         lam = (rate_hint if rate_hint else n / span) / K
         out_mean = float(out.mean())
+        # decode slowdown vs the reference platform: requests split evenly
+        # across replicas, so fleet-average TPOT scales with the mean
+        # inverse perf_scale (×1.0 exact for the reference fleet)
+        dec_slow = float(np.mean(1.0 / self._scales)) if self._hetero \
+            else 1.0 / self._uniform_scale
         tpot = m.decode_base_s
         for _ in range(8):
             batch = np.clip(lam * out_mean * tpot, 1.0, m.max_batch)
-            tpot = m.decode_step_time(batch) \
+            tpot = m.decode_step_time(batch) * dec_slow \
                 * (1.0 + m.decode_interference * prefill_util)
         noise_rng = np.random.default_rng(int(requests[0].rid) + 0x5eed)
         tpots = tpot * noise_rng.uniform(0.92, 1.08, size=n)
@@ -277,7 +364,7 @@ class ClusterEngine:
         util = min(m.gpu_util_prefill * compute_util
                    + m.gpu_util_decode * decode_frac, 1.0)
         energy = self.carbon.energy_kwh(util, duration, ssd_tb=cache_tb,
-                                        n_servers=K)
+                                        n_servers=K, types=self.types)
 
         # per-request write-back (ILP attribution + downstream consumers)
         e_req = energy / n
@@ -292,7 +379,8 @@ class ClusterEngine:
             if n <= 64 else _mean_ci(ci_fn, arrival)
         op = self.carbon.operational_g(energy, ci_avg)
         emb_cache = self.carbon.cache_embodied_g(cache_tb, duration)
-        emb_comp = self.carbon.compute_embodied_g(duration, n_replicas=K)
+        emb_comp = self.carbon.compute_embodied_g(duration, n_replicas=K,
+                                                  types=self.types)
         return SimResult(
             ttft=ttft if record else np.array([]),
             tpot=tpots if record else np.array([]),
@@ -325,11 +413,16 @@ class ClusterEngine:
             return preferred
         assign = np.empty(n, dtype=np.int64)
         counts = [0] * K
-        fair = (1.0 + eps) / K
+        if self._hetero:
+            # mixed fleet: fair share ∝ per-replica capacity, so a slow
+            # replica spills sooner than a fast one
+            tot = float(self._scales.sum())
+            fairs = [(1.0 + eps) * float(s) / tot for s in self._scales]
+        else:
+            fairs = [(1.0 + eps) / K] * K
         for i, k in enumerate(preferred.tolist()):
-            cap = fair * (i + 1) + 1.0
             spill = 0
-            while counts[k] >= cap and spill < K:
+            while counts[k] >= fairs[k] * (i + 1) + 1.0 and spill < K:
                 k = (k + 1) % K
                 spill += 1
             assign[i] = k
@@ -373,7 +466,9 @@ class ClusterEngine:
     def _run_sequential(self, requests: Sequence, arrival: np.ndarray,
                         prompt: np.ndarray):
         """least_loaded: the routing decision needs the evolving backlog, so
-        the queueing recurrence cannot be hoisted out of the loop."""
+        the queueing recurrence cannot be hoisted out of the loop. On a
+        mixed fleet the rule becomes earliest *completion*: a fast replica
+        with a slightly longer backlog can still finish the request first."""
         m = self.model
         K = self.n_replicas
         n = len(requests)
@@ -382,14 +477,26 @@ class ClusterEngine:
         reused = np.empty(n, dtype=np.int64)
         ttft = np.empty(n)
         kv_s_per_tok = m.kv_bytes_per_token / (m.ssd_read_gbps * 1e9)
+        scales = self._scales.tolist()
+        hetero = self._hetero
+        uscale = self._uniform_scale
         for i, r in enumerate(requests):
-            k = min(range(K), key=lambda j: free[j])
+            if hetero:
+                # earliest completion under per-replica speed: compute time
+                # shrinks on a fast replica, KV load does not
+                a = float(arrival[i])
+                comp = m.prefill_base_s \
+                    + (int(prompt[i])) / m.prefill_tok_per_s
+                k = min(range(K),
+                        key=lambda j: max(free[j], a) + comp / scales[j])
+            else:
+                k = min(range(K), key=lambda j: free[j])
             st = self.stores[0] if self.shared else self.stores[k]
             ru = max(st.account(r.context_key, r.context_tokens,
                                 int(prompt[i]), r.arrival, r.turn), 0)
             un = int(prompt[i]) - ru
-            service = (m.prefill_base_s + un / m.prefill_tok_per_s
-                       + ru * kv_s_per_tok)
+            service = (m.prefill_base_s + un / m.prefill_tok_per_s) \
+                / (scales[k] if hetero else uscale) + ru * kv_s_per_tok
             start = max(float(arrival[i]), free[k])
             free[k] = start + service
             assign[i] = k
@@ -408,17 +515,24 @@ def _mean_ci(ci_fn: Callable[[float], float], arrival: np.ndarray) -> float:
 
 def make_cluster(model: ServingModel, carbon: CarbonModel, *,
                  cache_tb: float, policy: Callable, n_replicas: int = 1,
-                 router: Optional[str] = None,
-                 partitioned: bool = False) -> ClusterEngine:
+                 router: Optional[str] = None, partitioned: bool = False,
+                 types: Optional[Sequence[str]] = None,
+                 balance_eps: Optional[float] = 0.15) -> ClusterEngine:
     """Convenience constructor: builds the store(s) for a cluster-total
-    ``cache_tb`` allocation (partitioned mode splits it evenly)."""
+    ``cache_tb`` allocation (partitioned mode splits it evenly). ``types``
+    selects a heterogeneous fleet (one ``ReplicaType`` name per replica,
+    overriding ``n_replicas``)."""
+    if types is not None:
+        n_replicas = len(types)
     if router is None:
         router = "single" if n_replicas == 1 else "cache_affinity"
     if partitioned and n_replicas > 1:
         per = cache_tb * 1e12 / n_replicas
         stores = [KVStore(per, policy, model.kv_bytes_per_token)
                   for _ in range(n_replicas)]
-        return ClusterEngine(model, stores, carbon, router=router)
+        return ClusterEngine(model, stores, carbon, router=router,
+                             types=types, balance_eps=balance_eps)
     store = KVStore(cache_tb * 1e12, policy, model.kv_bytes_per_token)
     return ClusterEngine(model, store, carbon, n_replicas=n_replicas,
-                         router=router)
+                         router=router, types=types,
+                         balance_eps=balance_eps)

@@ -52,6 +52,22 @@ class ServingModel:
     def decode_step_time(self, batch: float) -> float:
         return self.decode_base_s + self.decode_batch_slope * max(batch - 1, 0)
 
+    def scaled(self, perf_scale: float) -> "ServingModel":
+        """Rescale the platform's compute throughput by ``perf_scale``
+        (e.g. a ``ReplicaType``'s scale for per-generation profiling):
+        prefill speeds up, decode iterations shorten; the SSD KV-load
+        bandwidth is storage-bound and stays put. ``scaled(1.0)`` returns
+        ``self`` so the reference path is untouched."""
+        if perf_scale == 1.0:
+            return self
+        import dataclasses
+        return dataclasses.replace(
+            self,
+            prefill_tok_per_s=self.prefill_tok_per_s * perf_scale,
+            prefill_base_s=self.prefill_base_s / perf_scale,
+            decode_base_s=self.decode_base_s / perf_scale,
+            decode_batch_slope=self.decode_batch_slope / perf_scale)
+
 
 def _kv_bpt(arch: str) -> float:
     return float(get_config(arch).kv_bytes_per_token)

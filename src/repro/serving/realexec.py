@@ -1,14 +1,27 @@
 """Real-execution serving: an actual JAX model behind the GreenCache store.
 
 This is the paper's mechanism running for real (at reduced scale on CPU,
-full scale on TPU): KV caches of context prefixes are *stored as arrays* in
-the KVStore payload and *restored on hit*, so a cache hit prefills only the
-uncached suffix (queries at offset ``prefix_len``) — numerically identical
-to full prefill (tests assert this).
+full scale on TPU), where the rest of the repo simulates it analytically:
 
-Recurrent/hybrid families use state-snapshot caching (DESIGN.md
-§Arch-applicability): the fixed-size recurrent state after the prefix is
-stored instead of per-token KV.
+* ``generate(context_key, tokens, num_new)`` looks the context prefix up
+  in the same ``repro.core.kvstore.KVStore`` the simulator uses. The KV
+  caches of context prefixes are *stored as stacked JAX arrays* in the
+  entry payload and *restored on hit*, so a hit prefills only the uncached
+  suffix (flash-attention queries run at offset ``prefix_len`` against the
+  restored keys/values) — numerically identical to full prefill
+  (``tests/test_realexec.py`` asserts logit equality).
+* After prefill the full context+question prefix is (re)inserted, so the
+  next conversation turn reuses it — the suffix-only prefill whose saved
+  compute is the operational-carbon term of the cache/carbon tradeoff.
+* Decode runs step-wise with the standard incremental KV cache and
+  returns per-phase wall times (``prefill_time_s`` / ``decode_time_s``),
+  the real-mode analogue of the simulator's TTFT/TPOT split.
+
+Transformers cache per-token KV; recurrent/hybrid families (RWKV6,
+Griffin/RG-LRU) use state-snapshot caching instead — the fixed-size
+recurrent state after the prefix is stored, since their "KV" does not grow
+with context. Drive it via ``python -m repro.launch.serve --real
+--arch yi-6b`` or the quickstart example.
 """
 from __future__ import annotations
 

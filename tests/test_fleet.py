@@ -1,0 +1,272 @@
+"""Heterogeneous fleets: typed-replica parity with the homogeneous engine,
+typed carbon/energy accounting, fleet parsing, the bounded-load knob, and
+the solver's (cache, fleet-mix) co-decision."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.carbon import (REPLICA_TYPES, CarbonModel, fleet_capacity,
+                               fleet_str, get_replica_type, parse_fleet)
+from repro.core.kvstore import KVStore
+from repro.core.policies import POLICIES
+from repro.core.profiler import Profile, ProfileCell
+from repro.core.solver import (_fleet_cell_metrics, enumerate_fleets,
+                               solve_cluster_schedule)
+from repro.serving.cluster import ClusterEngine, make_cluster
+from repro.serving.perfmodel import SERVING_MODELS, SLO
+from repro.workloads.conversations import ConversationWorkload
+from repro.workloads.traces import make_poisson_arrivals
+
+M = SERVING_MODELS["llama3-70b"]
+CM = CarbonModel()
+
+
+def make_requests(n=8000, rate=3.0, seed=1, load_scale=3.0):
+    wl = ConversationWorkload(seed=seed, load_scale=load_scale)
+    arr = make_poisson_arrivals(np.full(48, rate), seed=seed + 1,
+                                max_requests=n)
+    return [wl.sample(t) for t in arr]
+
+
+def run_cluster(reqs, cache_tb=4.0, warm=3000, **kw):
+    reqs = [copy.copy(r) for r in reqs]
+    store = KVStore(cache_tb * 1e12, POLICIES["lcs_chat"],
+                    M.kv_bytes_per_token)
+    eng = ClusterEngine(M, store, CM, **kw)
+    eng.warm(reqs[:warm])
+    res = eng.run(reqs[warm:], ci_fn=lambda t: 80.0, cache_tb=cache_tb)
+    return res, store, eng
+
+
+# ------------------------------------------------------------------ #
+# registry / parsing
+# ------------------------------------------------------------------ #
+def test_reference_type_is_neutral():
+    """The l40 entry anchors bit-parity: any drift here silently breaks
+    every all-reference-fleet equivalence below."""
+    rt = REPLICA_TYPES["l40"]
+    assert rt.perf_scale == 1.0 and rt.amortized_frac == 0.0
+    assert rt.hw.embodied_compute_kg == CM.hw.embodied_compute_kg
+
+
+def test_parse_and_format_fleet():
+    assert parse_fleet("a100:2,l40:4") == ("a100",) * 2 + ("l40",) * 4
+    assert parse_fleet("h100") == ("h100",)
+    assert fleet_str(["l40", "a100", "l40"]) == "a100:1,l40:2"
+    assert parse_fleet(fleet_str(["h100", "a100"])) == ("a100", "h100")
+    assert fleet_capacity(["l40", "l40"]) == 2.0
+    with pytest.raises(KeyError):
+        parse_fleet("rtx4090:2")
+    with pytest.raises(ValueError):
+        parse_fleet(" , ")
+
+
+def test_enumerate_fleets_bounded():
+    mixes = enumerate_fleets(["a100", "h100"], 3)
+    assert ("a100",) in mixes and ("a100", "h100") in mixes
+    assert all(1 <= len(f) <= 3 for f in mixes)
+    assert len(mixes) == len(set(mixes)) == 2 + 3 + 4
+
+
+# ------------------------------------------------------------------ #
+# typed carbon accounting
+# ------------------------------------------------------------------ #
+def test_typed_embodied_and_energy_match_homogeneous():
+    secs = 3600.0
+    for n in (1, 3, 5):
+        assert CM.compute_embodied_g(secs, types=["l40"] * n) == \
+            CM.compute_embodied_g(secs, n_replicas=n)
+        assert CM.energy_kwh(0.4, secs, ssd_tb=8.0, types=["l40"] * n) == \
+            CM.energy_kwh(0.4, secs, ssd_tb=8.0, n_servers=n)
+
+
+def test_amortized_old_generation_is_cheaper_embodied():
+    """The GreenLLM premise: per unit capacity, the 60 %-amortized a100
+    charges less embodied carbon than the full-charge h100 despite its
+    larger nominal footprint."""
+    secs = 3600.0
+    a100, h100 = get_replica_type("a100"), get_replica_type("h100")
+    assert a100.embodied_g(secs) / a100.perf_scale < \
+        h100.embodied_g(secs) / h100.perf_scale
+    # and vs its own un-amortized self
+    assert a100.embodied_g(secs) < \
+        CarbonModel(hw=a100.hw).compute_embodied_g(secs)
+
+
+# ------------------------------------------------------------------ #
+# typed-fleet parity: all-reference fleets bit-reproduce the untyped engine
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("router,n",
+                         [("single", 1), ("round_robin", 2),
+                          ("round_robin", 4), ("cache_affinity", 3),
+                          ("cache_affinity", 5), ("least_loaded", 3)])
+def test_all_l40_fleet_bit_reproduces_homogeneous(router, n):
+    reqs = make_requests()
+    a, sa, _ = run_cluster(reqs, n_replicas=n, router=router)
+    b, sb, _ = run_cluster(reqs, types=["l40"] * n, router=router)
+    assert np.array_equal(a.ttft, b.ttft)          # exact, not approx
+    assert sa.stats == sb.stats                    # hits AND evictions
+    assert a.energy_kwh == b.energy_kwh
+    assert a.carbon_g == pytest.approx(b.carbon_g, rel=1e-12)
+    assert a.token_hit_rate == b.token_hit_rate
+
+
+def test_uniform_fast_fleet_scales_compute_not_kv():
+    """A uniform h100 fleet speeds up compute 2.4x but KV loads stay
+    SSD-bound, so TTFT improves by less than the perf scale."""
+    reqs = make_requests(rate=2.0, load_scale=2.0)
+    ref, _, _ = run_cluster(reqs, n_replicas=2, router="round_robin")
+    fast, _, _ = run_cluster(reqs, types=["h100"] * 2, router="round_robin")
+    assert fast.ttft.mean() < ref.ttft.mean()
+    scale = get_replica_type("h100").perf_scale
+    assert fast.ttft.mean() > ref.ttft.mean() / (scale * 4)
+    # cache trajectory is timing-independent: hit rate identical
+    assert fast.token_hit_rate == ref.token_hit_rate
+
+
+def test_mixed_fleet_energy_between_homogeneous():
+    reqs = make_requests(n=5000, rate=1.5)
+    lo, _, _ = run_cluster(reqs, warm=2000, types=["l40", "l40"],
+                           router="round_robin")
+    hi, _, _ = run_cluster(reqs, warm=2000, types=["h100", "h100"],
+                           router="round_robin")
+    mix, _, _ = run_cluster(reqs, warm=2000, types=["l40", "h100"],
+                            router="round_robin")
+    # per-type power sums: the mix's draw sits between the homogeneous
+    # fleets' (durations differ slightly; compare average power)
+    p = lambda r: r.energy_kwh / r.duration_s     # noqa: E731
+    assert p(lo) < p(mix) < p(hi)
+
+
+def test_set_fleet_applies_mix_and_guards():
+    store = KVStore(4e12, POLICIES["lcs_chat"], M.kv_bytes_per_token)
+    eng = ClusterEngine(M, store, CM, types=["a100", "h100"],
+                        router="round_robin")
+    assert eng.n_replicas == 2
+    eng.set_fleet(["a100", "a100", "h100"])
+    assert eng.n_replicas == 3 and eng.types == ["a100", "a100", "h100"]
+    with pytest.raises(ValueError):
+        eng.set_replicas(2)                        # typed: must use set_fleet
+    with pytest.raises(ValueError):
+        eng.set_fleet([])
+    with pytest.raises(KeyError):
+        eng.set_fleet(["z9000"])
+    # untyped cluster rejects neither set_replicas nor a fresh fleet
+    eng2 = ClusterEngine(M, KVStore(1e12, POLICIES["lcs_chat"],
+                                    M.kv_bytes_per_token), CM,
+                         n_replicas=2, router="round_robin")
+    eng2.set_fleet(["l40"])
+    assert eng2.n_replicas == 1 and eng2.types == ["l40"]
+
+
+def test_balance_eps_knob_trades_hits_for_balance():
+    """Partitioned affinity: disabling spill (balance_eps=None) keeps every
+    context home (max hits); a tight eps forces spills that lose hits."""
+    n_rep = 4
+    reqs = make_requests(n=12000, rate=1.2 * n_rep, load_scale=n_rep)
+
+    def hit_rate(eps):
+        rs = [copy.copy(r) for r in reqs]
+        eng = make_cluster(M, CM, cache_tb=4.0 * n_rep,
+                           policy=POLICIES["lcs_chat"], n_replicas=n_rep,
+                           router="cache_affinity", partitioned=True,
+                           balance_eps=eps)
+        eng.warm(rs[:6000])
+        res = eng.run(rs[6000:], ci_fn=lambda t: 50.0,
+                      cache_tb=4.0 * n_rep)
+        return res.token_hit_rate
+
+    assert hit_rate(None) >= hit_rate(0.02)
+
+
+# ------------------------------------------------------------------ #
+# solver: (cache, fleet-mix) co-decision
+# ------------------------------------------------------------------ #
+def synth_profile(sizes=(0, 4, 8), rates=(0.5, 1.0, 1.5, 2.0, 3.0, 4.0)):
+    prof = Profile("m", "t", rates=list(rates), sizes=list(sizes))
+    for r in rates:
+        for s in sizes:
+            slo = float(np.clip(1.25 - 0.3 * r + 0.02 * s, 0.0, 1.0))
+            prof.cells[(r, s)] = ProfileCell(
+                rate=r, cache_tb=s, avg_ttft=0.5 + 0.5 * r, p90_ttft=1 + r,
+                avg_tpot=0.05, p90_tpot=0.08, slo_frac=slo,
+                hit_rate=min(0.1 * s, 0.8),
+                energy_per_req_kwh=2e-4 * (1 + 1 / max(r, 0.1)),
+                duration_per_req_s=1.0 / max(r, 0.1), avg_power_w=800.0)
+    return prof
+
+
+def test_solver_picks_mixed_fleet_when_amortization_pays():
+    """At a load needing ~4 capacity units and a tight attainment target
+    (rho=0.98 — no blending cheap saturated hours in), a lone h100 is
+    infeasible and h100x2 over-provisions embodied carbon: the
+    old-generation a100's already-amortized embodied share makes the
+    a100+h100 mix the cheapest feasible option — on clean and dirty
+    grids alike."""
+    prof = synth_profile()
+    slo = SLO(2.5, 0.2, rho=0.9)
+    rho = 0.98
+    mixes = enumerate_fleets(["a100", "h100"], 4)
+    for ci in (20.0, 431.0):
+        res = solve_cluster_schedule(prof, [4.5] * 6, [ci] * 6, slo, CM,
+                                     sizes_tb=[0, 4, 8], fleets=mixes,
+                                     rho=rho)
+        assert res.feasible
+        assert res.fleets is not None and len(res.fleets) == 6
+        # the DP fallback's satisfied-count bucketing can round a hour or
+        # two up to a 1.0-SLO option; the plan's workhorse must still be
+        # the old+new mix
+        mixed = [f for f in res.fleets if set(f) == {"a100", "h100"}]
+        assert len(mixed) >= len(res.fleets) // 2, res.fleets
+        # explicitly cheaper than every feasible homogeneous fleet in the
+        # solver's own option set (predicted carbon at equal SLO)
+        c_mix, f_mix = _fleet_cell_metrics(prof, 4.5, 8, mixed[0], ci, CM)
+        assert f_mix >= rho
+        for n_homo in (1, 2, 3, 4):
+            for t in ("a100", "h100"):
+                c_h, f_h = _fleet_cell_metrics(prof, 4.5, 8, (t,) * n_homo,
+                                               ci, CM)
+                if f_h >= rho:
+                    assert c_mix < c_h, (t, n_homo)
+
+
+def test_solver_mixed_win_requires_amortization():
+    """Zero out the a100's amortized share and the mix loses its edge
+    over the all-new fleet (the embodied discount is the mechanism)."""
+    prof = synth_profile()
+    fleet = ("a100", "h100")
+    c_mix, _ = _fleet_cell_metrics(prof, 4.5, 8, fleet, 20.0, CM)
+    c_new, _ = _fleet_cell_metrics(prof, 4.5, 8, ("h100", "h100"), 20.0, CM)
+    assert c_mix < c_new
+    # rebuild the registry entry without amortization
+    from repro.core import carbon as carbon_mod
+    orig = carbon_mod.REPLICA_TYPES["a100"]
+    try:
+        carbon_mod.REPLICA_TYPES["a100"] = carbon_mod.ReplicaType(
+            "a100", orig.hw, perf_scale=orig.perf_scale, amortized_frac=0.0)
+        c_mix_full, _ = _fleet_cell_metrics(prof, 4.5, 8, fleet, 20.0, CM)
+    finally:
+        carbon_mod.REPLICA_TYPES["a100"] = orig
+    assert c_mix_full > c_mix
+
+
+def test_solver_saturation_penalty_prevents_underprovisioning():
+    """Per-unit rates beyond the profiled envelope must not look healthy:
+    a single a100 at cluster rate 8 is far past any measured cell."""
+    prof = synth_profile()
+    _, f_small = _fleet_cell_metrics(prof, 8.0, 8, ("a100",), 50.0, CM)
+    _, f_big = _fleet_cell_metrics(prof, 8.0, 8, ("h100",) * 3, 50.0, CM)
+    assert f_small < 0.5 < f_big
+
+
+def test_fleet_schedule_tracks_load():
+    prof = synth_profile()
+    slo = SLO(2.5, 0.2, rho=0.9)
+    mixes = enumerate_fleets(["a100", "h100"], 4)
+    rates = [1.0, 1.0, 4.5, 4.5, 1.0, 1.0]
+    res = solve_cluster_schedule(prof, rates, [50.0] * 6, slo, CM,
+                                 sizes_tb=[0, 4, 8], fleets=mixes)
+    caps = [fleet_capacity(f) for f in res.fleets]
+    assert max(caps[2:4]) > min(caps[0], caps[5])  # peak gets more capacity
+    assert res.replicas == [len(f) for f in res.fleets]

@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Docs lint (run by the CI docs job; stdlib only).
+
+Checks:
+  1. every relative markdown link in the repo's *.md files resolves to an
+     existing file/directory (http(s)/mailto links and bare anchors are
+     ignored; `#fragment` suffixes are stripped);
+  2. every `benchmarks/fig*.py` script is listed in
+     docs/reproducing-figures.md (one row per figure script).
+
+Exit code 0 on success, 1 with a per-problem report otherwise.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+# [text](target) — ignore images' leading ! by matching the paren pair only
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules",
+             ".claude"}
+
+
+def md_files():
+    for p in sorted(REPO.rglob("*.md")):
+        if not SKIP_DIRS.intersection(p.relative_to(REPO).parts):
+            yield p
+
+
+def check_links() -> list[str]:
+    problems = []
+    for md in md_files():
+        for target in LINK_RE.findall(md.read_text(encoding="utf-8")):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                problems.append(
+                    f"{md.relative_to(REPO)}: broken link -> {target}")
+    return problems
+
+
+def check_figures_listed() -> list[str]:
+    doc = REPO / "docs" / "reproducing-figures.md"
+    if not doc.exists():
+        return ["docs/reproducing-figures.md is missing"]
+    text = doc.read_text(encoding="utf-8")
+    problems = []
+    for script in sorted((REPO / "benchmarks").glob("fig*.py")):
+        if script.name not in text:
+            problems.append(
+                f"docs/reproducing-figures.md: missing row for "
+                f"benchmarks/{script.name}")
+    return problems
+
+
+def main() -> int:
+    problems = check_links() + check_figures_listed()
+    for p in problems:
+        print(f"FAIL {p}")
+    n_md = len(list(md_files()))
+    if problems:
+        print(f"{len(problems)} problem(s) across {n_md} markdown files")
+        return 1
+    print(f"docs OK: {n_md} markdown files, all relative links resolve, "
+          f"all fig*.py scripts documented")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
