@@ -38,10 +38,11 @@ def _speedup_row(n_requests: int = 24000, warm: int = 12000, reps: int = 3):
 
     m = SERVING_MODELS[MODEL]
     cm = CarbonModel()
+    from repro.workloads import sample_many
     wl = ConversationWorkload(seed=7)
     arr = make_poisson_arrivals(np.full(48, 1.5), seed=8,
                                 max_requests=n_requests)
-    base = [wl.sample(t) for t in arr]
+    base = sample_many(wl, arr)
 
     def run_once(engine_cls, cache_tb=4.0):
         reqs = [copy.copy(r) for r in base]

@@ -11,6 +11,7 @@ from typing import Callable, Dict
 import numpy as np
 
 from repro.core.carbon import CarbonModel
+from repro.core.plan import DEFAULT_BALANCE_EPS, ResourcePlan
 from repro.core.policies import POLICIES
 from repro.core.profiler import Profile, run_profiler
 from repro.serving.cluster import make_cluster
@@ -68,36 +69,56 @@ def get_profile(model_name: str, task: str) -> Profile:
         warmup_prompts=WARMUP[task], policy=t["policy"])
 
 
-def measure_cell(model_name: str, task: str, *, cache_tb: float,
+def measure_cell(model_name: str, task: str, *, cache_tb: float = None,
                  rate: float, ci: float, policy: str | None = None,
                  warm: int | None = None, n_seconds: float = 400.0,
                  seed: int = 1, hw=None, n_replicas: int = 1,
                  router: str | None = None, partitioned: bool = False,
-                 types=None, balance_eps: float | None = 0.15):
+                 types=None,
+                 balance_eps: float | None = DEFAULT_BALANCE_EPS,
+                 plan=None):
     """One steady-state measurement (used by Figs 3, 5-8, 15, 19, 20).
-    ``n_replicas``/``router``/``partitioned`` select a multi-replica cluster
-    (``cache_tb`` stays the cluster-total allocation; ``rate`` the cluster
-    arrival rate). ``types`` selects a heterogeneous fleet — one
-    ``ReplicaType`` name per replica, overriding ``n_replicas`` — and
-    ``balance_eps`` tunes (or, with None, disables) the cache_affinity
-    router's bounded-load spill."""
+    ``plan`` (a ``ResourcePlan`` or plan string, carrying a concrete
+    cache size) is the preferred cluster spelling — a disaggregated plan
+    measures a prefill/decode pool pair. The remaining kwargs are the
+    pre-plan spelling: ``n_replicas``/``router``/``partitioned`` select a
+    multi-replica cluster (``cache_tb`` stays the cluster-total
+    allocation; ``rate`` the cluster arrival rate), ``types`` a
+    heterogeneous fleet, ``balance_eps`` the cache_affinity router's
+    bounded-load spill (None disables it)."""
     from repro.core.carbon import fleet_capacity
+    from repro.workloads import sample_many
     m = SERVING_MODELS[model_name]
     carbon = CarbonModel(hw=hw) if hw is not None else CARBON
     t = TASKS[task]
     policy = policy or t["policy"]
-    eng = make_cluster(m, carbon, cache_tb=cache_tb,
-                       policy=POLICIES[policy], n_replicas=n_replicas,
-                       router=router, partitioned=partitioned,
-                       types=types, balance_eps=balance_eps)
-    scale = fleet_capacity(types) if types is not None \
-        else max(float(n_replicas), 1.0)
+    if isinstance(plan, str):
+        plan = ResourcePlan.parse(plan)
+    if plan is not None:
+        if (cache_tb, n_replicas, router, partitioned, types,
+                balance_eps) != (None, 1, None, False, None,
+                                 DEFAULT_BALANCE_EPS):
+            raise ValueError("pass plan= or the legacy cluster kwargs, "
+                             "not both")
+        cache_tb = plan.cache_tb
+        # the workload widens with the arrival-carrying (prefill)
+        # capacity — a disaggregated plan's decode pool adds token
+        # throughput, not request admission (same rule as serve.py)
+        scale = plan.prefill.capacity
+        eng = make_cluster(m, carbon, policy=POLICIES[policy], plan=plan)
+    else:
+        scale = fleet_capacity(types) if types is not None \
+            else max(float(n_replicas), 1.0)
+        eng = make_cluster(m, carbon, cache_tb=cache_tb,
+                           policy=POLICIES[policy], n_replicas=n_replicas,
+                           router=router, partitioned=partitioned,
+                           types=types, balance_eps=balance_eps)
     wl = t["factory"](seed, scale=max(scale, 1.0))
     warm = WARMUP[task] if warm is None else warm
     n_meas = max(int(rate * n_seconds), 150)
     arr = make_poisson_arrivals(np.full(96, rate), seed=seed + 1,
                                 max_requests=warm + n_meas)
-    reqs = [wl.sample(tt) for tt in arr]
+    reqs = sample_many(wl, arr)
     eng.warm(reqs[:warm])
     for store in eng.stores:
         store.stats.lookups = store.stats.hits = 0

@@ -24,18 +24,21 @@ CLUSTER_SCALE = 3.0
 
 def run_one(model_name: str, task: str, grid: str, mode: str, seed=3,
             n_replicas=1, router=None):
+    from repro.core.plan import ResourcePlan, normalize_replicas
+
     m = SERVING_MODELS[model_name]
     prof = get_profile(model_name, task)
     peak = RATE_GRID[(model_name, task)][-1]
-    scale = float(max(n_replicas) if isinstance(n_replicas, list)
-                  else n_replicas)
+    counts = normalize_replicas(n_replicas)
+    scale = float(max(counts))
     rates = azure_rate_trace(peak * scale, seed=seed)
     cis = ci_trace(grid, seed=seed + 1)
     ctl = GreenCacheController(
         m, prof, CARBON, task_name_for_slo(task), mode=mode,
         policy=TASKS[task]["policy"], warm_requests=WARMUP[task],
         max_requests_per_hour=int(1500 * scale),
-        n_replicas=n_replicas, router=router)
+        plans=[ResourcePlan.single(None, n_replicas=k, router=router)
+               for k in counts])
     res = ctl.run_day(lambda s: TASKS[task]["factory"](s, scale=scale),
                       rates, cis)
     return res

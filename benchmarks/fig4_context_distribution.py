@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.workloads import sample_many
 from repro.workloads.conversations import ConversationWorkload
 from repro.workloads.documents import DocumentWorkload
 
@@ -13,7 +14,7 @@ from benchmarks.common import save_result
 
 def run():
     wl = ConversationWorkload(seed=0)
-    reqs = [wl.sample(float(i)) for i in range(12000)]
+    reqs = sample_many(wl, np.arange(12000, dtype=float))
     ctx = np.array([r.context_tokens for r in reqs])
     frac_1k = float((ctx > 1000).mean())
 

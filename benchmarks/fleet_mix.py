@@ -75,9 +75,13 @@ def _day(grid: str, fleets, seed: int = 11):
     carbon = CarbonModel()
     scale = fleet_capacity(HOMO_NEW)          # same stream for every policy
     wf = lambda s: TASKS[TASK]["factory"](s, scale=scale)   # noqa: E731
+    from repro.core.plan import ResourcePlan
+    if fleets and isinstance(fleets[0], str):
+        fleets = [fleets]
     ctl = GreenCacheController(
         model, prof, carbon, TASK, mode="greencache",
-        policy=TASKS[TASK]["policy"], fleets=fleets,
+        policy=TASKS[TASK]["policy"],
+        plans=[ResourcePlan.single(None, fleet=tuple(f)) for f in fleets],
         warm_requests=8000, seed=seed, max_requests_per_hour=900,
         # the scale-matched profile is already conservative about shared-
         # cache hit rates (a lone server at rate/cap sees the working set

@@ -30,6 +30,7 @@ MODULES = [
     "fig20_ssd_embodied",
     "cluster_scaling",
     "fleet_mix",
+    "disagg",
     "roofline_report",
 ]
 

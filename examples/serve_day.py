@@ -16,21 +16,19 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--grid", default="FR")
     ap.add_argument("--task", default="conversation")
-    ap.add_argument("--replicas", type=int, nargs="+", default=[1],
-                    help="e.g. --replicas 1 2 3 4 for hourly cluster "
-                         "co-decision with cache-affinity routing")
-    ap.add_argument("--fleet", nargs="+", default=None,
-                    help="heterogeneous mix spec(s) like a100:2,l40:4; "
-                         "several specs let the solver pick the mix hourly")
+    ap.add_argument("--plan", nargs="+", default=None,
+                    help="resource plan spec(s), e.g. "
+                         "'cache=auto fleet=l40:2' or 'cache=auto "
+                         "prefill=h100:1 decode=a100:2'; several specs "
+                         "let the solver co-decide the plan hourly")
     a = ap.parse_args()
     results = {}
     for mode in ["none", "full", "greencache"]:
         print(f"\n### mode={mode}")
         argv = ["--model", "llama3-70b", "--task", a.task, "--grid", a.grid,
-                "--mode", mode, "--warmup", "10000",
-                "--replicas", *[str(k) for k in a.replicas]]
-        if a.fleet:
-            argv += ["--fleet", *a.fleet]
+                "--mode", mode, "--warmup", "10000"]
+        if a.plan:
+            argv += ["--plan", *a.plan]
         results[mode] = serve_main(argv)
     gc, fc = results["greencache"], results["full"]
     red = 1 - gc.carbon_per_request_g / fc.carbon_per_request_g

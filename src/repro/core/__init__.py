@@ -3,7 +3,9 @@ resource management (carbon model, cache store + LCS policy, profiler,
 predictors, ILP solver, controller)."""
 from repro.core.carbon import CarbonModel, GRID_CI, HardwareSpec
 from repro.core.kvstore import CacheEntry, KVStore
+from repro.core.plan import PoolSpec, ResourcePlan, enumerate_plans
 from repro.core.policies import POLICIES, lcs_score
 
 __all__ = ["CarbonModel", "HardwareSpec", "GRID_CI", "KVStore", "CacheEntry",
-           "POLICIES", "lcs_score"]
+           "POLICIES", "lcs_score", "ResourcePlan", "PoolSpec",
+           "enumerate_plans"]

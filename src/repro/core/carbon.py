@@ -209,6 +209,41 @@ class CarbonModel:
                 + self.cache_embodied_g(alloc_tb, seconds)
                 + self.compute_embodied_g(seconds, n_replicas, types=types))
 
+    # ---- plan pricing (repro.core.plan.ResourcePlan) ----
+    def plan_embodied_g(self, plan, seconds: float) -> float:
+        """Embodied carbon of a whole ``ResourcePlan`` over ``seconds``:
+        the cache allocation plus every pool's typed compute fleet."""
+        cache_tb = plan.cache_tb or 0.0
+        return self.cache_embodied_g(cache_tb, seconds) \
+            + self.compute_embodied_g(seconds, types=plan.all_types)
+
+    def plan_energy_kwh(self, plan, gpu_util, seconds: float,
+                        pool_power_frac: Optional[Dict[str,
+                                                       float]] = None
+                        ) -> float:
+        """Energy of a whole ``ResourcePlan`` over ``seconds``.
+
+        ``gpu_util`` is either a scalar (applied to every pool) or a
+        ``{role: util}`` mapping — disaggregated pools run at very
+        different operating points (prefill compute-bound, decode
+        memory-bound), so per-pool utilizations are the accurate call.
+        ``pool_power_frac`` scales a pool's whole-server draw (the
+        decode-pool power cap: memory-bound decode tolerates reduced
+        clocks). The SSD allocation is cluster-wide and counted once."""
+        cache_tb = plan.cache_tb or 0.0
+        if not isinstance(gpu_util, dict):
+            if pool_power_frac:        # apply caps via the per-pool path
+                gpu_util = {p.role: float(gpu_util) for p in plan.pools}
+            else:
+                return self.energy_kwh(gpu_util, seconds, ssd_tb=cache_tb,
+                                       types=plan.all_types)
+        total = self.energy_kwh(0.0, seconds, ssd_tb=cache_tb, types=[])
+        for pool in plan.pools:
+            frac = (pool_power_frac or {}).get(pool.role, 1.0)
+            total += frac * self.energy_kwh(float(gpu_util[pool.role]),
+                                            seconds, types=pool.fleet)
+        return total
+
     # ---- power → energy helper ----
     def energy_kwh(self, gpu_util: float, seconds: float,
                    ssd_tb: float = 0.0, n_servers: int = 1,

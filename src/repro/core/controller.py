@@ -2,9 +2,10 @@
 
 Each simulated hour the controller (1) refreshes the load and
 carbon-intensity forecasts, (2) re-solves the multiple-choice knapsack
-over the remaining horizon for the cache size — and, in cluster mode, the
-replica count or heterogeneous fleet mix — (3) applies the first decision
-(``KVStore.resize`` + ``ClusterEngine.set_replicas``/``set_fleet``), and
+over the remaining horizon for the hour's ``ResourcePlan`` — cache size
+plus, in cluster mode, the replica fleet (single fused pool) or the
+prefill/decode pool pair (disaggregated) — (3) applies the first
+decision through ``ClusterEngine.apply``/``DisaggEngine.apply``, and
 (4) simulates the hour of traffic against the live cache, recording
 carbon, latency percentiles, SLO attainment and hit rate per hour.
 
@@ -13,30 +14,35 @@ Comparison points (paper §6.1): No-Cache, Full-Cache, GreenCache
 original LRU replacement policy; "oracle" feeds ground-truth rate/CI to
 the solver to isolate predictor error).
 
-Fleet mode: pass ``fleets=[...]`` — a single mix (list of
-``ReplicaType`` names) pins the fleet; a list of mixes (e.g. from
-``repro.core.solver.enumerate_fleets``) lets the solver co-decide
-``(cache_tb, fleet)`` hourly, trading new-generation efficiency against
-old-generation already-amortized embodied carbon.
+Plan mode: pass ``plans=`` — a single ``ResourcePlan`` (or plan string)
+pins the pool shape and the solver sizes only the cache; a list of
+candidate plans lets it co-decide the whole plan hourly. Candidates must
+be all single-pool or all disaggregated (a live cluster cannot morph
+between the two topologies mid-day). The pre-plan ``n_replicas=`` /
+``fleets=`` kwargs remain as deprecated shims that build the equivalent
+candidates (and produce identical results).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.carbon import (CarbonModel, fleet_capacity, fleet_str,
                                parse_fleet)
 from repro.core.kvstore import KVStore
+from repro.core.plan import ResourcePlan
 from repro.core.policies import POLICIES
 from repro.core.predictors import CIPredictor, LoadPredictor
 from repro.core.profiler import Profile, _slo_for
 from repro.core.solver import (SolveResult, solve_cache_schedule,
                                solve_cluster_schedule)
-from repro.serving.cluster import ClusterEngine
+from repro.serving.cluster import ClusterEngine, DisaggEngine
 from repro.serving.engine import ServingEngine, SimResult
 from repro.serving.perfmodel import ServingModel
+from repro.workloads import sample_many
 from repro.workloads.traces import make_poisson_arrivals
 
 
@@ -60,6 +66,7 @@ class HourRecord:
     pred_ci: float = 0.0
     n_replicas: int = 1
     fleet: str = ""                   # compact mix, e.g. "a100:2,l40:4"
+    plan: str = ""                    # full applied ResourcePlan string
 
 
 @dataclass
@@ -92,27 +99,46 @@ class RunResult:
 
     @property
     def avg_fleet_capacity(self) -> float:
-        """Mean fleet throughput in reference-server units (fleet mode;
+        """Mean fleet throughput in reference-server units (all pools;
         homogeneous hours count their replica number)."""
         return float(np.mean([fleet_capacity(parse_fleet(h.fleet))
                               if h.fleet else float(h.n_replicas)
                               for h in self.hours]))
 
 
+_EPS_UNSET = object()       # distinguishes an explicit balance_eps kwarg
+
+
+def _coerce_plans(plans) -> List[ResourcePlan]:
+    if isinstance(plans, (str, ResourcePlan)):
+        plans = [plans]
+    out = [ResourcePlan.parse(p) if isinstance(p, str) else p
+           for p in plans]
+    if not out:
+        raise ValueError("plans must name at least one candidate")
+    if len({p.is_disaggregated for p in out}) > 1:
+        raise ValueError("candidate plans must be all single-pool or all "
+                         "disaggregated (the cluster topology is fixed "
+                         "for the day)")
+    return out
+
+
 class GreenCacheController:
     """mode: "greencache" (predictive ILP sizing), "full" (max cache),
     "none" (no cache), "oracle" (ILP with groundtruth rate/CI).
 
-    ``n_replicas``: an int pins the prefill replica count; a sequence of
-    candidate counts lets the solver co-decide (cache_tb, n_replicas) per
-    hour in "greencache"/"oracle" modes (fixed modes use the largest
-    candidate). ``fleets``: a single heterogeneous mix (list of
-    ``ReplicaType`` names) pins the fleet; a list of mixes lets the solver
-    co-decide (cache_tb, fleet) instead — overrides ``n_replicas``.
-    ``router`` defaults to "single" for one replica and "cache_affinity"
-    otherwise. ``balance_eps`` is the bounded-load spill factor of the
-    cache_affinity router (None disables spill: pure affinity, best hit
-    rate, worst p90 TTFT under skew). ``engine="legacy"`` keeps the seed
+    ``plans``: the resource-plan candidate set (see the module
+    docstring). ``n_replicas``/``fleets`` are the deprecated pre-plan
+    spellings. ``router`` defaults to "single" for one replica and
+    "cache_affinity" otherwise (a default for candidates whose pools
+    leave it unset). ``balance_eps`` is the bounded-load spill factor of
+    the cache_affinity router (None disables spill: pure affinity, best
+    hit rate, worst p90 TTFT under skew); passing it explicitly
+    overrides the candidates' pool value, otherwise the plans' value is
+    adopted.
+    ``type_profiles`` (``{replica type: Profile}``) feeds measured
+    per-generation profiles into the fleet solver instead of the
+    reference-profile rescale. ``engine="legacy"`` keeps the seed
     single-server ``ServingEngine`` (parity/debugging only)."""
 
     def __init__(self, model: ServingModel, profile: Profile,
@@ -123,8 +149,12 @@ class GreenCacheController:
                  warm_requests: int = 20000, seed: int = 0,
                  max_requests_per_hour: int = 1200,
                  rho_margin: float = 0.04,
-                 n_replicas=1, router: Optional[str] = None,
-                 fleets=None, balance_eps: Optional[float] = 0.15,
+                 plans: Union[ResourcePlan, str,
+                              Sequence[Union[ResourcePlan, str]],
+                              None] = None,
+                 n_replicas=None, router: Optional[str] = None,
+                 fleets=None, balance_eps=_EPS_UNSET,
+                 type_profiles: Optional[Dict[str, Profile]] = None,
                  engine: str = "cluster"):
         self.model = model
         self.profile = profile
@@ -140,29 +170,98 @@ class GreenCacheController:
         self.resize_interval_h = resize_interval_h
         self.warm_requests = warm_requests
         self.seed = seed
-        self.balance_eps = balance_eps
+        eps_explicit = balance_eps is not _EPS_UNSET
+        self.balance_eps = balance_eps if eps_explicit else 0.15
+        self.type_profiles = type_profiles
         self.slo = _slo_for(model.name, task)
-        if fleets is not None:
+
+        if plans is not None and (n_replicas is not None
+                                  or fleets is not None):
+            raise ValueError("pass plans= or the legacy "
+                             "n_replicas=/fleets= kwargs, not both")
+        if plans is not None:
+            self.plan_choices = _coerce_plans(plans)
+        elif fleets is not None:
+            warnings.warn("GreenCacheController(fleets=...) is deprecated;"
+                          " pass plans=[ResourcePlan.single(fleet=...)]",
+                          DeprecationWarning, stacklevel=2)
             if fleets and isinstance(fleets[0], str):
                 fleets = [fleets]                  # single pinned mix
-            self.fleet_choices = [tuple(f) for f in fleets]
-            if not self.fleet_choices:
-                raise ValueError("fleets must name at least one mix")
-            self.replica_choices = sorted({len(f)
-                                           for f in self.fleet_choices})
+            self.plan_choices = _coerce_plans(
+                [ResourcePlan.single(None, fleet=tuple(f), router=router,
+                                     balance_eps=self.balance_eps)
+                 for f in fleets])
         else:
-            self.fleet_choices = None
-            self.replica_choices = sorted(set(int(k) for k in n_replicas)) \
-                if isinstance(n_replicas, (list, tuple)) else \
-                [int(n_replicas)]
-        self.router = router if router is not None else \
-            ("single" if max(self.replica_choices) == 1
-             and self.fleet_choices is None else "cache_affinity")
+            if n_replicas is not None:
+                warnings.warn("GreenCacheController(n_replicas=...) is "
+                              "deprecated; pass plans=[ResourcePlan"
+                              ".single(n_replicas=...)]",
+                              DeprecationWarning, stacklevel=2)
+            from repro.core.plan import normalize_replicas
+            self.plan_choices = _coerce_plans(
+                [ResourcePlan.single(None, n_replicas=k, router=router,
+                                     balance_eps=self.balance_eps)
+                 for k in normalize_replicas(n_replicas)])
+
+        self.disagg = self.plan_choices[0].is_disaggregated
+        # homogeneous reference-fleet candidates keep the seed numeric
+        # path (plain cache knapsack / replica co-decision): bit-stable
+        # with the pre-plan controller
+        self.homo_ref = not self.disagg and all(
+            set(p.serve.fleet) == {"l40"} for p in self.plan_choices)
+        self.replica_choices = sorted({p.prefill.n_replicas
+                                       for p in self.plan_choices})
+        lead = self.plan_choices[0].prefill
+        for p in self.plan_choices:
+            q = p.prefill
+            if (q.router, q.balance_eps, q.partitioned) != \
+                    (lead.router, lead.balance_eps, lead.partitioned):
+                raise ValueError("candidate plans must share router/"
+                                 "balance_eps/partitioning (only fleets "
+                                 "and cache size change hourly)")
+        if lead.partitioned:
+            raise ValueError("run_day needs a shared store (partitioned "
+                             "pools cannot re-shard at hour boundaries)")
+        if lead.router is not None:
+            if router is not None and router != lead.router:
+                raise ValueError(f"router={router!r} conflicts with the "
+                                 f"candidate plans' router "
+                                 f"{lead.router!r}")
+            self.router = lead.router
+        elif router is not None:
+            self.router = router
+        else:
+            self.router = "single" \
+                if max(self.replica_choices) == 1 \
+                and len(self.plan_choices) == 1 and self.homo_ref \
+                else "cache_affinity"
+        # spill-factor precedence: an explicit balance_eps kwarg wins
+        # (and is pushed into every applied plan via _resolved);
+        # otherwise the candidate plans' pool value is adopted
+        if not eps_explicit and plans is not None:
+            self.balance_eps = lead.resolved_eps
         self.engine_kind = engine
         if engine == "legacy" and (self.replica_choices != [1]
-                                   or self.fleet_choices is not None):
+                                   or not self.homo_ref):
             raise ValueError("engine='legacy' supports a single untyped "
                              "replica only")
+
+    def _resolved(self, plan: ResourcePlan,
+                  cache_tb: float) -> ResourcePlan:
+        """Pin a candidate to the hour: concrete cache size, the
+        controller-level router default for pools that left it unset,
+        and the controller's resolved spill factor (an explicit
+        ``balance_eps`` kwarg overrides the candidates' pool value)."""
+        pools = []
+        for pool in plan.pools:
+            if pool.role == "decode":
+                pools.append(pool)
+                continue
+            pools.append(type(pool)(pool.role, pool.fleet,
+                                    router=pool.router or self.router,
+                                    balance_eps=self.balance_eps,
+                                    partitioned=pool.partitioned))
+        return ResourcePlan(float(cache_tb), tuple(pools))
 
     # ------------------------------------------------------------------ #
     def run_day(self, workload_factory: Callable, rate_trace: np.ndarray,
@@ -190,38 +289,39 @@ class GreenCacheController:
         max_tb = self.model.max_cache_tb
         store = KVStore(max_tb * 1e12, POLICIES[self.policy],
                         self.model.kv_bytes_per_token)
-        fleet_mode = self.fleet_choices is not None
-        if fleet_mode:
-            # fixed modes (and the pre-solve warm window) run the
-            # largest-capacity candidate mix
-            fixed_fleet = max(self.fleet_choices, key=fleet_capacity)
-            fixed_n = len(fixed_fleet)
-        else:
-            fixed_fleet = None
-            fixed_n = max(self.replica_choices)
+        # fixed modes (and the pre-solve warm window) run the
+        # largest-capacity candidate plan
+        fixed_plan = max(self.plan_choices, key=lambda p: p.capacity)
+        fixed_n = fixed_plan.prefill.n_replicas
+        co_decide = len(self.plan_choices) > 1
         if self.engine_kind == "legacy":
-            engine = ServingEngine(self.model, store, self.carbon)
+            engine: Union[ServingEngine, ClusterEngine] = \
+                ServingEngine(self.model, store, self.carbon)
+        elif self.disagg:
+            engine = DisaggEngine(self.model, store, self.carbon,
+                                  self._resolved(fixed_plan, max_tb))
         else:
-            engine = ClusterEngine(self.model, store, self.carbon,
-                                   n_replicas=fixed_n, router=self.router,
-                                   types=fixed_fleet,
-                                   balance_eps=self.balance_eps)
-        co_decide = not fleet_mode and len(self.replica_choices) > 1
+            # homogeneous reference candidates start untyped (the seed
+            # configuration); the first apply() types them as all-l40,
+            # which is bit-identical (tested)
+            engine = ClusterEngine(
+                self.model, store, self.carbon, n_replicas=fixed_n,
+                router=self.router,
+                types=None if self.homo_ref else fixed_plan.serve.fleet,
+                balance_eps=self.balance_eps)
         wl = workload_factory(self.seed)
 
         # warm the cache at full size, then resize to the first decision
         arr0 = make_poisson_arrivals(np.full(6, max(rate_trace.mean(), 0.2)),
                                      seed=self.seed + 5,
                                      max_requests=self.warm_requests)
-        engine.warm([wl.sample(t - arr0[-1] - 1.0) for t in arr0])
+        engine.warm(sample_many(wl, arr0 - arr0[-1] - 1.0))
 
         hours: List[HourRecord] = []
         current_tb = max_tb if self.mode != "none" else 0.0
-        current_n = fixed_n
-        current_fleet = fixed_fleet
+        current_shape = fixed_plan
         pending_schedule: List[float] = []
-        pending_replicas: List[int] = []
-        pending_fleets: List[tuple] = []
+        pending_plans: List[ResourcePlan] = []
 
         for h in range(H):
             t_solve = 0.0
@@ -235,25 +335,9 @@ class GreenCacheController:
                     rates = list(load_pred.predict(self.horizon))
                     cis = list(ci_pred.predict(self.horizon))
                 rho = min(self.slo.rho + self.rho_margin, 0.995)
-                if fleet_mode:
-                    # even a pinned single mix sizes its cache through the
-                    # capacity-normalized fleet metrics (the raw cluster
-                    # rate would be far outside the per-server profile)
-                    res = solve_cluster_schedule(
-                        self.profile, rates, cis, self.slo, self.carbon,
-                        sizes_tb=self.sizes, fleets=self.fleet_choices,
-                        rho=rho)
-                    pending_fleets = list(res.fleets)
-                elif co_decide:
-                    res = solve_cluster_schedule(
-                        self.profile, rates, cis, self.slo, self.carbon,
-                        sizes_tb=self.sizes, replicas=self.replica_choices,
-                        rho=rho)
-                    pending_replicas = list(res.replicas)
-                else:
-                    res = solve_cache_schedule(
-                        self.profile, rates, cis, self.slo, self.carbon,
-                        sizes_tb=self.sizes, rho=rho)
+                res = self._solve(rates, cis, rho, co_decide)
+                pending_plans = list(res.plans) if res.plans is not None \
+                    else []
                 pending_schedule = list(res.sizes_tb)
                 t_solve = res.solve_time_s
                 pred_rate, pred_ci = rates[0], cis[0]
@@ -267,30 +351,23 @@ class GreenCacheController:
                 k = min(self.resize_interval_h, len(pending_schedule))
                 current_tb = max(pending_schedule[:k])
                 pending_schedule = pending_schedule[1:]
-                if pending_replicas:
-                    current_n = max(pending_replicas[:k])
-                    pending_replicas = pending_replicas[1:]
-                if pending_fleets:
-                    current_fleet = max(pending_fleets[:k],
-                                        key=fleet_capacity)
-                    current_n = len(current_fleet)
-                    pending_fleets = pending_fleets[1:]
+                if pending_plans:
+                    current_shape = max(pending_plans[:k],
+                                        key=lambda p: p.capacity)
+                    pending_plans = pending_plans[1:]
 
+            current_plan = self._resolved(current_shape, current_tb)
             if isinstance(engine, ClusterEngine):
-                if current_fleet is not None \
-                        and list(current_fleet) != engine.types:
-                    engine.set_fleet(current_fleet)
-                elif current_fleet is None \
-                        and current_n != engine.n_replicas:
-                    engine.set_replicas(current_n)
-            store.resize(current_tb * 1e12, now=h * 3600.0)
+                engine.apply(current_plan, now=h * 3600.0)
+            else:
+                store.resize(current_tb * 1e12, now=h * 3600.0)
 
             # simulate this hour
             lam = float(rate_trace[h])
             arr = make_poisson_arrivals(
                 np.array([lam]), seed=self.seed + h,
                 max_requests=self.max_requests_per_hour)
-            reqs = [wl.sample(h * 3600.0 + t) for t in arr]
+            reqs = sample_many(wl, h * 3600.0 + arr)
             ci_now = float(ci_trace[h])
             res = engine.run(reqs, ci_fn=lambda t: ci_now,
                              cache_tb=current_tb, rate_hint=lam)
@@ -303,11 +380,42 @@ class GreenCacheController:
                 slo_frac=res.slo_attainment(self.slo),
                 hit_rate=res.token_hit_rate, num_requests=res.num_requests,
                 solve_time_s=t_solve, pred_rate=pred_rate, pred_ci=pred_ci,
-                n_replicas=current_n,
-                fleet=fleet_str(current_fleet) if current_fleet else ""))
+                n_replicas=current_plan.n_replicas,
+                fleet="" if self.homo_ref
+                else fleet_str(current_plan.all_types),
+                plan=str(current_plan)))
 
             # online predictor updates (paper §5.3)
             load_pred.update(lam)
             ci_pred.update(ci_now)
 
         return RunResult(self.mode, hours)
+
+    # ------------------------------------------------------------------ #
+    def _solve(self, rates: Sequence[float], cis: Sequence[float],
+               rho: float, co_decide: bool) -> SolveResult:
+        """One knapsack solve over the remaining horizon, in the numeric
+        mode the candidate set implies: the homogeneous-reference paths
+        reproduce the pre-plan controller bit-for-bit; typed single-pool
+        candidates size through the capacity-normalized fleet metrics
+        (even a pinned mix — the raw cluster rate would be far outside
+        the per-server profile); disaggregated candidates search
+        (cache, prefill fleet, decode fleet)."""
+        if self.disagg or not self.homo_ref:
+            return solve_cluster_schedule(
+                self.profile, rates, cis, self.slo, self.carbon,
+                sizes_tb=self.sizes, plans=self.plan_choices,
+                type_profiles=self.type_profiles, model=self.model,
+                rho=rho)
+        if co_decide:
+            return solve_cluster_schedule(
+                self.profile, rates, cis, self.slo, self.carbon,
+                sizes_tb=self.sizes, replicas=self.replica_choices,
+                rho=rho)
+        res = solve_cache_schedule(
+            self.profile, rates, cis, self.slo, self.carbon,
+            sizes_tb=self.sizes, rho=rho)
+        if res.plans is None:
+            res.plans = [self.plan_choices[0].with_cache(s)
+                         for s in res.sizes_tb]
+        return res

@@ -1,0 +1,377 @@
+"""First-class resource plans: the single currency of the hourly loop.
+
+The paper's core decision is "derive a resource allocation plan per
+hour".  Historically that plan was threaded through the stack as parallel
+lists and ad-hoc kwargs (``cache_tb``, ``n_replicas``, ``fleets``,
+``router``, ``balance_eps``, ``partitioned``); this module reifies it:
+
+* ``PoolSpec`` — one serving pool: a *role* (``serve`` for a fused
+  cluster, ``prefill``/``decode`` for a disaggregated one), a fleet of
+  ``ReplicaType`` names, and the pool's routing knobs.
+* ``ResourcePlan`` — a frozen value object: the cache allocation plus one
+  or more pools.  ``cache_tb=None`` means "let the solver size it".
+
+Every layer speaks plans: ``solve_cluster_schedule`` returns one per
+hour, ``ClusterEngine.apply``/``DisaggEngine.apply`` reconfigure a live
+cluster from one, ``CarbonModel.plan_energy_kwh``/``plan_embodied_g``
+price one, and ``repro.launch.serve --plan`` parses one from the CLI.
+
+String grammar (``ResourcePlan.parse`` / ``str(plan)`` round-trip)::
+
+    cache=4tb fleet=a100:2,l40:4 [router=cache_affinity] [eps=0.15]
+        [partitioned]
+    cache=auto prefill=h100:2 decode=a100:3 [router=...] [eps=...]
+
+Fleet specs reuse ``repro.core.carbon.parse_fleet`` (``"a100:2,l40:4"``).
+JSON round-trip via ``to_json``/``from_json``.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.carbon import (fleet_capacity, fleet_str, get_replica_type,
+                               parse_fleet)
+
+ROLES = ("serve", "prefill", "decode")
+DEFAULT_BALANCE_EPS = 0.15
+
+
+class _UnsetEps:
+    """Sentinel: the pool did not specify a spill factor (``None`` is a
+    meaningful value — spill disabled — so it cannot double as unset).
+    ``ClusterEngine.apply`` leaves the engine's eps untouched for unset
+    pools; resolution to the default happens via ``PoolSpec
+    .resolved_eps``."""
+
+    def __repr__(self):
+        return "UNSET_EPS"
+
+
+UNSET_EPS = _UnsetEps()
+
+
+def normalize_replicas(value: Union[int, Sequence[int], None],
+                       default: int = 1) -> List[int]:
+    """Canonicalize the historically sloppy ``n_replicas`` knob — an int,
+    a list of candidate counts (``argparse nargs="+"``), or None — into a
+    sorted, de-duplicated candidate list.  The one place the
+    ``serve.py --replicas`` int-vs-``list[int]`` inconsistency is
+    resolved."""
+    if value is None:
+        value = [default]
+    if isinstance(value, (int, float)):
+        value = [value]
+    counts = sorted({int(k) for k in value})
+    if not counts or counts[0] < 1:
+        raise ValueError(f"replica counts must be >= 1, got {value!r}")
+    return counts
+
+
+def _norm_fleet(fleet: Union[str, Sequence[str]]) -> Tuple[str, ...]:
+    if isinstance(fleet, str):
+        return parse_fleet(fleet)
+    out = tuple(str(t) for t in fleet)
+    if not out:
+        raise ValueError("fleet must have at least one replica")
+    for t in out:
+        get_replica_type(t)
+    return out
+
+
+@dataclass(frozen=True)
+class PoolSpec:
+    """One pool of replicas inside a plan.
+
+    ``role``: ``"serve"`` (fused prefill+decode, the classic cluster),
+    ``"prefill"`` or ``"decode"`` (disaggregated pools).  ``router``,
+    ``balance_eps`` and ``partitioned`` only shape queueing/caching for
+    the pool that owns the KV store (``serve``/``prefill``); the decode
+    pool splits load analytically.  ``router=None`` means auto (single
+    for one replica, cache_affinity otherwise)."""
+    role: str
+    fleet: Tuple[str, ...]
+    router: Optional[str] = None
+    balance_eps: Union[float, None, _UnsetEps] = UNSET_EPS
+    partitioned: bool = False
+
+    def __post_init__(self):
+        if self.role not in ROLES:
+            raise ValueError(f"unknown pool role {self.role!r}; one of "
+                             f"{ROLES}")
+        object.__setattr__(self, "fleet", _norm_fleet(self.fleet))
+
+    @property
+    def resolved_eps(self) -> Optional[float]:
+        """The spill factor with the unset sentinel collapsed to the
+        default (engine/controller construction needs a concrete value;
+        ``apply`` distinguishes unset and leaves the engine alone)."""
+        if isinstance(self.balance_eps, _UnsetEps):
+            return DEFAULT_BALANCE_EPS
+        return self.balance_eps
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.fleet)
+
+    @property
+    def capacity(self) -> float:
+        """Pool throughput in reference-server units."""
+        return fleet_capacity(self.fleet)
+
+    @property
+    def fleet_str(self) -> str:
+        return fleet_str(self.fleet)
+
+
+@dataclass(frozen=True)
+class ResourcePlan:
+    """A complete hourly resource allocation: cache size plus pools.
+
+    ``cache_tb=None`` marks an *open* plan — a candidate whose cache size
+    the solver decides; applied plans carry a concrete size
+    (``with_cache``)."""
+    cache_tb: Optional[float]
+    pools: Tuple[PoolSpec, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "pools", tuple(self.pools))
+        roles = [p.role for p in self.pools]
+        if len(roles) != len(set(roles)):
+            raise ValueError(f"duplicate pool roles in {roles}")
+        if len(self.pools) == 1:
+            if roles != ["serve"]:
+                raise ValueError("a single-pool plan must use role 'serve'")
+        elif sorted(roles) == ["decode", "prefill"]:
+            pass
+        else:
+            raise ValueError("pools must be ['serve'] or "
+                             f"['prefill', 'decode'], got {roles}")
+        if self.cache_tb is not None and self.cache_tb < 0:
+            raise ValueError("cache_tb must be >= 0")
+
+    # ------------------------------------------------------------------ #
+    # constructors
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def single(cls, cache_tb: Optional[float] = None, *,
+               fleet: Union[str, Sequence[str], None] = None,
+               n_replicas: Union[int, Sequence[int], None] = None,
+               router: Optional[str] = None,
+               balance_eps: Union[float, None,
+                                  _UnsetEps] = UNSET_EPS,
+               partitioned: bool = False) -> "ResourcePlan":
+        """Single fused pool.  ``fleet`` overrides ``n_replicas``; a bare
+        count becomes a homogeneous reference (``l40``) fleet."""
+        if fleet is None:
+            counts = normalize_replicas(n_replicas)
+            if len(counts) != 1:
+                raise ValueError("a plan has one replica count; pass "
+                                 "several candidate plans for co-decision")
+            fleet = ("l40",) * counts[0]
+        elif n_replicas is not None:
+            raise ValueError("pass fleet= or n_replicas=, not both")
+        return cls(cache_tb, (PoolSpec("serve", _norm_fleet(fleet),
+                                       router=router,
+                                       balance_eps=balance_eps,
+                                       partitioned=partitioned),))
+
+    @classmethod
+    def disaggregated(cls, cache_tb: Optional[float] = None, *,
+                      prefill: Union[str, Sequence[str]],
+                      decode: Union[str, Sequence[str]],
+                      router: Optional[str] = None,
+                      balance_eps: Union[float, None,
+                                         _UnsetEps] = UNSET_EPS,
+                      partitioned: bool = False) -> "ResourcePlan":
+        """Prefill/decode pool disaggregation.  Router/eps/partitioning
+        shape the prefill pool (it owns the KV store); the decode pool
+        absorbs load analytically."""
+        return cls(cache_tb, (
+            PoolSpec("prefill", _norm_fleet(prefill), router=router,
+                     balance_eps=balance_eps, partitioned=partitioned),
+            PoolSpec("decode", _norm_fleet(decode)),
+        ))
+
+    @classmethod
+    def from_legacy(cls, cache_tb: Optional[float] = None, *,
+                    n_replicas: Union[int, Sequence[int], None] = None,
+                    fleet: Union[str, Sequence[str], None] = None,
+                    router: Optional[str] = None,
+                    balance_eps: Union[float, None,
+                                       _UnsetEps] = UNSET_EPS,
+                    partitioned: bool = False) -> "ResourcePlan":
+        """Normalize the pre-plan kwarg sprawl (used by the deprecated
+        shims; the int-vs-list ``n_replicas`` ambiguity dies here)."""
+        return cls.single(cache_tb, fleet=fleet,
+                          n_replicas=n_replicas if fleet is None else None,
+                          router=router, balance_eps=balance_eps,
+                          partitioned=partitioned)
+
+    # ------------------------------------------------------------------ #
+    # accessors
+    # ------------------------------------------------------------------ #
+    @property
+    def is_disaggregated(self) -> bool:
+        return len(self.pools) == 2
+
+    def pool(self, role: str) -> PoolSpec:
+        for p in self.pools:
+            if p.role == role:
+                return p
+        raise KeyError(f"plan has no {role!r} pool (pools: "
+                       f"{[p.role for p in self.pools]})")
+
+    @property
+    def serve(self) -> PoolSpec:
+        return self.pool("serve")
+
+    @property
+    def prefill(self) -> PoolSpec:
+        """The pool that runs prefill (and owns the KV store): the
+        ``prefill`` pool when disaggregated, else the fused pool."""
+        return self.pool("prefill" if self.is_disaggregated else "serve")
+
+    @property
+    def decode(self) -> PoolSpec:
+        """The pool that runs decode: the ``decode`` pool when
+        disaggregated, else the fused pool."""
+        return self.pool("decode" if self.is_disaggregated else "serve")
+
+    @property
+    def fleet(self) -> Tuple[str, ...]:
+        """Single-pool fleet (raises on a disaggregated plan)."""
+        return self.serve.fleet
+
+    @property
+    def all_types(self) -> Tuple[str, ...]:
+        """Every replica type across pools (embodied/energy accounting)."""
+        return tuple(t for p in self.pools for t in p.fleet)
+
+    @property
+    def n_replicas(self) -> int:
+        return sum(p.n_replicas for p in self.pools)
+
+    @property
+    def capacity(self) -> float:
+        """Total throughput across pools in reference-server units."""
+        return float(sum(p.capacity for p in self.pools))
+
+    def with_cache(self, cache_tb: float) -> "ResourcePlan":
+        return replace(self, cache_tb=float(cache_tb))
+
+    # ------------------------------------------------------------------ #
+    # string / JSON round-trip
+    # ------------------------------------------------------------------ #
+    def __str__(self) -> str:
+        parts = [f"cache={_fmt_tb(self.cache_tb)}"]
+        if self.is_disaggregated:
+            parts.append(f"prefill={self.prefill.fleet_str}")
+            parts.append(f"decode={self.decode.fleet_str}")
+        else:
+            parts.append(f"fleet={self.serve.fleet_str}")
+        lead = self.prefill
+        if lead.router is not None:
+            parts.append(f"router={lead.router}")
+        if not isinstance(lead.balance_eps, _UnsetEps):
+            eps = "none" if lead.balance_eps is None \
+                else f"{lead.balance_eps:g}"
+            parts.append(f"eps={eps}")
+        if lead.partitioned:
+            parts.append("partitioned")
+        return " ".join(parts)
+
+    @classmethod
+    def parse(cls, spec: str) -> "ResourcePlan":
+        """Inverse of ``str(plan)`` — see the module docstring grammar."""
+        cache_tb: Optional[float] = None
+        fleets: Dict[str, Tuple[str, ...]] = {}
+        router: Optional[str] = None
+        balance_eps: Union[float, None, _UnsetEps] = UNSET_EPS
+        partitioned = False
+        for tok in spec.split():
+            key, sep, val = tok.partition("=")
+            key = key.strip().lower()
+            if not sep:
+                if key == "partitioned":
+                    partitioned = True
+                    continue
+                raise ValueError(f"bad plan token {tok!r} in {spec!r}")
+            if key == "cache":
+                cache_tb = _parse_tb(val)
+            elif key in ("fleet", "serve", "prefill", "decode"):
+                fleets["serve" if key == "fleet" else key] = parse_fleet(val)
+            elif key == "router":
+                router = val
+            elif key == "eps":
+                balance_eps = None if val.lower() in ("none", "off") \
+                    else float(val)
+            else:
+                raise ValueError(f"unknown plan key {key!r} in {spec!r}")
+        if set(fleets) == {"serve"}:
+            return cls.single(cache_tb, fleet=fleets["serve"],
+                              router=router, balance_eps=balance_eps,
+                              partitioned=partitioned)
+        if set(fleets) == {"prefill", "decode"}:
+            return cls.disaggregated(cache_tb, prefill=fleets["prefill"],
+                                     decode=fleets["decode"], router=router,
+                                     balance_eps=balance_eps,
+                                     partitioned=partitioned)
+        raise ValueError(f"plan {spec!r} needs fleet= or prefill=+decode=")
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "cache_tb": self.cache_tb,
+            "pools": [{"role": p.role, "fleet": list(p.fleet),
+                       "router": p.router,
+                       "balance_eps": "unset"
+                       if isinstance(p.balance_eps, _UnsetEps)
+                       else p.balance_eps,
+                       "partitioned": p.partitioned}
+                      for p in self.pools]})
+
+    @classmethod
+    def from_json(cls, payload: Union[str, dict]) -> "ResourcePlan":
+        d = json.loads(payload) if isinstance(payload, str) else payload
+        pools = tuple(PoolSpec(p["role"], tuple(p["fleet"]),
+                               router=p.get("router"),
+                               balance_eps=UNSET_EPS
+                               if p.get("balance_eps", "unset") == "unset"
+                               else p["balance_eps"],
+                               partitioned=bool(p.get("partitioned", False)))
+                      for p in d["pools"])
+        return cls(d.get("cache_tb"), pools)
+
+
+def _fmt_tb(tb: Optional[float]) -> str:
+    if tb is None:
+        return "auto"
+    return f"{tb:g}tb"
+
+
+def _parse_tb(val: str) -> Optional[float]:
+    val = val.strip().lower()
+    if val == "auto":
+        return None
+    if val == "none":                     # ambiguous: auto or zero?
+        raise ValueError("cache=none is ambiguous; use cache=0tb for no "
+                         "cache or cache=auto for solver-sized")
+    if val.endswith("tb"):
+        val = val[:-2]
+    return float(val)
+
+
+def enumerate_plans(prefill_fleets: Sequence[Sequence[str]],
+                    decode_fleets: Sequence[Sequence[str]], *,
+                    router: Optional[str] = None,
+                    balance_eps: Union[float, None,
+                                       _UnsetEps] = UNSET_EPS
+                    ) -> List[ResourcePlan]:
+    """Cross product of per-pool fleet enumerations (feed each side from
+    ``repro.core.solver.enumerate_fleets``) into open disaggregated
+    candidate plans for the solver's (cache, prefill, decode) search."""
+    return [ResourcePlan.disaggregated(None, prefill=pf, decode=df,
+                                       router=router,
+                                       balance_eps=balance_eps)
+            for pf in prefill_fleets for df in decode_fleets]

@@ -35,6 +35,22 @@ class ProfileCell:
     energy_per_req_kwh: float    # operational energy per request
     duration_per_req_s: float    # wall seconds per request (T in Eq. 4/5)
     avg_power_w: float
+    # per-metric SLO splits (default to the joint fraction for profiles
+    # recorded before the split existed): the disaggregation solver binds
+    # prefill pools on the TTFT side and decode pools on the TPOT side
+    slo_ttft_frac: Optional[float] = None
+    slo_tpot_frac: Optional[float] = None
+    # mean output/prompt tokens of the measured stream: the decode-pool
+    # demand and KV-handoff volume the disaggregation solver prices
+    # analytically
+    avg_out_tokens: float = 0.0
+    avg_prompt_tokens: float = 0.0
+
+    def __post_init__(self):
+        if self.slo_ttft_frac is None:
+            self.slo_ttft_frac = self.slo_frac
+        if self.slo_tpot_frac is None:
+            self.slo_tpot_frac = self.slo_frac
 
     def carbon_per_req_g(self, ci: float, carbon: CarbonModel) -> float:
         op = carbon.operational_g(self.energy_per_req_kwh, ci)
@@ -97,6 +113,7 @@ def run_profiler(model: ServingModel, task: str, workload_factory: Callable,
     Default (None) is the reference platform — the profile the fleet
     solver's capacity-normalized interpolation expects."""
     from repro.core.carbon import get_replica_type
+    from repro.workloads import sample_many
     from repro.workloads.traces import make_poisson_arrivals
 
     if replica_type is not None:
@@ -120,7 +137,7 @@ def run_profiler(model: ServingModel, task: str, workload_factory: Callable,
             arr = make_poisson_arrivals(
                 np.full(96, rate), seed=seed + 3,
                 max_requests=n_warm + n_ramp + n_meas)
-            reqs = [wl.sample(t) for t in arr]
+            reqs = sample_many(wl, arr)
             eng.warm(reqs[:n_warm])
             eng.run(reqs[n_warm:n_warm + n_ramp], ci_fn=lambda t: 0.0,
                     cache_tb=size, record=False)
@@ -133,12 +150,34 @@ def run_profiler(model: ServingModel, task: str, workload_factory: Callable,
                 avg_ttft=float(res.ttft.mean()), p90_ttft=res.p90("ttft"),
                 avg_tpot=float(res.tpot.mean()), p90_tpot=res.p90("tpot"),
                 slo_frac=res.slo_attainment(slo),
+                slo_ttft_frac=res.slo_attainment(slo, "ttft"),
+                slo_tpot_frac=res.slo_attainment(slo, "tpot"),
+                avg_out_tokens=float(np.mean([r.output_tokens
+                                              for r in meas])),
+                avg_prompt_tokens=float(np.mean([r.prompt_tokens
+                                                 for r in meas])),
                 hit_rate=res.token_hit_rate,
                 energy_per_req_kwh=res.energy_kwh / max(res.num_requests, 1),
                 duration_per_req_s=dur_per_req,
                 avg_power_w=res.energy_kwh * 3.6e6 / max(res.duration_s, 1e-9))
             prof.cells[(rate, size)] = cell
     return prof
+
+
+def run_type_profiles(model: ServingModel, task: str,
+                      workload_factory: Callable, carbon: CarbonModel,
+                      types: List[str], *, rates: List[float],
+                      sizes_tb: List[float], **kwargs
+                      ) -> Dict[str, "Profile"]:
+    """Measure one profile per hardware generation (``replica_type=``),
+    keyed by type name — the mapping ``solve_cluster_schedule`` /
+    ``GreenCacheController`` accept as ``type_profiles`` so the fleet
+    solver interpolates measured per-generation cells instead of
+    rescaling the reference profile."""
+    return {t: run_profiler(model, task, workload_factory, carbon,
+                            rates=rates, sizes_tb=sizes_tb,
+                            replica_type=t, **kwargs)
+            for t in types}
 
 
 def _slo_for(model_name: str, task: str) -> SLO:

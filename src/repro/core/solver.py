@@ -13,27 +13,35 @@ KNAPSACK to it); at 1 TB × 24 h granularity it is tractable. Primary solver:
 PuLP + COIN-OR CBC (as in the paper). Fallback: exact dynamic program over
 discretized satisfied-request counts (no external solver needed).
 
-Two cluster generalizations reuse the same machinery by enlarging the
-per-hour option set (the knapsack classes stay one-choice-per-hour):
+Cluster generalizations reuse the same machinery by enlarging the
+per-hour option set (the knapsack classes stay one-choice-per-hour);
+``solve_cluster_schedule`` returns one sized ``ResourcePlan`` per hour
+(``SolveResult.plans``) whatever the candidate source:
 
-* ``solve_cluster_schedule(..., replicas=[1,2,4])`` — options are
-  sizes × homogeneous replica counts (EcoServe-style provisioning axis).
-* ``solve_cluster_schedule(..., fleets=enumerate_fleets(...))`` — options
-  are sizes × heterogeneous fleet mixes; each mix's carbon sums per-type
-  power and (amortization-discounted) embodied rates, the GreenLLM-style
-  old-vs-new-generation tradeoff. Predicted load/SLO for a mix uses the
-  capacity-normalized rate (see ``_fleet_cell_metrics``).
+* ``replicas=[1,2,4]`` — options are sizes × homogeneous replica counts
+  (EcoServe-style provisioning axis).
+* ``fleets=enumerate_fleets(...)`` — options are sizes × heterogeneous
+  fleet mixes; each mix's carbon sums per-type power and (amortization-
+  discounted) embodied rates, the GreenLLM-style old-vs-new-generation
+  tradeoff. Predicted load/SLO for a mix uses the capacity-normalized
+  rate (see ``_fleet_cell_metrics``); ``type_profiles=`` swaps the
+  rescale for measured per-generation cells.
+* ``plans=[...]`` / ``prefill_fleets= + decode_fleets=`` — options are
+  sizes × ``ResourcePlan`` candidates, including disaggregated
+  prefill/decode pool pairs (``_disagg_cell_metrics``: profile-based
+  TTFT side, analytic decode side, power-capped decode pool pricing).
 """
 from __future__ import annotations
 
 import itertools
 import time
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.carbon import CarbonModel, fleet_capacity, get_replica_type
+from repro.core.plan import ResourcePlan
 from repro.core.profiler import Profile
 from repro.serving.perfmodel import SLO
 
@@ -47,6 +55,10 @@ class SolveResult:
     solver: str
     replicas: Optional[List[int]] = None   # chosen N_t (cluster co-decision)
     fleets: Optional[List[Tuple[str, ...]]] = None  # chosen mix per hour
+    # the plan currency: one sized ResourcePlan per hour (populated by
+    # every solve_cluster_schedule mode; sizes_tb/replicas/fleets are
+    # views kept for the pre-plan call sites)
+    plans: Optional[List[ResourcePlan]] = None
 
 
 def _cell_metrics(profile: Profile, rate: float, size: float,
@@ -144,9 +156,17 @@ def _ref_util(cell, carbon: CarbonModel) -> float:
                          0.0, 1.0))
 
 
+def _ref_watts(carbon: CarbonModel, util: float) -> float:
+    hw = carbon.hw            # the platform the profile was measured on
+    return hw.gpu_power_idle_w \
+        + util * (hw.gpu_power_max_w - hw.gpu_power_idle_w) \
+        + hw.cpu_power_w + hw.mem_power_w
+
+
 def _fleet_cell_metrics(profile: Profile, rate: float, size: float,
                         fleet: Sequence[str], ci: float,
-                        carbon: CarbonModel):
+                        carbon: CarbonModel,
+                        type_profiles: Optional[Dict[str, Profile]] = None):
     """Predicted per-request carbon and SLO fraction for a heterogeneous
     ``fleet`` sharing a ``size``-TB cache at cluster arrival rate ``rate``.
 
@@ -158,23 +178,171 @@ def _fleet_cell_metrics(profile: Profile, rate: float, size: float,
     rescaling). Energy then scales by the fleet's summed per-type power
     relative to ``cap`` reference servers at the cell's operating point,
     and embodied compute sums each type's amortization-discounted rate —
-    the terms that make an old-generation mix win on clean grids."""
+    the terms that make an old-generation mix win on clean grids.
+
+    ``type_profiles`` (``{replica type: Profile}``, e.g. from
+    ``run_profiler(replica_type=...)``) replaces the rescaling with
+    measured per-generation cells: each type's replicas are evaluated on
+    that type's own profile at their *actual* per-replica rate
+    ``rate · perf_scale / cap`` (no power inversion — the profile was
+    metered on the type's own specs), and the fleet aggregates by request
+    share. Types missing from the mapping fall back to the reference
+    rescale. KV loads stay SSD-bound either way, which is exactly the
+    error the measured profiles remove."""
     cap = fleet_capacity(fleet)
     norm_rate = rate / cap
-    c = profile.interpolate(norm_rate, size)
-    slo_frac = _saturated_slo(profile, norm_rate, c.slo_frac)
-    util = _ref_util(c, carbon)
-    hw = carbon.hw            # the platform the profile was measured on
-    ref_w = hw.gpu_power_idle_w \
-        + util * (hw.gpu_power_max_w - hw.gpu_power_idle_w) \
-        + hw.cpu_power_w + hw.mem_power_w
-    fleet_w = sum(get_replica_type(t).server_power_w(util) for t in fleet)
-    op = carbon.operational_g(c.energy_per_req_kwh, ci) \
-        * fleet_w / (cap * ref_w)
-    emb_cache = carbon.cache_embodied_g(size, c.duration_per_req_s) / cap
-    emb_comp = sum(get_replica_type(t).embodied_g(c.duration_per_req_s)
+    if not type_profiles:
+        c = profile.interpolate(norm_rate, size)
+        slo_frac = _saturated_slo(profile, norm_rate, c.slo_frac)
+        util = _ref_util(c, carbon)
+        ref_w = _ref_watts(carbon, util)
+        fleet_w = sum(get_replica_type(t).server_power_w(util)
+                      for t in fleet)
+        op = carbon.operational_g(c.energy_per_req_kwh, ci) \
+            * fleet_w / (cap * ref_w)
+        emb_cache = carbon.cache_embodied_g(size, c.duration_per_req_s) / cap
+        emb_comp = sum(get_replica_type(t).embodied_g(c.duration_per_req_s)
+                       for t in fleet) / cap
+        return op + emb_cache + emb_comp, slo_frac
+
+    from collections import Counter
+    c_ref = profile.interpolate(norm_rate, size)
+    op = slo_frac = 0.0
+    for tname, count in Counter(fleet).items():
+        rt = get_replica_type(tname)
+        share = count * rt.perf_scale / cap       # fraction of requests
+        per_replica_rate = rate * rt.perf_scale / cap
+        tp = type_profiles.get(tname)
+        if tp is not None:
+            c = tp.interpolate(per_replica_rate, size)
+            op_t = carbon.operational_g(c.energy_per_req_kwh, ci)
+            slo_t = _saturated_slo(tp, per_replica_rate, c.slo_frac)
+        else:                                     # reference rescale
+            util = _ref_util(c_ref, carbon)
+            op_t = carbon.operational_g(c_ref.energy_per_req_kwh, ci) \
+                * rt.server_power_w(util) / (rt.perf_scale
+                                             * _ref_watts(carbon, util))
+            slo_t = _saturated_slo(profile, norm_rate, c_ref.slo_frac)
+        op += share * op_t
+        slo_frac += share * slo_t
+    # embodied: same formula as the reference branch (the per-request
+    # wall-clock share of the fleet's and cache's amortization), so
+    # passing type_profiles shifts only the measured op/SLO terms
+    emb_cache = carbon.cache_embodied_g(size, c_ref.duration_per_req_s) \
+        / cap
+    emb_comp = sum(get_replica_type(t).embodied_g(c_ref.duration_per_req_s)
                    for t in fleet) / cap
     return op + emb_cache + emb_comp, slo_frac
+
+
+# dedicated decode pools drop the (1 + decode_interference · ū) TPOT
+# inflation the reference profile was measured under (ū ≈ 0.55 average
+# prefill utilization across profiled cells): a decode capacity unit
+# sustains ~1.5× the per-unit token rate of a fused server
+DISAGG_DECODE_SPEEDUP = 1.5
+# dedicated decode pools run power-capped (ServingModel
+# .decode_pool_power_frac documents the mechanism); the solver prices
+# their draw with the same default factor
+DECODE_POOL_POWER_FRAC = 0.6
+# the analytic decode-attainment curve is nearly a step function of the
+# arrival rate, so a pool sized exactly to the *predicted* rate flips to
+# violating on forecast error; size against this demand headroom instead
+# (load-predictor MAPE band, cf. fig17)
+DECODE_DEMAND_MARGIN = 1.15
+
+
+def _disagg_decode_slo(model, slo: SLO, rate: float,
+                       fleet: Sequence[str], out_mean: float) -> float:
+    """Analytic TPOT attainment of a dedicated decode pool — the same
+    continuous-batching fixed point (no prefill interference) plus
+    overload penalty the ``DisaggEngine`` simulates, closed over the
+    engine's U(0.92, 1.08) per-request noise. Mirroring the engine
+    exactly is what lets the solver credit fast decode generations their
+    absolute-SLO headroom, which the reference profile's cells (measured
+    on the fused l40 platform) cannot express."""
+    K = len(fleet)
+    lam = rate * DECODE_DEMAND_MARGIN / K
+    dec_slow = float(np.mean([1.0 / get_replica_type(t).perf_scale
+                              for t in fleet]))
+    tpot, _ = model.decode_fixed_point(lam, out_mean, dec_slow)
+    lo, hi = 0.92 * tpot, 1.08 * tpot
+    if hi <= slo.tpot_s:
+        return 1.0
+    if lo >= slo.tpot_s:
+        return 0.0
+    return (slo.tpot_s - lo) / (hi - lo)
+
+
+def _disagg_cell_metrics(profile: Profile, rate: float, size: float,
+                         plan: ResourcePlan, ci: float,
+                         carbon: CarbonModel, slo: Optional[SLO] = None,
+                         model=None):
+    """Predicted per-request carbon and SLO fraction for a disaggregated
+    plan at cluster arrival rate ``rate``.
+
+    The pools bind on different metrics. The prefill pool's TTFT-side
+    attainment comes from the reference cell at its capacity-normalized
+    rate (plus the saturation penalty past the profiled envelope). The
+    decode pool's TPOT-side attainment is computed analytically from the
+    serving model when available (``_disagg_decode_slo``), else read from
+    the cell at its normalized rate discounted by
+    ``DISAGG_DECODE_SPEEDUP`` (no prefill interference on a dedicated
+    pool). Each pool is priced with the *full* reference cell at its own
+    operating point scaled by its fleet's draw per capacity unit — both
+    pools burn their whole-server (idle-dominated) power for the entire
+    window, the honest cost of splitting; the decode pool's draw carries
+    the power cap. Embodied sums both typed fleets' amortization-
+    discounted per-second rates over the request stream."""
+    cp = plan.prefill.capacity
+    cd = plan.decode.capacity
+    c_pre = profile.interpolate(rate / cp, size)
+    slo_t = _saturated_slo(profile, rate / cp, c_pre.slo_ttft_frac)
+    if model is not None and c_pre.avg_prompt_tokens > 0:
+        # the KV handoff shifts every TTFT right by the prompt's
+        # transfer time; approximate the attained mass pushed past the
+        # SLO as the shifted fraction of the SLO budget
+        xfer = c_pre.avg_prompt_tokens * model.kv_bytes_per_token \
+            / (model.kv_transfer_gbps * 1e9)
+        slo_t *= max(0.0, 1.0 - xfer / (slo.ttft_s if slo is not None
+                                        else 2.5))
+    rate_d = rate / (cd * DISAGG_DECODE_SPEEDUP)
+    c_dec = profile.interpolate(rate_d, size)
+    if model is not None and slo is not None and c_pre.avg_out_tokens > 0:
+        slo_p = _disagg_decode_slo(model, slo, rate, plan.decode.fleet,
+                                   c_pre.avg_out_tokens)
+    else:
+        slo_p = _saturated_slo(profile, rate_d, c_dec.slo_tpot_frac)
+    slo_frac = slo_t * slo_p
+
+    util_p = _ref_util(c_pre, carbon)
+    wp = sum(get_replica_type(t).server_power_w(util_p)
+             for t in plan.prefill.fleet)
+    op = carbon.operational_g(c_pre.energy_per_req_kwh, ci) \
+        * wp / (cp * _ref_watts(carbon, util_p))
+    util_d = _ref_util(c_dec, carbon)
+    cap_frac = model.decode_pool_power_frac if model is not None \
+        else DECODE_POOL_POWER_FRAC
+    wd = cap_frac * sum(get_replica_type(t).server_power_w(util_d)
+                        for t in plan.decode.fleet)
+    op += carbon.operational_g(c_dec.energy_per_req_kwh, ci) \
+        * wd / (cd * DISAGG_DECODE_SPEEDUP * _ref_watts(carbon, util_d))
+    inv_rate = 1.0 / max(rate, 1e-3)
+    emb_cache = carbon.cache_embodied_g(size, inv_rate)
+    emb_comp = sum(get_replica_type(t).embodied_g(inv_rate)
+                   for t in plan.all_types)
+    return op + emb_cache + emb_comp, slo_frac
+
+
+def _option_plan(option, sized: bool = False) -> ResourcePlan:
+    """Normalize a solver option (count / mix / plan) to a ResourcePlan."""
+    s, k = option
+    if isinstance(k, ResourcePlan):
+        plan = k
+    elif isinstance(k, int):
+        plan = ResourcePlan.single(None, n_replicas=k)
+    else:
+        plan = ResourcePlan.single(None, fleet=tuple(k))
+    return plan.with_cache(s) if sized else plan
 
 
 def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
@@ -183,21 +351,52 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
                            sizes_tb: Optional[Sequence[float]] = None,
                            replicas: Sequence[int] = (1,),
                            fleets: Optional[Sequence[Sequence[str]]] = None,
+                           plans: Optional[Sequence[ResourcePlan]] = None,
+                           prefill_fleets: Optional[
+                               Sequence[Sequence[str]]] = None,
+                           decode_fleets: Optional[
+                               Sequence[Sequence[str]]] = None,
+                           type_profiles: Optional[Dict[str,
+                                                        Profile]] = None,
+                           model=None,
                            rho: Optional[float] = None,
                            use_ilp: bool = True) -> SolveResult:
-    """Joint hourly plan over (cache size, fleet): the option set is the
-    cross product sizes × fleet choices and the same multiple-choice
-    knapsack machinery picks one option per hour (paper §5.4 extended with
-    the EcoServe-style provisioning axis).
+    """Joint hourly plan over (cache size, resource plan): the option set
+    is the cross product sizes × plan candidates and the same
+    multiple-choice knapsack machinery picks one option per hour (paper
+    §5.4 extended with the EcoServe-style provisioning axis). Every mode
+    populates ``SolveResult.plans`` — one sized ``ResourcePlan`` per hour,
+    the object the controller applies.
 
-    ``replicas`` enumerates homogeneous reference-platform counts;
-    ``fleets`` (e.g. from ``enumerate_fleets``) enumerates heterogeneous
-    mixes instead and populates ``SolveResult.fleets`` alongside the
-    per-hour replica counts."""
+    Candidate sources (first match wins):
+
+    * ``plans`` — explicit ``ResourcePlan`` candidates (single-pool or
+      disaggregated; an open ``cache_tb=None`` is solver-sized over the
+      grid, a concrete value pins that candidate's allocation).
+    * ``prefill_fleets`` + ``decode_fleets`` — the disaggregation search:
+      the cross product (cache, prefill fleet, decode fleet), each side
+      typically from ``enumerate_fleets``.
+    * ``fleets`` — heterogeneous single-pool mixes (pre-plan spelling).
+    * ``replicas`` — homogeneous reference-platform counts.
+
+    ``type_profiles`` feeds measured per-generation profiles into the
+    single-pool fleet metrics (see ``_fleet_cell_metrics``); ``model``
+    (a ``ServingModel``) enables the analytic decode-pool attainment for
+    disaggregated candidates (see ``_disagg_decode_slo``)."""
     t_start = time.time()
     rho = rho if rho is not None else slo.rho
     sizes = list(sizes_tb) if sizes_tb is not None else list(profile.sizes)
-    if fleets is not None:
+    if plans is None and prefill_fleets is not None:
+        from repro.core.plan import enumerate_plans
+        plans = enumerate_plans(prefill_fleets, decode_fleets or [("l40",)])
+    if plans is not None:
+        cands = list(plans) or [ResourcePlan.single(None, n_replicas=1)]
+        # a candidate carrying a concrete cache_tb pins its allocation;
+        # open candidates (cache_tb=None) search the size grid
+        options = [(s, p) for p in cands
+                   for s in ([p.cache_tb] if p.cache_tb is not None
+                             else sizes)]
+    elif fleets is not None:
         mixes = [tuple(f) for f in fleets] or [("l40",)]
         options = [(s, f) for f in mixes for s in sizes]
     else:
@@ -210,9 +409,16 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
     F = np.zeros((T, len(options)))
     for t in range(T):
         for oi, (s, k) in enumerate(options):
-            if fleets is not None:
+            if plans is not None and isinstance(k, ResourcePlan) \
+                    and k.is_disaggregated:
+                C[t, oi], F[t, oi] = _disagg_cell_metrics(
+                    profile, pred_rates[t], s, k, pred_cis[t], carbon,
+                    slo=slo, model=model)
+            elif plans is not None or fleets is not None:
+                fl = k.serve.fleet if isinstance(k, ResourcePlan) else k
                 C[t, oi], F[t, oi] = _fleet_cell_metrics(
-                    profile, pred_rates[t], s, k, pred_cis[t], carbon)
+                    profile, pred_rates[t], s, fl, pred_cis[t], carbon,
+                    type_profiles=type_profiles)
             else:
                 C[t, oi], F[t, oi] = _cluster_cell_metrics(
                     profile, pred_rates[t], s, k, pred_cis[t], carbon)
@@ -225,14 +431,20 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
     else:
         res = _solve_dp(C, F, n, options, rho, t_start)
     chosen = list(res.sizes_tb)       # option tuples, split into the plan
+    hourly = [_option_plan(o, sized=True) for o in chosen]
+    if plans is not None:
+        return SolveResult([s for s, _ in chosen], res.objective_g,
+                           res.feasible, time.time() - t_start, res.solver,
+                           replicas=[p.n_replicas for p in hourly],
+                           plans=hourly)
     if fleets is not None:
         return SolveResult([s for s, _ in chosen], res.objective_g,
                            res.feasible, time.time() - t_start, res.solver,
                            replicas=[len(f) for _, f in chosen],
-                           fleets=[f for _, f in chosen])
+                           fleets=[f for _, f in chosen], plans=hourly)
     return SolveResult([s for s, _ in chosen], res.objective_g,
                        res.feasible, time.time() - t_start, res.solver,
-                       replicas=[k for _, k in chosen])
+                       replicas=[k for _, k in chosen], plans=hourly)
 
 
 def _solve_ilp(C, F, n, sizes, rho, t_start) -> SolveResult:

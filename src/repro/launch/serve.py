@@ -5,24 +5,86 @@ or the real-execution demo (actual JAX model with KV-prefix reuse).
     PYTHONPATH=src python -m repro.launch.serve --model llama3-70b \
         --task conversation --grid FR --mode greencache
 
-    # heterogeneous fleet: pin a mix, or give several for hourly
-    # (cache, fleet) co-decision
-    PYTHONPATH=src python -m repro.launch.serve --fleet a100:2,l40:4
+    # resource plans: pin one, or give several for hourly co-decision
     PYTHONPATH=src python -m repro.launch.serve \
-        --fleet h100:2 a100:4 a100:2,h100:1
+        --plan "cache=auto fleet=a100:2,l40:4"
+    PYTHONPATH=src python -m repro.launch.serve \
+        --plan "cache=auto fleet=h100:2" "cache=auto fleet=a100:3"
+
+    # prefill/decode disaggregation: the solver searches the cross
+    # product (cache, prefill fleet, decode fleet)
+    PYTHONPATH=src python -m repro.launch.serve \
+        --prefill-fleet h100:1 h100:2 --decode-fleet a100:2 a100:3
 
     # real execution with a reduced model:
     PYTHONPATH=src python -m repro.launch.serve --real --arch yi-6b
+
+The pre-plan ``--replicas``/``--fleet`` flags remain as deprecated shims
+that build the equivalent ``--plan`` candidates.
 """
 from __future__ import annotations
 
 import argparse
+import warnings
 
 import numpy as np
 
 
+def build_plans(args) -> list:
+    """Normalize every fleet-shaped CLI flag into the candidate
+    ``ResourcePlan`` list — the single place the legacy ``--replicas``
+    int-vs-list and ``--fleet`` spellings are resolved."""
+    from repro.core.plan import UNSET_EPS, ResourcePlan, normalize_replicas
+
+    # None = flag not given (plan strings / defaults win); negative =
+    # explicit disable (pure affinity)
+    eps_given = args.balance_eps is not None
+    eps = UNSET_EPS if not eps_given \
+        else (None if args.balance_eps < 0 else args.balance_eps)
+    if args.plan:
+        if args.fleet or args.replicas is not None \
+                or args.prefill_fleet or args.decode_fleet:
+            raise SystemExit("--plan replaces --fleet/--replicas/"
+                             "--prefill-fleet/--decode-fleet; pass one "
+                             "spelling")
+        plans = [ResourcePlan.parse(p) for p in args.plan]
+        if eps_given:
+            # an explicit --balance-eps overrides the plan strings' eps
+            # (the controller applies the same precedence)
+            from dataclasses import replace
+            plans = [replace(p, pools=tuple(
+                pool if pool.role == "decode"
+                else replace(pool, balance_eps=eps)
+                for pool in p.pools)) for p in plans]
+        return plans
+    if args.prefill_fleet:
+        if not args.decode_fleet:
+            raise SystemExit("--prefill-fleet needs --decode-fleet")
+        return [ResourcePlan.disaggregated(None, prefill=pf, decode=df,
+                                           router=args.router,
+                                           balance_eps=eps)
+                for pf in args.prefill_fleet for df in args.decode_fleet]
+    if args.decode_fleet:
+        raise SystemExit("--decode-fleet needs --prefill-fleet")
+    if args.fleet:
+        warnings.warn("--fleet is deprecated; use --plan "
+                      "'cache=auto fleet=...'", DeprecationWarning,
+                      stacklevel=2)
+        return [ResourcePlan.single(None, fleet=f, router=args.router,
+                                    balance_eps=eps)
+                for f in args.fleet]
+    counts = normalize_replicas(args.replicas)
+    if args.replicas is not None:
+        warnings.warn("--replicas is deprecated; use --plan "
+                      "'cache=auto fleet=l40:N'", DeprecationWarning,
+                      stacklevel=2)
+    return [ResourcePlan.single(None, n_replicas=k, router=args.router,
+                                balance_eps=eps)
+            for k in counts]
+
+
 def run_simulation(args):
-    from repro.core.carbon import CarbonModel, fleet_capacity, parse_fleet
+    from repro.core.carbon import CarbonModel
     from repro.core.controller import GreenCacheController
     from repro.core.profiler import run_profiler
     from repro.serving.perfmodel import SERVING_MODELS
@@ -32,14 +94,11 @@ def run_simulation(args):
 
     model = SERVING_MODELS[args.model]
     carbon = CarbonModel()
-    fleets = [parse_fleet(f) for f in args.fleet] if args.fleet else None
-    if fleets:
-        scale = max(fleet_capacity(f) for f in fleets)
-        max_rep = max(len(f) for f in fleets)
-    else:
-        max_rep = max(args.replicas) if isinstance(args.replicas, list) \
-            else args.replicas
-        scale = float(max_rep)
+    plans = build_plans(args)
+    # the day's load scales with the arrival-carrying (prefill) capacity:
+    # a disaggregated plan's decode pool adds token throughput, not
+    # request admission (for fused plans prefill == the whole fleet)
+    scale = max(p.prefill.capacity for p in plans)
     if args.task == "conversation":
         wf = lambda s: ConversationWorkload(seed=s, load_scale=scale)
         policy = "lcs_chat"
@@ -57,26 +116,25 @@ def run_simulation(args):
                         warmup_prompts=args.warmup)
     rate_trace = azure_rate_trace(rates[-1] * scale, seed=3)
     cis = ci_trace(args.grid, seed=4)
+    # --balance-eps is fully resolved into the candidate plans by
+    # build_plans (the controller adopts the plans' pool value)
     ctl = GreenCacheController(model, prof, carbon, args.task,
                                mode=args.mode, policy=policy,
                                warm_requests=args.warmup,
-                               n_replicas=args.replicas, router=args.router,
-                               fleets=fleets,
-                               balance_eps=args.balance_eps,
+                               plans=plans, router=args.router,
                                max_requests_per_hour=int(1200 * scale))
     res = ctl.run_day(wf, rate_trace, cis)
+    many = len(plans) > 1
+    clustered = scale > 1 or plans[0].n_replicas > 1
     print(f"mode={args.mode} grid={args.grid} task={args.task}")
     print(f"  carbon/request: {res.carbon_per_request_g:.4f} g")
     print(f"  SLO attainment: {res.slo_attainment:.3f}")
     print(f"  avg cache size: {res.avg_cache_tb:.1f} TB")
     print(f"  hourly sizes:   {[int(h.cache_tb) for h in res.hours]}")
-    if fleets:
+    if many or clustered:
         print(f"  avg fleet cap:  {res.avg_fleet_capacity:.2f} "
               f"(reference-server units)")
-        print(f"  hourly fleets:  {[h.fleet for h in res.hours]}")
-    elif max_rep > 1:
-        print(f"  avg replicas:   {res.avg_replicas:.2f}")
-        print(f"  hourly replicas:{[h.n_replicas for h in res.hours]}")
+        print(f"  hourly plans:   {[h.plan for h in res.hours]}")
     return res
 
 
@@ -121,19 +179,29 @@ def main(argv=None):
     ap.add_argument("--mode", default="greencache",
                     choices=["greencache", "full", "none", "oracle"])
     ap.add_argument("--warmup", type=int, default=12000)
-    ap.add_argument("--replicas", type=int, nargs="+", default=1,
-                    help="prefill replica count; several values let the "
-                         "solver co-decide (cache_tb, n_replicas) hourly")
+    ap.add_argument("--plan", nargs="+", default=None,
+                    help="resource plan spec(s) like 'cache=auto "
+                         "fleet=a100:2,l40:4' or 'cache=4tb prefill=h100:2"
+                         " decode=a100:3'; several specs let the solver "
+                         "co-decide the plan hourly")
+    ap.add_argument("--prefill-fleet", nargs="+", default=None,
+                    help="disaggregation: prefill-pool fleet spec(s); "
+                         "crossed with --decode-fleet into candidate "
+                         "plans")
+    ap.add_argument("--decode-fleet", nargs="+", default=None,
+                    help="disaggregation: decode-pool fleet spec(s)")
+    ap.add_argument("--replicas", type=int, nargs="+", default=None,
+                    help="DEPRECATED (use --plan): prefill replica count; "
+                         "several values let the solver co-decide "
+                         "(cache_tb, n_replicas) hourly")
     ap.add_argument("--fleet", nargs="+", default=None,
-                    help="heterogeneous fleet mix spec(s) like "
-                         "'a100:2,l40:4' (replica types from "
-                         "repro.core.carbon.REPLICA_TYPES); several specs "
-                         "let the solver co-decide (cache_tb, fleet) "
-                         "hourly; overrides --replicas")
-    ap.add_argument("--balance-eps", type=float, default=0.15,
+                    help="DEPRECATED (use --plan): heterogeneous fleet "
+                         "mix spec(s) like 'a100:2,l40:4'")
+    ap.add_argument("--balance-eps", type=float, default=None,
                     help="bounded-load spill factor of the cache_affinity "
-                         "router; negative disables spill (pure affinity: "
-                         "best hit rate, worst p90 TTFT under skew)")
+                         "router (default 0.15, or the plan string's eps);"
+                         " negative disables spill (pure affinity: best "
+                         "hit rate, worst p90 TTFT under skew)")
     ap.add_argument("--router", default=None,
                     choices=[None, "single", "round_robin", "least_loaded",
                              "cache_affinity"],
@@ -142,10 +210,6 @@ def main(argv=None):
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--arch", default="yi-6b")
     args = ap.parse_args(argv)
-    if isinstance(args.replicas, list) and len(args.replicas) == 1:
-        args.replicas = args.replicas[0]
-    if args.balance_eps is not None and args.balance_eps < 0:
-        args.balance_eps = None
     if args.real:
         return run_real(args)
     return run_simulation(args)

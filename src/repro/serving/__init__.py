@@ -1,8 +1,8 @@
 from repro.serving.perfmodel import SERVING_MODELS, ServingModel, SLO
 from repro.serving.engine import ServingEngine, SimResult
-from repro.serving.cluster import (ClusterEngine, HashRing, ROUTERS,
-                                   make_cluster)
+from repro.serving.cluster import (ClusterEngine, DisaggEngine, HashRing,
+                                   ROUTERS, make_cluster)
 
 __all__ = ["ServingModel", "SERVING_MODELS", "SLO", "ServingEngine",
-           "SimResult", "ClusterEngine", "HashRing", "ROUTERS",
-           "make_cluster"]
+           "SimResult", "ClusterEngine", "DisaggEngine", "HashRing",
+           "ROUTERS", "make_cluster"]

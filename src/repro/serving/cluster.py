@@ -38,10 +38,20 @@ per-type server power, and embodied compute carbon sums each type's
 amortized share. An all-reference-type (``l40``) fleet is bit-identical to
 the untyped engine; mixes additionally weight the bounded-load spill caps
 and the ``least_loaded`` rule by per-replica capacity.
+
+Resource plans: ``apply(ResourcePlan)`` is the hourly reconfiguration
+entry point (fleet change + cache resize in one step; the deprecated
+``set_replicas``/``set_fleet`` shims delegate to it), ``make_cluster``
+builds an engine from a sized plan, and a *disaggregated* plan
+(``prefill=`` + ``decode=`` pools) yields a ``DisaggEngine`` — prefill
+queueing on one typed pool, dedicated interference-free decode on
+another, with a per-token KV handoff between them (see the
+``DisaggEngine`` docstring).
 """
 from __future__ import annotations
 
 import hashlib
+import warnings
 import zlib
 from typing import Callable, List, Optional, Sequence, Union
 
@@ -49,6 +59,7 @@ import numpy as np
 
 from repro.core.carbon import CarbonModel, get_replica_type
 from repro.core.kvstore import KVStore
+from repro.core.plan import ResourcePlan, UNSET_EPS
 from repro.serving.engine import SimResult
 from repro.serving.perfmodel import ServingModel
 
@@ -172,6 +183,12 @@ class ClusterEngine:
 
     # ------------------------------------------------------------------ #
     @property
+    def total_replicas(self) -> int:
+        """All replicas across pools (``DisaggEngine`` adds its decode
+        pool; a fused cluster has only the one pool)."""
+        return self.n_replicas
+
+    @property
     def store(self) -> KVStore:
         """Shared-mode store (seed-engine compatibility accessor)."""
         if not self.shared:
@@ -185,16 +202,62 @@ class ClusterEngine:
                            else _stable_hash(key) % self.n_replicas]
 
     # ------------------------------------------------------------------ #
+    def apply(self, plan: ResourcePlan, *, now: float = 0.0):
+        """Reconfigure the live cluster from a ``ResourcePlan`` — the
+        hourly-controller entry point, subsuming the deprecated
+        ``set_replicas``/``set_fleet`` pair: installs the plan's fleet
+        (replicas keep their backlogs positionally; a shrink drops the
+        longest queues, new replicas join idle) and, when the plan carries
+        a concrete ``cache_tb``, resizes the store(s) to it (evictions
+        timestamped at ``now``). Only shared-store clusters can change
+        fleet size (partitioned stores would need a KV redistribution
+        pass the hourly loop does not model)."""
+        if plan.is_disaggregated:
+            raise ValueError("fused cluster cannot apply a disaggregated "
+                             "plan; build a DisaggEngine for prefill/decode "
+                             "pools")
+        pool = plan.serve
+        self._apply_pool_knobs(pool)
+        if list(pool.fleet) != self.types:
+            self._apply_fleet(pool.fleet)
+        self._resize_cache(plan.cache_tb, now)
+        return self
+
+    def _apply_pool_knobs(self, pool):
+        """Routing knobs of the store-owning pool: the router and store
+        topology are fixed at construction (mismatch raises); the
+        bounded-load spill factor is a per-window parameter and is
+        adopted from the plan."""
+        if pool.router is not None and pool.router != self.router:
+            raise ValueError(f"plan router {pool.router!r} != engine "
+                             f"router {self.router!r} (routers are fixed "
+                             "at construction)")
+        engine_partitioned = not self.shared
+        if pool.partitioned != engine_partitioned \
+                and (engine_partitioned or pool.n_replicas > 1):
+            raise ValueError("plan store partitioning does not match the "
+                             "engine (re-sharding is not modeled)")
+        if pool.balance_eps is not UNSET_EPS:
+            self.balance_eps = pool.balance_eps
+
+    def _resize_cache(self, cache_tb: Optional[float], now: float):
+        if cache_tb is None:
+            return
+        if self.shared:
+            self.stores[0].resize(cache_tb * 1e12, now=now)
+        else:
+            per = cache_tb * 1e12 / len(self.stores)
+            for st in self.stores:
+                st.resize(per, now=now)
+
     def set_replicas(self, n_replicas: int):
-        """Scale a homogeneous replica set between simulation windows
-        (hourly plan). Only valid in shared-store mode — partitioned stores
-        would need a KV redistribution pass, which the hourly controller
-        does not model. New replicas join idle; removed replicas' queues
-        are assumed drained (the controller reconfigures at hour
-        boundaries). Typed clusters resize via ``set_fleet`` (a bare count
-        does not say which hardware generation joins or leaves)."""
+        """Deprecated: apply a ``ResourcePlan`` instead. Scales a
+        homogeneous *untyped* replica set between simulation windows."""
+        warnings.warn("ClusterEngine.set_replicas is deprecated; use "
+                      "ClusterEngine.apply(ResourcePlan.single(...))",
+                      DeprecationWarning, stacklevel=2)
         if self.types is not None:
-            raise ValueError("typed cluster: use set_fleet, not set_replicas")
+            raise ValueError("typed cluster: use apply, not set_replicas")
         n_replicas = int(n_replicas)
         if n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
@@ -211,20 +274,27 @@ class ClusterEngine:
             self._ring = HashRing(n_replicas)
 
     def set_fleet(self, types: Sequence[str]):
-        """Apply an hourly fleet-mix change (shared-store mode only): the
-        new fleet replaces the old one wholesale — replicas keep their
-        backlogs positionally (sorted busiest-last so a shrink drops the
-        longest queues, matching ``set_replicas``), new replicas join
-        idle."""
+        """Deprecated: apply a ``ResourcePlan`` instead."""
+        warnings.warn("ClusterEngine.set_fleet is deprecated; use "
+                      "ClusterEngine.apply(ResourcePlan.single(fleet=...))",
+                      DeprecationWarning, stacklevel=2)
+        self._apply_fleet(types)
+
+    def _apply_fleet(self, types: Sequence[str]):
+        """Install an hourly fleet-mix change (shared-store mode only):
+        the new fleet replaces the old one wholesale — replicas keep
+        their backlogs positionally (sorted busiest-last so a shrink
+        drops the longest queues), new replicas join idle."""
         types = [str(t) for t in types]
         if not types:
             raise ValueError("fleet must have at least one replica")
         for t in types:
             get_replica_type(t)
-        if not self.shared:
-            raise ValueError("cannot rescale a partitioned-store cluster")
         n_new = len(types)
         if n_new != self.n_replicas:
+            if not self.shared:
+                raise ValueError("cannot rescale a partitioned-store "
+                                 "cluster")
             self._resize_free(n_new)
             self.n_replicas = n_new
             if self._ring is not None:
@@ -270,7 +340,8 @@ class ClusterEngine:
         n = len(requests)
         if n == 0:
             return SimResult(np.array([]), np.array([]), 0.0, 0.0, 0.0, 0.0,
-                             0.0, 0.0, 0.0, 0.0, 0, n_replicas=K)
+                             0.0, 0.0, 0.0, 0.0, 0,
+                             n_replicas=self.total_replicas)
 
         arrival = np.fromiter((r.arrival for r in requests), float, count=n)
         ctx = np.fromiter((r.context_tokens for r in requests), np.int64,
@@ -319,6 +390,25 @@ class ClusterEngine:
                 self._free[k] = float(f[-1])
                 finish_max = max(finish_max, float(f[-1]))
 
+        return self._finish_run(requests, arrival, out, prompt, reused,
+                                uncached, assign, ttft, finish_max, t0,
+                                ci_fn=ci_fn, cache_tb=cache_tb,
+                                rate_hint=rate_hint, record=record)
+
+    # ------------------------------------------------------------------ #
+    def _finish_run(self, requests: Sequence, arrival: np.ndarray,
+                    out: np.ndarray, prompt: np.ndarray, reused: np.ndarray,
+                    uncached: np.ndarray, assign: np.ndarray,
+                    ttft: np.ndarray, finish_max: float, t0: float, *,
+                    ci_fn: Callable[[float], float], cache_tb: float,
+                    rate_hint: Optional[float], record: bool) -> SimResult:
+        """Decode coupling + energy/carbon accounting for a *fused* pool
+        (prefill and decode share the same replicas — the seed semantics,
+        bit-identical to PR-1/PR-2). ``DisaggEngine`` overrides this with
+        the two-pool version."""
+        m = self.model
+        K = self.n_replicas
+        n = len(requests)
         lookup_tokens = int(prompt.sum())
         hit_tokens = int(reused.sum())
         kv_busy = hit_tokens * m.kv_bytes_per_token / (m.ssd_read_gbps * 1e9)
@@ -349,11 +439,10 @@ class ClusterEngine:
         # inverse perf_scale (×1.0 exact for the reference fleet)
         dec_slow = float(np.mean(1.0 / self._scales)) if self._hetero \
             else 1.0 / self._uniform_scale
-        tpot = m.decode_base_s
-        for _ in range(8):
-            batch = np.clip(lam * out_mean * tpot, 1.0, m.max_batch)
-            tpot = m.decode_step_time(batch) * dec_slow \
-                * (1.0 + m.decode_interference * prefill_util)
+        # shared fixed point incl. the decode-overload penalty: fused
+        # fleets pay real capacity for decode-heavy streams
+        tpot, batch = m.decode_fixed_point(lam, out_mean, dec_slow,
+                                           prefill_util)
         noise_rng = np.random.default_rng(int(requests[0].rid) + 0x5eed)
         tpots = tpot * noise_rng.uniform(0.92, 1.08, size=n)
 
@@ -505,6 +594,165 @@ class ClusterEngine:
         return assign, reused, ttft, max(free)
 
 
+class DisaggEngine(ClusterEngine):
+    """Prefill/decode disaggregated cluster (DistServe/Splitwise-style,
+    built for the GreenLLM typed-fleet carbon asymmetry).
+
+    The *prefill pool* (this engine's base-class replicas) owns the KV
+    store(s), router and queueing exactly as a fused ``ClusterEngine``;
+    the *decode pool* is a separate typed fleet that only runs token
+    generation. Consequences modeled:
+
+      * **KV handoff** — each request's full prompt KV streams from its
+        prefill replica to a decode replica over the interconnect
+        (``ServingModel.kv_transfer_gbps``); the transfer gates the first
+        token (added to TTFT) but does not occupy the prefill server
+        (DMA overlaps the next prefill).
+      * **No prefill/decode interference** — the decode pool's TPOT fixed
+        point drops the ``decode_interference`` inflation entirely (no
+        prefill steals its iterations); that is the operational-carbon
+        lever of disaggregation.
+      * **Decode saturation** — if the arrival token rate exceeds the
+        pool's max-batch service rate, TPOT inflates by the overload
+        ratio (a stand-in for the unbounded queue), so undersized decode
+        pools violate the TPOT SLO instead of looking free.
+      * **Split energy/embodied accounting** — each pool runs at its own
+        operating point (prefill compute-bound at ``gpu_util_prefill``
+        weight, decode memory-bound at ``gpu_util_decode``), priced via
+        ``CarbonModel.plan_energy_kwh``; embodied carbon sums both typed
+        fleets. This is what lets amortized old-generation decode pools
+        pay off: decode capacity is cheap on TPOT SLOs, so it can ride
+        hardware whose embodied bill is already written down, while the
+        latency-critical prefill pool stays on compute-dense new silicon.
+
+    Construct from a disaggregated ``ResourcePlan``; reconfigure hourly
+    with ``apply(plan)``.
+    """
+
+    def __init__(self, model: ServingModel,
+                 stores: Union[KVStore, Sequence[KVStore]],
+                 carbon: CarbonModel, plan: ResourcePlan):
+        if not plan.is_disaggregated:
+            raise ValueError("DisaggEngine needs a disaggregated plan "
+                             "(prefill= and decode= pools)")
+        pre = plan.prefill
+        router = pre.router if pre.router is not None else \
+            ("single" if pre.n_replicas == 1 else "cache_affinity")
+        super().__init__(model, stores, carbon, types=pre.fleet,
+                         router=router, balance_eps=pre.resolved_eps)
+        self._set_decode(plan.decode.fleet)
+
+    def _set_decode(self, types: Sequence[str]):
+        types = [str(t) for t in types]
+        if not types:
+            raise ValueError("decode pool must have at least one replica")
+        self.decode_types = types
+        self._dec_scales = np.array(
+            [get_replica_type(t).perf_scale for t in types])
+
+    @property
+    def total_replicas(self) -> int:
+        return self.n_replicas + len(self.decode_types)
+
+    def current_plan(self, cache_tb: Optional[float] = None) -> ResourcePlan:
+        return ResourcePlan.disaggregated(
+            cache_tb, prefill=tuple(self.types), decode=self.decode_types,
+            router=self.router, balance_eps=self.balance_eps,
+            partitioned=not self.shared)
+
+    def apply(self, plan: ResourcePlan, *, now: float = 0.0):
+        """Reconfigure both pools (and the cache allocation) from an
+        hourly disaggregated plan."""
+        if not plan.is_disaggregated:
+            raise ValueError("disaggregated cluster cannot apply a "
+                             "single-pool plan; build a ClusterEngine")
+        pre = plan.prefill
+        self._apply_pool_knobs(pre)
+        if list(pre.fleet) != self.types:
+            self._apply_fleet(pre.fleet)
+        self._set_decode(plan.decode.fleet)
+        self._resize_cache(plan.cache_tb, now)
+        return self
+
+    # ------------------------------------------------------------------ #
+    def _finish_run(self, requests: Sequence, arrival: np.ndarray,
+                    out: np.ndarray, prompt: np.ndarray, reused: np.ndarray,
+                    uncached: np.ndarray, assign: np.ndarray,
+                    ttft: np.ndarray, finish_max: float, t0: float, *,
+                    ci_fn: Callable[[float], float], cache_tb: float,
+                    rate_hint: Optional[float], record: bool) -> SimResult:
+        m = self.model
+        Kp = self.n_replicas
+        Kd = len(self.decode_types)
+        n = len(requests)
+        lookup_tokens = int(prompt.sum())
+        hit_tokens = int(reused.sum())
+
+        # KV handoff gates the first decode token: the whole prompt's KV
+        # (cached prefix + freshly computed suffix) must land in a decode
+        # replica's HBM before generation starts
+        xfer_s_tok = m.kv_bytes_per_token / (m.kv_transfer_gbps * 1e9)
+        ttft = ttft + prompt * xfer_s_tok
+
+        if self._hetero:
+            compute_s = (m.prefill_base_s + uncached / m.prefill_tok_per_s) \
+                / self._scales[assign]
+            busy_compute = float(compute_s.sum())
+        else:
+            busy_compute = float(m.prefill_base_s * n
+                                 + (uncached / m.prefill_tok_per_s).sum()) \
+                / self._uniform_scale
+
+        duration = max(finish_max, float(arrival[-1])) - t0
+        compute_util_p = min(busy_compute / max(Kp * duration, 1e-9), 1.0)
+
+        # decode pool: continuous-batching fixed point, NO prefill
+        # interference (the whole point of the dedicated pool)
+        span = max(float(arrival[-1]) - t0, 1.0)
+        lam = (rate_hint if rate_hint else n / span) / Kd
+        out_mean = float(out.mean())
+        dec_slow = float(np.mean(1.0 / self._dec_scales))
+        tpot, batch = m.decode_fixed_point(lam, out_mean, dec_slow)
+        noise_rng = np.random.default_rng(int(requests[0].rid) + 0x5eed)
+        tpots = tpot * noise_rng.uniform(0.92, 1.08, size=n)
+
+        decode_busy = float((out * tpots).sum()) / max(float(batch), 1.0)
+        decode_frac = min(decode_busy / max(Kd * duration, 1e-9), 1.0)
+
+        util_p = min(m.gpu_util_prefill * compute_util_p, 1.0)
+        util_d = min(m.gpu_util_decode * decode_frac, 1.0)
+        plan = self.current_plan(cache_tb)
+        # the dedicated decode pool runs power-capped (memory-bound
+        # decode tolerates reduced clocks: ServingModel docstring)
+        energy = self.carbon.plan_energy_kwh(
+            plan, {"prefill": util_p, "decode": util_d}, duration,
+            pool_power_frac={"decode": m.decode_pool_power_frac})
+
+        e_req = energy / n
+        for r, ru, tt, tp in zip(requests, reused.tolist(), ttft.tolist(),
+                                 tpots.tolist()):
+            r.reused_tokens = ru
+            r.ttft = tt
+            r.tpot = tp
+            r.energy_kwh = e_req
+
+        ci_avg = float(np.mean([ci_fn(float(a)) for a in arrival])) \
+            if n <= 64 else _mean_ci(ci_fn, arrival)
+        op = self.carbon.operational_g(energy, ci_avg)
+        emb_cache = self.carbon.cache_embodied_g(cache_tb, duration)
+        emb_comp = self.carbon.compute_embodied_g(duration,
+                                                  types=plan.all_types)
+        util = (Kp * util_p + Kd * util_d) / (Kp + Kd)
+        return SimResult(
+            ttft=ttft if record else np.array([]),
+            tpot=tpots if record else np.array([]),
+            energy_kwh=energy, duration_s=duration,
+            carbon_g=op + emb_cache + emb_comp, operational_g=op,
+            embodied_cache_g=emb_cache, embodied_compute_g=emb_comp,
+            token_hit_rate=hit_tokens / max(lookup_tokens, 1),
+            gpu_util=util, num_requests=n, n_replicas=Kp + Kd)
+
+
 def _mean_ci(ci_fn: Callable[[float], float], arrival: np.ndarray) -> float:
     """Average CI over arrivals, sampled sparsely: CI traces are hourly
     piecewise-constant, so ~64 evenly spaced probes suffice and avoid n
@@ -514,25 +762,52 @@ def _mean_ci(ci_fn: Callable[[float], float], arrival: np.ndarray) -> float:
 
 
 def make_cluster(model: ServingModel, carbon: CarbonModel, *,
-                 cache_tb: float, policy: Callable, n_replicas: int = 1,
-                 router: Optional[str] = None, partitioned: bool = False,
+                 cache_tb: Optional[float] = None, policy: Callable,
+                 n_replicas: int = 1, router: Optional[str] = None,
+                 partitioned: bool = False,
                  types: Optional[Sequence[str]] = None,
-                 balance_eps: Optional[float] = 0.15) -> ClusterEngine:
+                 balance_eps: Optional[float] = 0.15,
+                 plan: Optional[ResourcePlan] = None) -> ClusterEngine:
     """Convenience constructor: builds the store(s) for a cluster-total
-    ``cache_tb`` allocation (partitioned mode splits it evenly). ``types``
-    selects a heterogeneous fleet (one ``ReplicaType`` name per replica,
-    overriding ``n_replicas``)."""
+    ``cache_tb`` allocation (partitioned mode splits it evenly).
+
+    ``plan`` is the preferred entry point — a ``ResourcePlan`` carrying
+    the cache size, pool fleet(s) and routing knobs (a disaggregated plan
+    yields a ``DisaggEngine``). The remaining kwargs are the pre-plan
+    spelling: ``types`` selects a heterogeneous fleet (one
+    ``ReplicaType`` name per replica, overriding ``n_replicas``)."""
+    if plan is not None:
+        pre = plan.prefill
+        if plan.cache_tb is None:
+            raise ValueError("make_cluster needs a sized plan "
+                             "(plan.with_cache(...))")
+        cache_tb = plan.cache_tb
+        n_replicas = pre.n_replicas
+        types = pre.fleet
+        router = pre.router if router is None else router
+        partitioned = pre.partitioned
+        balance_eps = pre.resolved_eps
+    elif cache_tb is None:
+        raise ValueError("make_cluster needs cache_tb (or a sized plan)")
     if types is not None:
         n_replicas = len(types)
     if router is None:
         router = "single" if n_replicas == 1 else "cache_affinity"
     if partitioned and n_replicas > 1:
         per = cache_tb * 1e12 / n_replicas
-        stores = [KVStore(per, policy, model.kv_bytes_per_token)
-                  for _ in range(n_replicas)]
-        return ClusterEngine(model, stores, carbon, router=router,
-                             types=types, balance_eps=balance_eps)
-    store = KVStore(cache_tb * 1e12, policy, model.kv_bytes_per_token)
-    return ClusterEngine(model, store, carbon, n_replicas=n_replicas,
+        stores: Union[KVStore, List[KVStore]] = [
+            KVStore(per, policy, model.kv_bytes_per_token)
+            for _ in range(n_replicas)]
+    else:
+        stores = KVStore(cache_tb * 1e12, policy, model.kv_bytes_per_token)
+    if plan is not None and plan.is_disaggregated:
+        if router is not None and router != plan.prefill.router:
+            # honor an explicit router kwarg, as the fused branch does
+            import dataclasses
+            plan = dataclasses.replace(plan, pools=tuple(
+                dataclasses.replace(p, router=router)
+                if p.role == "prefill" else p for p in plan.pools))
+        return DisaggEngine(model, stores, carbon, plan)
+    return ClusterEngine(model, stores, carbon, n_replicas=n_replicas,
                          router=router, types=types,
                          balance_eps=balance_eps)

@@ -17,8 +17,16 @@ the serving engine drives real JAX models (real-execution mode).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
 
 from repro.configs import get_config
+
+
+# decode-overload grace band (see ServingModel.overload_tpot): demand may
+# exceed max_batch by this factor before the queue-growth penalty engages
+OVERLOAD_GRACE = 1.8
 
 
 @dataclass(frozen=True)
@@ -40,8 +48,47 @@ class ServingModel:
     ssd_read_gbps: float           # KV-cache load bandwidth
     max_batch: int
     max_cache_tb: float
+    # prefill->decode pool interconnect (disaggregated plans): effective
+    # point-to-point KV-handoff bandwidth, e.g. 2x200G IB / NVLink-network
+    # class links land at ~25 GB/s per stream
+    kv_transfer_gbps: float = 25.0
+    # dedicated decode pools run power-capped: decode is HBM-bandwidth
+    # bound, so dropping core clocks to ~60 % of TDP costs little TPOT
+    # (the DynamoLLM/EcoServe energy lever); fused servers cannot cap —
+    # they interleave compute-bound prefill on the same accelerators
+    decode_pool_power_frac: float = 0.6
     gpu_util_prefill: float = 0.12
     gpu_util_decode: float = 0.50
+
+    def decode_fixed_point(self, lam: float, out_mean: float,
+                           dec_slow: float = 1.0,
+                           interference_util: float = 0.0
+                           ) -> Tuple[float, float]:
+        """Continuous-batching decode equilibrium: TPOT and batch size at
+        per-replica arrival rate ``lam`` (req/s) with mean output length
+        ``out_mean``, fleet slowdown ``dec_slow`` (mean inverse
+        perf_scale) and prefill-interference utilization (0 on a
+        dedicated decode pool), followed by the overload penalty. The
+        single shared implementation keeps the seed engine, both cluster
+        engines and the solver's analytic decode attainment in exact
+        agreement (``x * 1.0`` is exact, so degenerate factors preserve
+        bit parity)."""
+        tpot = self.decode_base_s
+        for _ in range(8):
+            batch = np.clip(lam * out_mean * tpot, 1.0, self.max_batch)
+            tpot = self.decode_step_time(batch) * dec_slow \
+                * (1.0 + self.decode_interference * interference_util)
+        return self.overload_tpot(tpot, lam * out_mean * tpot), batch
+
+    def overload_tpot(self, tpot: float, demand_batch: float) -> float:
+        """Decode-overload penalty: once the arrival token rate wants a
+        batch beyond ``OVERLOAD_GRACE x max_batch``, the decode queue
+        grows without bound and effective TPOT inflates quadratically in
+        the overload ratio (mirroring the solver's saturation penalty).
+        The grace band absorbs the transient clipping the fixed point
+        already tolerates at profiled operating points."""
+        ratio = demand_batch / (OVERLOAD_GRACE * self.max_batch)
+        return tpot * ratio * ratio if ratio > 1.0 else tpot
 
     def prefill_time(self, uncached_tokens: int, reused_tokens: int) -> float:
         load = reused_tokens * self.kv_bytes_per_token / (self.ssd_read_gbps

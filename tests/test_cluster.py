@@ -172,17 +172,49 @@ def test_hash_ring_stability_and_balance():
 
 
 def test_set_replicas_rescales_shared_cluster():
+    """The deprecated shim still rescales (under a warning)."""
     store = KVStore(4e12, POLICIES["lcs_chat"], M.kv_bytes_per_token)
     eng = ClusterEngine(M, store, CM, n_replicas=2, router="round_robin")
-    eng.set_replicas(4)
+    with pytest.deprecated_call():
+        eng.set_replicas(4)
     assert eng.n_replicas == 4
-    eng.set_replicas(1)
+    with pytest.deprecated_call():
+        eng.set_replicas(1)
     assert eng.n_replicas == 1
     stores = [KVStore(1e12, POLICIES["lcs_chat"], M.kv_bytes_per_token)
               for _ in range(2)]
     part = ClusterEngine(M, stores, CM, router="cache_affinity")
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError), pytest.deprecated_call():
         part.set_replicas(3)
+
+
+def test_apply_plan_rescales_shared_cluster():
+    from repro.core.plan import ResourcePlan
+    store = KVStore(4e12, POLICIES["lcs_chat"], M.kv_bytes_per_token)
+    eng = ClusterEngine(M, store, CM, n_replicas=2, router="round_robin")
+    eng.apply(ResourcePlan.single(2.0, n_replicas=4))
+    assert eng.n_replicas == 4 and eng.types == ["l40"] * 4
+    assert store.capacity_bytes == 2e12
+    with pytest.raises(ValueError):     # topology is fixed per engine
+        eng.apply(ResourcePlan.parse("cache=2tb prefill=h100:1 "
+                                     "decode=a100:1"))
+    with pytest.raises(ValueError):     # routers fixed at construction
+        eng.apply(ResourcePlan.single(2.0, n_replicas=4,
+                                      router="least_loaded"))
+    stores = [KVStore(1e12, POLICIES["lcs_chat"], M.kv_bytes_per_token)
+              for _ in range(2)]
+    part = ClusterEngine(M, stores, CM, router="cache_affinity")
+    with pytest.raises(ValueError):     # partitioned stores cannot rescale
+        part.apply(ResourcePlan.single(2.0, n_replicas=3,
+                                       router="cache_affinity"))
+    with pytest.raises(ValueError):     # topology mismatch: shared plan
+        part.apply(ResourcePlan.single(4.0, fleet=["l40", "l40"],
+                                       router="cache_affinity"))
+    # same-size partitioned plans may still resize the allocation
+    part.apply(ResourcePlan.single(4.0, fleet=["l40", "l40"],
+                                   router="cache_affinity",
+                                   partitioned=True))
+    assert all(st.capacity_bytes == 2e12 for st in part.stores)
 
 
 # ------------------------------------------------------------------ #

@@ -139,25 +139,43 @@ def test_mixed_fleet_energy_between_homogeneous():
     assert p(lo) < p(mix) < p(hi)
 
 
-def test_set_fleet_applies_mix_and_guards():
+def test_apply_plan_mix_and_guards():
+    from repro.core.plan import ResourcePlan
     store = KVStore(4e12, POLICIES["lcs_chat"], M.kv_bytes_per_token)
     eng = ClusterEngine(M, store, CM, types=["a100", "h100"],
                         router="round_robin")
     assert eng.n_replicas == 2
-    eng.set_fleet(["a100", "a100", "h100"])
+    eng.apply(ResourcePlan.single(None, fleet=["a100", "a100", "h100"],
+                                  router="round_robin"))
     assert eng.n_replicas == 3 and eng.types == ["a100", "a100", "h100"]
+    assert store.capacity_bytes == 4e12            # open plan: no resize
     with pytest.raises(ValueError):
-        eng.set_replicas(2)                        # typed: must use set_fleet
-    with pytest.raises(ValueError):
-        eng.set_fleet([])
+        ResourcePlan.single(None, fleet=[])
     with pytest.raises(KeyError):
-        eng.set_fleet(["z9000"])
-    # untyped cluster rejects neither set_replicas nor a fresh fleet
+        ResourcePlan.single(None, fleet=["z9000"])
+    # untyped cluster accepts a typed plan (bit-identical for all-l40)
     eng2 = ClusterEngine(M, KVStore(1e12, POLICIES["lcs_chat"],
                                     M.kv_bytes_per_token), CM,
                          n_replicas=2, router="round_robin")
-    eng2.set_fleet(["l40"])
+    eng2.apply(ResourcePlan.single(None, fleet=["l40"],
+                                   router="round_robin"))
     assert eng2.n_replicas == 1 and eng2.types == ["l40"]
+
+
+def test_set_fleet_shim_warns_and_guards():
+    """The deprecated set_fleet/set_replicas shims keep their guards."""
+    store = KVStore(4e12, POLICIES["lcs_chat"], M.kv_bytes_per_token)
+    eng = ClusterEngine(M, store, CM, types=["a100", "h100"],
+                        router="round_robin")
+    with pytest.deprecated_call():
+        eng.set_fleet(["a100", "a100", "h100"])
+    assert eng.n_replicas == 3 and eng.types == ["a100", "a100", "h100"]
+    with pytest.raises(ValueError), pytest.deprecated_call():
+        eng.set_replicas(2)                        # typed: must use apply
+    with pytest.raises(ValueError), pytest.deprecated_call():
+        eng.set_fleet([])
+    with pytest.raises(KeyError), pytest.deprecated_call():
+        eng.set_fleet(["z9000"])
 
 
 def test_balance_eps_knob_trades_hits_for_balance():

@@ -1,0 +1,553 @@
+"""ResourcePlan API: round-trips, legacy-shim parity, single-pool
+bit-reproduction of the pre-plan engine, the disaggregated engine's
+physics (KV handoff, interference removal, decode overload, pool
+pricing), the plan-returning solver, and the vectorized workload
+samplers."""
+import copy
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.carbon import CarbonModel
+from repro.core.controller import GreenCacheController
+from repro.core.kvstore import KVStore
+from repro.core.plan import (PoolSpec, ResourcePlan, enumerate_plans,
+                             normalize_replicas)
+from repro.core.policies import POLICIES
+from repro.core.profiler import Profile, ProfileCell
+from repro.core.solver import (_fleet_cell_metrics, enumerate_fleets,
+                               solve_cluster_schedule)
+from repro.serving.cluster import ClusterEngine, DisaggEngine, make_cluster
+from repro.serving.perfmodel import SERVING_MODELS, SLO
+from repro.workloads.conversations import ConversationWorkload
+from repro.workloads.documents import DocumentWorkload
+from repro.workloads.traces import make_poisson_arrivals
+
+M = SERVING_MODELS["llama3-70b"]
+CM = CarbonModel()
+
+
+# ------------------------------------------------------------------ #
+# round-trips and normalization
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("spec", [
+    "cache=4tb fleet=l40:2",
+    "cache=auto fleet=a100:2,l40:4 router=cache_affinity",
+    "cache=2.5tb prefill=h100:2 decode=a100:3",
+    "cache=auto prefill=h100:1 decode=a100:1 router=round_robin "
+    "eps=none partitioned",
+    "cache=0tb fleet=h100:1 eps=0.05",
+])
+def test_plan_string_round_trip(spec):
+    plan = ResourcePlan.parse(spec)
+    assert ResourcePlan.parse(str(plan)) == plan
+    assert ResourcePlan.from_json(plan.to_json()) == plan
+
+
+def test_plan_accessors_and_validation():
+    p = ResourcePlan.parse("cache=4tb prefill=h100:2 decode=a100:3")
+    assert p.is_disaggregated
+    assert p.prefill.fleet == ("h100",) * 2
+    assert p.decode.fleet == ("a100",) * 3
+    assert p.n_replicas == 5
+    assert p.capacity == pytest.approx(2 * 2.4 + 3 * 1.4)
+    assert p.with_cache(8).cache_tb == 8.0 and p.cache_tb == 4.0
+    s = ResourcePlan.single(None, fleet="a100:2")
+    assert not s.is_disaggregated and s.fleet == ("a100", "a100")
+    assert s.prefill is s.decode is s.serve     # fused: one pool, all roles
+    with pytest.raises(ValueError):
+        ResourcePlan(4.0, (PoolSpec("prefill", ("h100",)),))
+    with pytest.raises(ValueError):
+        ResourcePlan.parse("cache=4tb")
+    with pytest.raises(ValueError):
+        ResourcePlan.parse("cache=4tb fleet=l40 bogus=1")
+    with pytest.raises(KeyError):
+        ResourcePlan.parse("cache=4tb fleet=rtx4090:2")
+    with pytest.raises(ValueError):
+        ResourcePlan.single(2.0, fleet="l40", n_replicas=2)
+
+
+def test_normalize_replicas():
+    """The one place the int-vs-list n_replicas sloppiness is resolved."""
+    assert normalize_replicas(None) == [1]
+    assert normalize_replicas(3) == [3]
+    assert normalize_replicas([3]) == [3]
+    assert normalize_replicas([4, 2, 2, 1]) == [1, 2, 4]
+    with pytest.raises(ValueError):
+        normalize_replicas(0)
+    with pytest.raises(ValueError):
+        normalize_replicas([])
+
+
+def test_serve_cli_replicas_normalized_in_plan_construction():
+    """`--replicas 3` (list) and the scalar spelling build identical
+    candidate plans — the historical int-vs-list inconsistency."""
+    from argparse import Namespace
+    from repro.launch.serve import build_plans
+
+    def args(**kw):
+        base = dict(plan=None, prefill_fleet=None, decode_fleet=None,
+                    fleet=None, replicas=None, router=None,
+                    balance_eps=None)
+        base.update(kw)
+        return Namespace(**base)
+
+    with pytest.deprecated_call():
+        a = build_plans(args(replicas=3))
+    with pytest.deprecated_call():
+        b = build_plans(args(replicas=[3]))
+    assert a == b == [ResourcePlan.single(None, n_replicas=3)]
+    assert build_plans(args()) == [ResourcePlan.single(None, n_replicas=1)]
+    plans = build_plans(args(prefill_fleet=["h100:1", "h100:2"],
+                             decode_fleet=["a100:2"]))
+    assert len(plans) == 2 and all(p.is_disaggregated for p in plans)
+
+
+def test_serve_cli_balance_eps_overrides_plan_strings():
+    """An explicit --balance-eps reaches --plan candidates (and a
+    negative value disables spill); without the flag the plan string's
+    eps survives."""
+    from argparse import Namespace
+    from repro.launch.serve import build_plans
+
+    def args(**kw):
+        base = dict(plan=None, prefill_fleet=None, decode_fleet=None,
+                    fleet=None, replicas=None, router=None,
+                    balance_eps=None)
+        base.update(kw)
+        return Namespace(**base)
+
+    spec = ["cache=auto fleet=l40:2 eps=0.3"]
+    assert build_plans(args(plan=spec))[0].serve.balance_eps == 0.3
+    assert build_plans(args(plan=spec,
+                            balance_eps=0.05))[0].serve.balance_eps == 0.05
+    assert build_plans(args(plan=spec,
+                            balance_eps=-1.0))[0].serve.balance_eps is None
+    dis = build_plans(args(plan=["cache=auto prefill=h100:1 decode=a100:1"],
+                           balance_eps=0.07))[0]
+    assert dis.prefill.balance_eps == 0.07
+    assert dis.decode.resolved_eps == 0.15  # decode pool: eps untouched
+
+
+def test_controller_balance_eps_precedence():
+    """Explicit kwarg beats the candidates' pool eps; otherwise the
+    plans' value is adopted — and apply() pushes it into the engine."""
+    prof = synth_profile(sizes=(0, 4), out_tokens=500.0)
+    base = dict(policy="lcs_chat", warm_requests=500,
+                max_requests_per_hour=100)
+    ctl = GreenCacheController(M, prof, CM, "conversation",
+                               plans=["cache=auto fleet=l40:2 eps=0.3"],
+                               **base)
+    assert ctl.balance_eps == 0.3           # plans win when kwarg unset
+    ctl2 = GreenCacheController(M, prof, CM, "conversation",
+                                plans=["cache=auto fleet=l40:2 eps=0.3"],
+                                balance_eps=0.05, **base)
+    assert ctl2.balance_eps == 0.05         # explicit kwarg wins
+    ctl3 = GreenCacheController(M, prof, CM, "conversation",
+                                plans=["cache=auto fleet=l40:2"],
+                                balance_eps=None, **base)
+    assert ctl3.balance_eps is None         # explicit disable sticks
+
+
+def test_apply_adopts_plan_balance_eps():
+    store = KVStore(4e12, POLICIES["lcs_chat"], M.kv_bytes_per_token)
+    eng = ClusterEngine(M, store, CM, n_replicas=2,
+                        router="cache_affinity", balance_eps=0.15)
+    eng.apply(ResourcePlan.parse("cache=4tb fleet=l40:2 eps=none"))
+    assert eng.balance_eps is None
+    # a plan that does not mention eps leaves the engine's value alone
+    eng.apply(ResourcePlan.parse("cache=4tb fleet=l40:2"))
+    assert eng.balance_eps is None
+    eng.apply(ResourcePlan.parse("cache=4tb fleet=l40:2 eps=0.05"))
+    assert eng.balance_eps == 0.05
+
+
+def test_enumerate_plans_cross_product():
+    plans = enumerate_plans(enumerate_fleets(["h100"], 2),
+                            enumerate_fleets(["a100"], 2))
+    assert len(plans) == 4
+    assert all(p.is_disaggregated and p.cache_tb is None for p in plans)
+
+
+# ------------------------------------------------------------------ #
+# plan pricing on CarbonModel
+# ------------------------------------------------------------------ #
+def test_plan_pricing_matches_manual_sums():
+    plan = ResourcePlan.parse("cache=4tb prefill=h100:2 decode=a100:3")
+    secs = 3600.0
+    assert CM.plan_embodied_g(plan, secs) == pytest.approx(
+        CM.cache_embodied_g(4.0, secs)
+        + CM.compute_embodied_g(secs, types=plan.all_types))
+    assert CM.plan_energy_kwh(plan, 0.3, secs) == pytest.approx(
+        CM.energy_kwh(0.3, secs, ssd_tb=4.0, types=plan.all_types))
+    split = CM.plan_energy_kwh(plan, {"prefill": 0.1, "decode": 0.5}, secs)
+    assert split == pytest.approx(
+        CM.energy_kwh(0.0, secs, ssd_tb=4.0, types=[])
+        + CM.energy_kwh(0.1, secs, types=("h100",) * 2)
+        + CM.energy_kwh(0.5, secs, types=("a100",) * 3))
+    capped = CM.plan_energy_kwh(plan, {"prefill": 0.1, "decode": 0.5},
+                                secs, pool_power_frac={"decode": 0.6})
+    assert capped < split          # power-capped decode pool draws less
+    # scalar util + caps routes through the per-pool path (not dropped)
+    assert CM.plan_energy_kwh(plan, 0.3, secs,
+                              pool_power_frac={"decode": 0.6}) \
+        < CM.plan_energy_kwh(plan, 0.3, secs)
+
+
+# ------------------------------------------------------------------ #
+# engine: bit-reproduction and disaggregated physics
+# ------------------------------------------------------------------ #
+def make_requests(n=9000, rate=2.4, seed=1, load_scale=3.0, reply=500.0):
+    wl = ConversationWorkload(seed=seed, load_scale=load_scale,
+                              mean_reply_tokens=reply)
+    arr = make_poisson_arrivals(np.full(48, rate), seed=seed + 1,
+                                max_requests=n)
+    return [wl.sample(t) for t in arr]
+
+
+def run_eng(eng, reqs, cache_tb=4.0, warm=4000):
+    rs = [copy.copy(r) for r in reqs]
+    eng.warm(rs[:warm])
+    res = eng.run(rs[warm:], ci_fn=lambda t: 80.0, cache_tb=cache_tb)
+    return res, eng.stores[0]
+
+
+@pytest.mark.parametrize("router,n", [("cache_affinity", 3),
+                                      ("round_robin", 2)])
+def test_all_l40_plan_bit_reproduces_untyped_engine(router, n):
+    """The acceptance anchor: a single-pool all-l40 plan applied through
+    ``apply`` bit-reproduces the pre-plan untyped engine's hit/eviction
+    stats and TTFT sequence."""
+    reqs = make_requests()
+    legacy = ClusterEngine(M, KVStore(4e12, POLICIES["lcs_chat"],
+                                      M.kv_bytes_per_token), CM,
+                           n_replicas=n, router=router)
+    planned = ClusterEngine(M, KVStore(4e12, POLICIES["lcs_chat"],
+                                       M.kv_bytes_per_token), CM,
+                            n_replicas=n, router=router)
+    planned.apply(ResourcePlan.single(4.0, n_replicas=n, router=router))
+    a, sa = run_eng(legacy, reqs)
+    b, sb = run_eng(planned, reqs)
+    assert np.array_equal(a.ttft, b.ttft)
+    assert sa.stats == sb.stats
+    assert a.energy_kwh == b.energy_kwh
+    assert a.token_hit_rate == b.token_hit_rate
+
+
+def _disagg(plan_str, cache=4.0):
+    plan = ResourcePlan.parse(plan_str).with_cache(cache)
+    return make_cluster(M, CM, policy=POLICIES["lcs_chat"], plan=plan)
+
+
+def test_disagg_kv_transfer_gates_first_token():
+    """Same prefill pool fused vs disaggregated: identical queueing and
+    cache trajectory; the disaggregated TTFT adds exactly the per-token
+    KV handoff to the decode pool."""
+    reqs = make_requests(rate=2.0)
+    fused = ClusterEngine(M, KVStore(4e12, POLICIES["lcs_chat"],
+                                     M.kv_bytes_per_token), CM,
+                          types=["h100", "h100"], router="round_robin")
+    disagg = _disagg("cache=4tb prefill=h100:2 decode=a100:2 "
+                     "router=round_robin")
+    a, sa = run_eng(fused, reqs)
+    b, sb = run_eng(disagg, reqs)
+    assert sa.stats == sb.stats                      # same cache behaviour
+    prompts = np.array([r.prompt_tokens for r in reqs[4000:]])
+    xfer = prompts * M.kv_bytes_per_token / (M.kv_transfer_gbps * 1e9)
+    assert np.allclose(b.ttft - a.ttft, xfer)
+    assert b.n_replicas == 4                         # both pools counted
+
+
+def test_disagg_decode_pool_drops_interference():
+    """Under prefill load the fused engine inflates TPOT by
+    decode_interference; a dedicated decode pool does not."""
+    reqs = make_requests(rate=2.6)
+    fused = ClusterEngine(M, KVStore(4e12, POLICIES["lcs_chat"],
+                                     M.kv_bytes_per_token), CM,
+                          types=["h100", "h100"], router="round_robin")
+    disagg = _disagg("cache=4tb prefill=h100:2 decode=h100:2 "
+                     "router=round_robin")
+    a, _ = run_eng(fused, reqs)
+    b, _ = run_eng(disagg, reqs)
+    assert b.tpot.mean() < a.tpot.mean()
+
+
+def test_disagg_decode_overload_penalizes_undersized_pool():
+    """Decode-heavy traffic on a one-replica decode pool blows the TPOT
+    SLO; a sized pool keeps it."""
+    slo = SLO(2.5, 0.2)
+    reqs = make_requests(rate=3.0, reply=1600.0, load_scale=4.0)
+    small, _ = run_eng(_disagg("cache=4tb prefill=h100:2 decode=a100:1"),
+                       reqs)
+    sized, _ = run_eng(_disagg("cache=4tb prefill=h100:2 decode=a100:3"),
+                       reqs)
+    assert sized.slo_attainment(slo, "tpot") > 0.9
+    assert small.slo_attainment(slo, "tpot") < 0.5
+    assert small.tpot.mean() > sized.tpot.mean() * 2
+
+
+def test_disagg_energy_prices_pools_separately():
+    """The decode pool is power-capped and the prefill pool runs at its
+    compute-bound utilization: disaggregated energy must undercut the
+    same hardware fused (which burns blended utilization on every
+    server) on a decode-heavy stream."""
+    reqs = make_requests(rate=2.6, reply=1600.0, load_scale=4.0)
+    fused = ClusterEngine(M, KVStore(4e12, POLICIES["lcs_chat"],
+                                     M.kv_bytes_per_token), CM,
+                          types=["h100", "h100", "a100", "a100"],
+                          router="round_robin")
+    disagg = _disagg("cache=4tb prefill=h100:2 decode=a100:2 "
+                     "router=round_robin")
+    a, _ = run_eng(fused, reqs)
+    b, _ = run_eng(disagg, reqs)
+    assert b.energy_kwh < a.energy_kwh
+    # same hardware either way: embodied matches up to the small window-
+    # duration difference (4 prefill replicas fused vs 2 disaggregated)
+    assert b.embodied_compute_g == pytest.approx(a.embodied_compute_g,
+                                                 rel=1e-3)
+
+
+def test_make_cluster_honors_router_kwarg_for_disagg_plans():
+    plan = ResourcePlan.parse("cache=4tb prefill=h100:2 decode=a100:1")
+    eng = make_cluster(M, CM, policy=POLICIES["lcs_chat"], plan=plan,
+                       router="round_robin")
+    assert eng.router == "round_robin"
+    auto = make_cluster(M, CM, policy=POLICIES["lcs_chat"], plan=plan)
+    assert auto.router == "cache_affinity"   # >1 prefill replica default
+
+
+def test_disagg_apply_reshapes_both_pools():
+    eng = _disagg("cache=4tb prefill=h100:1 decode=a100:1")
+    eng.apply(ResourcePlan.parse("cache=2tb prefill=h100:2 decode=a100:3"))
+    assert eng.types == ["h100", "h100"]
+    assert eng.decode_types == ["a100", "a100", "a100"]
+    assert eng.total_replicas == 5
+    assert eng.stores[0].capacity_bytes == 2e12
+    # empty streams report the same both-pools replica count
+    empty = eng.run([], ci_fn=lambda t: 0.0, cache_tb=2.0)
+    assert empty.n_replicas == 5
+    with pytest.raises(ValueError):
+        eng.apply(ResourcePlan.single(2.0, fleet="h100:2"))
+
+
+# ------------------------------------------------------------------ #
+# solver: plans in, plans out
+# ------------------------------------------------------------------ #
+def synth_profile(sizes=(0, 4, 8), rates=(0.5, 1.0, 1.5, 2.0, 3.0, 4.0),
+                  out_tokens=1500.0):
+    prof = Profile("m", "t", rates=list(rates), sizes=list(sizes))
+    for r in rates:
+        for s in sizes:
+            slo = float(np.clip(1.25 - 0.3 * r + 0.02 * s, 0.0, 1.0))
+            prof.cells[(r, s)] = ProfileCell(
+                rate=r, cache_tb=s, avg_ttft=0.5 + 0.5 * r, p90_ttft=1 + r,
+                avg_tpot=0.05, p90_tpot=0.08, slo_frac=slo,
+                hit_rate=min(0.1 * s, 0.8),
+                energy_per_req_kwh=2e-4 * (1 + 1 / max(r, 0.1)),
+                duration_per_req_s=1.0 / max(r, 0.1), avg_power_w=800.0,
+                slo_ttft_frac=min(slo * 1.05, 1.0),
+                slo_tpot_frac=min(slo * 1.1, 1.0),
+                avg_out_tokens=out_tokens)
+    return prof
+
+
+def test_solver_returns_sized_plans_every_mode():
+    prof = synth_profile()
+    slo = SLO(2.5, 0.2, rho=0.85)
+    rates, cis = [1.0, 2.0], [50.0, 50.0]
+    by_replicas = solve_cluster_schedule(prof, rates, cis, slo, CM,
+                                         sizes_tb=[0, 4, 8],
+                                         replicas=[1, 2], use_ilp=False)
+    by_fleets = solve_cluster_schedule(prof, rates, cis, slo, CM,
+                                       sizes_tb=[0, 4, 8],
+                                       fleets=enumerate_fleets(["a100"], 2),
+                                       use_ilp=False)
+    by_plans = solve_cluster_schedule(
+        prof, rates, cis, slo, CM, sizes_tb=[0, 4, 8],
+        plans=[ResourcePlan.single(None, fleet="a100:2")], use_ilp=False)
+    for res in (by_replicas, by_fleets, by_plans):
+        assert res.plans is not None and len(res.plans) == 2
+        assert all(p.cache_tb == s
+                   for p, s in zip(res.plans, res.sizes_tb))
+    assert all(set(p.fleet) == {"l40"} for p in by_replicas.plans)
+    assert all(p.fleet == ("a100", "a100") for p in by_plans.plans)
+    # a concrete cache_tb in a candidate pins the allocation
+    pinned = solve_cluster_schedule(
+        prof, rates, cis, slo, CM, sizes_tb=[0, 4, 8],
+        plans=[ResourcePlan.single(4.0, fleet="a100:2")], use_ilp=False)
+    assert pinned.sizes_tb == [4.0, 4.0]
+    assert all(p.cache_tb == 4.0 for p in pinned.plans)
+
+
+def test_solver_disagg_search_scales_decode_pool_with_demand():
+    """(cache, prefill, decode) search: decode-heavy demand forces a
+    bigger decode pool at high rate, while the low-rate hours keep the
+    small one."""
+    prof = synth_profile()
+    slo = SLO(2.5, 0.2, rho=0.9)
+    plans = enumerate_plans([("h100", "h100")],
+                            enumerate_fleets(["a100"], 4))
+    res = solve_cluster_schedule(
+        prof, [0.8, 0.8, 3.6, 3.6], [40.0] * 4, slo, CM,
+        sizes_tb=[0, 4, 8], plans=plans, model=M, use_ilp=False)
+    assert res.plans is not None and all(p.is_disaggregated
+                                         for p in res.plans)
+    lo = min(res.plans[:2], key=lambda p: p.decode.capacity)
+    hi = max(res.plans[2:], key=lambda p: p.decode.capacity)
+    assert hi.decode.capacity > lo.decode.capacity
+
+
+def test_fleet_metrics_accept_type_profiles():
+    """Measured per-generation profiles replace the reference rescale:
+    an h100 fleet evaluated past the reference envelope keeps its
+    measured (wider) envelope instead of the saturation penalty."""
+    ref = synth_profile(rates=(0.5, 1.0, 1.5))
+    # the h100 profile is measured on h100 hardware: the same attainment
+    # curve stretched 2.4x along the rate axis (the faster generation
+    # sustains proportionally higher per-replica rates)
+    h100 = Profile("m", "t", rates=[1.2, 2.4, 3.6, 6.0],
+                   sizes=list(ref.sizes))
+    for r in h100.rates:
+        for s in h100.sizes:
+            cell = ref.interpolate(r / 2.4, s)
+            h100.cells[(r, s)] = ProfileCell(
+                **{**{f.name: getattr(cell, f.name)
+                      for f in __import__("dataclasses").fields(cell)},
+                   "rate": r, "cache_tb": s})
+    c_ref, f_ref = _fleet_cell_metrics(ref, 3.0, 4, ("h100",), 50.0, CM)
+    c_tp, f_tp = _fleet_cell_metrics(ref, 3.0, 4, ("h100",), 50.0, CM,
+                                     type_profiles={"h100": h100})
+    # reference rescale saturates (3.0/2.4 = 1.25 < 1.5 is in range, use
+    # a harder point): evaluate past the ref envelope
+    c_ref2, f_ref2 = _fleet_cell_metrics(ref, 5.0, 4, ("h100",), 50.0, CM)
+    c_tp2, f_tp2 = _fleet_cell_metrics(ref, 5.0, 4, ("h100",), 50.0, CM,
+                                       type_profiles={"h100": h100})
+    assert f_tp2 > f_ref2          # measured envelope: no false collapse
+    assert c_tp > 0 and f_tp > 0
+    # absent mapping falls back to the reference path exactly
+    c_none, f_none = _fleet_cell_metrics(ref, 1.0, 4, ("h100",), 50.0, CM,
+                                         type_profiles=None)
+    c_base, f_base = _fleet_cell_metrics(ref, 1.0, 4, ("h100",), 50.0, CM)
+    assert (c_none, f_none) == (c_base, f_base)
+
+
+# ------------------------------------------------------------------ #
+# controller: legacy-kwarg shims produce identical RunResults
+# ------------------------------------------------------------------ #
+def _short_day(ctl_kwargs, hours=4, seed=2):
+    prof = synth_profile(sizes=(0, 4, 8), out_tokens=500.0)
+    ctl = GreenCacheController(M, prof, CM, "conversation",
+                               policy="lcs_chat", warm_requests=2000,
+                               max_requests_per_hour=300, seed=seed,
+                               **ctl_kwargs)
+    rates = np.array([0.8, 1.2, 1.5, 1.0])[:hours]
+    cis = np.array([40.0, 60.0, 80.0, 50.0])[:hours]
+    return ctl.run_day(lambda s: ConversationWorkload(seed=s), rates, cis)
+
+
+def _same_run(a, b):
+    return all(
+        ha.carbon_g == hb.carbon_g and ha.cache_tb == hb.cache_tb
+        and ha.slo_frac == hb.slo_frac and ha.hit_rate == hb.hit_rate
+        and ha.n_replicas == hb.n_replicas
+        for ha, hb in zip(a.hours, b.hours)) and len(a.hours) == len(b.hours)
+
+
+def test_controller_replicas_shim_parity():
+    with pytest.deprecated_call():
+        legacy = _short_day(dict(n_replicas=[1, 2]))
+    plans = _short_day(dict(plans=[ResourcePlan.single(n_replicas=1),
+                                   ResourcePlan.single(n_replicas=2)]))
+    assert _same_run(legacy, plans)
+
+
+def test_controller_fleets_shim_parity():
+    with pytest.deprecated_call():
+        legacy = _short_day(dict(fleets=[["a100"], ["h100"]]))
+    plans = _short_day(dict(plans=["cache=auto fleet=a100:1",
+                                   "cache=auto fleet=h100:1"]))
+    assert _same_run(legacy, plans)
+
+
+def test_controller_rejects_mixed_topologies():
+    with pytest.raises(ValueError):
+        _short_day(dict(plans=["cache=auto fleet=l40:1",
+                               "cache=auto prefill=h100:1 decode=a100:1"]))
+
+
+def test_controller_threads_type_profiles_to_solver():
+    """Typed single-pool candidates with measured per-type profiles run
+    through the fleet solver's per-type interpolation path."""
+    prof = synth_profile(sizes=(0, 4, 8), out_tokens=500.0)
+    res = _short_day(dict(plans=["cache=auto fleet=h100:1",
+                                 "cache=auto fleet=h100:2"],
+                          type_profiles={"h100": prof}))
+    assert len(res.hours) == 4
+    assert all(h.fleet.startswith("h100") for h in res.hours)
+
+
+def test_controller_runs_disagg_day():
+    res = _short_day(dict(plans=["cache=auto prefill=h100:1 decode=a100:1",
+                                 "cache=auto prefill=h100:1 "
+                                 "decode=a100:2"]))
+    assert len(res.hours) == 4
+    assert all("prefill=" in h.plan for h in res.hours)
+    assert res.avg_fleet_capacity > 2.0
+
+
+# ------------------------------------------------------------------ #
+# vectorized workload sampling
+# ------------------------------------------------------------------ #
+def test_sample_batch_deterministic_and_statistically_matched():
+    arr = np.arange(8000, dtype=float)
+    a = ConversationWorkload(seed=3).sample_batch(arr)
+    b = ConversationWorkload(seed=3).sample_batch(arr)
+    assert [(r.context_key, r.context_tokens, r.new_tokens,
+             r.output_tokens) for r in a] == \
+        [(r.context_key, r.context_tokens, r.new_tokens,
+          r.output_tokens) for r in b]
+    wl = ConversationWorkload(seed=3)
+    seq = [wl.sample(float(i)) for i in range(8000)]
+    for field in ("context_tokens", "new_tokens", "output_tokens"):
+        mb = np.mean([getattr(r, field) for r in a])
+        ms = np.mean([getattr(r, field) for r in seq])
+        assert mb == pytest.approx(ms, rel=0.1), field
+
+
+def test_document_sample_batch_matches_and_outruns_scalar():
+    arr = np.arange(6000, dtype=float)
+    t0 = time.perf_counter()
+    batch = DocumentWorkload(seed=4).sample_batch(arr)
+    t_batch = time.perf_counter() - t0
+    wl = DocumentWorkload(seed=4)
+    t0 = time.perf_counter()
+    seq = [wl.sample(float(i)) for i in range(6000)]
+    t_seq = time.perf_counter() - t0
+    # same Zipf skew: top-doc request share within tolerance
+    def top_share(reqs):
+        from collections import Counter
+        return Counter(r.context_key for r in reqs).most_common(1)[0][1] \
+            / len(reqs)
+    assert top_share(batch) == pytest.approx(top_share(seq), rel=0.3)
+    assert np.mean([r.context_tokens for r in batch]) == pytest.approx(
+        np.mean([r.context_tokens for r in seq]), rel=0.1)
+    # one vectorized Zipf draw per batch vs O(num_docs) per request
+    assert t_batch < t_seq / 3, (t_batch, t_seq)
+
+
+def test_sample_many_falls_back_for_custom_workloads():
+    from repro.workloads import sample_many
+
+    class Custom:
+        def __init__(self):
+            self.n = 0
+
+        def sample(self, t):
+            self.n += 1
+            return ("req", t)
+
+    wl = Custom()
+    out = sample_many(wl, [0.0, 1.0, 2.0])
+    assert wl.n == 3 and out[2] == ("req", 2.0)
