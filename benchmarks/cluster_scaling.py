@@ -22,7 +22,7 @@ from repro.serving.engine import ServingEngine
 from repro.serving.cluster import ClusterEngine
 from repro.serving.perfmodel import SERVING_MODELS, SLOS
 
-from benchmarks.common import measure_cell, save_result
+from benchmarks.common import cap_requests, measure_cell, save_result
 
 MODEL = "llama3-70b"
 BASE_RATE = 1.2           # per-replica arrival rate (req/s)
@@ -94,7 +94,9 @@ def run():
                     aff["hit_rate"] - rr["hit_rate"],
                     "cache_affinity - round_robin token hit rate"))
 
-    t_seed, t_clus, res = _speedup_row()
+    t_seed, t_clus, res = _speedup_row(
+        n_requests=cap_requests(24000, 4000),
+        warm=cap_requests(12000, 2000))
     out.append(("cluster/engine_speedup_vs_seed", t_seed / max(t_clus, 1e-9),
                 f"seed {t_seed:.2f}s -> vectorized {t_clus:.2f}s "
                 f"({res.num_requests} reqs)"))

@@ -22,6 +22,11 @@ from repro.workloads.traces import make_poisson_arrivals
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                            "results")
+# smoke mode (``benchmarks.run --smoke`` / GREENCACHE_SMOKE=1): a
+# minutes-scale bit-rot check — tiny grids, short traces, shrunken
+# warmups.  The numbers are NOT meaningful; the CI job only asserts the
+# benchmarks still run end-to-end and produce non-NaN carbon totals.
+SMOKE = os.environ.get("GREENCACHE_SMOKE", "") not in ("", "0")
 GRIDS = ["FR", "FI", "ES", "CISO"]
 # factories accept a load ``scale`` so multi-replica scenarios widen the
 # working set proportionally to the scaled-up request rate
@@ -52,7 +57,31 @@ SIZE_GRID = {"llama3-70b": [0, 1, 2, 4, 8, 12, 16],
              "llama3-8b": [0, 1, 2, 4, 6, 8]}
 WARMUP = {"conversation": 12000, "doc_a04": 6000, "doc_a07": 6000}
 
+if SMOKE:
+    GRIDS = ["FR"]
+    RATE_GRID = {k: v[:2] for k, v in RATE_GRID.items()}
+    SIZE_GRID = {k: [v[0], v[3]] for k, v in SIZE_GRID.items()}
+    WARMUP = {k: 400 for k in WARMUP}
+
 CARBON = CarbonModel()
+
+
+def clip_day(*traces, hours: int = 4):
+    """Smoke mode truncates hourly day traces to a few hours; otherwise
+    the traces pass through unchanged."""
+    out = tuple(t[:hours] for t in traces) if SMOKE else tuple(traces)
+    return out if len(out) > 1 else out[0]
+
+
+def cap_requests(n: int, cap: int = 150) -> int:
+    """Smoke mode caps per-window request counts (simulation volume)."""
+    return min(int(n), cap) if SMOKE else int(n)
+
+
+def profiler_kwargs() -> Dict:
+    """Measurement-window overrides for benchmarks that call
+    ``run_profiler`` directly with their own grids."""
+    return dict(meas_seconds=90.0, ramp_seconds=20.0) if SMOKE else {}
 
 
 def task_name_for_slo(task: str) -> str:
@@ -66,7 +95,8 @@ def get_profile(model_name: str, task: str) -> Profile:
     return run_profiler(
         m, task_name_for_slo(task), t["factory"], CARBON,
         rates=RATE_GRID[(model_name, task)], sizes_tb=SIZE_GRID[model_name],
-        warmup_prompts=WARMUP[task], policy=t["policy"])
+        warmup_prompts=WARMUP[task], policy=t["policy"],
+        **profiler_kwargs())
 
 
 def measure_cell(model_name: str, task: str, *, cache_tb: float = None,
@@ -115,6 +145,9 @@ def measure_cell(model_name: str, task: str, *, cache_tb: float = None,
                            types=types, balance_eps=balance_eps)
     wl = t["factory"](seed, scale=max(scale, 1.0))
     warm = WARMUP[task] if warm is None else warm
+    if SMOKE:
+        warm = min(warm, 400)
+        n_seconds = min(n_seconds, 60.0)
     n_meas = max(int(rate * n_seconds), 150)
     arr = make_poisson_arrivals(np.full(96, rate), seed=seed + 1,
                                 max_requests=warm + n_meas)

@@ -43,7 +43,8 @@ from repro.core.profiler import _slo_for, run_profiler
 from repro.serving.cluster import ClusterEngine
 from repro.serving.perfmodel import SERVING_MODELS
 
-from benchmarks.common import save_result
+from benchmarks.common import (SMOKE, cap_requests, clip_day,
+                               profiler_kwargs, save_result)
 
 MODEL = "llama3-70b"
 TASK = "conversation"
@@ -79,8 +80,10 @@ def _profile():
     if "p" not in _CACHE:
         _CACHE["p"] = run_profiler(
             SERVING_MODELS[MODEL], TASK, _workload, CarbonModel(),
-            rates=RATES, sizes_tb=SIZES, warmup_prompts=8000,
-            policy="lcs_chat")
+            rates=RATES[:2] if SMOKE else RATES,
+            sizes_tb=SIZES[:2] if SMOKE else SIZES,
+            warmup_prompts=cap_requests(8000, 400),
+            policy="lcs_chat", **profiler_kwargs())
     return _CACHE["p"]
 
 
@@ -90,13 +93,14 @@ def _day(plans, seed: int = 11):
     ctl = GreenCacheController(
         SERVING_MODELS[MODEL], _profile(), CarbonModel(), TASK,
         mode="greencache", policy="lcs_chat", plans=plans,
-        warm_requests=8000, seed=seed, max_requests_per_hour=900,
-        sizes_tb=SIZES,
+        warm_requests=cap_requests(8000, 400), seed=seed,
+        max_requests_per_hour=cap_requests(900),
+        sizes_tb=SIZES[:2] if SMOKE else SIZES,
         # the scale-matched profile is already conservative about shared-
         # cache hit rates (see fleet_mix); skip the default safety margin
         rho_margin=0.0)
-    rate_trace = azure_rate_trace(PEAK_RATE, seed=3)
-    cis = ci_trace(GRID, seed=4)
+    rate_trace, cis = clip_day(azure_rate_trace(PEAK_RATE, seed=3),
+                               ci_trace(GRID, seed=4))
     return ctl.run_day(_workload, rate_trace, cis)
 
 
@@ -109,7 +113,7 @@ def _bit_repro() -> bool:
     cm = CarbonModel()
     wl = _workload(5, scale=2.0)
     arr = make_poisson_arrivals(np.full(24, 1.6), seed=6,
-                                max_requests=9000)
+                                max_requests=cap_requests(9000, 2000))
     reqs = [wl.sample(t) for t in arr]
 
     def run(engine):

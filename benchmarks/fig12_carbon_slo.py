@@ -14,7 +14,8 @@ from repro.serving.perfmodel import SERVING_MODELS
 from repro.workloads.traces import azure_rate_trace, ci_trace
 
 from benchmarks.common import (CARBON, GRIDS, RATE_GRID, TASKS, WARMUP,
-                               get_profile, save_result, task_name_for_slo)
+                               cap_requests, clip_day, get_profile,
+                               save_result, task_name_for_slo)
 
 MODES = ["none", "full", "greencache"]
 # compact cluster slice: co-decide (cache, replicas) at 3x load, FR grid
@@ -31,12 +32,12 @@ def run_one(model_name: str, task: str, grid: str, mode: str, seed=3,
     peak = RATE_GRID[(model_name, task)][-1]
     counts = normalize_replicas(n_replicas)
     scale = float(max(counts))
-    rates = azure_rate_trace(peak * scale, seed=seed)
-    cis = ci_trace(grid, seed=seed + 1)
+    rates, cis = clip_day(azure_rate_trace(peak * scale, seed=seed),
+                          ci_trace(grid, seed=seed + 1))
     ctl = GreenCacheController(
         m, prof, CARBON, task_name_for_slo(task), mode=mode,
         policy=TASKS[task]["policy"], warm_requests=WARMUP[task],
-        max_requests_per_hour=int(1500 * scale),
+        max_requests_per_hour=cap_requests(1500 * scale),
         plans=[ResourcePlan.single(None, n_replicas=k, router=router)
                for k in counts])
     res = ctl.run_day(lambda s: TASKS[task]["factory"](s, scale=scale),

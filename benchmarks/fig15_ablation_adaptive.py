@@ -10,8 +10,9 @@ from repro.core.controller import GreenCacheController
 from repro.serving.perfmodel import SERVING_MODELS
 from repro.workloads.traces import azure_rate_trace
 
-from benchmarks.common import (CARBON, TASKS, WARMUP, get_profile,
-                               save_result, task_name_for_slo)
+from benchmarks.common import (CARBON, TASKS, WARMUP, cap_requests,
+                               clip_day, get_profile, save_result,
+                               task_name_for_slo)
 
 
 def run():
@@ -21,8 +22,8 @@ def run():
                          ("doc_a04", [0.15, 0.3, 0.5])]:
         prof = get_profile("llama3-70b", task)
         for rate in rates_:
-            flat = np.full(12, rate)
-            cis = np.full(12, GRID_CI["ES"])
+            flat, cis = clip_day(np.full(12, rate),
+                                 np.full(12, GRID_CI["ES"]))
             res = {}
             for mode, policy in [("full", TASKS[task]["policy"]),
                                  ("lru_optimal", "lru"),
@@ -30,7 +31,8 @@ def run():
                 ctl = GreenCacheController(
                     m, prof, CARBON, task_name_for_slo(task), mode="full"
                     if mode == "full" else "greencache", policy=policy,
-                    warm_requests=WARMUP[task], max_requests_per_hour=1000)
+                    warm_requests=WARMUP[task],
+                    max_requests_per_hour=cap_requests(1000))
                 r = ctl.run_day(TASKS[task]["factory"], flat, cis)
                 res[mode] = r.carbon_per_request_g
             rows.append({

@@ -9,7 +9,7 @@ from repro.core.carbon import GRID_CI
 from repro.core.solver import solve_cache_schedule
 from repro.serving.perfmodel import SLOS
 
-from benchmarks.common import CARBON, get_profile, save_result
+from benchmarks.common import SMOKE, CARBON, get_profile, save_result
 
 
 def run():
@@ -18,7 +18,7 @@ def run():
     rng = np.random.default_rng(0)
     times = {"cbc": [], "dp": []}
     objs = {"cbc": [], "dp": []}
-    for trial in range(10):
+    for trial in range(2 if SMOKE else 10):
         rates = rng.uniform(0.2, 1.6, 24)
         cis = rng.uniform(30, 300, 24)
         for use_ilp, name in [(True, "cbc"), (False, "dp")]:

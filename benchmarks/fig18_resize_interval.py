@@ -7,8 +7,8 @@ from repro.core.controller import GreenCacheController
 from repro.serving.perfmodel import SERVING_MODELS
 from repro.workloads.traces import azure_rate_trace, ci_trace
 
-from benchmarks.common import (CARBON, TASKS, WARMUP, get_profile,
-                               save_result)
+from benchmarks.common import (CARBON, TASKS, WARMUP, cap_requests,
+                               clip_day, get_profile, save_result)
 
 INTERVALS = [1, 2, 4, 8]
 
@@ -20,18 +20,19 @@ def run():
     out = []
     rows = []
     for grid in ["FR", "CISO"]:
-        cis = ci_trace(grid, seed=4)
+        day_rates, cis = clip_day(rates, ci_trace(grid, seed=4))
         full = GreenCacheController(
             m, prof, CARBON, "conversation", mode="full",
             policy="lcs_chat", warm_requests=WARMUP["conversation"],
-            max_requests_per_hour=1000).run_day(
-                TASKS["conversation"]["factory"], rates, cis)
+            max_requests_per_hour=cap_requests(1000)).run_day(
+                TASKS["conversation"]["factory"], day_rates, cis)
         for iv in INTERVALS:
             gc = GreenCacheController(
                 m, prof, CARBON, "conversation", mode="greencache",
                 policy="lcs_chat", warm_requests=WARMUP["conversation"],
-                resize_interval_h=iv, max_requests_per_hour=1000).run_day(
-                    TASKS["conversation"]["factory"], rates, cis)
+                resize_interval_h=iv,
+                max_requests_per_hour=cap_requests(1000)).run_day(
+                    TASKS["conversation"]["factory"], day_rates, cis)
             saving = 1 - gc.carbon_per_request_g / full.carbon_per_request_g
             rows.append({"grid": grid, "interval_h": iv, "saving": saving,
                          "avg_cache_tb": gc.avg_cache_tb})

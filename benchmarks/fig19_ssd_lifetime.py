@@ -12,7 +12,8 @@ from repro.core.controller import GreenCacheController
 from repro.core.carbon import CarbonModel
 from repro.serving.perfmodel import SERVING_MODELS
 
-from benchmarks.common import TASKS, WARMUP, get_profile, save_result
+from benchmarks.common import (TASKS, WARMUP, cap_requests, clip_day,
+                               get_profile, save_result)
 
 LIFESPANS = [3.0, 5.0, 7.0]
 
@@ -24,14 +25,14 @@ def run():
     for lt in LIFESPANS:
         cm = CarbonModel(hw=dataclasses.replace(HardwareSpec(),
                                                 ssd_lifetime_years=lt))
-        rates = np.full(12, 1.5)
-        cis = np.full(12, GRID_CI["ES"])
+        rates, cis = clip_day(np.full(12, 1.5),
+                              np.full(12, GRID_CI["ES"]))
         res = {}
         for mode in ["full", "greencache"]:
             ctl = GreenCacheController(
                 m, prof, cm, "conversation", mode=mode, policy="lcs_chat",
                 warm_requests=WARMUP["conversation"],
-                max_requests_per_hour=1000)
+                max_requests_per_hour=cap_requests(1000))
             res[mode] = ctl.run_day(TASKS["conversation"]["factory"],
                                     rates, cis).carbon_per_request_g
         rows.append({"lifetime_y": lt,

@@ -33,6 +33,7 @@ from repro.core.solver import enumerate_fleets
 from repro.serving.perfmodel import SERVING_MODELS
 
 from benchmarks.common import (RATE_GRID, SIZE_GRID, TASKS, WARMUP,
+                               cap_requests, clip_day, profiler_kwargs,
                                save_result)
 
 MODEL = "llama3-70b"
@@ -63,7 +64,8 @@ def _profile():
             SERVING_MODELS[MODEL], TASK,
             lambda s: t["factory"](s, scale=scale), CarbonModel(),
             rates=RATE_GRID[(MODEL, TASK)], sizes_tb=SIZE_GRID[MODEL],
-            warmup_prompts=WARMUP[TASK], policy=t["policy"])
+            warmup_prompts=WARMUP[TASK], policy=t["policy"],
+            **profiler_kwargs())
     return _PROF_CACHE["p"]
 
 
@@ -82,15 +84,16 @@ def _day(grid: str, fleets, seed: int = 11):
         model, prof, carbon, TASK, mode="greencache",
         policy=TASKS[TASK]["policy"],
         plans=[ResourcePlan.single(None, fleet=tuple(f)) for f in fleets],
-        warm_requests=8000, seed=seed, max_requests_per_hour=900,
+        warm_requests=cap_requests(8000, 400), seed=seed,
+        max_requests_per_hour=cap_requests(900),
         # the scale-matched profile is already conservative about shared-
         # cache hit rates (a lone server at rate/cap sees the working set
         # spread thinner than N replicas sharing one store), so the
         # default +0.04 safety margin would double-hedge and buy idle
         # capacity
         rho_margin=0.0)
-    rate_trace = azure_rate_trace(PEAK_RATE * scale, seed=3)
-    cis = ci_trace(grid, seed=4)
+    rate_trace, cis = clip_day(azure_rate_trace(PEAK_RATE * scale, seed=3),
+                               ci_trace(grid, seed=4))
     return ctl.run_day(wf, rate_trace, cis)
 
 

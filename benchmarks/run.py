@@ -3,11 +3,18 @@ Prints ``name,value,derived`` CSV rows (value column doubles as
 us_per_call for the *_bench_time rows) and saves JSON payloads under
 experiments/results/.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig8,table3]
+    PYTHONPATH=src python -m benchmarks.run [--only fig8,table3] [--smoke]
+
+``--smoke`` (CI's bit-rot guard) sets GREENCACHE_SMOKE=1 before any
+benchmark import: ``benchmarks.common`` shrinks its grids/traces/warmups
+to a minutes-scale run, and the harness fails on any NaN value — so a
+benchmark that silently stops producing finite carbon totals is caught
+before review, not after.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -31,6 +38,7 @@ MODULES = [
     "cluster_scaling",
     "fleet_mix",
     "disagg",
+    "transitions",
     "roofline_report",
 ]
 
@@ -38,12 +46,21 @@ MODULES = [
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-trace smoke run: shrink every grid/trace "
+                         "(benchmarks.common.SMOKE) and fail on NaN "
+                         "values")
     args = ap.parse_args()
+    if args.smoke:
+        # must land in the environment before benchmarks.common is
+        # imported (module grids are frozen at import time)
+        os.environ["GREENCACHE_SMOKE"] = "1"
     selected = [m for m in MODULES
                 if not args.only or any(s in m
                                         for s in args.only.split(","))]
     print("name,value,derived")
     failures = 0
+    nan_rows = 0
     for name in selected:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.time()
@@ -56,11 +73,16 @@ def main() -> int:
             continue
         dt = time.time() - t0
         for metric, value, derived in rows:
+            if value != value:              # NaN: broken carbon totals
+                nan_rows += 1
+                derived = f"NaN! {derived}"
             print(f"{metric},{value:.6g},{derived}")
         print(f"{name}/_bench_time,{dt * 1e6:.0f},us_per_call "
               f"(whole benchmark)")
         sys.stdout.flush()
-    return 1 if failures else 0
+    if args.smoke and nan_rows:
+        print(f"SMOKE FAIL: {nan_rows} NaN value(s)", file=sys.stderr)
+    return 1 if failures or (args.smoke and nan_rows) else 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,161 @@
+"""Transition-aware reconfiguration vs the instant-switch solver on a
+volatile-CI day (no direct paper figure; EcoServe 2502.05043 and
+GreenLLM 2412.20322 motivate pricing the reconfiguration itself).
+
+Scenario: the clean-but-volatile FR grid under a storm-shaped CI trace
+(hour-to-hour multiplicative swings on top of the diurnal FR shape).
+The solver co-decides (cache, fleet) hourly over {a100, h100} mixes
+whose carbon ranking flips with CI — already-amortized a100 capacity
+wins clean hours on embodied carbon, efficient h100 capacity wins dirty
+hours on operational carbon — so a solver that believes reconfiguration
+is free flaps between fleets whenever the forecast wiggles.  Both days
+run the *same* engine with realistic transition costs
+(``TransitionConfig``: per-type boot latency, drain accounting); the
+only difference is whether the solver prices the switch:
+
+  * ``instant`` — the PR-3 solver (``transition_aware_solver=False``):
+    picks each hour's best option as if switching were free, then pays
+    boot/drain energy and warmup-degraded SLO in the engine anyway.
+  * ``aware``   — the transition-aware DP: switching carbon between
+    consecutive hours plus a ``MIN_DWELL_H`` shape dwell, so the
+    schedule exhibits hysteresis.
+
+Derived row 1: the aware day must cut plan churn and total gCO2e at
+equal (±0.5 pt) SLO attainment.
+
+Derived row 2 is the regression anchor: a zero-cost transition config
+(``TransitionConfig.free()``: boot latency 0, free migration, no drain,
+``min_dwell=1``) must bit-reproduce the legacy instant-and-free
+(``transitions=None``) hour records — carbon, cache sizes, SLO, hit
+rates and hourly plans all equal.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.carbon import CarbonModel
+from repro.core.controller import GreenCacheController
+from repro.core.plan import ResourcePlan, TransitionConfig
+from repro.core.profiler import run_profiler
+from repro.serving.perfmodel import SERVING_MODELS
+
+from benchmarks.common import (SMOKE, cap_requests, clip_day,
+                               profiler_kwargs, save_result)
+
+MODEL = "llama3-70b"
+TASK = "conversation"
+GRID = "FR"
+PEAK_RATE = 1.1                     # req/s per reference-capacity unit
+RATES = [0.2, 0.45, 0.7, 0.9, 1.2]  # per capacity unit
+SIZES = [0, 4, 8, 16]
+MIN_DWELL_H = 3
+EPS_SLO = 0.005                     # ±0.5 pt attainment band
+
+# candidate fleets: near-tied capacity, opposite carbon structure
+FLEETS = ["a100:2", "h100:1", "a100:1,h100:1", "a100:3", "h100:2"]
+SCALE = 4.8                         # widest candidate (h100:2) capacity
+
+_CACHE = {}
+
+
+def _workload(seed, scale=SCALE):
+    from repro.workloads.conversations import ConversationWorkload
+    return ConversationWorkload(seed=seed, load_scale=scale)
+
+
+def volatile_ci(seed: int = 4) -> np.ndarray:
+    """FR's diurnal CI shape under storm volatility: multiplicative
+    hour-to-hour swings (wind ramps / dirty interconnect imports, mean
+    factor ~1.8 — a stressed week, not the FR average) that repeatedly
+    cross the a100-vs-h100 carbon break-even."""
+    from repro.workloads.traces import ci_trace
+    base = ci_trace(GRID, seed=seed)
+    rng = np.random.default_rng(seed + 17)
+    swing = rng.uniform(0.35, 3.2, size=len(base))
+    return base * swing
+
+
+def _profile():
+    if "p" not in _CACHE:
+        _CACHE["p"] = run_profiler(
+            SERVING_MODELS[MODEL], TASK, _workload, CarbonModel(),
+            rates=RATES[:2] if SMOKE else RATES,
+            sizes_tb=SIZES[:2] if SMOKE else SIZES,
+            warmup_prompts=cap_requests(8000, 400),
+            policy="lcs_chat", **profiler_kwargs())
+    return _CACHE["p"]
+
+
+def _day(transitions, *, aware: bool = True, min_dwell: int = 1,
+         seed: int = 11):
+    from repro.workloads.traces import azure_rate_trace
+
+    ctl = GreenCacheController(
+        SERVING_MODELS[MODEL], _profile(), CarbonModel(), TASK,
+        mode="greencache", policy="lcs_chat",
+        plans=[ResourcePlan.single(None, fleet=f) for f in FLEETS],
+        warm_requests=cap_requests(8000, 400), seed=seed,
+        max_requests_per_hour=cap_requests(900),
+        sizes_tb=SIZES[:2] if SMOKE else SIZES, rho_margin=0.0,
+        transitions=transitions, min_dwell_hours=min_dwell,
+        transition_aware_solver=aware)
+    rate_trace, cis = clip_day(azure_rate_trace(PEAK_RATE * SCALE, seed=3),
+                               volatile_ci())
+    return ctl.run_day(_workload, rate_trace, cis)
+
+
+def _row(name, res):
+    return (f"transitions/{GRID}/{name}/total_g", res.total_carbon_g,
+            f"slo={res.slo_attainment:.3f} changes={res.plan_changes} "
+            f"transition_g={res.total_transition_g:.1f}")
+
+
+def _same_records(a, b) -> bool:
+    return len(a.hours) == len(b.hours) and all(
+        ha.carbon_g == hb.carbon_g and ha.cache_tb == hb.cache_tb
+        and ha.slo_frac == hb.slo_frac and ha.hit_rate == hb.hit_rate
+        and ha.plan == hb.plan for ha, hb in zip(a.hours, b.hours))
+
+
+def run():
+    out = []
+    cfg = TransitionConfig()
+    seeds = [11] if SMOKE else [11, 23]
+    payload = {"seeds": {}}
+    wins = []
+    for seed in seeds:
+        instant = _day(cfg, aware=False, min_dwell=1, seed=seed)
+        aware = _day(cfg, aware=True, min_dwell=MIN_DWELL_H, seed=seed)
+        out.append(_row(f"seed{seed}/instant", instant))
+        out.append(_row(f"seed{seed}/aware", aware))
+        # when the instant solver never switches (possible on the tiny
+        # smoke trace) there is no churn to suppress — count as a
+        # non-loss rather than demanding a strict carbon win
+        wins.append(aware.slo_attainment
+                    >= instant.slo_attainment - EPS_SLO
+                    and aware.plan_changes <= instant.plan_changes
+                    and (aware.total_carbon_g < instant.total_carbon_g
+                         or instant.plan_changes == 0))
+        payload["seeds"][seed] = {
+            k: {"total_g": r.total_carbon_g, "slo": r.slo_attainment,
+                "plan_changes": r.plan_changes,
+                "transition_g": r.total_transition_g,
+                "hourly_plans": [h.plan for h in r.hours],
+                "hourly_transitions": [h.transition for h in r.hours]}
+            for k, r in [("instant", instant), ("aware", aware)]}
+    beats = all(wins)
+    out.append((f"transitions/{GRID}/aware_beats_instant", float(beats),
+                f"lower gCO2e + fewer switches at >= equal SLO on "
+                f"{len(wins)}/{len(wins)} seed(s)"))
+
+    legacy = _day(None, aware=False, min_dwell=1)
+    free = _day(TransitionConfig.free(), aware=True, min_dwell=1)
+    repro_ok = _same_records(legacy, free)
+    out.append(("transitions/zero_cost_bit_reproduces_legacy",
+                float(repro_ok),
+                "TransitionConfig.free() hour records == transitions=None"))
+
+    payload["aware_beats_instant"] = bool(beats)
+    payload["zero_cost_bit_repro"] = repro_ok
+    save_result("transitions", payload)
+    return out

@@ -69,12 +69,18 @@ class ReplicaType:
     service, so only ``(1 - amortized_frac)`` of ``embodied_compute_kg``
     is charged over the remaining ``hw.lifetime_years`` — the reason an
     old-generation fleet can be the greener choice on clean grids even
-    though it burns more energy per token.
+    though it burns more energy per token. ``boot_s`` is the warmup
+    latency of a freshly provisioned replica — minutes-scale in practice
+    (scheduler placement + image pull + ~100 GB of weights over shared
+    storage + engine compile/CUDA-graph capture, cf. EcoServe's
+    provisioning overheads) — during which it draws boot power without
+    serving; the per-type cost a plan transition prices.
     """
     name: str
     hw: HardwareSpec
     perf_scale: float = 1.0
     amortized_frac: float = 0.0
+    boot_s: float = 300.0
 
     @property
     def effective_embodied_kg(self) -> float:
@@ -84,6 +90,13 @@ class ReplicaType:
         """Amortized embodied share of one replica over ``seconds``."""
         lt = self.hw.lifetime_years * SECONDS_PER_YEAR
         return (seconds / lt) * self.effective_embodied_kg * 1000.0
+
+    def idle_energy_kwh(self, seconds: float) -> float:
+        """Whole-server idle-level draw over ``seconds`` — the rate a
+        booting (weights loading) or draining (backlog flushing) replica
+        burns without serving; the single formula every transition-cost
+        site (engine, solver, ``transition_energy_kwh``) prices with."""
+        return self.server_power_w(0.0) * seconds / 3.6e6
 
     def server_power_w(self, gpu_util: float) -> float:
         """Whole-server draw (GPU + CPU + DRAM; SSD pool counted once at
@@ -108,14 +121,16 @@ REPLICA_TYPES: Dict[str, ReplicaType] = {
         HardwareSpec(name="a100-server",
                      embodied_gpu_kg=150.0,          # 4× A100-80G (ACT-style)
                      gpu_power_max_w=4 * 400.0, gpu_power_idle_w=4 * 140.0),
-        perf_scale=1.4, amortized_frac=0.6),          # ~3y into a 5y life
+        perf_scale=1.4, amortized_frac=0.6,           # ~3y into a 5y life
+        boot_s=360.0),                                # 4×80 GB weight load
     "h100": ReplicaType(
         "h100",
         HardwareSpec(name="h100-server",
                      embodied_gpu_kg=190.0,          # 4× H100 SXM + HBM3
                      gpu_power_max_w=4 * 700.0, gpu_power_idle_w=4 * 180.0),
-        perf_scale=2.4),
-    "tpu_v5e": ReplicaType("tpu_v5e", TPU_V5E_SPEC, perf_scale=1.1),
+        perf_scale=2.4, boot_s=420.0),               # bigger image + compile
+    "tpu_v5e": ReplicaType("tpu_v5e", TPU_V5E_SPEC, perf_scale=1.1,
+                           boot_s=180.0),            # slice attach is fast
 }
 
 
@@ -153,6 +168,22 @@ def fleet_str(types: Sequence[str]) -> str:
 def fleet_capacity(types: Sequence[str]) -> float:
     """Total throughput in reference-server units (sum of perf scales)."""
     return float(sum(get_replica_type(t).perf_scale for t in types))
+
+
+# KV rebalancing power draw per migration stream: donor NVMe read +
+# receiver NVMe write (~12 W each under sustained sequential I/O) plus the
+# NIC pair (~20 W) — the wire cost of moving partitioned-store state when
+# the consistent-hash ring changes size
+KV_MIGRATION_W = 45.0
+
+
+def kv_migration_energy_kwh(migrate_bytes: float,
+                            kv_transfer_gbps: float) -> float:
+    """Energy of streaming ``migrate_bytes`` of KV state between
+    partitioned stores: transfer time at ``kv_transfer_gbps`` drawing
+    ``KV_MIGRATION_W`` — shared by the engine's measured rebalance, the
+    solver's estimate, and ``CarbonModel.transition_energy_kwh``."""
+    return KV_MIGRATION_W * migrate_bytes / (kv_transfer_gbps * 1e9) / 3.6e6
 
 # 2024 grid average carbon intensities, gCO2e/kWh (paper Fig 2a + Fig 8)
 GRID_CI: Dict[str, float] = {
@@ -208,6 +239,60 @@ class CarbonModel:
         return (self.operational_g(energy_kwh, ci)
                 + self.cache_embodied_g(alloc_tb, seconds)
                 + self.compute_embodied_g(seconds, n_replicas, types=types))
+
+    # ---- transition pricing (repro.core.plan.PlanTransition) ----
+    def transition_energy_kwh(self, transition, *,
+                              boot_latency_s: Optional[float] = None,
+                              migrate_bytes: float = 0.0,
+                              kv_transfer_gbps: float = 25.0,
+                              drain_s: float = 0.0) -> float:
+        """Energy of one plan transition — the costs of the
+        reconfiguration event itself:
+
+        * **boot** — every booted replica draws its server's idle power
+          for ``boot_latency_s`` (or its type's ``boot_s`` when None)
+          while serving nothing.  Note the deliberate overlap with
+          window pricing: once the window opens, ``energy_kwh`` charges
+          the booted replica whole-server power too, so up to
+          ``boot_s × P_idle`` is counted twice per boot.  Charging the
+          warmup to the transition keeps switching costs explicit and
+          solver/engine symmetric, and the (small, conservative)
+          overcount is identical for every schedule being compared;
+        * **drain** — every drained replica stays powered for ``drain_s``
+          (the engine passes the measured residual backlog; the solver an
+          estimate) finishing in-flight work — these replicas have left
+          the new fleet, so window pricing no longer sees them;
+        * **migration I/O** — ``migrate_bytes`` of KV state stream between
+          partitioned stores at ``kv_transfer_gbps``, drawing
+          ``KV_MIGRATION_W`` (donor+receiver NVMe pair plus NIC) for the
+          transfer time.
+
+        ``transition`` is any object with ``boots``/``drains`` sequences
+        of ``(pool_role, replica_type)`` pairs (duck-typed so this module
+        stays import-free of ``repro.core.plan``)."""
+        kwh = 0.0
+        for _, tname in transition.boots:
+            rt = get_replica_type(tname)
+            b = rt.boot_s if boot_latency_s is None else boot_latency_s
+            kwh += rt.idle_energy_kwh(b)
+        if drain_s > 0.0:
+            for _, tname in transition.drains:
+                kwh += get_replica_type(tname).idle_energy_kwh(drain_s)
+        if migrate_bytes > 0.0:
+            kwh += kv_migration_energy_kwh(migrate_bytes, kv_transfer_gbps)
+        return kwh
+
+    def transition_g(self, old, new, ci: float, **kwargs) -> float:
+        """Carbon of switching from plan ``old`` to plan ``new`` at grid
+        intensity ``ci``: the transition's energy (see
+        ``transition_energy_kwh``, which takes the same keyword knobs)
+        priced operationally.  Embodied carbon does not change — it
+        amortizes per wall-clock second and is charged by the window
+        pricing whichever plan is live."""
+        from repro.core.plan import PlanTransition
+        tr = PlanTransition.diff(old, new)
+        return self.operational_g(self.transition_energy_kwh(tr, **kwargs),
+                                  ci)
 
     # ---- plan pricing (repro.core.plan.ResourcePlan) ----
     def plan_embodied_g(self, plan, seconds: float) -> float:

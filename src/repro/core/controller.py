@@ -33,7 +33,7 @@ import numpy as np
 from repro.core.carbon import (CarbonModel, fleet_capacity, fleet_str,
                                parse_fleet)
 from repro.core.kvstore import KVStore
-from repro.core.plan import ResourcePlan
+from repro.core.plan import ResourcePlan, TransitionConfig
 from repro.core.policies import POLICIES
 from repro.core.predictors import CIPredictor, LoadPredictor
 from repro.core.profiler import Profile, _slo_for
@@ -67,6 +67,11 @@ class HourRecord:
     n_replicas: int = 1
     fleet: str = ""                   # compact mix, e.g. "a100:2,l40:4"
     plan: str = ""                    # full applied ResourcePlan string
+    # transition accounting: the carbon of *entering* this hour's plan
+    # (boot + drain + migration energy at this hour's CI — included in
+    # carbon_g, reported separately here) and the applied diff string
+    transition_g: float = 0.0
+    transition: str = ""
 
 
 @dataclass
@@ -105,6 +110,28 @@ class RunResult:
                               if h.fleet else float(h.n_replicas)
                               for h in self.hours]))
 
+    @property
+    def total_transition_g(self) -> float:
+        """Total reconfiguration carbon (already included in
+        ``total_carbon_g``; reported separately for the churn analysis)."""
+        return sum(h.transition_g for h in self.hours)
+
+    @property
+    def plan_changes(self) -> int:
+        """Number of hour boundaries where the plan *shape* changed
+        (fleet/pools; cache-only resizes do not count) — the churn metric
+        the transition-aware solver is built to suppress.  Keyed on the
+        applied plan string minus its cache token, so per-pool
+        redistributions of a disaggregated plan count even when the
+        combined fleet multiset is unchanged."""
+        def shape(h):
+            if h.plan:
+                return " ".join(tok for tok in h.plan.split()
+                                if not tok.startswith("cache="))
+            return (h.fleet, h.n_replicas)
+        return sum(1 for a, b in zip(self.hours, self.hours[1:])
+                   if shape(a) != shape(b))
+
 
 _EPS_UNSET = object()       # distinguishes an explicit balance_eps kwarg
 
@@ -139,7 +166,17 @@ class GreenCacheController:
     ``type_profiles`` (``{replica type: Profile}``) feeds measured
     per-generation profiles into the fleet solver instead of the
     reference-profile rescale. ``engine="legacy"`` keeps the seed
-    single-server ``ServingEngine`` (parity/debugging only)."""
+    single-server ``ServingEngine`` (parity/debugging only).
+
+    ``transitions`` (a ``repro.core.plan.TransitionConfig``) makes plan
+    changes first-class events: the engine simulates boot/drain/KV
+    rebalancing over time and the solver charges switching carbon
+    between hours (disable the latter with
+    ``transition_aware_solver=False`` to reproduce the instant-switch
+    baseline while the engine still pays the real costs);
+    ``min_dwell_hours`` pins the plan shape between block-aligned hours.
+    ``HourRecord.transition_g`` reports each hour's reconfiguration
+    carbon (included in ``carbon_g``)."""
 
     def __init__(self, model: ServingModel, profile: Profile,
                  carbon: CarbonModel, task: str, *,
@@ -155,13 +192,19 @@ class GreenCacheController:
                  n_replicas=None, router: Optional[str] = None,
                  fleets=None, balance_eps=_EPS_UNSET,
                  type_profiles: Optional[Dict[str, Profile]] = None,
-                 engine: str = "cluster"):
+                 engine: str = "cluster",
+                 transitions: Optional[TransitionConfig] = None,
+                 min_dwell_hours: int = 1,
+                 transition_aware_solver: bool = True):
         self.model = model
         self.profile = profile
         self.carbon = carbon
         self.task = task
         self.mode = mode
         self.policy = policy
+        self.transitions = transitions
+        self.min_dwell_hours = max(int(min_dwell_hours), 1)
+        self.transition_aware_solver = transition_aware_solver
         self.sizes = list(sizes_tb) if sizes_tb is not None else \
             list(profile.sizes)
         self.max_requests_per_hour = max_requests_per_hour
@@ -245,6 +288,11 @@ class GreenCacheController:
                                    or not self.homo_ref):
             raise ValueError("engine='legacy' supports a single untyped "
                              "replica only")
+        if engine == "legacy" and (self.transitions is not None
+                                   or self.min_dwell_hours > 1):
+            raise ValueError("engine='legacy' does not model transitions; "
+                             "drop transitions=/min_dwell_hours= or use "
+                             "the cluster engine")
 
     def _resolved(self, plan: ResourcePlan,
                   cache_tb: float) -> ResourcePlan:
@@ -299,7 +347,8 @@ class GreenCacheController:
                 ServingEngine(self.model, store, self.carbon)
         elif self.disagg:
             engine = DisaggEngine(self.model, store, self.carbon,
-                                  self._resolved(fixed_plan, max_tb))
+                                  self._resolved(fixed_plan, max_tb),
+                                  transitions=self.transitions)
         else:
             # homogeneous reference candidates start untyped (the seed
             # configuration); the first apply() types them as all-l40,
@@ -308,7 +357,8 @@ class GreenCacheController:
                 self.model, store, self.carbon, n_replicas=fixed_n,
                 router=self.router,
                 types=None if self.homo_ref else fixed_plan.serve.fleet,
-                balance_eps=self.balance_eps)
+                balance_eps=self.balance_eps,
+                transitions=self.transitions)
         wl = workload_factory(self.seed)
 
         # warm the cache at full size, then resize to the first decision
@@ -335,7 +385,9 @@ class GreenCacheController:
                     rates = list(load_pred.predict(self.horizon))
                     cis = list(ci_pred.predict(self.horizon))
                 rho = min(self.slo.rho + self.rho_margin, 0.995)
-                res = self._solve(rates, cis, rho, co_decide)
+                res = self._solve(rates, cis, rho, co_decide, hour=h,
+                                  live_plan=self._resolved(current_shape,
+                                                           current_tb))
                 pending_plans = list(res.plans) if res.plans is not None \
                     else []
                 pending_schedule = list(res.sizes_tb)
@@ -352,23 +404,40 @@ class GreenCacheController:
                 current_tb = max(pending_schedule[:k])
                 pending_schedule = pending_schedule[1:]
                 if pending_plans:
-                    current_shape = max(pending_plans[:k],
-                                        key=lambda p: p.capacity)
+                    new_shape = max(pending_plans[:k],
+                                    key=lambda p: p.capacity)
                     pending_plans = pending_plans[1:]
+                    # min-dwell hysteresis: the plan *shape* may only
+                    # change on block-aligned hours (the transition-aware
+                    # solver already schedules this; the hold also guards
+                    # the instant-switch solver against flapping mid-block)
+                    if self.min_dwell_hours <= 1 \
+                            or h % self.min_dwell_hours == 0:
+                        current_shape = new_shape
 
             current_plan = self._resolved(current_shape, current_tb)
+            ci_now = float(ci_trace[h])
+            tr_g = 0.0
+            tr_str = ""
             if isinstance(engine, ClusterEngine):
-                engine.apply(current_plan, now=h * 3600.0)
+                applied = engine.apply(current_plan, now=h * 3600.0)
+                if applied.energy_kwh:
+                    tr_g = self.carbon.operational_g(applied.energy_kwh,
+                                                     ci_now)
+                if not applied.transition.is_noop:
+                    tr_str = str(applied.transition)
             else:
                 store.resize(current_tb * 1e12, now=h * 3600.0)
 
-            # simulate this hour
+            # simulate this hour (degraded SLO during the transition
+            # window is emergent: booting replicas hold their queues
+            # closed until warmed, so the hour's TTFT/TPOT distributions
+            # absorb the reduced capacity)
             lam = float(rate_trace[h])
             arr = make_poisson_arrivals(
                 np.array([lam]), seed=self.seed + h,
                 max_requests=self.max_requests_per_hour)
             reqs = sample_many(wl, h * 3600.0 + arr)
-            ci_now = float(ci_trace[h])
             res = engine.run(reqs, ci_fn=lambda t: ci_now,
                              cache_tb=current_tb, rate_hint=lam)
             hours.append(HourRecord(
@@ -383,7 +452,8 @@ class GreenCacheController:
                 n_replicas=current_plan.n_replicas,
                 fleet="" if self.homo_ref
                 else fleet_str(current_plan.all_types),
-                plan=str(current_plan)))
+                plan=str(current_plan),
+                transition_g=tr_g, transition=tr_str))
 
             # online predictor updates (paper §5.3)
             load_pred.update(lam)
@@ -393,25 +463,37 @@ class GreenCacheController:
 
     # ------------------------------------------------------------------ #
     def _solve(self, rates: Sequence[float], cis: Sequence[float],
-               rho: float, co_decide: bool) -> SolveResult:
+               rho: float, co_decide: bool, *, hour: int = 0,
+               live_plan: Optional[ResourcePlan] = None) -> SolveResult:
         """One knapsack solve over the remaining horizon, in the numeric
         mode the candidate set implies: the homogeneous-reference paths
         reproduce the pre-plan controller bit-for-bit; typed single-pool
         candidates size through the capacity-normalized fleet metrics
         (even a pinned mix — the raw cluster rate would be far outside
         the per-server profile); disaggregated candidates search
-        (cache, prefill fleet, decode fleet)."""
+        (cache, prefill fleet, decode fleet).
+
+        With a ``TransitionConfig`` (and ``transition_aware_solver``) the
+        multi-candidate solves charge switching carbon between hours —
+        ``hour`` aligns the min-dwell blocks to absolute time and
+        ``live_plan`` prices the first switch away from the engine's
+        current configuration."""
+        aware = self.transitions is not None and self.transition_aware_solver
+        tkw = dict(transitions=self.transitions,
+                   min_dwell_hours=self.min_dwell_hours,
+                   dwell_offset=hour % self.min_dwell_hours,
+                   initial_plan=live_plan) if aware else {}
         if self.disagg or not self.homo_ref:
             return solve_cluster_schedule(
                 self.profile, rates, cis, self.slo, self.carbon,
                 sizes_tb=self.sizes, plans=self.plan_choices,
                 type_profiles=self.type_profiles, model=self.model,
-                rho=rho)
+                rho=rho, **tkw)
         if co_decide:
             return solve_cluster_schedule(
                 self.profile, rates, cis, self.slo, self.carbon,
                 sizes_tb=self.sizes, replicas=self.replica_choices,
-                rho=rho)
+                rho=rho, **tkw)
         res = solve_cache_schedule(
             self.profile, rates, cis, self.slo, self.carbon,
             sizes_tb=self.sizes, rho=rho)

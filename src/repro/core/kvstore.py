@@ -187,6 +187,9 @@ class KVStore:
         self.stats = KVStoreStats()
         self._vector_policy = None
         self._ix: Optional["_ColumnIndex"] = None
+        # pending gradual-shrink steps: [(due_time, capacity_bytes), ...]
+        # ascending; consumed lazily by account() as simulated time passes
+        self._resize_steps: List[Tuple[float, float]] = []
 
     def enable_vector_evict(self) -> bool:
         """Switch eviction scoring to the policy's vectorized twin (see
@@ -305,6 +308,8 @@ class KVStore:
         ``collect_stats=False`` the per-request ``stats`` updates are
         skipped so a batch caller can apply them in one shot from the
         encoded return values (see ``ClusterEngine._account``)."""
+        if self._resize_steps and now >= self._resize_steps[0][0]:
+            self._apply_due_resizes(now)
         ix = self._ix
         cap = self.capacity_bytes
         e = self.entries.get(key)
@@ -400,9 +405,65 @@ class KVStore:
         self.stats.evicted_bytes += e.size_bytes
 
     # ------------------------------------------------------------------ #
+    def pop_entry(self, key: str) -> CacheEntry:
+        """Remove and return an entry *without* eviction accounting — the
+        donor half of a ring-rebalance migration (the KV is not lost, it
+        moves to another partition's store)."""
+        e = self.entries.pop(key)
+        self.used_bytes -= e.size_bytes
+        if self._ix is not None:
+            self._ix.remove(e)
+        return e
+
+    def adopt(self, entry: CacheEntry, now: float) -> bool:
+        """Receiver half of a migration: install an entry popped from a
+        donor store, evicting per policy to make room.  Hit/insert stats
+        are untouched (migration is not a workload event); returns False
+        if the entry cannot fit even after eviction (it is then dropped —
+        a cold-start for its keys)."""
+        size = entry.size_bytes
+        if size > self.capacity_bytes:
+            return False
+        self._make_room(size, now, protect=entry.key)
+        if self.used_bytes + size > self.capacity_bytes + 1e-6:
+            return False
+        self.entries[entry.key] = entry
+        self.used_bytes += size
+        if self._ix is not None:
+            self._ix.add(entry)
+        return True
+
+    # ------------------------------------------------------------------ #
+    def schedule_resize(self, capacity_bytes: float, now: float,
+                        ramp_s: float, steps: int = 4):
+        """Gradual resize: a shrink is staged as ``steps`` equal capacity
+        cuts spread over ``ramp_s`` seconds, consumed lazily by
+        ``account`` as simulated time passes — entries the instant resize
+        would have teleported away keep serving hits until their step
+        lands.  Growth (and a zero ramp) applies immediately; a new
+        resize/schedule supersedes any pending steps."""
+        self._resize_steps = []
+        target = float(capacity_bytes)
+        if ramp_s <= 0.0 or steps <= 1 or target >= self.capacity_bytes:
+            self.resize(target, now)
+            return
+        caps = np.linspace(self.capacity_bytes, target, steps + 1)[1:]
+        due = now + np.linspace(ramp_s / steps, ramp_s, steps)
+        self._resize_steps = list(zip(due.tolist(), caps.tolist()))
+
+    def _apply_due_resizes(self, now: float):
+        steps = self._resize_steps
+        while steps and now >= steps[0][0]:
+            t, cap = steps.pop(0)
+            self._shrink_to(cap, t)
+
     def resize(self, capacity_bytes: float, now: float):
         """GreenCache cache manager: shrink evicts lowest-score entries,
         then spare capacity is released (paper §5.5)."""
+        self._resize_steps = []
+        self._shrink_to(capacity_bytes, now)
+
+    def _shrink_to(self, capacity_bytes: float, now: float):
         self.capacity_bytes = float(capacity_bytes)
         if self.used_bytes > self.capacity_bytes:
             victims, partial = self._victims_sorted(

@@ -362,6 +362,262 @@ def _parse_tb(val: str) -> Optional[float]:
     return float(val)
 
 
+# --------------------------------------------------------------------- #
+# Plan transitions: the first-class reconfiguration event
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class PoolDelta:
+    """Per-pool fleet change inside a transition: the replica types that
+    must boot and the ones that drain (multiset difference of the old and
+    new fleets — survivors are matched per type and keep serving)."""
+    role: str
+    boot: Tuple[str, ...] = ()
+    drain: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.role not in ROLES:
+            raise ValueError(f"unknown pool role {self.role!r}; one of "
+                             f"{ROLES}")
+        object.__setattr__(self, "boot", tuple(sorted(self.boot)))
+        object.__setattr__(self, "drain", tuple(sorted(self.drain)))
+
+
+@dataclass(frozen=True)
+class PlanTransition:
+    """The diff between two ``ResourcePlan``s — the first-class event the
+    hourly loop prices and simulates instead of teleporting between
+    plans.
+
+    ``pools`` holds one ``PoolDelta`` per pool whose fleet changes
+    (replicas to boot/drain per type); ``cache_from_tb``/``cache_to_tb``
+    the cache reallocation (``None`` = unspecified on that side, no
+    resize); ``ring_from``/``ring_to`` the store-owning pool's replica
+    count before/after — a partitioned consistent-hash ring remaps
+    ~``|m-n|/max(m,n)`` of its key space when it resizes, the KV
+    rebalancing the engine models as bulk migration or cold misses.
+
+    String grammar (``parse`` / ``str`` round-trip, like plans)::
+
+        boot[serve]=h100:2 drain[serve]=l40:1 cache=4tb->2tb ring=3->2
+    """
+    pools: Tuple[PoolDelta, ...] = ()
+    cache_from_tb: Optional[float] = None
+    cache_to_tb: Optional[float] = None
+    ring_from: int = 0
+    ring_to: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "pools", tuple(self.pools))
+        roles = [p.role for p in self.pools]
+        if len(roles) != len(set(roles)):
+            raise ValueError(f"duplicate pool roles in {roles}")
+
+    @classmethod
+    def diff(cls, old: "ResourcePlan", new: "ResourcePlan"
+             ) -> "PlanTransition":
+        """Transition from ``old`` to ``new``: per-pool multiset fleet
+        diff (a pool present on one side only boots/drains wholesale, so
+        a fused↔disaggregated topology change diffs cleanly too)."""
+        from collections import Counter
+        deltas = []
+        olds = {p.role: p for p in old.pools}
+        news = {p.role: p for p in new.pools}
+        for role in ROLES:
+            co = Counter(olds[role].fleet) if role in olds else Counter()
+            cn = Counter(news[role].fleet) if role in news else Counter()
+            if role not in olds and role not in news:
+                continue
+            boot = tuple((cn - co).elements())
+            drain = tuple((co - cn).elements())
+            if boot or drain:
+                deltas.append(PoolDelta(role, boot, drain))
+        return cls(tuple(deltas), cache_from_tb=old.cache_tb,
+                   cache_to_tb=new.cache_tb,
+                   ring_from=old.prefill.n_replicas,
+                   ring_to=new.prefill.n_replicas)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def boots(self) -> Tuple[Tuple[str, str], ...]:
+        """Every booting replica as ``(pool_role, replica_type)``."""
+        return tuple((p.role, t) for p in self.pools for t in p.boot)
+
+    @property
+    def drains(self) -> Tuple[Tuple[str, str], ...]:
+        return tuple((p.role, t) for p in self.pools for t in p.drain)
+
+    @property
+    def cache_delta_tb(self) -> float:
+        """Cache reallocation in TB (0 when either side is unsized)."""
+        if self.cache_from_tb is None or self.cache_to_tb is None:
+            return 0.0
+        return self.cache_to_tb - self.cache_from_tb
+
+    @property
+    def ring_changed(self) -> bool:
+        return self.ring_from != self.ring_to
+
+    @property
+    def moved_ring_fraction(self) -> float:
+        """Share of the key space a consistent-hash ring remaps when it
+        resizes ``ring_from`` → ``ring_to`` (the minimal-movement bound:
+        growth n→n+1 moves ~1/(n+1) of the keys)."""
+        return ring_moved_fraction(self.ring_from, self.ring_to)
+
+    @property
+    def is_noop(self) -> bool:
+        return (not self.pools and self.cache_delta_tb == 0.0
+                and not self.ring_changed)
+
+    def pool(self, role: str) -> Optional[PoolDelta]:
+        for p in self.pools:
+            if p.role == role:
+                return p
+        return None
+
+    # ------------------------------------------------------------------ #
+    # string / JSON round-trip
+    # ------------------------------------------------------------------ #
+    def __str__(self) -> str:
+        parts = []
+        for p in self.pools:
+            if p.boot:
+                parts.append(f"boot[{p.role}]={fleet_str(p.boot)}")
+            if p.drain:
+                parts.append(f"drain[{p.role}]={fleet_str(p.drain)}")
+        if self.cache_from_tb is not None or self.cache_to_tb is not None:
+            parts.append(f"cache={_fmt_tb(self.cache_from_tb)}->"
+                         f"{_fmt_tb(self.cache_to_tb)}")
+        if self.ring_from or self.ring_to:
+            parts.append(f"ring={self.ring_from}->{self.ring_to}")
+        return " ".join(parts)
+
+    @classmethod
+    def parse(cls, spec: str) -> "PlanTransition":
+        """Inverse of ``str(transition)``."""
+        boots: Dict[str, Tuple[str, ...]] = {}
+        drains: Dict[str, Tuple[str, ...]] = {}
+        cache_from = cache_to = None
+        ring_from = ring_to = 0
+        for tok in spec.split():
+            key, sep, val = tok.partition("=")
+            key = key.strip().lower()
+            if not sep:
+                raise ValueError(f"bad transition token {tok!r} in "
+                                 f"{spec!r}")
+            if key.startswith("boot[") and key.endswith("]"):
+                boots[key[5:-1]] = parse_fleet(val)
+            elif key.startswith("drain[") and key.endswith("]"):
+                drains[key[6:-1]] = parse_fleet(val)
+            elif key == "cache":
+                a, sep2, b = val.partition("->")
+                if not sep2:
+                    raise ValueError(f"cache token needs a->b in {spec!r}")
+                cache_from, cache_to = _parse_tb(a), _parse_tb(b)
+            elif key == "ring":
+                a, sep2, b = val.partition("->")
+                if not sep2:
+                    raise ValueError(f"ring token needs a->b in {spec!r}")
+                ring_from, ring_to = int(a), int(b)
+            else:
+                raise ValueError(f"unknown transition key {key!r} in "
+                                 f"{spec!r}")
+        deltas = tuple(PoolDelta(role, boots.get(role, ()),
+                                 drains.get(role, ()))
+                       for role in ROLES
+                       if role in boots or role in drains)
+        return cls(deltas, cache_from_tb=cache_from, cache_to_tb=cache_to,
+                   ring_from=ring_from, ring_to=ring_to)
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "pools": [{"role": p.role, "boot": list(p.boot),
+                       "drain": list(p.drain)} for p in self.pools],
+            "cache_from_tb": self.cache_from_tb,
+            "cache_to_tb": self.cache_to_tb,
+            "ring_from": self.ring_from, "ring_to": self.ring_to})
+
+    @classmethod
+    def from_json(cls, payload: Union[str, dict]) -> "PlanTransition":
+        d = json.loads(payload) if isinstance(payload, str) else payload
+        pools = tuple(PoolDelta(p["role"], tuple(p.get("boot", ())),
+                                tuple(p.get("drain", ())))
+                      for p in d.get("pools", ()))
+        return cls(pools, cache_from_tb=d.get("cache_from_tb"),
+                   cache_to_tb=d.get("cache_to_tb"),
+                   ring_from=int(d.get("ring_from", 0)),
+                   ring_to=int(d.get("ring_to", 0)))
+
+
+def ring_moved_fraction(n_from: int, n_to: int) -> float:
+    """Consistent-hashing minimal-movement bound: the key-space share
+    remapped when the ring resizes ``n_from`` → ``n_to`` (shared by
+    ``PlanTransition`` and the solver's migration estimate)."""
+    return abs(n_to - n_from) / max(n_from, n_to, 1)
+
+
+REBALANCE_MODES = ("migrate", "cold")
+
+
+@dataclass(frozen=True)
+class TransitionConfig:
+    """How the engine (and the solver's switching costs) model a plan
+    transition.  ``None`` anywhere an engine/solver accepts this config
+    means the legacy instant-and-free reconfiguration (PR-3 semantics,
+    bit-reproduced).
+
+    * ``boot_latency_s`` — warmup of a booted replica before it joins the
+      serving set (``None`` = each type's ``ReplicaType.boot_s``; ``0.0``
+      = instant join).
+    * ``rebalance`` — partitioned-store ring resizes either ``migrate``
+      reassigned KV entries (bytes over ``kv_transfer_gbps``, added load
+      on the donors) or drop them ``cold`` (reassigned keys miss and
+      re-prefill).
+    * ``cache_ramp_s`` — a cache shrink evicts gradually over this window
+      (in ``cache_ramp_steps`` steps) instead of teleporting to the new
+      size.
+    * ``drain`` — drained replicas finish their in-flight backlog powered
+      (priced) instead of vanishing; ``decode_drain_s`` is the nominal
+      residual per drained decode-pool replica (the analytic decode pool
+      has no per-replica backlog to measure).
+    * ``kv_transfer_gbps`` — migration bandwidth (``None`` = the serving
+      model's ``kv_transfer_gbps``).
+    """
+    boot_latency_s: Optional[float] = None
+    rebalance: str = "migrate"
+    cache_ramp_s: float = 300.0
+    cache_ramp_steps: int = 4
+    drain: bool = True
+    decode_drain_s: float = 20.0
+    kv_transfer_gbps: Optional[float] = None
+
+    def __post_init__(self):
+        if self.rebalance not in REBALANCE_MODES:
+            raise ValueError(f"rebalance must be one of {REBALANCE_MODES},"
+                             f" got {self.rebalance!r}")
+
+    def boot_s(self, type_name: str) -> float:
+        """Warmup latency for one booted replica of the given type."""
+        if self.boot_latency_s is not None:
+            return float(self.boot_latency_s)
+        return get_replica_type(type_name).boot_s
+
+    @property
+    def is_free(self) -> bool:
+        """True when transitions cost nothing and take no time — the
+        configuration whose trajectories bit-reproduce the legacy
+        instant-switch path."""
+        return (self.boot_latency_s == 0.0 and not self.drain
+                and self.cache_ramp_s == 0.0)
+
+    @classmethod
+    def free(cls, rebalance: str = "migrate") -> "TransitionConfig":
+        """Zero-cost transitions: instant boot, no drain accounting, no
+        eviction ramp, free migration."""
+        return cls(boot_latency_s=0.0, rebalance=rebalance,
+                   cache_ramp_s=0.0, drain=False, decode_drain_s=0.0)
+
+
 def enumerate_plans(prefill_fleets: Sequence[Sequence[str]],
                     decode_fleets: Sequence[Sequence[str]], *,
                     router: Optional[str] = None,

@@ -30,18 +30,28 @@ per-hour option set (the knapsack classes stay one-choice-per-hour);
   sizes × ``ResourcePlan`` candidates, including disaggregated
   prefill/decode pool pairs (``_disagg_cell_metrics``: profile-based
   TTFT side, analytic decode side, power-capped decode pool pricing).
+* ``transitions=TransitionConfig(...)`` — the per-hour choice becomes a
+  transition-aware DP over (cache-bucket, option) *states* with
+  switching carbon between consecutive hours (boot + drain energy,
+  partitioned-ring migration I/O) and a ``min_dwell_hours`` knob, so
+  the schedule exhibits hysteresis instead of thrashing between plans
+  that are near-tied hour to hour; zero-cost configs fall back to the
+  plain solve bit-exactly.
 """
 from __future__ import annotations
 
+import functools
 import itertools
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as _dc_replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.carbon import CarbonModel, fleet_capacity, get_replica_type
-from repro.core.plan import ResourcePlan
+from repro.core.carbon import (CarbonModel, fleet_capacity,
+                               get_replica_type, kv_migration_energy_kwh)
+from repro.core.plan import (PlanTransition, ResourcePlan,
+                             TransitionConfig, ring_moved_fraction)
 from repro.core.profiler import Profile
 from repro.serving.perfmodel import SLO
 
@@ -59,6 +69,9 @@ class SolveResult:
     # every solve_cluster_schedule mode; sizes_tb/replicas/fleets are
     # views kept for the pre-plan call sites)
     plans: Optional[List[ResourcePlan]] = None
+    # transition-aware mode: predicted switching carbon charged at each
+    # hour boundary (hour 0 is the switch away from ``initial_plan``)
+    transition_g: Optional[List[float]] = None
 
 
 def _cell_metrics(profile: Profile, rate: float, size: float,
@@ -345,6 +358,174 @@ def _option_plan(option, sized: bool = False) -> ResourcePlan:
     return plan.with_cache(s) if sized else plan
 
 
+# --------------------------------------------------------------------- #
+# Transition-aware switching costs
+# --------------------------------------------------------------------- #
+# solver-side estimate of a drained replica's powered residual backlog
+# (the engine measures the real one; the solver prices the expectation)
+TRANSITION_DRAIN_S_EST = 30.0
+
+
+@functools.lru_cache(maxsize=65536)
+def _shape_switch_kwh(old_shape: ResourcePlan, new_shape: ResourcePlan,
+                      cfg: TransitionConfig) -> float:
+    """Boot + drain energy of switching between two plan *shapes*
+    (cache-stripped plans: the fleet diff does not depend on the cache
+    size). Memoized — the hourly loop re-solves with the same candidate
+    set every hour."""
+    tr = PlanTransition.diff(old_shape, new_shape)
+    kwh = sum(get_replica_type(t).idle_energy_kwh(cfg.boot_s(t))
+              for _, t in tr.boots)
+    if cfg.drain:
+        kwh += sum(get_replica_type(t)
+                   .idle_energy_kwh(TRANSITION_DRAIN_S_EST)
+                   for _, t in tr.drains)
+    return kwh
+
+
+def _fleet_key(plan: ResourcePlan):
+    """Structural fleet identity of a plan — the part the dwell pins
+    (routing knobs and cache size may differ between a live resolved
+    plan and the unresolved candidate it came from)."""
+    return tuple((p.role, p.fleet) for p in plan.pools)
+
+
+def _migration_kwh(old_plan: ResourcePlan, new_plan: ResourcePlan,
+                   cfg: TransitionConfig, model=None) -> float:
+    """Partitioned-ring migration I/O energy: moved bytes estimated as
+    the remapped key-space share (``|m-n|/max(m,n)``, the consistent-
+    hashing minimal-movement bound) of the smaller allocation assumed
+    full — the conservative bound."""
+    if cfg.rebalance != "migrate" or cfg.is_free \
+            or not old_plan.prefill.partitioned:
+        return 0.0
+    n_old = old_plan.prefill.n_replicas
+    n_new = new_plan.prefill.n_replicas
+    if n_old == n_new:
+        return 0.0
+    bytes_moved = ring_moved_fraction(n_old, n_new) \
+        * min(old_plan.cache_tb or 0.0, new_plan.cache_tb or 0.0) * 1e12
+    gbps = cfg.kv_transfer_gbps if cfg.kv_transfer_gbps is not None \
+        else (model.kv_transfer_gbps if model is not None else 25.0)
+    return kv_migration_energy_kwh(bytes_moved, gbps)
+
+
+def _pair_switch_kwh(old_plan: ResourcePlan, new_plan: ResourcePlan,
+                     cfg: TransitionConfig, model=None) -> float:
+    """Full predicted switching energy between two *sized* plans: the
+    memoized shape part (boot + drain) plus the partitioned-ring KV
+    migration."""
+    kwh = _shape_switch_kwh(_dc_replace(old_plan, cache_tb=None),
+                            _dc_replace(new_plan, cache_tb=None), cfg)
+    return kwh + _migration_kwh(old_plan, new_plan, cfg, model=model)
+
+
+def _transition_matrices(opt_plans: Sequence[ResourcePlan],
+                         cfg: TransitionConfig, model=None
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """``E[o, o']`` switching energy (kWh) between every option pair and
+    ``S[o, o']`` whether the pair differs in *shape* (fleet/pools — the
+    part ``min_dwell_hours`` pins; cache-only moves stay free to change
+    hourly, matching the paper's resize loop)."""
+    O = len(opt_plans)
+    shapes = [_dc_replace(p, cache_tb=None) for p in opt_plans]
+    keys = [_fleet_key(p) for p in opt_plans]
+    E = np.zeros((O, O))
+    S = np.zeros((O, O), dtype=bool)
+    for i in range(O):
+        for j in range(O):
+            if i == j:
+                continue
+            S[i, j] = keys[i] != keys[j]
+            if S[i, j]:
+                E[i, j] = _shape_switch_kwh(shapes[i], shapes[j], cfg) \
+                    + _migration_kwh(opt_plans[i], opt_plans[j], cfg,
+                                     model=model)
+    return E, S
+
+
+def _solve_dp_transition(C, F, n, options, rho, t_start, E, S, e_init,
+                         cis, min_dwell: int, dwell_offset: int,
+                         lock0=None, buckets: int = 400) -> SolveResult:
+    """Transition-aware DP: state = (satisfied-count bucket, option),
+    value = min carbon *including* the switching cost paid at each hour
+    boundary — so the schedule exhibits hysteresis instead of flapping
+    between near-tied options whenever the CI trace wiggles.
+    ``min_dwell`` restricts *shape* changes to hours where
+    ``(t + dwell_offset) % min_dwell == 0`` (block-aligned dwell; cache
+    size may still move hourly).  O(T · buckets · |options|²)."""
+    T, O = C.shape
+    total = float(n.sum())
+    target = rho * total
+    scale = buckets / max(total, 1e-9)
+    INF = float("inf")
+    oi = np.arange(O)
+    cis = np.asarray(cis, dtype=float)
+
+    dp = np.full((buckets + 1, O), INF)
+    back = np.full((T, buckets + 1, O), -1, dtype=np.int64)
+    swg0 = e_init * cis[0] if e_init is not None else np.zeros(O)
+    cost0 = n[0] * C[0] + swg0
+    if lock0 is not None:
+        # re-solve mid-dwell-block: hour 0 may not change the shape
+        cost0 = np.where(lock0, INF, cost0)
+    nb0 = np.minimum((n[0] * F[0] * scale).astype(int), buckets)
+    dp[nb0, oi] = np.minimum(dp[nb0, oi], cost0)
+
+    for t in range(1, T):
+        switch_ok = min_dwell <= 1 or (t + dwell_offset) % min_dwell == 0
+        swg = E * cis[t]
+        if not switch_ok:
+            swg = swg + np.where(S, INF, 0.0)
+        nCt = n[t] * C[t]
+        nb = np.minimum(
+            (np.arange(buckets + 1)[:, None] + n[t] * F[t] * scale)
+            .astype(int), buckets)                      # (B+1, O)
+        ndp = np.full((buckets + 1, O), INF)
+        for b in range(buckets + 1):
+            row = dp[b]
+            fin = row < INF
+            if not fin.any():
+                continue
+            tot = np.where(fin[:, None], row[:, None] + swg, INF)
+            pred = np.argmin(tot, axis=0)
+            cost = tot[pred, oi] + nCt
+            nbb = nb[b]
+            cur = ndp[nbb, oi]
+            m = cost < cur
+            if m.any():
+                ndp[nbb[m], oi[m]] = cost[m]
+                back[t, nbb[m], oi[m]] = b * O + pred[m]
+        dp = ndp
+
+    tb = int(np.floor(target * scale))
+    flat_best = None
+    for b in range(tb, buckets + 1):
+        o = int(np.argmin(dp[b]))
+        if dp[b, o] < INF and (flat_best is None
+                               or dp[b, o] < flat_best[2]):
+            flat_best = (b, o, dp[b, o])
+    feasible = flat_best is not None
+    if not feasible:
+        choice = [_best_effort(F[t], C[t]) for t in range(T)]
+    else:
+        b, o, _ = flat_best
+        choice = [0] * T
+        for t in range(T - 1, 0, -1):
+            choice[t] = o
+            enc = back[t, b, o]
+            o = int(enc % O)
+            b = int(enc // O)
+        choice[0] = o
+    tg = [float(swg0[choice[0]])] + [
+        float(E[choice[t - 1], choice[t]] * cis[t]) for t in range(1, T)]
+    obj = float(sum(n[t] * C[t][c] for t, c in enumerate(choice))
+                + sum(tg))
+    return SolveResult([options[c] for c in choice], obj, feasible,
+                       time.time() - t_start, "dp+transition",
+                       transition_g=tg)
+
+
 def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
                            pred_cis: Sequence[float], slo: SLO,
                            carbon: CarbonModel, *,
@@ -360,7 +541,12 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
                                                         Profile]] = None,
                            model=None,
                            rho: Optional[float] = None,
-                           use_ilp: bool = True) -> SolveResult:
+                           use_ilp: bool = True,
+                           transitions: Optional[TransitionConfig] = None,
+                           min_dwell_hours: int = 1,
+                           dwell_offset: int = 0,
+                           initial_plan: Optional[ResourcePlan] = None
+                           ) -> SolveResult:
     """Joint hourly plan over (cache size, resource plan): the option set
     is the cross product sizes × plan candidates and the same
     multiple-choice knapsack machinery picks one option per hour (paper
@@ -382,7 +568,21 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
     ``type_profiles`` feeds measured per-generation profiles into the
     single-pool fleet metrics (see ``_fleet_cell_metrics``); ``model``
     (a ``ServingModel``) enables the analytic decode-pool attainment for
-    disaggregated candidates (see ``_disagg_decode_slo``)."""
+    disaggregated candidates (see ``_disagg_decode_slo``).
+
+    ``transitions`` (a ``TransitionConfig``) makes the solve
+    *transition-aware*: consecutive hours pay the switching carbon of the
+    plan diff (boot + drain energy, partitioned-ring migration I/O), so
+    the schedule exhibits hysteresis instead of flapping between
+    near-tied options; ``min_dwell_hours`` additionally pins the plan
+    *shape* between block-aligned hours (``dwell_offset`` aligns the
+    blocks to absolute hours when re-solving mid-day), and
+    ``initial_plan`` prices the first hour's switch away from the live
+    configuration.  Transition mode always solves with the DP (pairwise
+    switching costs are outside the ILP's variable set); a zero-cost
+    config falls back to the plain solve and bit-reproduces its
+    schedules.  ``SolveResult.transition_g`` reports the per-hour
+    switching carbon."""
     t_start = time.time()
     rho = rho if rho is not None else slo.rho
     sizes = list(sizes_tb) if sizes_tb is not None else list(profile.sizes)
@@ -423,28 +623,55 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
                 C[t, oi], F[t, oi] = _cluster_cell_metrics(
                     profile, pred_rates[t], s, k, pred_cis[t], carbon)
 
-    if use_ilp:
-        try:
-            res = _solve_ilp(C, F, n, options, rho, t_start)
-        except Exception:
+    res = None
+    if transitions is not None:
+        opt_plans = [_option_plan(o, sized=True) for o in options]
+        E, S = _transition_matrices(opt_plans, transitions, model=model)
+        e_init = lock0 = None
+        if initial_plan is not None:
+            init_key = _fleet_key(initial_plan)
+            fleet_diff0 = np.array([_fleet_key(p) != init_key
+                                    for p in opt_plans])
+            e_init = np.array([_pair_switch_kwh(initial_plan, p,
+                                                transitions, model=model)
+                               if d else 0.0
+                               for p, d in zip(opt_plans, fleet_diff0)])
+            if min_dwell_hours > 1 and dwell_offset % min_dwell_hours:
+                lock0 = fleet_diff0       # mid-block re-solve: hold shape
+        if E.any() or min_dwell_hours > 1 \
+                or (e_init is not None and e_init.any()):
+            res = _solve_dp_transition(C, F, n, options, rho, t_start,
+                                       E, S, e_init, pred_cis,
+                                       min_dwell_hours, dwell_offset,
+                                       lock0=lock0)
+        # else: every switch is free — the plain solve is identical (and
+        # bit-reproduces the pre-transition schedules)
+    if res is None:
+        if use_ilp:
+            try:
+                res = _solve_ilp(C, F, n, options, rho, t_start)
+            except Exception:
+                res = _solve_dp(C, F, n, options, rho, t_start)
+        else:
             res = _solve_dp(C, F, n, options, rho, t_start)
-    else:
-        res = _solve_dp(C, F, n, options, rho, t_start)
     chosen = list(res.sizes_tb)       # option tuples, split into the plan
     hourly = [_option_plan(o, sized=True) for o in chosen]
+    tg = res.transition_g
     if plans is not None:
         return SolveResult([s for s, _ in chosen], res.objective_g,
                            res.feasible, time.time() - t_start, res.solver,
                            replicas=[p.n_replicas for p in hourly],
-                           plans=hourly)
+                           plans=hourly, transition_g=tg)
     if fleets is not None:
         return SolveResult([s for s, _ in chosen], res.objective_g,
                            res.feasible, time.time() - t_start, res.solver,
                            replicas=[len(f) for _, f in chosen],
-                           fleets=[f for _, f in chosen], plans=hourly)
+                           fleets=[f for _, f in chosen], plans=hourly,
+                           transition_g=tg)
     return SolveResult([s for s, _ in chosen], res.objective_g,
                        res.feasible, time.time() - t_start, res.solver,
-                       replicas=[k for _, k in chosen], plans=hourly)
+                       replicas=[k for _, k in chosen], plans=hourly,
+                       transition_g=tg)
 
 
 def _solve_ilp(C, F, n, sizes, rho, t_start) -> SolveResult:

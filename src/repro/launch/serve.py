@@ -83,6 +83,23 @@ def build_plans(args) -> list:
             for k in counts]
 
 
+def build_transitions(args):
+    """Construct the ``TransitionConfig`` from the CLI knobs: any of
+    ``--transitions``/``--boot-latency``/``--rebalance``/``--min-dwell``
+    enables the transition model (None = legacy instant switching)."""
+    from repro.core.plan import TransitionConfig
+    enabled = (args.transitions or args.boot_latency is not None
+               or args.rebalance is not None or args.min_dwell > 1)
+    if not enabled:
+        return None
+    kw = {}
+    if args.boot_latency is not None:
+        kw["boot_latency_s"] = args.boot_latency
+    if args.rebalance is not None:
+        kw["rebalance"] = args.rebalance
+    return TransitionConfig(**kw)
+
+
 def run_simulation(args):
     from repro.core.carbon import CarbonModel
     from repro.core.controller import GreenCacheController
@@ -95,6 +112,7 @@ def run_simulation(args):
     model = SERVING_MODELS[args.model]
     carbon = CarbonModel()
     plans = build_plans(args)
+    transitions = build_transitions(args)
     # the day's load scales with the arrival-carrying (prefill) capacity:
     # a disaggregated plan's decode pool adds token throughput, not
     # request admission (for fused plans prefill == the whole fleet)
@@ -122,7 +140,9 @@ def run_simulation(args):
                                mode=args.mode, policy=policy,
                                warm_requests=args.warmup,
                                plans=plans, router=args.router,
-                               max_requests_per_hour=int(1200 * scale))
+                               max_requests_per_hour=int(1200 * scale),
+                               transitions=transitions,
+                               min_dwell_hours=args.min_dwell)
     res = ctl.run_day(wf, rate_trace, cis)
     many = len(plans) > 1
     clustered = scale > 1 or plans[0].n_replicas > 1
@@ -135,6 +155,9 @@ def run_simulation(args):
         print(f"  avg fleet cap:  {res.avg_fleet_capacity:.2f} "
               f"(reference-server units)")
         print(f"  hourly plans:   {[h.plan for h in res.hours]}")
+    if transitions is not None:
+        print(f"  plan changes:   {res.plan_changes} "
+              f"(transition carbon {res.total_transition_g:.1f} g)")
     return res
 
 
@@ -207,6 +230,24 @@ def main(argv=None):
                              "cache_affinity"],
                     help="cluster router (default: single for 1 replica, "
                          "cache_affinity otherwise)")
+    ap.add_argument("--transitions", action="store_true",
+                    help="model plan transitions as first-class events "
+                         "(per-type boot latency, drain accounting, KV "
+                         "rebalancing, switching-cost-aware solver) "
+                         "instead of free instant reconfiguration")
+    ap.add_argument("--boot-latency", type=float, default=None,
+                    help="replica warmup seconds before a booted replica "
+                         "serves (default: per-ReplicaType boot_s; "
+                         "implies --transitions)")
+    ap.add_argument("--rebalance", default=None,
+                    choices=["migrate", "cold"],
+                    help="partitioned-store ring resize policy: bulk KV "
+                         "migration or cold-start misses on reassigned "
+                         "keys (implies --transitions)")
+    ap.add_argument("--min-dwell", type=int, default=1,
+                    help="minimum hours a plan shape must dwell before "
+                         "the solver may switch it again (>1 implies "
+                         "--transitions)")
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--arch", default="yi-6b")
     args = ap.parse_args(argv)

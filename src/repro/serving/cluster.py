@@ -40,26 +40,41 @@ the untyped engine; mixes additionally weight the bounded-load spill caps
 and the ``least_loaded`` rule by per-replica capacity.
 
 Resource plans: ``apply(ResourcePlan)`` is the hourly reconfiguration
-entry point (fleet change + cache resize in one step; the deprecated
-``set_replicas``/``set_fleet`` shims delegate to it), ``make_cluster``
-builds an engine from a sized plan, and a *disaggregated* plan
-(``prefill=`` + ``decode=`` pools) yields a ``DisaggEngine`` — prefill
-queueing on one typed pool, dedicated interference-free decode on
-another, with a per-token KV handoff between them (see the
-``DisaggEngine`` docstring).
+entry point (returning an ``AppliedTransition``; the deprecated
+``set_replicas``/``set_fleet`` shims still snap instantly),
+``make_cluster`` builds an engine from a sized plan (or plan string),
+and a *disaggregated* plan (``prefill=`` + ``decode=`` pools) yields a
+``DisaggEngine`` — prefill queueing on one typed pool, dedicated
+interference-free decode on another, with a per-token KV handoff
+between them (see the ``DisaggEngine`` docstring).
+
+Transitions: with a ``repro.core.plan.TransitionConfig`` the engine
+simulates reconfiguration over time instead of snapping — booted
+replicas join after a per-type warmup (drawing boot power but serving
+nothing), drained replicas finish in-flight work powered, partitioned
+ring changes rebalance KV (bulk migration or cold misses), cache
+shrinks evict gradually — and ``apply`` prices the event (boot + drain
++ migration energy, folded into the next window's carbon).
+``TransitionConfig.free()`` (and ``transitions=None``) bit-reproduce
+the instant-switch trajectories.
 """
 from __future__ import annotations
 
+import functools
 import hashlib
 import warnings
 import zlib
+from collections import defaultdict
+from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.carbon import CarbonModel, get_replica_type
+from repro.core.carbon import (CarbonModel, get_replica_type,
+                               kv_migration_energy_kwh)
 from repro.core.kvstore import KVStore
-from repro.core.plan import ResourcePlan, UNSET_EPS
+from repro.core.plan import (UNSET_EPS, PlanTransition, ResourcePlan,
+                             TransitionConfig)
 from repro.serving.engine import SimResult
 from repro.serving.perfmodel import ServingModel
 
@@ -113,6 +128,36 @@ class HashRing:
         return self.owners[idx]
 
 
+@functools.lru_cache(maxsize=128)
+def hash_ring(n_replicas: int, vnodes: int = _VNODES) -> HashRing:
+    """Shared, cached ring per replica count: ring construction (N·vnodes
+    blake2b hashes + a sort) dominates repeated ``apply`` calls in
+    day-scale sweeps, and rings are immutable after construction so every
+    engine at the same count can share one instance."""
+    ring = HashRing(n_replicas, vnodes)
+    ring.points.setflags(write=False)       # shared: guard against mutation
+    ring.owners.setflags(write=False)
+    return ring
+
+
+@dataclass
+class AppliedTransition:
+    """What ``ClusterEngine.apply``/``DisaggEngine.apply`` actually did:
+    the plan diff plus the measured costs of executing it.  The energy is
+    also accumulated on the engine and folded into the next simulation
+    window (so its operational carbon is priced at that window's CI)."""
+    transition: PlanTransition
+    energy_kwh: float = 0.0            # boot + drain + migration I/O
+    boot_s: float = 0.0                # longest warmup among booted replicas
+    drain_s: float = 0.0               # summed drained-but-powered seconds
+    migrated_bytes: float = 0.0        # KV moved between partitioned stores
+    dropped_keys: int = 0              # entries cold-dropped by a rebalance
+
+    @property
+    def is_noop(self) -> bool:
+        return self.transition.is_noop and self.energy_kwh == 0.0
+
+
 class ClusterEngine:
     """N-replica prefill cluster + analytically coupled decode.
 
@@ -126,12 +171,15 @@ class ClusterEngine:
                  carbon: CarbonModel, *,
                  n_replicas: int = 1, router: str = "single",
                  balance_eps: Optional[float] = 0.15,
-                 types: Optional[Sequence[str]] = None):
+                 types: Optional[Sequence[str]] = None,
+                 transitions: Optional[TransitionConfig] = None):
         if router not in ROUTERS:
             raise ValueError(f"unknown router {router!r}; one of {ROUTERS}")
         self.model = model
         self.carbon = carbon
         self.balance_eps = balance_eps
+        self.transitions = transitions
+        self._pending_kwh = 0.0        # transition energy awaiting a window
         if types is not None:
             types = [str(t) for t in types]
             for t in types:
@@ -161,7 +209,7 @@ class ClusterEngine:
         for st in self.stores:      # batched eviction scoring (same victims)
             st.enable_vector_evict()
         self._free = [0.0] * self.n_replicas
-        self._ring = HashRing(self.n_replicas) \
+        self._ring = hash_ring(self.n_replicas) \
             if router == "cache_affinity" else None
         self._rr_next = 0
 
@@ -202,26 +250,193 @@ class ClusterEngine:
                            else _stable_hash(key) % self.n_replicas]
 
     # ------------------------------------------------------------------ #
-    def apply(self, plan: ResourcePlan, *, now: float = 0.0):
+    def current_plan(self, cache_tb: Optional[float] = None
+                     ) -> ResourcePlan:
+        """The live configuration as a ``ResourcePlan``.  ``cache_tb``
+        defaults to the actual cluster-total store allocation, so
+        ``apply(current_plan())`` is a no-op transition."""
+        if cache_tb is None:
+            cache_tb = sum(st.capacity_bytes for st in self.stores) / 1e12
+        fleet = tuple(self.types) if self.types is not None \
+            else ("l40",) * self.n_replicas
+        return ResourcePlan.single(cache_tb, fleet=fleet,
+                                   router=self.router,
+                                   balance_eps=self.balance_eps,
+                                   partitioned=not self.shared)
+
+    def apply(self, plan: ResourcePlan, *, now: float = 0.0
+              ) -> AppliedTransition:
         """Reconfigure the live cluster from a ``ResourcePlan`` — the
         hourly-controller entry point, subsuming the deprecated
-        ``set_replicas``/``set_fleet`` pair: installs the plan's fleet
-        (replicas keep their backlogs positionally; a shrink drops the
-        longest queues, new replicas join idle) and, when the plan carries
-        a concrete ``cache_tb``, resizes the store(s) to it (evictions
-        timestamped at ``now``). Only shared-store clusters can change
-        fleet size (partitioned stores would need a KV redistribution
-        pass the hourly loop does not model)."""
+        ``set_replicas``/``set_fleet`` pair — and return the
+        ``AppliedTransition`` describing what changed and what it cost.
+
+        Without a ``TransitionConfig`` (``transitions=None``, the
+        legacy default) the change is instantaneous and free: the fleet
+        is swapped wholesale (replicas keep their backlogs positionally;
+        a shrink drops the longest queues, new replicas join idle), the
+        store(s) snap to the plan's ``cache_tb``, and partitioned-store
+        clusters refuse to change fleet size.
+
+        With a config, the transition is simulated over time: booting
+        replicas join the serving set only after their warmup latency
+        (drawing boot power but serving nothing — their clock starts at
+        ``now + boot_s``), draining replicas finish their in-flight
+        backlog powered, partitioned-store ring changes rebalance KV
+        (bulk migration over ``kv_transfer_gbps`` with added donor load,
+        or cold-start misses on reassigned keys, per
+        ``TransitionConfig.rebalance``), and cache shrinks evict
+        gradually over ``cache_ramp_s``.  Transition energy accumulates
+        on the engine and is folded into the next ``run`` window.
+        ``TransitionConfig.free()`` bit-reproduces the legacy path."""
         if plan.is_disaggregated:
             raise ValueError("fused cluster cannot apply a disaggregated "
                              "plan; build a DisaggEngine for prefill/decode "
                              "pools")
         pool = plan.serve
         self._apply_pool_knobs(pool)
-        if list(pool.fleet) != self.types:
-            self._apply_fleet(pool.fleet)
-        self._resize_cache(plan.cache_tb, now)
-        return self
+        tr = PlanTransition.diff(self.current_plan(), plan)
+        applied = AppliedTransition(tr)
+        cfg = self.transitions
+        if cfg is None or (cfg.is_free and (self.shared or
+                           len(pool.fleet) == self.n_replicas)):
+            # legacy instant path (PR-3 semantics, bit-reproduced)
+            if list(pool.fleet) != self.types:
+                self._apply_fleet(pool.fleet)
+            self._resize_cache(plan.cache_tb, now)
+            return applied
+        applied.energy_kwh += self.carbon.transition_energy_kwh(
+            tr, boot_latency_s=cfg.boot_latency_s)      # boot draw
+        self._transition_pool(pool, tr, now, applied)
+        self._resize_cache(plan.cache_tb, now,
+                           ramp_s=cfg.cache_ramp_s,
+                           steps=cfg.cache_ramp_steps)
+        self._pending_kwh += applied.energy_kwh
+        return applied
+
+    def _transition_pool(self, pool, tr: PlanTransition, now: float,
+                         applied: AppliedTransition):
+        """Execute the store-owning pool's fleet change under the
+        transition model: per-type survivor matching (the busiest
+        same-type replicas drain, the least-loaded keep their backlog),
+        booted replicas' clocks start after warmup, and partitioned
+        stores rebalance when the ring resizes."""
+        cfg = self.transitions
+        fleet = list(pool.fleet)
+        delta = tr.pool(pool.role)
+        if delta is None:                       # same multiset: (re)type
+            if fleet != self.types:
+                self._set_types(fleet)
+            return
+        old_types = self.types if self.types is not None \
+            else ["l40"] * self.n_replicas
+        clocks = defaultdict(list)
+        for t, f in zip(old_types, self._free):
+            clocks[t].append(f)
+        for t in clocks:
+            clocks[t].sort()                    # shortest backlogs survive
+        new_free = []
+        for t in fleet:
+            if clocks[t]:
+                new_free.append(clocks[t].pop(0))
+            else:
+                b = cfg.boot_s(t)
+                new_free.append(now + b)
+                applied.boot_s = max(applied.boot_s, b)
+        if cfg.drain:
+            # drained replicas stay powered until their backlog clears
+            for t, rem in clocks.items():
+                rt = get_replica_type(t)
+                for f in rem:
+                    d = max(f - now, 0.0)
+                    applied.drain_s += d
+                    applied.energy_kwh += rt.idle_energy_kwh(d)
+        n_new = len(fleet)
+        if not self.shared and n_new != self.n_replicas:
+            self._rebalance_stores(n_new, now, new_free, applied)
+        self._free = new_free
+        self.n_replicas = n_new
+        if self.router == "single" and n_new > 1:
+            self.router = "round_robin"
+        if self._ring is not None:
+            self._ring = hash_ring(n_new)
+        self._set_types(fleet)
+
+    def _rebalance_stores(self, n_new: int, now: float,
+                          new_free: List[float],
+                          applied: AppliedTransition):
+        """Partitioned-store ring resize: every cached entry whose owner
+        changes under the new ring (consistent hashing moves only
+        ~|m-n|/max(m,n) of the key space) is either bulk-migrated to its
+        new partition — bytes over the KV interconnect, transfer time
+        added to the donor replica's clock (or the receiver's when the
+        donor is leaving) — or dropped cold (``rebalance="cold"``:
+        reassigned keys miss and re-prefill)."""
+        cfg = self.transitions
+        n_old = len(self.stores)
+        total_cap = sum(st.capacity_bytes for st in self.stores)
+        ref = self.stores[0]
+        per = total_cap / n_new
+        new_ring = hash_ring(n_new) if self._ring is not None else None
+        if n_new > n_old:
+            added = [KVStore(per, ref.policy, ref.kv_bytes_per_token)
+                     for _ in range(n_new - n_old)]
+            for st in added:
+                if ref._vector_policy is not None:
+                    st.enable_vector_evict()
+            new_stores = self.stores + added
+        else:
+            new_stores = self.stores[:n_new]
+        # collect moves against the *current* placement (the store index
+        # is the old owner) before any store shrinks
+        moves = []                              # (old_k, new_k, key)
+        for k, st in enumerate(self.stores):
+            for key in st.entries:
+                nk = int(new_ring.owner(key)) if new_ring is not None \
+                    else _stable_hash(key) % n_new
+                if nk != k:
+                    moves.append((k, nk, key))
+        # capacity growth is free and must land before adoption (a ring
+        # shrink widens the survivors); capacity *cuts* wait until the
+        # moves have drained the donors — shrinking first would
+        # score-evict the very entries migration is about to rehome
+        survivors = new_stores[:min(n_old, n_new)]
+        for st in survivors:
+            if per > st.capacity_bytes:
+                st.resize(per, now)
+        gbps = cfg.kv_transfer_gbps \
+            if cfg.kv_transfer_gbps is not None \
+            else self.model.kv_transfer_gbps
+        cold = cfg.rebalance == "cold"
+        for k, nk, key in moves:
+            if key not in self.stores[k].entries:
+                continue    # evicted by an earlier adoption's make-room
+            entry = self.stores[k].pop_entry(key)
+            if cold:
+                st = self.stores[k]
+                st.stats.evictions += 1
+                st.stats.evicted_bytes += entry.size_bytes
+                applied.dropped_keys += 1
+                continue
+            applied.migrated_bytes += entry.size_bytes
+            if not cfg.is_free:
+                # donor pays the read+send; a departing donor's load
+                # lands on the receiver instead
+                new_free[k if k < n_new else nk] += \
+                    entry.size_bytes / (gbps * 1e9)
+            if not new_stores[nk].adopt(entry, now):
+                # the bytes are gone for real: account like an eviction
+                # (cold mode does) so store stats stay comparable
+                self.stores[k].stats.evictions += 1
+                self.stores[k].stats.evicted_bytes += entry.size_bytes
+                applied.dropped_keys += 1
+        if applied.migrated_bytes > 0.0 and not cfg.is_free:
+            applied.energy_kwh += kv_migration_energy_kwh(
+                applied.migrated_bytes, gbps)
+        for st in survivors:
+            if st.capacity_bytes != per:
+                st.resize(per, now)
+        self.stores = new_stores
 
     def _apply_pool_knobs(self, pool):
         """Routing knobs of the store-owning pool: the router and store
@@ -240,14 +455,19 @@ class ClusterEngine:
         if pool.balance_eps is not UNSET_EPS:
             self.balance_eps = pool.balance_eps
 
-    def _resize_cache(self, cache_tb: Optional[float], now: float):
+    def _resize_cache(self, cache_tb: Optional[float], now: float, *,
+                      ramp_s: float = 0.0, steps: int = 4):
+        """Snap (``ramp_s=0``, the legacy path) or gradually shrink the
+        store(s) to the plan's allocation — staged evictions spread over
+        the ramp window instead of teleporting capacity away."""
         if cache_tb is None:
             return
-        if self.shared:
-            self.stores[0].resize(cache_tb * 1e12, now=now)
-        else:
-            per = cache_tb * 1e12 / len(self.stores)
-            for st in self.stores:
+        per = cache_tb * 1e12 if self.shared \
+            else cache_tb * 1e12 / len(self.stores)
+        for st in self.stores:
+            if ramp_s > 0.0:
+                st.schedule_resize(per, now, ramp_s, steps=steps)
+            else:
                 st.resize(per, now=now)
 
     def set_replicas(self, n_replicas: int):
@@ -271,7 +491,7 @@ class ClusterEngine:
         if self.router == "single" and n_replicas > 1:
             self.router = "round_robin"
         if self._ring is not None:
-            self._ring = HashRing(n_replicas)
+            self._ring = hash_ring(n_replicas)
 
     def set_fleet(self, types: Sequence[str]):
         """Deprecated: apply a ``ResourcePlan`` instead."""
@@ -298,7 +518,7 @@ class ClusterEngine:
             self._resize_free(n_new)
             self.n_replicas = n_new
             if self._ring is not None:
-                self._ring = HashRing(n_new)
+                self._ring = hash_ring(n_new)
         if self.router == "single" and n_new > 1:
             self.router = "round_robin"
         self._set_types(types)
@@ -454,6 +674,11 @@ class ClusterEngine:
                    + m.gpu_util_decode * decode_frac, 1.0)
         energy = self.carbon.energy_kwh(util, duration, ssd_tb=cache_tb,
                                         n_servers=K, types=self.types)
+        if self._pending_kwh:
+            # transition energy (boot/drain/migration) accrued by apply():
+            # priced operationally at this window's CI
+            energy += self._pending_kwh
+            self._pending_kwh = 0.0
 
         # per-request write-back (ILP attribution + downstream consumers)
         e_req = energy / n
@@ -631,7 +856,8 @@ class DisaggEngine(ClusterEngine):
 
     def __init__(self, model: ServingModel,
                  stores: Union[KVStore, Sequence[KVStore]],
-                 carbon: CarbonModel, plan: ResourcePlan):
+                 carbon: CarbonModel, plan: ResourcePlan,
+                 transitions: Optional[TransitionConfig] = None):
         if not plan.is_disaggregated:
             raise ValueError("DisaggEngine needs a disaggregated plan "
                              "(prefill= and decode= pools)")
@@ -639,7 +865,8 @@ class DisaggEngine(ClusterEngine):
         router = pre.router if pre.router is not None else \
             ("single" if pre.n_replicas == 1 else "cache_affinity")
         super().__init__(model, stores, carbon, types=pre.fleet,
-                         router=router, balance_eps=pre.resolved_eps)
+                         router=router, balance_eps=pre.resolved_eps,
+                         transitions=transitions)
         self._set_decode(plan.decode.fleet)
 
     def _set_decode(self, types: Sequence[str]):
@@ -649,30 +876,87 @@ class DisaggEngine(ClusterEngine):
         self.decode_types = types
         self._dec_scales = np.array(
             [get_replica_type(t).perf_scale for t in types])
+        # per-replica readiness (booted decode replicas join late); the
+        # transition path overwrites this after a decode-pool change
+        self._dec_ready_at = [0.0] * len(types)
 
     @property
     def total_replicas(self) -> int:
         return self.n_replicas + len(self.decode_types)
 
     def current_plan(self, cache_tb: Optional[float] = None) -> ResourcePlan:
+        if cache_tb is None:
+            cache_tb = sum(st.capacity_bytes for st in self.stores) / 1e12
         return ResourcePlan.disaggregated(
             cache_tb, prefill=tuple(self.types), decode=self.decode_types,
             router=self.router, balance_eps=self.balance_eps,
             partitioned=not self.shared)
 
-    def apply(self, plan: ResourcePlan, *, now: float = 0.0):
+    def apply(self, plan: ResourcePlan, *, now: float = 0.0
+              ) -> AppliedTransition:
         """Reconfigure both pools (and the cache allocation) from an
-        hourly disaggregated plan."""
+        hourly disaggregated plan; with a ``TransitionConfig`` each
+        pool's change is simulated over time (see ``ClusterEngine
+        .apply``) — booting decode replicas join the analytic decode
+        fixed point only after their warmup."""
         if not plan.is_disaggregated:
             raise ValueError("disaggregated cluster cannot apply a "
                              "single-pool plan; build a ClusterEngine")
         pre = plan.prefill
         self._apply_pool_knobs(pre)
-        if list(pre.fleet) != self.types:
-            self._apply_fleet(pre.fleet)
-        self._set_decode(plan.decode.fleet)
-        self._resize_cache(plan.cache_tb, now)
-        return self
+        tr = PlanTransition.diff(self.current_plan(), plan)
+        applied = AppliedTransition(tr)
+        cfg = self.transitions
+        if cfg is None or (cfg.is_free and (self.shared or
+                           pre.n_replicas == self.n_replicas)):
+            if list(pre.fleet) != self.types:
+                self._apply_fleet(pre.fleet)
+            self._set_decode(plan.decode.fleet)
+            self._resize_cache(plan.cache_tb, now)
+            return applied
+        applied.energy_kwh += self.carbon.transition_energy_kwh(
+            tr, boot_latency_s=cfg.boot_latency_s)      # both pools' boots
+        self._transition_pool(pre, tr, now, applied)
+        self._transition_decode(plan.decode.fleet, now, applied)
+        self._resize_cache(plan.cache_tb, now,
+                           ramp_s=cfg.cache_ramp_s,
+                           steps=cfg.cache_ramp_steps)
+        self._pending_kwh += applied.energy_kwh
+        return applied
+
+    def _transition_decode(self, types: Sequence[str], now: float,
+                           applied: AppliedTransition):
+        """Decode-pool fleet change under the transition model: survivors
+        (matched per type, earliest-ready first) keep their readiness,
+        booted replicas become available at ``now + boot_s`` (the decode
+        fixed point scales their capacity by in-window availability), and
+        drained replicas are priced a nominal powered residual
+        (``TransitionConfig.decode_drain_s`` — the analytic pool has no
+        per-replica backlog to measure)."""
+        cfg = self.transitions
+        types = [str(t) for t in types]
+        ready = defaultdict(list)
+        for t, r in zip(self.decode_types, self._dec_ready_at):
+            ready[t].append(r)
+        for t in ready:
+            ready[t].sort()
+        new_ready = []
+        for t in types:
+            if ready[t]:
+                new_ready.append(ready[t].pop(0))
+            else:
+                b = cfg.boot_s(t)
+                new_ready.append(now + b)
+                applied.boot_s = max(applied.boot_s, b)
+        if cfg.drain and cfg.decode_drain_s > 0.0:
+            for t, rem in ready.items():
+                rt = get_replica_type(t)
+                for _ in rem:
+                    applied.drain_s += cfg.decode_drain_s
+                    applied.energy_kwh += \
+                        rt.idle_energy_kwh(cfg.decode_drain_s)
+        self._set_decode(types)
+        self._dec_ready_at = new_ready
 
     # ------------------------------------------------------------------ #
     def _finish_run(self, requests: Sequence, arrival: np.ndarray,
@@ -707,9 +991,20 @@ class DisaggEngine(ClusterEngine):
         compute_util_p = min(busy_compute / max(Kp * duration, 1e-9), 1.0)
 
         # decode pool: continuous-batching fixed point, NO prefill
-        # interference (the whole point of the dedicated pool)
+        # interference (the whole point of the dedicated pool).  Booting
+        # replicas count only for the fraction of the window they are
+        # ready (transition warmup); the steady state divides by the
+        # integer count exactly as before
         span = max(float(arrival[-1]) - t0, 1.0)
-        lam = (rate_hint if rate_hint else n / span) / Kd
+        t_end = max(finish_max, float(arrival[-1]))
+        if any(r > t0 for r in self._dec_ready_at):
+            span_w = max(t_end - t0, 1e-9)
+            kd_eff = sum(min(max((t_end - r) / span_w, 0.0), 1.0)
+                         for r in self._dec_ready_at)
+            kd_eff = max(kd_eff, 1e-6)
+        else:
+            kd_eff = Kd
+        lam = (rate_hint if rate_hint else n / span) / kd_eff
         out_mean = float(out.mean())
         dec_slow = float(np.mean(1.0 / self._dec_scales))
         tpot, batch = m.decode_fixed_point(lam, out_mean, dec_slow)
@@ -727,6 +1022,9 @@ class DisaggEngine(ClusterEngine):
         energy = self.carbon.plan_energy_kwh(
             plan, {"prefill": util_p, "decode": util_d}, duration,
             pool_power_frac={"decode": m.decode_pool_power_frac})
+        if self._pending_kwh:
+            energy += self._pending_kwh
+            self._pending_kwh = 0.0
 
         e_req = energy / n
         for r, ru, tt, tp in zip(requests, reused.tolist(), ttft.tolist(),
@@ -767,15 +1065,22 @@ def make_cluster(model: ServingModel, carbon: CarbonModel, *,
                  partitioned: bool = False,
                  types: Optional[Sequence[str]] = None,
                  balance_eps: Optional[float] = 0.15,
-                 plan: Optional[ResourcePlan] = None) -> ClusterEngine:
+                 plan: Union[ResourcePlan, str, None] = None,
+                 transitions: Optional[TransitionConfig] = None
+                 ) -> ClusterEngine:
     """Convenience constructor: builds the store(s) for a cluster-total
     ``cache_tb`` allocation (partitioned mode splits it evenly).
 
-    ``plan`` is the preferred entry point — a ``ResourcePlan`` carrying
-    the cache size, pool fleet(s) and routing knobs (a disaggregated plan
-    yields a ``DisaggEngine``). The remaining kwargs are the pre-plan
-    spelling: ``types`` selects a heterogeneous fleet (one
-    ``ReplicaType`` name per replica, overriding ``n_replicas``)."""
+    ``plan`` is the preferred entry point — a ``ResourcePlan`` (or a
+    plan string like ``"cache=4tb fleet=a100:2,l40:4"``) carrying the
+    cache size, pool fleet(s) and routing knobs (a disaggregated plan
+    yields a ``DisaggEngine``).  ``transitions`` installs the
+    reconfiguration model applied by subsequent ``apply`` calls.  The
+    remaining kwargs are the pre-plan spelling: ``types`` selects a
+    heterogeneous fleet (one ``ReplicaType`` name per replica,
+    overriding ``n_replicas``)."""
+    if isinstance(plan, str):
+        plan = ResourcePlan.parse(plan)
     if plan is not None:
         pre = plan.prefill
         if plan.cache_tb is None:
@@ -807,7 +1112,8 @@ def make_cluster(model: ServingModel, carbon: CarbonModel, *,
             plan = dataclasses.replace(plan, pools=tuple(
                 dataclasses.replace(p, router=router)
                 if p.role == "prefill" else p for p in plan.pools))
-        return DisaggEngine(model, stores, carbon, plan)
+        return DisaggEngine(model, stores, carbon, plan,
+                            transitions=transitions)
     return ClusterEngine(model, stores, carbon, n_replicas=n_replicas,
                          router=router, types=types,
-                         balance_eps=balance_eps)
+                         balance_eps=balance_eps, transitions=transitions)

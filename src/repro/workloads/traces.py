@@ -43,8 +43,12 @@ _GRID_SHAPE = {
 
 
 def ci_trace(grid: str, days: int = 1, seed: int = 1) -> np.ndarray:
-    """Hourly gCO2e/kWh. Mean ≈ GRID_CI[grid]; shape grid-characteristic."""
-    rng = np.random.default_rng(seed + hash(grid) % 1000)
+    """Hourly gCO2e/kWh. Mean ≈ GRID_CI[grid]; shape grid-characteristic.
+    The grid name is folded into the RNG seed with a process-stable hash
+    (builtin ``hash`` is salted per interpreter run, which made the
+    "same" trace differ between processes — figures must reproduce)."""
+    import zlib
+    rng = np.random.default_rng(seed + zlib.crc32(grid.encode()) % 1000)
     mean = GRID_CI[grid]
     dip, peak, noise = _GRID_SHAPE.get(grid, (0.2, 0.2, 0.1))
     h = np.arange(HOURS)
