@@ -6,7 +6,7 @@ import functools
 import json
 import os
 import time
-from typing import Callable, Dict
+from typing import Dict
 
 import numpy as np
 
@@ -15,7 +15,7 @@ from repro.core.plan import DEFAULT_BALANCE_EPS, ResourcePlan
 from repro.core.policies import POLICIES
 from repro.core.profiler import Profile, run_profiler
 from repro.serving.cluster import make_cluster
-from repro.serving.perfmodel import SERVING_MODELS, ServingModel
+from repro.serving.perfmodel import SERVING_MODELS
 from repro.workloads.conversations import ConversationWorkload
 from repro.workloads.documents import DocumentWorkload
 from repro.workloads.traces import make_poisson_arrivals

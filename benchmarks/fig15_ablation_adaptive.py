@@ -8,7 +8,6 @@ import numpy as np
 from repro.core.carbon import GRID_CI
 from repro.core.controller import GreenCacheController
 from repro.serving.perfmodel import SERVING_MODELS
-from repro.workloads.traces import azure_rate_trace
 
 from benchmarks.common import (CARBON, TASKS, WARMUP, cap_requests,
                                clip_day, get_profile, save_result,

@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.carbon import GRID_CI
 from repro.core.solver import solve_cache_schedule
 from repro.serving.perfmodel import SLOS
 

@@ -1,14 +1,21 @@
 """Fig 20: sensitivity to SSD embodied carbon (30-90 kgCO2e/TB): higher
 embodied carbon widens GreenCache's advantage (paper: up to 25 % at
-90 kg/TB)."""
+90 kg/TB).
+
+Like fig19, the sweep walks the storage *device registry*: each point is
+the reference ``nvme_gen4`` device with a rescaled ``embodied_kg_per_tb``
+projected through ``device_hardware_spec`` — zero-diff at the default
+30 kg/TB device."""
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
 
-from repro.core.carbon import CarbonModel, GRID_CI, HardwareSpec
+from repro.core.carbon import CarbonModel, GRID_CI
 from repro.core.controller import GreenCacheController
+from repro.core.storage import (DEFAULT_DEVICE, STORAGE_DEVICES,
+                                device_hardware_spec)
 from repro.serving.perfmodel import SERVING_MODELS
 
 from benchmarks.common import (TASKS, WARMUP, cap_requests, clip_day,
@@ -22,8 +29,9 @@ def run():
     prof = get_profile("llama3-70b", "conversation")
     rows = []
     for kg in EMBODIED:
-        cm = CarbonModel(hw=dataclasses.replace(HardwareSpec(),
-                                                ssd_kg_per_tb=kg))
+        dev = dataclasses.replace(STORAGE_DEVICES[DEFAULT_DEVICE],
+                                  embodied_kg_per_tb=kg)
+        cm = CarbonModel(hw=device_hardware_spec(dev))
         rates, cis = clip_day(np.full(12, 1.5),
                               np.full(12, GRID_CI["ES"]))
         res = {}

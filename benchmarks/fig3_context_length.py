@@ -5,7 +5,7 @@ from __future__ import annotations
 
 from repro.serving.perfmodel import SERVING_MODELS
 
-from benchmarks.common import Timer, save_result
+from benchmarks.common import save_result
 
 CONTEXT_LENGTHS = [512, 1024, 2048, 4096, 8192]
 NEW_TOKENS = 64

@@ -3,7 +3,6 @@ means reduction); (b) savings over a day in the CISO grid as CI varies.
 Paper anchors: FR ≈ +16.5 %, MISO ≈ −7.5 %."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.carbon import FIG8_GRIDS, GRID_CI
 from repro.workloads.traces import ci_trace

@@ -24,7 +24,6 @@ its way below the SLO bar.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.carbon import CarbonModel, fleet_capacity
 from repro.core.controller import GreenCacheController

@@ -39,6 +39,7 @@ MODULES = [
     "fleet_mix",
     "disagg",
     "transitions",
+    "storage_tiers",
     "roofline_report",
 ]
 

@@ -1,0 +1,199 @@
+"""Wear-aware tiered storage: solver-chosen DRAM+NVMe tiering vs the
+best flat-SSD plan, and endurance-limited cache sizing (paper Figs.
+19-20 made decision-relevant; no direct paper figure for the tiering —
+EcoServe 2502.05043 motivates provisioning embodied amortization
+against real device lifetime).
+
+Three claims, three parts:
+
+* **Tiered beats flat (FR, skewed doc traffic, seeds 11/23)** — the
+  solver co-decides (fleet, storage spec) hourly over {l40:2, l40:3} ×
+  {flat NVMe, DRAM-mirror + NVMe} candidates.  Zipf-skewed document
+  reads concentrate hit bytes on a small working set, so a 1 TB DRAM
+  mirror strips the SSD KV-load from most hits; queue wait compounds
+  service time (Takeaway 2), so near saturation the two-replica fleet
+  meets the SLO only with the mirror — the flat day must run the third
+  replica (a whole server's power + embodied) through the peak to buy
+  the same attainment.  Derived row: tiered day total gCO2e <= flat day
+  at equal-or-better SLO.
+* **Wear changes cache sizing (churn-heavy QLC trace)** — weak-skew
+  document traffic (zipf 0.4) churns the cache hard; on a QLC device
+  (0.3 DWPD, WAF 4) the wear clock burns the embodied budget in months
+  whatever the allocation, so caching stops paying.  Derived row: the
+  wear-aware solver's hourly sizes differ from the calendar-lifetime
+  baseline's.
+* **Default-device bit-repro** — a greencache day whose storage
+  candidates are default-``nvme_gen4`` flat specs with the wear clock
+  off must bit-reproduce the PR-4 flat path's hour records (carbon,
+  sizes, SLO, hit rates) — the typed subsystem is a strict superset of
+  the legacy model.
+"""
+from __future__ import annotations
+
+
+from repro.core.carbon import CarbonModel
+from repro.core.controller import GreenCacheController
+from repro.core.plan import ResourcePlan
+from repro.core.profiler import run_profiler
+from repro.core.storage import StorageSpec
+from repro.serving.perfmodel import SERVING_MODELS
+
+from benchmarks.common import (SMOKE, cap_requests, clip_day,
+                               profiler_kwargs, save_result)
+
+MODEL = "llama3-70b"
+GRID = "FR"
+EPS_SLO = 0.02
+
+# ---- part A: tiered vs flat (skewed docs, fleet x storage) ---- #
+ZIPF = 1.0                          # strong skew: hot working set
+SCALE = 3.0                         # corpus width (widest fleet capacity)
+PEAK_RATE = 4.4                     # cluster req/s at the diurnal peak
+RATES = [0.4, 0.9, 1.4, 1.9, 2.4]   # per reference-server profile grid
+SIZES = [2, 4, 8, 16]               # cold/flat allocations (TB)
+HOT_TB = 1.0                        # DRAM mirror candidate size
+PROFILE_SIZES = [0, HOT_TB, 2, 4, 8, 16]
+FLEETS = ["l40:2", "l40:3"]
+
+FLAT_SPECS = [StorageSpec.flat(s) for s in SIZES]
+TIERED_SPECS = [StorageSpec.tiered(h, s) for s in SIZES
+                for h in (0.0, HOT_TB)]
+
+# ---- part B: wear-driven sizing (churn-heavy QLC trace) ---- #
+CHURN_ZIPF = 0.4
+CHURN_RATES = [0.1, 0.25, 0.45, 0.65]
+CHURN_SIZES = [0, 1, 2, 4, 8]
+CHURN_PEAK = 0.55
+QLC_SPECS = [StorageSpec.flat(s, "qlc_ssd") for s in CHURN_SIZES]
+
+_CACHE = {}
+
+
+def _workload(seed, scale=SCALE, zipf=ZIPF):
+    from repro.workloads.documents import DocumentWorkload
+    return DocumentWorkload(seed=seed, zipf_alpha=zipf, load_scale=scale)
+
+
+def _profile(kind: str):
+    if kind not in _CACHE:
+        if kind == "skew":
+            rates, sizes = RATES, PROFILE_SIZES
+            wf = _workload
+        else:
+            rates, sizes = CHURN_RATES, CHURN_SIZES
+            wf = lambda s: _workload(s, scale=1.0, zipf=CHURN_ZIPF)  # noqa: E731
+        _CACHE[kind] = run_profiler(
+            SERVING_MODELS[MODEL], "document", wf, CarbonModel(),
+            rates=rates[:2] if SMOKE else rates,
+            sizes_tb=sizes[:3] if SMOKE else sizes,
+            warmup_prompts=cap_requests(8000, 400),
+            policy="lcs_doc", **profiler_kwargs())
+    return _CACHE[kind]
+
+
+def _day(specs, *, seed=11, wear=True, plans=None, peak=PEAK_RATE,
+         scale=SCALE, zipf=ZIPF, kind="skew", sizes=None):
+    from repro.workloads.traces import azure_rate_trace, ci_trace
+
+    ctl = GreenCacheController(
+        SERVING_MODELS[MODEL], _profile(kind), CarbonModel(), "document",
+        mode="greencache", policy="lcs_doc",
+        plans=plans if plans is not None
+        else [ResourcePlan.single(None, fleet=f) for f in FLEETS],
+        warm_requests=cap_requests(8000, 400), seed=seed,
+        max_requests_per_hour=cap_requests(1800),
+        sizes_tb=sizes, rho_margin=0.0,
+        storage=specs, wear_aware=wear)
+    rate_trace, cis = clip_day(azure_rate_trace(peak, seed=3),
+                               ci_trace(GRID, seed=4))
+    return ctl.run_day(lambda s: _workload(s, scale=scale, zipf=zipf),
+                       rate_trace, cis)
+
+
+def _row(name, res):
+    return (f"storage_tiers/{GRID}/{name}/total_g", res.total_carbon_g,
+            f"slo={res.slo_attainment:.3f} avg_tb={res.avg_cache_tb:.1f} "
+            f"churn={sum(h.written_gb for h in res.hours):.0f}GB")
+
+
+def _same_records(a, b) -> bool:
+    return len(a.hours) == len(b.hours) and all(
+        ha.carbon_g == hb.carbon_g and ha.cache_tb == hb.cache_tb
+        and ha.slo_frac == hb.slo_frac and ha.hit_rate == hb.hit_rate
+        for ha, hb in zip(a.hours, b.hours))
+
+
+def _bit_repro() -> bool:
+    """Greencache day through the identical solver path: flat size grid
+    (storage=None, the PR-4 configuration) vs default-device flat specs
+    with the wear clock off — hour records must be bit-equal."""
+    plans = [ResourcePlan.single(None, fleet=("a100",))]
+    sizes = SIZES[:2] if SMOKE else SIZES
+    legacy = _day(None, plans=plans, sizes=sizes, wear=False, peak=1.1,
+                  scale=1.4)
+    typed = _day([StorageSpec.flat(s) for s in sizes], plans=plans,
+                 sizes=sizes, wear=False, peak=1.1, scale=1.4)
+    return _same_records(legacy, typed)
+
+
+def run():
+    out = []
+    seeds = [11] if SMOKE else [11, 23]
+    payload = {"seeds": {}}
+    wins = []
+    for seed in seeds:
+        flat = _day(FLAT_SPECS, seed=seed)
+        tiered = _day(TIERED_SPECS, seed=seed)
+        out.append(_row(f"seed{seed}/flat", flat))
+        out.append(_row(f"seed{seed}/tiered", tiered))
+        # SMOKE's 4-hour trace carries no peak, so both days pick the
+        # same flat plan and differ only by float noise in the tiered
+        # store's per-request KV-load summation — allow that noise band
+        # there (the full run wins by ~2 %, well clear of it)
+        eps_g = 0.002 * flat.total_carbon_g if SMOKE else 0.0
+        wins.append(tiered.slo_attainment
+                    >= flat.slo_attainment - EPS_SLO
+                    and tiered.total_carbon_g
+                    <= flat.total_carbon_g + eps_g)
+        payload["seeds"][seed] = {
+            k: {"total_g": r.total_carbon_g, "slo": r.slo_attainment,
+                "avg_cache_tb": r.avg_cache_tb,
+                "avg_capacity": r.avg_fleet_capacity,
+                "written_gb": sum(h.written_gb for h in r.hours),
+                "hourly_plans": [h.plan for h in r.hours]}
+            for k, r in [("flat", flat), ("tiered", tiered)]}
+    beats = all(wins)
+    out.append((f"storage_tiers/{GRID}/tiered_beats_flat", float(beats),
+                f"<= gCO2e at >= SLO-{EPS_SLO} on {len(wins)} seed(s)"))
+
+    # part B: wear vs calendar sizing on the churn-heavy QLC trace
+    churn_kw = dict(plans=[ResourcePlan.single(None, fleet=("l40",))],
+                    peak=CHURN_PEAK, scale=1.0, zipf=CHURN_ZIPF,
+                    kind="churn")
+    wear = _day(QLC_SPECS, wear=True, **churn_kw)
+    cal = _day(QLC_SPECS, wear=False, **churn_kw)
+    sizes_differ = [h.cache_tb for h in wear.hours] \
+        != [h.cache_tb for h in cal.hours]
+    out.append(("storage_tiers/churn/wear/avg_tb", wear.avg_cache_tb,
+                f"total_g={wear.total_carbon_g:.0f} "
+                f"slo={wear.slo_attainment:.3f}"))
+    out.append(("storage_tiers/churn/calendar/avg_tb", cal.avg_cache_tb,
+                f"total_g={cal.total_carbon_g:.0f} "
+                f"slo={cal.slo_attainment:.3f}"))
+    out.append(("storage_tiers/churn/wear_changes_sizing",
+                float(sizes_differ),
+                "wear-aware hourly sizes != calendar baseline on QLC"))
+    payload["churn"] = {
+        "wear_sizes": [h.cache_tb for h in wear.hours],
+        "calendar_sizes": [h.cache_tb for h in cal.hours],
+        "wear_total_g": wear.total_carbon_g,
+        "calendar_total_g": cal.total_carbon_g}
+
+    repro_ok = _bit_repro()
+    out.append(("storage_tiers/default_device_bit_repro", float(repro_ok),
+                "flat nvme_gen4 specs (wear off) == PR-4 hour records"))
+    payload["tiered_beats_flat"] = bool(beats)
+    payload["wear_changes_sizing"] = bool(sizes_differ)
+    payload["default_device_bit_repro"] = repro_ok
+    save_result("storage_tiers", payload)
+    return out

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs import get_config
 from repro.core.kvstore import KVStore
 from repro.core.policies import POLICIES
 from repro.models.transformer import init_params

@@ -5,7 +5,6 @@ EXPERIMENTS.md from experiments/*.json.
 """
 import json
 import os
-import sys
 
 HERE = os.path.dirname(__file__)
 

@@ -6,8 +6,8 @@ Every assigned architecture has a module ``repro/configs/<id>.py`` exporting
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
 
 def _round_up(x: int, m: int) -> int:

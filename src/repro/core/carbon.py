@@ -177,6 +177,21 @@ def fleet_capacity(types: Sequence[str]) -> float:
 KV_MIGRATION_W = 45.0
 
 
+def _tier_rates(storage, write_bytes_per_s) -> list:
+    """Normalize the wear-clock input to one host-write rate per tier
+    (scalar = the same flow-through rate everywhere; None = no wear)."""
+    n = len(storage.tiers)
+    if write_bytes_per_s is None:
+        return [0.0] * n
+    if isinstance(write_bytes_per_s, (int, float)):
+        return [float(write_bytes_per_s)] * n
+    rates = [float(r) for r in write_bytes_per_s]
+    if len(rates) != n:
+        raise ValueError(f"need one write rate per tier ({n}), got "
+                         f"{len(rates)}")
+    return rates
+
+
 def kv_migration_energy_kwh(migrate_bytes: float,
                             kv_transfer_gbps: float) -> float:
     """Energy of streaming ``migrate_bytes`` of KV state between
@@ -205,9 +220,38 @@ class CarbonModel:
         return energy_kwh * ci
 
     # ---- Eq (4): cache (SSD) embodied, proportional to allocation ----
-    def cache_embodied_g(self, alloc_tb: float, seconds: float) -> float:
-        lt = self.hw.ssd_lifetime_years * SECONDS_PER_YEAR
-        return alloc_tb * (seconds / lt) * self.hw.ssd_kg_per_tb * 1000.0
+    def cache_embodied_g(self, alloc_tb: float, seconds: float, *,
+                         storage=None,
+                         write_bytes_per_s=None) -> float:
+        """Embodied carbon of the cache allocation over ``seconds``.
+
+        Legacy form (``storage=None``): the flat-SSD model — allocation
+        × ``ssd_kg_per_tb`` amortized over the calendar
+        ``ssd_lifetime_years`` (the seed behaviour, bit-stable).
+
+        Typed form: ``storage`` is a ``repro.core.storage.StorageSpec``
+        (duck-typed — this module stays import-free of storage); each
+        tier amortizes its own device's kg/TB over that device's
+        *effective* lifetime.  ``write_bytes_per_s`` (a scalar applied
+        to every tier, or one rate per tier — the engine passes per-tier
+        measured rates, the solver a predicted one) engages the wear
+        clock: an endurance-rated device written faster than its DWPD
+        rating dies before its calendar lifetime, so its embodied carbon
+        amortizes over ``endurance / write-rate`` instead (paper Figs.
+        19-20's hidden cost, made decidable per hour).  With no write
+        rate the device path takes the calendar branch and a default
+        single-tier spec bit-reproduces the legacy value."""
+        if storage is None:
+            lt = self.hw.ssd_lifetime_years * SECONDS_PER_YEAR
+            return alloc_tb * (seconds / lt) * self.hw.ssd_kg_per_tb \
+                * 1000.0
+        rates = _tier_rates(storage, write_bytes_per_s)
+        total = 0.0
+        for tier, rate in zip(storage.tiers, rates):
+            lt = tier.dev.effective_lifetime_s(tier.capacity_tb, rate)
+            total += tier.capacity_tb * (seconds / lt) \
+                * tier.dev.embodied_kg_per_tb * 1000.0
+        return total
 
     # ---- non-storage embodied, amortized over lifetime ----
     def compute_embodied_g(self, seconds: float, n_replicas: int = 1,
@@ -295,11 +339,17 @@ class CarbonModel:
                                   ci)
 
     # ---- plan pricing (repro.core.plan.ResourcePlan) ----
-    def plan_embodied_g(self, plan, seconds: float) -> float:
+    def plan_embodied_g(self, plan, seconds: float,
+                        write_bytes_per_s=None) -> float:
         """Embodied carbon of a whole ``ResourcePlan`` over ``seconds``:
-        the cache allocation plus every pool's typed compute fleet."""
+        the cache allocation (typed tiers with the wear clock when the
+        plan carries a ``StorageSpec``) plus every pool's typed compute
+        fleet."""
         cache_tb = plan.cache_tb or 0.0
-        return self.cache_embodied_g(cache_tb, seconds) \
+        return self.cache_embodied_g(cache_tb, seconds,
+                                     storage=getattr(plan, "storage",
+                                                     None),
+                                     write_bytes_per_s=write_bytes_per_s) \
             + self.compute_embodied_g(seconds, types=plan.all_types)
 
     def plan_energy_kwh(self, plan, gpu_util, seconds: float,
@@ -314,15 +364,19 @@ class CarbonModel:
         memory-bound), so per-pool utilizations are the accurate call.
         ``pool_power_frac`` scales a pool's whole-server draw (the
         decode-pool power cap: memory-bound decode tolerates reduced
-        clocks). The SSD allocation is cluster-wide and counted once."""
+        clocks). The SSD allocation is cluster-wide and counted once
+        (per tier, when the plan carries a ``StorageSpec``)."""
         cache_tb = plan.cache_tb or 0.0
+        storage = getattr(plan, "storage", None)
         if not isinstance(gpu_util, dict):
             if pool_power_frac:        # apply caps via the per-pool path
                 gpu_util = {p.role: float(gpu_util) for p in plan.pools}
             else:
                 return self.energy_kwh(gpu_util, seconds, ssd_tb=cache_tb,
-                                       types=plan.all_types)
-        total = self.energy_kwh(0.0, seconds, ssd_tb=cache_tb, types=[])
+                                       types=plan.all_types,
+                                       storage=storage)
+        total = self.energy_kwh(0.0, seconds, ssd_tb=cache_tb, types=[],
+                                storage=storage)
         for pool in plan.pools:
             frac = (pool_power_frac or {}).get(pool.role, 1.0)
             total += frac * self.energy_kwh(float(gpu_util[pool.role]),
@@ -332,21 +386,25 @@ class CarbonModel:
     # ---- power → energy helper ----
     def energy_kwh(self, gpu_util: float, seconds: float,
                    ssd_tb: float = 0.0, n_servers: int = 1,
-                   types: Optional[Sequence[str]] = None) -> float:
+                   types: Optional[Sequence[str]] = None,
+                   storage=None) -> float:
         """Fleet energy: each replica draws whole-server power at the given
         (average) accelerator utilization; the SSD pool is a cluster-wide
         allocation and is counted once. With ``types``, per-replica power
         comes from each replica's own ``ReplicaType`` spec (grouped by type;
         ``n_servers`` is ignored); otherwise ``n_servers`` reference
-        servers (``self.hw``) are assumed."""
+        servers (``self.hw``) are assumed.  ``storage`` (a
+        ``StorageSpec``) replaces the flat ``ssd_tb × ssd_power_w_per_tb``
+        term with each tier's allocation-proportional idle draw (the
+        default single-tier device reproduces the flat term exactly)."""
+        ssd_w = storage.idle_w if storage is not None \
+            else ssd_tb * self.hw.ssd_power_w_per_tb
         if types is not None:
             w = sum(c * get_replica_type(n).server_power_w(gpu_util)
-                    for n, c in Counter(types).items()) \
-                + ssd_tb * self.hw.ssd_power_w_per_tb
+                    for n, c in Counter(types).items()) + ssd_w
             return w * seconds / 3.6e6
         hw = self.hw
         gpu_w = hw.gpu_power_idle_w + gpu_util * (hw.gpu_power_max_w
                                                   - hw.gpu_power_idle_w)
-        w = n_servers * (gpu_w + hw.cpu_power_w + hw.mem_power_w) \
-            + ssd_tb * hw.ssd_power_w_per_tb
+        w = n_servers * (gpu_w + hw.cpu_power_w + hw.mem_power_w) + ssd_w
         return w * seconds / 3.6e6

@@ -25,7 +25,7 @@ candidates (and produce identical results).
 from __future__ import annotations
 
 import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
@@ -34,13 +34,14 @@ from repro.core.carbon import (CarbonModel, fleet_capacity, fleet_str,
                                parse_fleet)
 from repro.core.kvstore import KVStore
 from repro.core.plan import ResourcePlan, TransitionConfig
+from repro.core.storage import StorageSpec, TieredKVStore
 from repro.core.policies import POLICIES
 from repro.core.predictors import CIPredictor, LoadPredictor
 from repro.core.profiler import Profile, _slo_for
 from repro.core.solver import (SolveResult, solve_cache_schedule,
                                solve_cluster_schedule)
 from repro.serving.cluster import ClusterEngine, DisaggEngine
-from repro.serving.engine import ServingEngine, SimResult
+from repro.serving.engine import ServingEngine
 from repro.serving.perfmodel import ServingModel
 from repro.workloads import sample_many
 from repro.workloads.traces import make_poisson_arrivals
@@ -72,6 +73,9 @@ class HourRecord:
     # carbon_g, reported separately here) and the applied diff string
     transition_g: float = 0.0
     transition: str = ""
+    # typed-storage accounting: the hour's cache churn in host GB written
+    # (the wear clock's input) — 0.0 on the legacy flat path
+    written_gb: float = 0.0
 
 
 @dataclass
@@ -195,7 +199,9 @@ class GreenCacheController:
                  engine: str = "cluster",
                  transitions: Optional[TransitionConfig] = None,
                  min_dwell_hours: int = 1,
-                 transition_aware_solver: bool = True):
+                 transition_aware_solver: bool = True,
+                 storage=None, wear_aware: bool = True,
+                 admission=None):
         self.model = model
         self.profile = profile
         self.carbon = carbon
@@ -205,6 +211,26 @@ class GreenCacheController:
         self.transitions = transitions
         self.min_dwell_hours = max(int(min_dwell_hours), 1)
         self.transition_aware_solver = transition_aware_solver
+        # typed-storage search: candidate StorageSpecs (or spec strings)
+        # the solver sizes alongside the plan candidates; None keeps the
+        # legacy flat-SSD size grid (bit-stable).  All candidates must
+        # share tier topology — the store cannot retier mid-day.
+        if storage is not None:
+            from repro.core.storage import normalize_storage_candidates
+            if isinstance(storage, (str, StorageSpec)):
+                storage = [storage]
+            if not storage:
+                raise ValueError("storage= needs at least one spec")
+            storage = normalize_storage_candidates(storage)
+            devs = [t.device for t in storage[0].tiers]
+            for sp in storage[1:]:
+                if [t.device for t in sp.tiers] != devs:
+                    raise ValueError("storage candidates must share tier "
+                                     "devices (the store topology is "
+                                     "fixed for the day)")
+        self.storage_choices = storage
+        self.wear_aware = wear_aware
+        self.admission = admission
         self.sizes = list(sizes_tb) if sizes_tb is not None else \
             list(profile.sizes)
         self.max_requests_per_hour = max_requests_per_hour
@@ -293,13 +319,22 @@ class GreenCacheController:
             raise ValueError("engine='legacy' does not model transitions; "
                              "drop transitions=/min_dwell_hours= or use "
                              "the cluster engine")
+        if self.storage_choices is not None:
+            if self.disagg:
+                raise ValueError("the storage search does not support "
+                                 "disaggregated candidates yet")
+            if engine == "legacy":
+                raise ValueError("engine='legacy' does not model typed "
+                                 "storage")
 
-    def _resolved(self, plan: ResourcePlan,
-                  cache_tb: float) -> ResourcePlan:
+    def _resolved(self, plan: ResourcePlan, cache_tb: float,
+                  storage: Optional[StorageSpec] = None) -> ResourcePlan:
         """Pin a candidate to the hour: concrete cache size, the
         controller-level router default for pools that left it unset,
         and the controller's resolved spill factor (an explicit
-        ``balance_eps`` kwarg overrides the candidates' pool value)."""
+        ``balance_eps`` kwarg overrides the candidates' pool value).
+        ``storage`` carries the hour's typed tiers (rescaled to the
+        pinned size when the hold-for-interval rule widened it)."""
         pools = []
         for pool in plan.pools:
             if pool.role == "decode":
@@ -309,7 +344,11 @@ class GreenCacheController:
                                     router=pool.router or self.router,
                                     balance_eps=self.balance_eps,
                                     partitioned=pool.partitioned))
-        return ResourcePlan(float(cache_tb), tuple(pools))
+        if storage is not None \
+                and abs(storage.total_tb - cache_tb) > 1e-9:
+            storage = storage.scaled_to(float(cache_tb))
+        return ResourcePlan(float(cache_tb), tuple(pools),
+                            storage=storage)
 
     # ------------------------------------------------------------------ #
     def run_day(self, workload_factory: Callable, rate_trace: np.ndarray,
@@ -335,8 +374,22 @@ class GreenCacheController:
         ci_pred = CIPredictor().fit(ci_history)
 
         max_tb = self.model.max_cache_tb
-        store = KVStore(max_tb * 1e12, POLICIES[self.policy],
-                        self.model.kv_bytes_per_token)
+        warm_spec = None
+        if self.storage_choices is not None:
+            # warm at the widest candidate spec; the store topology
+            # (tier count + devices) is fixed for the day
+            warm_spec = max(self.storage_choices,
+                            key=lambda s: s.total_tb)
+            max_tb = warm_spec.total_tb
+        if warm_spec is not None and warm_spec.is_tiered:
+            store: KVStore = TieredKVStore(
+                warm_spec, POLICIES[self.policy],
+                self.model.kv_bytes_per_token, admission=self.admission)
+        else:
+            store = KVStore(max_tb * 1e12, POLICIES[self.policy],
+                            self.model.kv_bytes_per_token)
+            store.spec = warm_spec
+            store.admission = self.admission
         # fixed modes (and the pre-solve warm window) run the
         # largest-capacity candidate plan
         fixed_plan = max(self.plan_choices, key=lambda p: p.capacity)
@@ -348,7 +401,8 @@ class GreenCacheController:
         elif self.disagg:
             engine = DisaggEngine(self.model, store, self.carbon,
                                   self._resolved(fixed_plan, max_tb),
-                                  transitions=self.transitions)
+                                  transitions=self.transitions,
+                                  wear_aware=self.wear_aware)
         else:
             # homogeneous reference candidates start untyped (the seed
             # configuration); the first apply() types them as all-l40,
@@ -358,7 +412,8 @@ class GreenCacheController:
                 router=self.router,
                 types=None if self.homo_ref else fixed_plan.serve.fleet,
                 balance_eps=self.balance_eps,
-                transitions=self.transitions)
+                transitions=self.transitions,
+                wear_aware=self.wear_aware)
         wl = workload_factory(self.seed)
 
         # warm the cache at full size, then resize to the first decision
@@ -370,6 +425,7 @@ class GreenCacheController:
         hours: List[HourRecord] = []
         current_tb = max_tb if self.mode != "none" else 0.0
         current_shape = fixed_plan
+        current_storage = warm_spec
         pending_schedule: List[float] = []
         pending_plans: List[ResourcePlan] = []
 
@@ -386,8 +442,9 @@ class GreenCacheController:
                     cis = list(ci_pred.predict(self.horizon))
                 rho = min(self.slo.rho + self.rho_margin, 0.995)
                 res = self._solve(rates, cis, rho, co_decide, hour=h,
-                                  live_plan=self._resolved(current_shape,
-                                                           current_tb))
+                                  live_plan=self._resolved(
+                                      current_shape, current_tb,
+                                      storage=current_storage))
                 pending_plans = list(res.plans) if res.plans is not None \
                     else []
                 pending_schedule = list(res.sizes_tb)
@@ -404,6 +461,12 @@ class GreenCacheController:
                 current_tb = max(pending_schedule[:k])
                 pending_schedule = pending_schedule[1:]
                 if pending_plans:
+                    if self.storage_choices is not None:
+                        # the hour's tiers follow the widest plan in the
+                        # hold interval (same rule as the size)
+                        current_storage = max(
+                            pending_plans[:k],
+                            key=lambda p: p.cache_tb or 0.0).storage
                     new_shape = max(pending_plans[:k],
                                     key=lambda p: p.capacity)
                     pending_plans = pending_plans[1:]
@@ -415,7 +478,8 @@ class GreenCacheController:
                             or h % self.min_dwell_hours == 0:
                         current_shape = new_shape
 
-            current_plan = self._resolved(current_shape, current_tb)
+            current_plan = self._resolved(current_shape, current_tb,
+                                          storage=current_storage)
             ci_now = float(ci_trace[h])
             tr_g = 0.0
             tr_str = ""
@@ -438,6 +502,9 @@ class GreenCacheController:
                 np.array([lam]), seed=self.seed + h,
                 max_requests=self.max_requests_per_hour)
             reqs = sample_many(wl, h * 3600.0 + arr)
+            stores = engine.stores if isinstance(engine, ClusterEngine) \
+                else [store]
+            w0 = sum(st.stats.written_bytes for st in stores)
             res = engine.run(reqs, ci_fn=lambda t: ci_now,
                              cache_tb=current_tb, rate_hint=lam)
             hours.append(HourRecord(
@@ -453,7 +520,9 @@ class GreenCacheController:
                 fleet="" if self.homo_ref
                 else fleet_str(current_plan.all_types),
                 plan=str(current_plan),
-                transition_g=tr_g, transition=tr_str))
+                transition_g=tr_g, transition=tr_str,
+                written_gb=(sum(st.stats.written_bytes
+                                for st in stores) - w0) / 1e9))
 
             # online predictor updates (paper §5.3)
             load_pred.update(lam)
@@ -483,6 +552,14 @@ class GreenCacheController:
                    min_dwell_hours=self.min_dwell_hours,
                    dwell_offset=hour % self.min_dwell_hours,
                    initial_plan=live_plan) if aware else {}
+        if self.storage_choices is not None:
+            # typed-storage search: sizes come from the spec candidates
+            return solve_cluster_schedule(
+                self.profile, rates, cis, self.slo, self.carbon,
+                plans=self.plan_choices, storage=self.storage_choices,
+                wear_aware=self.wear_aware,
+                type_profiles=self.type_profiles, model=self.model,
+                rho=rho, **tkw)
         if self.disagg or not self.homo_ref:
             return solve_cluster_schedule(
                 self.profile, rates, cis, self.slo, self.carbon,

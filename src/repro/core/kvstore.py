@@ -35,6 +35,9 @@ class CacheEntry:
     turn: int = 1                   # conversation turn depth (chat tasks)
     payload: Any = None             # optional real KV arrays
     slot: int = -1                  # columnar-index slot (vector-evict mode)
+    # storage tier: 1 = the authoritative cold/bulk tier (every entry a
+    # plain store creates); a TieredKVStore moves mirrored copies to 0
+    tier: int = 1
 
 
 @dataclass
@@ -46,6 +49,15 @@ class KVStoreStats:
     insertions: int = 0
     evictions: int = 0
     evicted_bytes: float = 0.0
+    # device wear clock: host bytes written into the store (new entries,
+    # entry growth, migration adoptions — evictions are discards and write
+    # nothing). Monotone; the window delta over wall time is the write
+    # rate that shortens an endurance-limited device's effective lifetime
+    # (repro.core.storage.StorageDevice.effective_lifetime_s).
+    written_bytes: float = 0.0
+    # inserts refused by a write-aware admission policy (expected reuse
+    # does not amortize the write energy + wear)
+    admit_rejects: int = 0
 
     @property
     def token_hit_rate(self) -> float:
@@ -190,6 +202,12 @@ class KVStore:
         # pending gradual-shrink steps: [(due_time, capacity_bytes), ...]
         # ascending; consumed lazily by account() as simulated time passes
         self._resize_steps: List[Tuple[float, float]] = []
+        # optional write-aware admission gate (repro.core.storage
+        # .WriteAwareAdmission): None = admit everything (seed behaviour)
+        self.admission = None
+        # storage spec backing this store (repro.core.storage.StorageSpec);
+        # None = the legacy flat-SSD model priced from HardwareSpec scalars
+        self.spec = None
 
     def enable_vector_evict(self) -> bool:
         """Switch eviction scoring to the policy's vectorized twin (see
@@ -266,6 +284,10 @@ class KVStore:
         if size > self.capacity_bytes:
             return None
         old = self.entries.get(key)
+        if old is None and self.admission is not None \
+                and not self.admission.admit(self, size, turn=turn):
+            self.stats.admit_rejects += 1
+            return None
         delta = size - (old.size_bytes if old else 0.0)
         if delta > 0:
             self._make_room(delta, now, protect=key)
@@ -274,6 +296,7 @@ class KVStore:
         if old:
             if delta > 0:       # entries only grow (longer prefix cached)
                 self.used_bytes += delta
+                self.stats.written_bytes += delta
             old.num_tokens = max(old.num_tokens, num_tokens)
             old.size_bytes = max(old.size_bytes, size)
             old.last_access = now
@@ -288,6 +311,7 @@ class KVStore:
                        payload=payload)
         self.entries[key] = e
         self.used_bytes += size
+        self.stats.written_bytes += size
         if self._ix is not None:
             self._ix.add(e)
         self.stats.insertions += 1
@@ -304,7 +328,8 @@ class KVStore:
         as in the two-call sequence.
 
         Returns the reused token count (>= 0) on hit, -1 on miss with a new
-        entry inserted, -2 on miss where the entry could not fit. With
+        entry inserted, -2 on miss where the entry could not fit, -3 on a
+        miss whose insert the write-aware admission policy refused. With
         ``collect_stats=False`` the per-request ``stats`` updates are
         skipped so a batch caller can apply them in one shot from the
         encoded return values (see ``ClusterEngine._account``)."""
@@ -336,6 +361,7 @@ class KVStore:
                     if self.used_bytes + delta > cap + 1e-6:
                         return reused
                 self.used_bytes += delta
+                self.stats.written_bytes += delta
             self._grow_entry(e, prompt_tokens, size, now, turn)
             if ix is not None:
                 ix.write_grow(e)
@@ -346,6 +372,10 @@ class KVStore:
             st.lookup_tokens += context_tokens
         if size > cap:
             return -2
+        if self.admission is not None \
+                and not self.admission.admit(self, size, turn=turn):
+            self.stats.admit_rejects += 1
+            return -3
         if size > 0 and self.used_bytes + size > cap:
             self._make_room(size, now, protect=key)
             if self.used_bytes + size > cap + 1e-6:
@@ -354,6 +384,7 @@ class KVStore:
                        created_at=now, last_access=now, turn=turn)
         self.entries[key] = e
         self.used_bytes += size
+        self.stats.written_bytes += size
         if ix is not None:
             ix.add(e)
         if collect_stats:
@@ -424,11 +455,17 @@ class KVStore:
         size = entry.size_bytes
         if size > self.capacity_bytes:
             return False
+        if entry.key in self.entries:
+            # the receiver re-cached the context while the migration was
+            # in flight: the incoming copy supersedes it (releasing the
+            # stale entry's bytes — silently clobbering would leak them)
+            self.pop_entry(entry.key)
         self._make_room(size, now, protect=entry.key)
         if self.used_bytes + size > self.capacity_bytes + 1e-6:
             return False
         self.entries[entry.key] = entry
         self.used_bytes += size
+        self.stats.written_bytes += size     # migration writes wear too
         if self._ix is not None:
             self._ix.add(entry)
         return True

@@ -21,9 +21,13 @@ String grammar (``ResourcePlan.parse`` / ``str(plan)`` round-trip)::
     cache=4tb fleet=a100:2,l40:4 [router=cache_affinity] [eps=0.15]
         [partitioned]
     cache=auto prefill=h100:2 decode=a100:3 [router=...] [eps=...]
+    cache=dram:0.5tb+nvme_gen4:4tb fleet=l40:2        (typed tiers)
 
 Fleet specs reuse ``repro.core.carbon.parse_fleet`` (``"a100:2,l40:4"``).
-JSON round-trip via ``to_json``/``from_json``.
+A ``cache=`` value containing a device name is a typed
+``repro.core.storage.StorageSpec`` tiering (``plan.storage``); a bare
+``cache=4tb`` keeps ``storage=None`` — the legacy flat-SSD model whose
+pricing is bit-stable.  JSON round-trip via ``to_json``/``from_json``.
 """
 from __future__ import annotations
 
@@ -33,6 +37,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.carbon import (fleet_capacity, fleet_str, get_replica_type,
                                parse_fleet)
+from repro.core.storage import StorageSpec
 
 ROLES = ("serve", "prefill", "decode")
 DEFAULT_BALANCE_EPS = 0.15
@@ -131,9 +136,13 @@ class ResourcePlan:
 
     ``cache_tb=None`` marks an *open* plan — a candidate whose cache size
     the solver decides; applied plans carry a concrete size
-    (``with_cache``)."""
+    (``with_cache``).  ``storage`` (a ``StorageSpec``) types the cache
+    allocation into device tiers; ``cache_tb`` is then the tier total
+    (reconciled here).  ``storage=None`` is the legacy flat-SSD model
+    priced from the ``HardwareSpec`` scalars — the parity path."""
     cache_tb: Optional[float]
     pools: Tuple[PoolSpec, ...]
+    storage: Optional[StorageSpec] = None
 
     def __post_init__(self):
         object.__setattr__(self, "pools", tuple(self.pools))
@@ -148,6 +157,13 @@ class ResourcePlan:
         else:
             raise ValueError("pools must be ['serve'] or "
                              f"['prefill', 'decode'], got {roles}")
+        if self.storage is not None:
+            if self.cache_tb is None:
+                object.__setattr__(self, "cache_tb", self.storage.total_tb)
+            elif abs(self.cache_tb - self.storage.total_tb) > 1e-9:
+                raise ValueError(
+                    f"cache_tb={self.cache_tb} disagrees with the storage "
+                    f"tiers' total {self.storage.total_tb}")
         if self.cache_tb is not None and self.cache_tb < 0:
             raise ValueError("cache_tb must be >= 0")
 
@@ -161,7 +177,9 @@ class ResourcePlan:
                router: Optional[str] = None,
                balance_eps: Union[float, None,
                                   _UnsetEps] = UNSET_EPS,
-               partitioned: bool = False) -> "ResourcePlan":
+               partitioned: bool = False,
+               storage: Union[StorageSpec, str, None] = None
+               ) -> "ResourcePlan":
         """Single fused pool.  ``fleet`` overrides ``n_replicas``; a bare
         count becomes a homogeneous reference (``l40``) fleet."""
         if fleet is None:
@@ -175,7 +193,8 @@ class ResourcePlan:
         return cls(cache_tb, (PoolSpec("serve", _norm_fleet(fleet),
                                        router=router,
                                        balance_eps=balance_eps,
-                                       partitioned=partitioned),))
+                                       partitioned=partitioned),),
+                   storage=_norm_storage(storage))
 
     @classmethod
     def disaggregated(cls, cache_tb: Optional[float] = None, *,
@@ -184,7 +203,9 @@ class ResourcePlan:
                       router: Optional[str] = None,
                       balance_eps: Union[float, None,
                                          _UnsetEps] = UNSET_EPS,
-                      partitioned: bool = False) -> "ResourcePlan":
+                      partitioned: bool = False,
+                      storage: Union[StorageSpec, str, None] = None
+                      ) -> "ResourcePlan":
         """Prefill/decode pool disaggregation.  Router/eps/partitioning
         shape the prefill pool (it owns the KV store); the decode pool
         absorbs load analytically."""
@@ -192,7 +213,7 @@ class ResourcePlan:
             PoolSpec("prefill", _norm_fleet(prefill), router=router,
                      balance_eps=balance_eps, partitioned=partitioned),
             PoolSpec("decode", _norm_fleet(decode)),
-        ))
+        ), storage=_norm_storage(storage))
 
     @classmethod
     def from_legacy(cls, cache_tb: Optional[float] = None, *,
@@ -259,13 +280,27 @@ class ResourcePlan:
         return float(sum(p.capacity for p in self.pools))
 
     def with_cache(self, cache_tb: float) -> "ResourcePlan":
+        """Size (or re-size) the plan's cache.  A typed plan rescales
+        its tiers proportionally so the spec total always matches."""
+        if self.storage is not None \
+                and abs(self.storage.total_tb - cache_tb) > 1e-9:
+            return replace(self, cache_tb=float(cache_tb),
+                           storage=self.storage.scaled_to(float(cache_tb)))
         return replace(self, cache_tb=float(cache_tb))
+
+    def with_storage(self, storage: Union[StorageSpec, str]
+                     ) -> "ResourcePlan":
+        """Pin a typed tiering (and the matching total cache size)."""
+        spec = _norm_storage(storage)
+        return replace(self, cache_tb=spec.total_tb, storage=spec)
 
     # ------------------------------------------------------------------ #
     # string / JSON round-trip
     # ------------------------------------------------------------------ #
     def __str__(self) -> str:
-        parts = [f"cache={_fmt_tb(self.cache_tb)}"]
+        cache = str(self.storage) if self.storage is not None \
+            else _fmt_tb(self.cache_tb)
+        parts = [f"cache={cache}"]
         if self.is_disaggregated:
             parts.append(f"prefill={self.prefill.fleet_str}")
             parts.append(f"decode={self.decode.fleet_str}")
@@ -286,6 +321,7 @@ class ResourcePlan:
     def parse(cls, spec: str) -> "ResourcePlan":
         """Inverse of ``str(plan)`` — see the module docstring grammar."""
         cache_tb: Optional[float] = None
+        storage: Optional[StorageSpec] = None
         fleets: Dict[str, Tuple[str, ...]] = {}
         router: Optional[str] = None
         balance_eps: Union[float, None, _UnsetEps] = UNSET_EPS
@@ -299,7 +335,11 @@ class ResourcePlan:
                     continue
                 raise ValueError(f"bad plan token {tok!r} in {spec!r}")
             if key == "cache":
-                cache_tb = _parse_tb(val)
+                if ":" in val:           # typed tiers: device:SIZEtb[+...]
+                    storage = StorageSpec.parse(val)
+                    cache_tb = storage.total_tb
+                else:
+                    cache_tb = _parse_tb(val)
             elif key in ("fleet", "serve", "prefill", "decode"):
                 fleets["serve" if key == "fleet" else key] = parse_fleet(val)
             elif key == "router":
@@ -312,17 +352,20 @@ class ResourcePlan:
         if set(fleets) == {"serve"}:
             return cls.single(cache_tb, fleet=fleets["serve"],
                               router=router, balance_eps=balance_eps,
-                              partitioned=partitioned)
+                              partitioned=partitioned, storage=storage)
         if set(fleets) == {"prefill", "decode"}:
             return cls.disaggregated(cache_tb, prefill=fleets["prefill"],
                                      decode=fleets["decode"], router=router,
                                      balance_eps=balance_eps,
-                                     partitioned=partitioned)
+                                     partitioned=partitioned,
+                                     storage=storage)
         raise ValueError(f"plan {spec!r} needs fleet= or prefill=+decode=")
 
     def to_json(self) -> str:
         return json.dumps({
             "cache_tb": self.cache_tb,
+            "storage": None if self.storage is None
+            else json.loads(self.storage.to_json()),
             "pools": [{"role": p.role, "fleet": list(p.fleet),
                        "router": p.router,
                        "balance_eps": "unset"
@@ -341,7 +384,17 @@ class ResourcePlan:
                                else p["balance_eps"],
                                partitioned=bool(p.get("partitioned", False)))
                       for p in d["pools"])
-        return cls(d.get("cache_tb"), pools)
+        storage = d.get("storage")
+        return cls(d.get("cache_tb"), pools,
+                   storage=None if storage is None
+                   else StorageSpec.from_json(storage))
+
+
+def _norm_storage(storage: Union[StorageSpec, str, None]
+                  ) -> Optional[StorageSpec]:
+    if isinstance(storage, str):
+        return StorageSpec.parse(storage)
+    return storage
 
 
 def _fmt_tb(tb: Optional[float]) -> str:
@@ -391,7 +444,10 @@ class PlanTransition:
     ``pools`` holds one ``PoolDelta`` per pool whose fleet changes
     (replicas to boot/drain per type); ``cache_from_tb``/``cache_to_tb``
     the cache reallocation (``None`` = unspecified on that side, no
-    resize); ``ring_from``/``ring_to`` the store-owning pool's replica
+    resize); ``storage_from``/``storage_to`` the typed tierings on each
+    side (spec strings; ``None`` = untyped flat cache), so a tier resize
+    at constant total is still a visible — and priced — event;
+    ``ring_from``/``ring_to`` the store-owning pool's replica
     count before/after — a partitioned consistent-hash ring remaps
     ~``|m-n|/max(m,n)`` of its key space when it resizes, the KV
     rebalancing the engine models as bulk migration or cold misses.
@@ -399,12 +455,15 @@ class PlanTransition:
     String grammar (``parse`` / ``str`` round-trip, like plans)::
 
         boot[serve]=h100:2 drain[serve]=l40:1 cache=4tb->2tb ring=3->2
+        cache=dram:0.5tb+nvme_gen4:4tb->dram:0.25tb+nvme_gen4:2tb
     """
     pools: Tuple[PoolDelta, ...] = ()
     cache_from_tb: Optional[float] = None
     cache_to_tb: Optional[float] = None
     ring_from: int = 0
     ring_to: int = 0
+    storage_from: Optional[str] = None
+    storage_to: Optional[str] = None
 
     def __post_init__(self):
         object.__setattr__(self, "pools", tuple(self.pools))
@@ -434,7 +493,11 @@ class PlanTransition:
         return cls(tuple(deltas), cache_from_tb=old.cache_tb,
                    cache_to_tb=new.cache_tb,
                    ring_from=old.prefill.n_replicas,
-                   ring_to=new.prefill.n_replicas)
+                   ring_to=new.prefill.n_replicas,
+                   storage_from=None if old.storage is None
+                   else str(old.storage),
+                   storage_to=None if new.storage is None
+                   else str(new.storage))
 
     # ------------------------------------------------------------------ #
     @property
@@ -465,9 +528,15 @@ class PlanTransition:
         return ring_moved_fraction(self.ring_from, self.ring_to)
 
     @property
+    def storage_changed(self) -> bool:
+        """A retier at constant total (e.g. growing the DRAM share) is
+        still a real reconfiguration event."""
+        return self.storage_from != self.storage_to
+
+    @property
     def is_noop(self) -> bool:
         return (not self.pools and self.cache_delta_tb == 0.0
-                and not self.ring_changed)
+                and not self.ring_changed and not self.storage_changed)
 
     def pool(self, role: str) -> Optional[PoolDelta]:
         for p in self.pools:
@@ -485,9 +554,14 @@ class PlanTransition:
                 parts.append(f"boot[{p.role}]={fleet_str(p.boot)}")
             if p.drain:
                 parts.append(f"drain[{p.role}]={fleet_str(p.drain)}")
-        if self.cache_from_tb is not None or self.cache_to_tb is not None:
-            parts.append(f"cache={_fmt_tb(self.cache_from_tb)}->"
-                         f"{_fmt_tb(self.cache_to_tb)}")
+        if self.cache_from_tb is not None or self.cache_to_tb is not None \
+                or self.storage_from is not None \
+                or self.storage_to is not None:
+            a = self.storage_from if self.storage_from is not None \
+                else _fmt_tb(self.cache_from_tb)
+            b = self.storage_to if self.storage_to is not None \
+                else _fmt_tb(self.cache_to_tb)
+            parts.append(f"cache={a}->{b}")
         if self.ring_from or self.ring_to:
             parts.append(f"ring={self.ring_from}->{self.ring_to}")
         return " ".join(parts)
@@ -498,6 +572,7 @@ class PlanTransition:
         boots: Dict[str, Tuple[str, ...]] = {}
         drains: Dict[str, Tuple[str, ...]] = {}
         cache_from = cache_to = None
+        storage_from = storage_to = None
         ring_from = ring_to = 0
         for tok in spec.split():
             key, sep, val = tok.partition("=")
@@ -513,7 +588,16 @@ class PlanTransition:
                 a, sep2, b = val.partition("->")
                 if not sep2:
                     raise ValueError(f"cache token needs a->b in {spec!r}")
-                cache_from, cache_to = _parse_tb(a), _parse_tb(b)
+                if ":" in a:            # typed side: canonical spec string
+                    sa = StorageSpec.parse(a)
+                    storage_from, cache_from = str(sa), sa.total_tb
+                else:
+                    cache_from = _parse_tb(a)
+                if ":" in b:
+                    sb = StorageSpec.parse(b)
+                    storage_to, cache_to = str(sb), sb.total_tb
+                else:
+                    cache_to = _parse_tb(b)
             elif key == "ring":
                 a, sep2, b = val.partition("->")
                 if not sep2:
@@ -527,7 +611,8 @@ class PlanTransition:
                        for role in ROLES
                        if role in boots or role in drains)
         return cls(deltas, cache_from_tb=cache_from, cache_to_tb=cache_to,
-                   ring_from=ring_from, ring_to=ring_to)
+                   ring_from=ring_from, ring_to=ring_to,
+                   storage_from=storage_from, storage_to=storage_to)
 
     def to_json(self) -> str:
         return json.dumps({
@@ -535,7 +620,9 @@ class PlanTransition:
                        "drain": list(p.drain)} for p in self.pools],
             "cache_from_tb": self.cache_from_tb,
             "cache_to_tb": self.cache_to_tb,
-            "ring_from": self.ring_from, "ring_to": self.ring_to})
+            "ring_from": self.ring_from, "ring_to": self.ring_to,
+            "storage_from": self.storage_from,
+            "storage_to": self.storage_to})
 
     @classmethod
     def from_json(cls, payload: Union[str, dict]) -> "PlanTransition":
@@ -546,7 +633,9 @@ class PlanTransition:
         return cls(pools, cache_from_tb=d.get("cache_from_tb"),
                    cache_to_tb=d.get("cache_to_tb"),
                    ring_from=int(d.get("ring_from", 0)),
-                   ring_to=int(d.get("ring_to", 0)))
+                   ring_to=int(d.get("ring_to", 0)),
+                   storage_from=d.get("storage_from"),
+                   storage_to=d.get("storage_to"))
 
 
 def ring_moved_fraction(n_from: int, n_to: int) -> float:

@@ -45,6 +45,12 @@ class ProfileCell:
     # analytically
     avg_out_tokens: float = 0.0
     avg_prompt_tokens: float = 0.0
+    # host bytes written into the cache per request (inserts + growth) at
+    # this operating point — the churn signal the wear-aware storage
+    # solver turns into a device write rate (rate × this) and prices
+    # against endurance (profiles recorded before the field default to 0:
+    # no wear prediction, calendar lifetimes)
+    write_bytes_per_req: float = 0.0
 
     def __post_init__(self):
         if self.slo_ttft_frac is None:
@@ -142,6 +148,7 @@ def run_profiler(model: ServingModel, task: str, workload_factory: Callable,
             eng.run(reqs[n_warm:n_warm + n_ramp], ci_fn=lambda t: 0.0,
                     cache_tb=size, record=False)
             meas = reqs[n_warm + n_ramp:n_warm + n_ramp + n_meas]
+            w0 = store.stats.written_bytes
             res = eng.run(meas, ci_fn=lambda t: 0.0, cache_tb=size)
             slo = _slo_for(model.name, task)
             dur_per_req = res.duration_s / max(res.num_requests, 1)
@@ -159,7 +166,10 @@ def run_profiler(model: ServingModel, task: str, workload_factory: Callable,
                 hit_rate=res.token_hit_rate,
                 energy_per_req_kwh=res.energy_kwh / max(res.num_requests, 1),
                 duration_per_req_s=dur_per_req,
-                avg_power_w=res.energy_kwh * 3.6e6 / max(res.duration_s, 1e-9))
+                avg_power_w=res.energy_kwh * 3.6e6 / max(res.duration_s,
+                                                         1e-9),
+                write_bytes_per_req=(store.stats.written_bytes - w0)
+                / max(res.num_requests, 1))
             prof.cells[(rate, size)] = cell
     return prof
 

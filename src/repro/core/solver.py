@@ -53,6 +53,7 @@ from repro.core.carbon import (CarbonModel, fleet_capacity,
 from repro.core.plan import (PlanTransition, ResourcePlan,
                              TransitionConfig, ring_moved_fraction)
 from repro.core.profiler import Profile
+from repro.core.storage import StorageSpec
 from repro.serving.perfmodel import SLO
 
 
@@ -347,7 +348,9 @@ def _disagg_cell_metrics(profile: Profile, rate: float, size: float,
 
 
 def _option_plan(option, sized: bool = False) -> ResourcePlan:
-    """Normalize a solver option (count / mix / plan) to a ResourcePlan."""
+    """Normalize a solver option (count / mix / plan) to a ResourcePlan.
+    The size half of the option is either a bare TB float or a sized
+    ``StorageSpec`` (the storage search), which the sized plan carries."""
     s, k = option
     if isinstance(k, ResourcePlan):
         plan = k
@@ -355,7 +358,83 @@ def _option_plan(option, sized: bool = False) -> ResourcePlan:
         plan = ResourcePlan.single(None, n_replicas=k)
     else:
         plan = ResourcePlan.single(None, fleet=tuple(k))
-    return plan.with_cache(s) if sized else plan
+    if not sized:
+        return plan
+    if isinstance(s, StorageSpec):
+        return _dc_replace(plan, cache_tb=s.total_tb, storage=s)
+    return plan.with_cache(s)
+
+
+def _storage_cell_adjust(profile: Profile, norm_rate: float,
+                         spec: StorageSpec, ci: float, carbon: CarbonModel,
+                         cell, c: float, f: float,
+                         divisor: float, cluster_rate: float, model,
+                         wear_aware: bool):
+    """Adjust a flat-SSD cell prediction to a typed ``StorageSpec``:
+
+    * **idle power** — the profiled energy embeds the flat
+      ``size × ssd_power_w_per_tb`` draw; replace it with the tiers'
+      per-device draw (a DRAM tier is ~35× the W/TB of NVMe).
+    * **embodied** — replace the flat calendar amortization with the
+      per-tier device rates; with ``wear_aware`` the predicted host
+      write rate (``rate × write_bytes_per_req`` from the cell) engages
+      the wear clock, so churn-heavy operating points see their
+      endurance-limited devices amortize over the shorter wear lifetime.
+    * **attainment** — per-tier bandwidth changes the KV-load part of
+      the service time, and queue wait compounds service time
+      (Takeaway 2), so the shift is modeled as *time rescaling*: a
+      server whose mean service shrinks by factor ``q`` behaves like
+      the reference server at rate ``q × rate`` — the same argument the
+      fleet solver's capacity normalization rests on.  The mean service
+      is reconstructed from the cell's hit statistics and the serving
+      model's constants; the hot tier's share of hit bytes is estimated
+      from the profile's own hit-rate curve (a hot tier of capacity
+      ``h`` keeps roughly what a cache of size ``h`` alone would hit).
+
+    Every delta is exactly 0.0 (and ``q == 1``) for the default flat
+    spec with ``wear_aware=False`` — that configuration bit-reproduces
+    the untyped solve (tested)."""
+    size = spec.usable_tb       # the cell was interpolated at this size
+    dur = cell.duration_per_req_s
+    dw = spec.idle_w - size * carbon.hw.ssd_power_w_per_tb
+    c += ci * dw * dur / 3.6e6 / divisor
+    rates = None
+    if wear_aware:
+        rates = cluster_rate * cell.write_bytes_per_req
+    emb_flat = carbon.cache_embodied_g(size, dur)
+    emb_spec = carbon.cache_embodied_g(size, dur, storage=spec,
+                                       write_bytes_per_s=rates)
+    c += (emb_spec - emb_flat) / divisor
+    if model is not None and cell.hit_rate > 0.0:
+        ref_gbps = model.ssd_read_gbps
+        hot_share = 0.0
+        if spec.is_tiered:
+            hot_cell = profile.interpolate(norm_rate,
+                                           spec.hot.capacity_tb)
+            hot_share = min(hot_cell.hit_rate / max(cell.hit_rate, 1e-9),
+                            1.0)
+        hit_bytes = cell.hit_rate * cell.avg_prompt_tokens \
+            * model.kv_bytes_per_token
+        compute_s = model.prefill_base_s \
+            + (1.0 - cell.hit_rate) * cell.avg_prompt_tokens \
+            / model.prefill_tok_per_s
+        # symmetric forms so the default flat spec yields q == 1.0
+        # bit-exactly (same expression on both sides)
+        inv_ref = 1.0 / (ref_gbps * 1e9)
+        inv_spec = hot_share / (spec.hot.dev.read_gbps * 1e9) \
+            + (1.0 - hot_share) / (spec.cold.dev.read_gbps * 1e9)
+        load_ref = hit_bytes * inv_ref
+        load_spec = hit_bytes * inv_spec
+        q = (compute_s + load_spec) / max(compute_s + load_ref, 1e-9)
+        if q != 1.0:
+            cq = profile.interpolate(norm_rate * q, size)
+            fq = _saturated_slo(profile, norm_rate * q, cq.slo_frac)
+            f0 = _saturated_slo(profile, norm_rate, cell.slo_frac)
+            if f0 > 0.0:
+                f = min(1.0, f * fq / f0)
+            elif fq > 0.0:
+                f = min(1.0, fq)
+    return c, f
 
 
 # --------------------------------------------------------------------- #
@@ -415,8 +494,10 @@ def _pair_switch_kwh(old_plan: ResourcePlan, new_plan: ResourcePlan,
     """Full predicted switching energy between two *sized* plans: the
     memoized shape part (boot + drain) plus the partitioned-ring KV
     migration."""
-    kwh = _shape_switch_kwh(_dc_replace(old_plan, cache_tb=None),
-                            _dc_replace(new_plan, cache_tb=None), cfg)
+    kwh = _shape_switch_kwh(_dc_replace(old_plan, cache_tb=None,
+                                        storage=None),
+                            _dc_replace(new_plan, cache_tb=None,
+                                        storage=None), cfg)
     return kwh + _migration_kwh(old_plan, new_plan, cfg, model=model)
 
 
@@ -427,13 +508,14 @@ def _transition_matrices(opt_plans: Sequence[ResourcePlan],
     ``S[o, o']`` whether the pair differs in *shape* (fleet/pools — the
     part ``min_dwell_hours`` pins; cache-only moves stay free to change
     hourly, matching the paper's resize loop)."""
-    O = len(opt_plans)
-    shapes = [_dc_replace(p, cache_tb=None) for p in opt_plans]
+    n_opt = len(opt_plans)
+    shapes = [_dc_replace(p, cache_tb=None, storage=None)
+              for p in opt_plans]
     keys = [_fleet_key(p) for p in opt_plans]
-    E = np.zeros((O, O))
-    S = np.zeros((O, O), dtype=bool)
-    for i in range(O):
-        for j in range(O):
+    E = np.zeros((n_opt, n_opt))
+    S = np.zeros((n_opt, n_opt), dtype=bool)
+    for i in range(n_opt):
+        for j in range(n_opt):
             if i == j:
                 continue
             S[i, j] = keys[i] != keys[j]
@@ -454,17 +536,17 @@ def _solve_dp_transition(C, F, n, options, rho, t_start, E, S, e_init,
     ``min_dwell`` restricts *shape* changes to hours where
     ``(t + dwell_offset) % min_dwell == 0`` (block-aligned dwell; cache
     size may still move hourly).  O(T · buckets · |options|²)."""
-    T, O = C.shape
+    T, n_opt = C.shape
     total = float(n.sum())
     target = rho * total
     scale = buckets / max(total, 1e-9)
     INF = float("inf")
-    oi = np.arange(O)
+    oi = np.arange(n_opt)
     cis = np.asarray(cis, dtype=float)
 
-    dp = np.full((buckets + 1, O), INF)
-    back = np.full((T, buckets + 1, O), -1, dtype=np.int64)
-    swg0 = e_init * cis[0] if e_init is not None else np.zeros(O)
+    dp = np.full((buckets + 1, n_opt), INF)
+    back = np.full((T, buckets + 1, n_opt), -1, dtype=np.int64)
+    swg0 = e_init * cis[0] if e_init is not None else np.zeros(n_opt)
     cost0 = n[0] * C[0] + swg0
     if lock0 is not None:
         # re-solve mid-dwell-block: hour 0 may not change the shape
@@ -481,7 +563,7 @@ def _solve_dp_transition(C, F, n, options, rho, t_start, E, S, e_init,
         nb = np.minimum(
             (np.arange(buckets + 1)[:, None] + n[t] * F[t] * scale)
             .astype(int), buckets)                      # (B+1, O)
-        ndp = np.full((buckets + 1, O), INF)
+        ndp = np.full((buckets + 1, n_opt), INF)
         for b in range(buckets + 1):
             row = dp[b]
             fin = row < INF
@@ -495,7 +577,7 @@ def _solve_dp_transition(C, F, n, options, rho, t_start, E, S, e_init,
             m = cost < cur
             if m.any():
                 ndp[nbb[m], oi[m]] = cost[m]
-                back[t, nbb[m], oi[m]] = b * O + pred[m]
+                back[t, nbb[m], oi[m]] = b * n_opt + pred[m]
         dp = ndp
 
     tb = int(np.floor(target * scale))
@@ -514,8 +596,8 @@ def _solve_dp_transition(C, F, n, options, rho, t_start, E, S, e_init,
         for t in range(T - 1, 0, -1):
             choice[t] = o
             enc = back[t, b, o]
-            o = int(enc % O)
-            b = int(enc // O)
+            o = int(enc % n_opt)
+            b = int(enc // n_opt)
         choice[0] = o
     tg = [float(swg0[choice[0]])] + [
         float(E[choice[t - 1], choice[t]] * cis[t]) for t in range(1, T)]
@@ -545,8 +627,10 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
                            transitions: Optional[TransitionConfig] = None,
                            min_dwell_hours: int = 1,
                            dwell_offset: int = 0,
-                           initial_plan: Optional[ResourcePlan] = None
-                           ) -> SolveResult:
+                           initial_plan: Optional[ResourcePlan] = None,
+                           storage: Optional[Sequence[
+                               Union[StorageSpec, str]]] = None,
+                           wear_aware: bool = True) -> SolveResult:
     """Joint hourly plan over (cache size, resource plan): the option set
     is the cross product sizes × plan candidates and the same
     multiple-choice knapsack machinery picks one option per hour (paper
@@ -582,26 +666,64 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
     switching costs are outside the ILP's variable set); a zero-cost
     config falls back to the plain solve and bit-reproduces its
     schedules.  ``SolveResult.transition_g`` reports the per-hour
-    switching carbon."""
+    switching carbon.
+
+    ``storage`` makes the size axis a *typed* search: a list of sized
+    ``StorageSpec`` candidates (or spec strings; see
+    ``repro.core.storage.enumerate_storage_specs``) replaces the flat
+    ``sizes_tb`` grid — every (candidate, spec) pair is an option, cell
+    predictions are adjusted for the spec's device power, per-tier
+    embodied rates and hot-tier KV-load credit
+    (``_storage_cell_adjust``), and the hourly plans carry the chosen
+    sized tiers.  ``wear_aware`` engages the endurance clock in those
+    predictions (``False`` = calendar lifetimes, the baseline the
+    wear-aware schedule is compared against); with the default flat
+    spec and ``wear_aware=False`` the solve bit-reproduces the untyped
+    path.  Candidates already carrying a ``plan.storage`` pin it.
+    Disaggregated candidates do not support the storage search yet."""
     t_start = time.time()
     rho = rho if rho is not None else slo.rho
     sizes = list(sizes_tb) if sizes_tb is not None else list(profile.sizes)
+    specs = None
+    if storage is not None:
+        specs = [StorageSpec.parse(s) if isinstance(s, str) else s
+                 for s in storage]
+        if not specs:
+            raise ValueError("storage= needs at least one StorageSpec")
     if plans is None and prefill_fleets is not None:
         from repro.core.plan import enumerate_plans
         plans = enumerate_plans(prefill_fleets, decode_fleets or [("l40",)])
     if plans is not None:
         cands = list(plans) or [ResourcePlan.single(None, n_replicas=1)]
-        # a candidate carrying a concrete cache_tb pins its allocation;
-        # open candidates (cache_tb=None) search the size grid
-        options = [(s, p) for p in cands
-                   for s in ([p.cache_tb] if p.cache_tb is not None
-                             else sizes)]
+        if specs is not None:
+            # a candidate carrying its own tiers pins them; open
+            # candidates search the spec set.  A bare cache_tb pin is
+            # ambiguous here (which device?) — refuse rather than
+            # silently overriding the user's size with the spec grid
+            for p in cands:
+                if p.cache_tb is not None and p.storage is None:
+                    raise ValueError(
+                        f"candidate plan pins cache={p.cache_tb:g}tb "
+                        "without tiers; under a storage search pin a "
+                        "spec instead (e.g. cache=nvme_gen4:"
+                        f"{p.cache_tb:g}tb) or leave the cache open")
+            options = [(sp, p) for p in cands
+                       for sp in ([p.storage] if p.storage is not None
+                                  else specs)]
+        else:
+            # a candidate carrying a concrete cache_tb pins its
+            # allocation; open candidates (cache_tb=None) search the grid
+            options = [(s, p) for p in cands
+                       for s in ([p.cache_tb] if p.cache_tb is not None
+                                 else sizes)]
     elif fleets is not None:
         mixes = [tuple(f) for f in fleets] or [("l40",)]
-        options = [(s, f) for f in mixes for s in sizes]
+        options = [(s, f) for f in mixes
+                   for s in (specs if specs is not None else sizes)]
     else:
         reps = sorted(set(int(k) for k in replicas)) or [1]
-        options = [(s, k) for k in reps for s in sizes]
+        options = [(s, k) for k in reps
+                   for s in (specs if specs is not None else sizes)]
     T = len(pred_rates)
     n = np.array([max(r, 1e-3) * 3600.0 for r in pred_rates])
 
@@ -609,19 +731,36 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
     F = np.zeros((T, len(options)))
     for t in range(T):
         for oi, (s, k) in enumerate(options):
+            spec = s if isinstance(s, StorageSpec) else None
+            # queueing/hit behaviour follows the *usable* capacity (the
+            # cold tier of an inclusive spec); pricing uses the full spec
+            size = spec.usable_tb if spec is not None else s
             if plans is not None and isinstance(k, ResourcePlan) \
                     and k.is_disaggregated:
+                if spec is not None:
+                    raise ValueError("the storage search does not support"
+                                     " disaggregated candidates yet")
                 C[t, oi], F[t, oi] = _disagg_cell_metrics(
-                    profile, pred_rates[t], s, k, pred_cis[t], carbon,
+                    profile, pred_rates[t], size, k, pred_cis[t], carbon,
                     slo=slo, model=model)
-            elif plans is not None or fleets is not None:
+                continue
+            if plans is not None or fleets is not None:
                 fl = k.serve.fleet if isinstance(k, ResourcePlan) else k
-                C[t, oi], F[t, oi] = _fleet_cell_metrics(
-                    profile, pred_rates[t], s, fl, pred_cis[t], carbon,
+                c, f = _fleet_cell_metrics(
+                    profile, pred_rates[t], size, fl, pred_cis[t], carbon,
                     type_profiles=type_profiles)
+                divisor = fleet_capacity(fl)
             else:
-                C[t, oi], F[t, oi] = _cluster_cell_metrics(
-                    profile, pred_rates[t], s, k, pred_cis[t], carbon)
+                c, f = _cluster_cell_metrics(
+                    profile, pred_rates[t], size, k, pred_cis[t], carbon)
+                divisor = float(k)
+            if spec is not None:
+                cell = profile.interpolate(pred_rates[t] / divisor, size)
+                c, f = _storage_cell_adjust(
+                    profile, pred_rates[t] / divisor, spec, pred_cis[t],
+                    carbon, cell, c, f, divisor, pred_rates[t],
+                    model, wear_aware)
+            C[t, oi], F[t, oi] = c, f
 
     res = None
     if transitions is not None:
@@ -657,18 +796,20 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
     chosen = list(res.sizes_tb)       # option tuples, split into the plan
     hourly = [_option_plan(o, sized=True) for o in chosen]
     tg = res.transition_g
+    szs = [s.total_tb if isinstance(s, StorageSpec) else s
+           for s, _ in chosen]
     if plans is not None:
-        return SolveResult([s for s, _ in chosen], res.objective_g,
+        return SolveResult(szs, res.objective_g,
                            res.feasible, time.time() - t_start, res.solver,
                            replicas=[p.n_replicas for p in hourly],
                            plans=hourly, transition_g=tg)
     if fleets is not None:
-        return SolveResult([s for s, _ in chosen], res.objective_g,
+        return SolveResult(szs, res.objective_g,
                            res.feasible, time.time() - t_start, res.solver,
                            replicas=[len(f) for _, f in chosen],
                            fleets=[f for _, f in chosen], plans=hourly,
                            transition_g=tg)
-    return SolveResult([s for s, _ in chosen], res.objective_g,
+    return SolveResult(szs, res.objective_g,
                        res.feasible, time.time() - t_start, res.solver,
                        replicas=[k for _, k in chosen], plans=hourly,
                        transition_g=tg)

@@ -21,7 +21,7 @@ import traceback
 
 import jax
 
-from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES
 from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
 from repro.launch.specs import input_specs
 from repro.models import partition

@@ -136,13 +136,23 @@ def run_simulation(args):
     cis = ci_trace(args.grid, seed=4)
     # --balance-eps is fully resolved into the candidate plans by
     # build_plans (the controller adopts the plans' pool value)
+    admission = None
+    if args.admission == "write_aware":
+        from repro.core.storage import (DEFAULT_DEVICE, StorageSpec,
+                                        write_aware_admission)
+        dev = StorageSpec.parse(args.storage[0]).cold.device \
+            if args.storage else DEFAULT_DEVICE
+        admission = write_aware_admission(model, carbon, dev)
     ctl = GreenCacheController(model, prof, carbon, args.task,
                                mode=args.mode, policy=policy,
                                warm_requests=args.warmup,
                                plans=plans, router=args.router,
                                max_requests_per_hour=int(1200 * scale),
                                transitions=transitions,
-                               min_dwell_hours=args.min_dwell)
+                               min_dwell_hours=args.min_dwell,
+                               storage=args.storage,
+                               wear_aware=not args.calendar_lifetime,
+                               admission=admission)
     res = ctl.run_day(wf, rate_trace, cis)
     many = len(plans) > 1
     clustered = scale > 1 or plans[0].n_replicas > 1
@@ -151,6 +161,11 @@ def run_simulation(args):
     print(f"  SLO attainment: {res.slo_attainment:.3f}")
     print(f"  avg cache size: {res.avg_cache_tb:.1f} TB")
     print(f"  hourly sizes:   {[int(h.cache_tb) for h in res.hours]}")
+    if args.storage:
+        print(f"  hourly tiers:   "
+              f"{[h.plan.split()[0][len('cache='):] for h in res.hours]}")
+        print(f"  cache churn:    "
+              f"{sum(h.written_gb for h in res.hours):.0f} GB written")
     if many or clustered:
         print(f"  avg fleet cap:  {res.avg_fleet_capacity:.2f} "
               f"(reference-server units)")
@@ -248,6 +263,22 @@ def main(argv=None):
                     help="minimum hours a plan shape must dwell before "
                          "the solver may switch it again (>1 implies "
                          "--transitions)")
+    ap.add_argument("--storage", nargs="+", default=None,
+                    help="typed cache tier spec(s) like 'nvme_gen4:8tb' "
+                         "or 'dram:0.5tb+nvme_gen4:4tb'; several specs "
+                         "let the solver size the tiers hourly (wear-"
+                         "aware by default). Default: the legacy flat-"
+                         "SSD size grid")
+    ap.add_argument("--calendar-lifetime", action="store_true",
+                    help="disable the wear clock: storage embodied "
+                         "carbon amortizes over calendar lifetimes even "
+                         "under churn (the baseline the wear-aware "
+                         "solver is compared against)")
+    ap.add_argument("--admission", default=None,
+                    choices=[None, "write_aware"],
+                    help="cache admission policy: write_aware only "
+                         "caches contexts whose expected reuse amortizes"
+                         " the insert's write energy + wear")
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--arch", default="yi-6b")
     args = ap.parse_args(argv)

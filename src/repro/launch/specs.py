@@ -5,7 +5,7 @@
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -13,13 +13,13 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
 from repro.models import partition
-from repro.models.transformer import (decode_step, forward, init_cache,
+from repro.models.transformer import (decode_step, init_cache,
                                       init_params, prefill)
 from repro.train.optimizer import adamw_init
 from repro.train.steps import make_train_step
 
 F = jnp.bfloat16
-I = jnp.int32
+INT = jnp.int32
 
 # Ship the §Perf-adopted sharding improvements by default; set False to
 # reproduce the pre-hillclimb baseline table (repro.launch.dryrun --baseline).
@@ -41,15 +41,15 @@ def batch_specs(cfg: ModelConfig, shape: InputShape, *, with_labels: bool):
     batch: Dict[str, Any] = {}
     if cfg.family == "vlm":
         vt = min(cfg.vision_tokens, S // 2)
-        batch["tokens"] = sds((B, S - vt), I)
+        batch["tokens"] = sds((B, S - vt), INT)
         batch["patches"] = sds((B, vt, cfg.d_model), F)
-        batch["positions"] = sds((B, S, 3), I)
+        batch["positions"] = sds((B, S, 3), INT)
         if with_labels:
-            batch["labels"] = sds((B, S - vt), I)
+            batch["labels"] = sds((B, S - vt), INT)
     else:
-        batch["tokens"] = sds((B, S), I)
+        batch["tokens"] = sds((B, S), INT)
         if with_labels:
-            batch["labels"] = sds((B, S), I)
+            batch["labels"] = sds((B, S), INT)
         if cfg.family == "encdec":
             batch["frames"] = sds((B, cfg.source_len, cfg.d_model), F)
     return batch
@@ -105,8 +105,8 @@ def input_specs(arch: str, shape_name: str) -> Dict[str, Any]:
     # decode: one new token against a seq_len-deep cache
     cache = cache_specs(cfg, shape)
     B = shape.global_batch
-    tokens = sds((B, 1), I)
-    pos = sds((), I)
+    tokens = sds((B, 1), INT)
+    pos = sds((), INT)
 
     def fn(params, cache, tokens, pos):
         return decode_step(params, cfg, cache, tokens, pos,

@@ -11,7 +11,6 @@ from repro.models.partition.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax

@@ -14,7 +14,7 @@ All rules are name/shape based so they apply uniformly to every family.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -17,7 +17,6 @@ remat, so compiled HLO stays one-layer-sized for the multi-pod dry-run.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional
 
 import jax

@@ -75,6 +75,7 @@ from repro.core.carbon import (CarbonModel, get_replica_type,
 from repro.core.kvstore import KVStore
 from repro.core.plan import (UNSET_EPS, PlanTransition, ResourcePlan,
                              TransitionConfig)
+from repro.core.storage import StorageSpec, TieredKVStore
 from repro.serving.engine import SimResult
 from repro.serving.perfmodel import ServingModel
 
@@ -172,13 +173,15 @@ class ClusterEngine:
                  n_replicas: int = 1, router: str = "single",
                  balance_eps: Optional[float] = 0.15,
                  types: Optional[Sequence[str]] = None,
-                 transitions: Optional[TransitionConfig] = None):
+                 transitions: Optional[TransitionConfig] = None,
+                 wear_aware: bool = True):
         if router not in ROUTERS:
             raise ValueError(f"unknown router {router!r}; one of {ROUTERS}")
         self.model = model
         self.carbon = carbon
         self.balance_eps = balance_eps
         self.transitions = transitions
+        self.wear_aware = wear_aware
         self._pending_kwh = 0.0        # transition energy awaiting a window
         if types is not None:
             types = [str(t) for t in types]
@@ -205,6 +208,21 @@ class ClusterEngine:
         if router == "single" and self.n_replicas != 1:
             raise ValueError("router='single' requires n_replicas=1")
         self.router = router
+        # typed storage: the store(s) may carry a StorageSpec (set by
+        # make_cluster / the TieredKVStore constructor).  storage=None is
+        # the legacy flat-SSD model — every new code path below is gated
+        # on it, so the seed trajectories stay bit-identical.
+        self.storage: Optional[StorageSpec] = next(
+            (st.spec for st in self.stores
+             if getattr(st, "spec", None) is not None), None)
+        self._tiered = isinstance(self.stores[0], TieredKVStore)
+        if self.storage is not None and not self.shared:
+            raise ValueError("typed storage (StorageSpec) supports the "
+                             "shared-store mode only")
+        # effective KV-load bandwidth of the bulk tier (equals the
+        # serving model's ssd_read_gbps for the legacy/flat-default path)
+        self._kv_gbps = model.ssd_read_gbps if self.storage is None \
+            else self.storage.cold.dev.read_gbps
         self._set_types(types)
         for st in self.stores:      # batched eviction scoring (same victims)
             st.enable_vector_evict()
@@ -256,13 +274,39 @@ class ClusterEngine:
         defaults to the actual cluster-total store allocation, so
         ``apply(current_plan())`` is a no-op transition."""
         if cache_tb is None:
-            cache_tb = sum(st.capacity_bytes for st in self.stores) / 1e12
+            cache_tb = self._live_alloc_tb()
         fleet = tuple(self.types) if self.types is not None \
             else ("l40",) * self.n_replicas
         return ResourcePlan.single(cache_tb, fleet=fleet,
                                    router=self.router,
                                    balance_eps=self.balance_eps,
-                                   partitioned=not self.shared)
+                                   partitioned=not self.shared,
+                                   storage=self._live_storage(cache_tb))
+
+    def _live_alloc_tb(self) -> float:
+        """Live total allocation: store capacity, plus the DRAM mirror
+        tier for an (inclusive) tiered store — the mirror is allocated
+        on top of the authoritative cold capacity."""
+        tb = sum(st.capacity_bytes for st in self.stores) / 1e12
+        if self.storage is not None and self.storage.is_tiered:
+            tb += self.storage.hot.capacity_tb
+        return tb
+
+    def _live_storage(self, cache_tb: float) -> Optional[StorageSpec]:
+        """The engine's storage spec reconciled to the live allocation —
+        mid-ramp the cold capacity lags the spec, and a plan must stay
+        internally consistent."""
+        if self.storage is None:
+            return None
+        if abs(self.storage.total_tb - cache_tb) <= 1e-9:
+            return self.storage
+        if self.storage.is_tiered:
+            from dataclasses import replace as _rep
+            hot = self.storage.hot
+            cold = max(cache_tb - hot.capacity_tb, 0.0)
+            return StorageSpec((hot, _rep(self.storage.cold,
+                                          capacity_tb=cold)))
+        return self.storage.scaled_to(cache_tb)
 
     def apply(self, plan: ResourcePlan, *, now: float = 0.0
               ) -> AppliedTransition:
@@ -303,14 +347,15 @@ class ClusterEngine:
             # legacy instant path (PR-3 semantics, bit-reproduced)
             if list(pool.fleet) != self.types:
                 self._apply_fleet(pool.fleet)
-            self._resize_cache(plan.cache_tb, now)
+            self._resize_cache(plan.cache_tb, now, storage=plan.storage)
             return applied
         applied.energy_kwh += self.carbon.transition_energy_kwh(
             tr, boot_latency_s=cfg.boot_latency_s)      # boot draw
         self._transition_pool(pool, tr, now, applied)
         self._resize_cache(plan.cache_tb, now,
                            ramp_s=cfg.cache_ramp_s,
-                           steps=cfg.cache_ramp_steps)
+                           steps=cfg.cache_ramp_steps,
+                           storage=plan.storage)
         self._pending_kwh += applied.energy_kwh
         return applied
 
@@ -456,12 +501,35 @@ class ClusterEngine:
             self.balance_eps = pool.balance_eps
 
     def _resize_cache(self, cache_tb: Optional[float], now: float, *,
-                      ramp_s: float = 0.0, steps: int = 4):
+                      ramp_s: float = 0.0, steps: int = 4,
+                      storage: Optional[StorageSpec] = None):
         """Snap (``ramp_s=0``, the legacy path) or gradually shrink the
         store(s) to the plan's allocation — staged evictions spread over
-        the ramp window instead of teleporting capacity away."""
+        the ramp window instead of teleporting capacity away.  A typed
+        plan also moves the tier boundary (``storage``): the hot/cold
+        split snaps (demotions are cheap hot-side I/O, accounted by the
+        store), the *total* rides the same gradual ramp — tier resizes
+        are priced by the PR-4 transition machinery like any other cache
+        move."""
+        if storage is not None:
+            if self.storage is None:
+                raise ValueError("plan carries typed storage but the "
+                                 "engine was built without a StorageSpec")
+            self._check_storage_compat(storage)
+        elif self.storage is not None and cache_tb is not None:
+            # untyped resize of a typed engine: rescale tiers in place
+            storage = self.storage.scaled_to(cache_tb)
         if cache_tb is None:
-            return
+            if storage is None:
+                return
+            cache_tb = storage.total_tb
+        if storage is not None:
+            self.storage = storage
+            self._kv_gbps = storage.cold.dev.read_gbps
+            if self._tiered:
+                self.stores[0].apply_spec(storage, now, ramp_s=ramp_s,
+                                          steps=steps)
+                return
         per = cache_tb * 1e12 if self.shared \
             else cache_tb * 1e12 / len(self.stores)
         for st in self.stores:
@@ -469,6 +537,20 @@ class ClusterEngine:
                 st.schedule_resize(per, now, ramp_s, steps=steps)
             else:
                 st.resize(per, now=now)
+            if storage is not None:
+                st.spec = storage
+
+    def _check_storage_compat(self, storage: StorageSpec):
+        """Store topology is fixed for the day: tier count and device
+        classes may not change between hourly plans (only capacities)."""
+        if self.storage is None:
+            return
+        old = [t.device for t in self.storage.tiers]
+        new = [t.device for t in storage.tiers]
+        if old != new:
+            raise ValueError(f"storage tier devices are fixed at "
+                             f"construction ({old} != {new}); only tier "
+                             "capacities may change hourly")
 
     def set_replicas(self, n_replicas: int):
         """Deprecated: apply a ``ResourcePlan`` instead. Scales a
@@ -574,23 +656,33 @@ class ClusterEngine:
         t0 = float(arrival[0])
         self._free = [max(f, t0) for f in self._free]
 
+        self._mark_wear()
         if self.router == "least_loaded":
-            assign, reused, ttft, finish_max = self._run_sequential(
-                requests, arrival, prompt)
+            assign, reused, ttft, finish_max, kv_load_s = \
+                self._run_sequential(requests, arrival, prompt)
             uncached = prompt - reused
         else:
             assign = self._route_static(requests, n)
-            reused = self._account(requests, assign, arrival, ctx, prompt)
+            if self._tiered:
+                reused, kv_load_s = self._account_tiered(
+                    requests, assign, arrival, ctx, prompt)
+            else:
+                reused = self._account(requests, assign, arrival, ctx,
+                                       prompt)
+                # KV loads are bulk-tier-bandwidth-bound (== the serving
+                # model's ssd_read_gbps on the legacy/default path, so
+                # the untyped engine stays bit-identical)
+                kv_load_s = reused * m.kv_bytes_per_token \
+                    / (self._kv_gbps * 1e9)
             uncached = prompt - reused
             # per-replica capacity: compute scales with the assigned
-            # replica's perf_scale; KV loads stay SSD-bandwidth-bound.
+            # replica's perf_scale; KV loads stay storage-bound.
             # (x / 1.0 is exact, so a uniform reference fleet keeps bit
             # parity with the untyped engine.)
             service = ((m.prefill_base_s + uncached / m.prefill_tok_per_s)
                        / (self._scales[assign] if self.types is not None
                           else 1.0)
-                       + reused * m.kv_bytes_per_token
-                       / (m.ssd_read_gbps * 1e9))
+                       + kv_load_s)
             ttft = np.empty(n)
             finish_max = t0
             for k in range(K):
@@ -613,7 +705,8 @@ class ClusterEngine:
         return self._finish_run(requests, arrival, out, prompt, reused,
                                 uncached, assign, ttft, finish_max, t0,
                                 ci_fn=ci_fn, cache_tb=cache_tb,
-                                rate_hint=rate_hint, record=record)
+                                rate_hint=rate_hint, record=record,
+                                kv_load_s=kv_load_s)
 
     # ------------------------------------------------------------------ #
     def _finish_run(self, requests: Sequence, arrival: np.ndarray,
@@ -621,7 +714,8 @@ class ClusterEngine:
                     uncached: np.ndarray, assign: np.ndarray,
                     ttft: np.ndarray, finish_max: float, t0: float, *,
                     ci_fn: Callable[[float], float], cache_tb: float,
-                    rate_hint: Optional[float], record: bool) -> SimResult:
+                    rate_hint: Optional[float], record: bool,
+                    kv_load_s: Optional[np.ndarray] = None) -> SimResult:
         """Decode coupling + energy/carbon accounting for a *fused* pool
         (prefill and decode share the same replicas — the seed semantics,
         bit-identical to PR-1/PR-2). ``DisaggEngine`` overrides this with
@@ -631,7 +725,12 @@ class ClusterEngine:
         n = len(requests)
         lookup_tokens = int(prompt.sum())
         hit_tokens = int(reused.sum())
-        kv_busy = hit_tokens * m.kv_bytes_per_token / (m.ssd_read_gbps * 1e9)
+        if self._tiered and kv_load_s is not None:
+            # per-tier bandwidths: the measured per-request load times
+            kv_busy = float(kv_load_s.sum())
+        else:
+            kv_busy = hit_tokens * m.kv_bytes_per_token \
+                / (self._kv_gbps * 1e9)
         if self._hetero:
             # mixed fleet: compute-busy seconds depend on which replica
             # served each request
@@ -673,7 +772,9 @@ class ClusterEngine:
         util = min(m.gpu_util_prefill * compute_util
                    + m.gpu_util_decode * decode_frac, 1.0)
         energy = self.carbon.energy_kwh(util, duration, ssd_tb=cache_tb,
-                                        n_servers=K, types=self.types)
+                                        n_servers=K, types=self.types,
+                                        storage=self.storage)
+        energy += self._drain_io_kwh()      # tier promotion/demotion I/O
         if self._pending_kwh:
             # transition energy (boot/drain/migration) accrued by apply():
             # priced operationally at this window's CI
@@ -692,7 +793,7 @@ class ClusterEngine:
         ci_avg = float(np.mean([ci_fn(float(a)) for a in arrival])) \
             if n <= 64 else _mean_ci(ci_fn, arrival)
         op = self.carbon.operational_g(energy, ci_avg)
-        emb_cache = self.carbon.cache_embodied_g(cache_tb, duration)
+        emb_cache = self._cache_embodied(cache_tb, duration)
         emb_comp = self.carbon.compute_embodied_g(duration, n_replicas=K,
                                                   types=self.types)
         return SimResult(
@@ -703,6 +804,80 @@ class ClusterEngine:
             embodied_cache_g=emb_cache, embodied_compute_g=emb_comp,
             token_hit_rate=hit_tokens / max(lookup_tokens, 1),
             gpu_util=util, num_requests=n, n_replicas=K)
+
+    # ------------------------------------------------------------------ #
+    # typed-storage accounting (all no-ops when ``storage is None``)
+    # ------------------------------------------------------------------ #
+    def _mark_wear(self):
+        """Snapshot the wear clocks at window start so the window's
+        write *rate* (not the lifetime total) prices embodied carbon."""
+        if self.storage is None:
+            return
+        if self._tiered:
+            self._wear0 = list(self.stores[0].tier_written)
+        else:
+            self._wear0 = [sum(st.stats.written_bytes
+                               for st in self.stores)]
+
+    def _window_write_rates(self, duration: float) -> list:
+        """Per-tier host-write rates (bytes/s) over the finished window —
+        the wear clock ``CarbonModel.cache_embodied_g`` amortizes
+        endurance-limited devices against."""
+        d = max(duration, 1e-9)
+        if self._tiered:
+            return [(w1 - w0) / d for w0, w1 in
+                    zip(self._wear0, self.stores[0].tier_written)]
+        w1 = sum(st.stats.written_bytes for st in self.stores)
+        return [(w1 - self._wear0[0]) / d]
+
+    def _cache_embodied(self, cache_tb: float, duration: float) -> float:
+        if self.storage is None:
+            return self.carbon.cache_embodied_g(cache_tb, duration)
+        live = self._live_storage(cache_tb) \
+            if abs(self.storage.total_tb - cache_tb) > 1e-9 else self.storage
+        rates = self._window_write_rates(duration) if self.wear_aware \
+            else None
+        return self.carbon.cache_embodied_g(cache_tb, duration,
+                                            storage=live,
+                                            write_bytes_per_s=rates)
+
+    def _drain_io_kwh(self) -> float:
+        """Active I/O energy of tier promotions/demotions accrued by the
+        tiered store since the last window (0.0 — exact — otherwise)."""
+        if not self._tiered:
+            return 0.0
+        return self.stores[0].drain_io_energy_j() / 3.6e6
+
+    def _account_tiered(self, requests: Sequence, assign: np.ndarray,
+                        arrival: np.ndarray, ctx: np.ndarray,
+                        prompt: np.ndarray):
+        """Ordered accounting pass for a tiered store: like ``_account``
+        but collects the tier each hit was served from, so the KV load
+        time — and therefore TTFT — emerges from tier placement."""
+        n = len(requests)
+        st = self.stores[0]
+        acct = st.account
+        m = self.model
+        bw = [st.read_gbps_for(0) * 1e9, st.read_gbps_for(1) * 1e9]
+        kv_bpt = m.kv_bytes_per_token
+        rets = np.empty(n, dtype=np.int64)
+        kv_load = np.empty(n)
+        al, cl, pl = arrival.tolist(), ctx.tolist(), prompt.tolist()
+        for i, (r, a, c, p) in enumerate(zip(requests, al, cl, pl)):
+            ret = acct(r.context_key, c, p, a, r.turn, False)
+            rets[i] = ret
+            ru = ret if ret >= 0 else 0
+            kv_load[i] = ru * kv_bpt / bw[1 if st.last_hit_tier > 0
+                                          else 0]
+        reused = np.maximum(rets, 0)
+        # batched stats from the encoded returns (>=0 hit, -1 inserted)
+        s = st.stats
+        s.lookups += n
+        s.lookup_tokens += int(ctx.sum())
+        s.hits += int((rets >= 0).sum())
+        s.hit_tokens += int(reused.sum())
+        s.insertions += int((rets == -1).sum())
+        return reused, kv_load
 
     # ------------------------------------------------------------------ #
     def _route_static(self, requests: Sequence, n: int) -> np.ndarray:
@@ -790,7 +965,13 @@ class ClusterEngine:
         assign = np.empty(n, dtype=np.int64)
         reused = np.empty(n, dtype=np.int64)
         ttft = np.empty(n)
-        kv_s_per_tok = m.kv_bytes_per_token / (m.ssd_read_gbps * 1e9)
+        kv_load = np.empty(n)
+        kv_s_per_tok = m.kv_bytes_per_token / (self._kv_gbps * 1e9)
+        tiered = self._tiered
+        if tiered:
+            st0 = self.stores[0]
+            kv_per_tier = [m.kv_bytes_per_token
+                           / (st0.read_gbps_for(t) * 1e9) for t in (0, 1)]
         scales = self._scales.tolist()
         hetero = self._hetero
         uscale = self._uniform_scale
@@ -809,14 +990,19 @@ class ClusterEngine:
             ru = max(st.account(r.context_key, r.context_tokens,
                                 int(prompt[i]), r.arrival, r.turn), 0)
             un = int(prompt[i]) - ru
+            if tiered:
+                kv_load[i] = ru * kv_per_tier[1 if st.last_hit_tier > 0
+                                              else 0]
+            else:
+                kv_load[i] = ru * kv_s_per_tok
             service = (m.prefill_base_s + un / m.prefill_tok_per_s) \
-                / (scales[k] if hetero else uscale) + ru * kv_s_per_tok
+                / (scales[k] if hetero else uscale) + kv_load[i]
             start = max(float(arrival[i]), free[k])
             free[k] = start + service
             assign[i] = k
             reused[i] = ru
             ttft[i] = free[k] - float(arrival[i])
-        return assign, reused, ttft, max(free)
+        return assign, reused, ttft, max(free), kv_load
 
 
 class DisaggEngine(ClusterEngine):
@@ -857,7 +1043,8 @@ class DisaggEngine(ClusterEngine):
     def __init__(self, model: ServingModel,
                  stores: Union[KVStore, Sequence[KVStore]],
                  carbon: CarbonModel, plan: ResourcePlan,
-                 transitions: Optional[TransitionConfig] = None):
+                 transitions: Optional[TransitionConfig] = None,
+                 wear_aware: bool = True):
         if not plan.is_disaggregated:
             raise ValueError("DisaggEngine needs a disaggregated plan "
                              "(prefill= and decode= pools)")
@@ -866,7 +1053,7 @@ class DisaggEngine(ClusterEngine):
             ("single" if pre.n_replicas == 1 else "cache_affinity")
         super().__init__(model, stores, carbon, types=pre.fleet,
                          router=router, balance_eps=pre.resolved_eps,
-                         transitions=transitions)
+                         transitions=transitions, wear_aware=wear_aware)
         self._set_decode(plan.decode.fleet)
 
     def _set_decode(self, types: Sequence[str]):
@@ -890,7 +1077,8 @@ class DisaggEngine(ClusterEngine):
         return ResourcePlan.disaggregated(
             cache_tb, prefill=tuple(self.types), decode=self.decode_types,
             router=self.router, balance_eps=self.balance_eps,
-            partitioned=not self.shared)
+            partitioned=not self.shared,
+            storage=self._live_storage(cache_tb))
 
     def apply(self, plan: ResourcePlan, *, now: float = 0.0
               ) -> AppliedTransition:
@@ -912,7 +1100,7 @@ class DisaggEngine(ClusterEngine):
             if list(pre.fleet) != self.types:
                 self._apply_fleet(pre.fleet)
             self._set_decode(plan.decode.fleet)
-            self._resize_cache(plan.cache_tb, now)
+            self._resize_cache(plan.cache_tb, now, storage=plan.storage)
             return applied
         applied.energy_kwh += self.carbon.transition_energy_kwh(
             tr, boot_latency_s=cfg.boot_latency_s)      # both pools' boots
@@ -920,7 +1108,8 @@ class DisaggEngine(ClusterEngine):
         self._transition_decode(plan.decode.fleet, now, applied)
         self._resize_cache(plan.cache_tb, now,
                            ramp_s=cfg.cache_ramp_s,
-                           steps=cfg.cache_ramp_steps)
+                           steps=cfg.cache_ramp_steps,
+                           storage=plan.storage)
         self._pending_kwh += applied.energy_kwh
         return applied
 
@@ -964,7 +1153,8 @@ class DisaggEngine(ClusterEngine):
                     uncached: np.ndarray, assign: np.ndarray,
                     ttft: np.ndarray, finish_max: float, t0: float, *,
                     ci_fn: Callable[[float], float], cache_tb: float,
-                    rate_hint: Optional[float], record: bool) -> SimResult:
+                    rate_hint: Optional[float], record: bool,
+                    kv_load_s: Optional[np.ndarray] = None) -> SimResult:
         m = self.model
         Kp = self.n_replicas
         Kd = len(self.decode_types)
@@ -1022,6 +1212,7 @@ class DisaggEngine(ClusterEngine):
         energy = self.carbon.plan_energy_kwh(
             plan, {"prefill": util_p, "decode": util_d}, duration,
             pool_power_frac={"decode": m.decode_pool_power_frac})
+        energy += self._drain_io_kwh()      # tier promotion/demotion I/O
         if self._pending_kwh:
             energy += self._pending_kwh
             self._pending_kwh = 0.0
@@ -1037,7 +1228,7 @@ class DisaggEngine(ClusterEngine):
         ci_avg = float(np.mean([ci_fn(float(a)) for a in arrival])) \
             if n <= 64 else _mean_ci(ci_fn, arrival)
         op = self.carbon.operational_g(energy, ci_avg)
-        emb_cache = self.carbon.cache_embodied_g(cache_tb, duration)
+        emb_cache = self._cache_embodied(cache_tb, duration)
         emb_comp = self.carbon.compute_embodied_g(duration,
                                                   types=plan.all_types)
         util = (Kp * util_p + Kd * util_d) / (Kp + Kd)
@@ -1066,8 +1257,10 @@ def make_cluster(model: ServingModel, carbon: CarbonModel, *,
                  types: Optional[Sequence[str]] = None,
                  balance_eps: Optional[float] = 0.15,
                  plan: Union[ResourcePlan, str, None] = None,
-                 transitions: Optional[TransitionConfig] = None
-                 ) -> ClusterEngine:
+                 transitions: Optional[TransitionConfig] = None,
+                 storage: Union[StorageSpec, str, None] = None,
+                 wear_aware: bool = True,
+                 admission=None) -> ClusterEngine:
     """Convenience constructor: builds the store(s) for a cluster-total
     ``cache_tb`` allocation (partitioned mode splits it evenly).
 
@@ -1078,9 +1271,20 @@ def make_cluster(model: ServingModel, carbon: CarbonModel, *,
     reconfiguration model applied by subsequent ``apply`` calls.  The
     remaining kwargs are the pre-plan spelling: ``types`` selects a
     heterogeneous fleet (one ``ReplicaType`` name per replica,
-    overriding ``n_replicas``)."""
+    overriding ``n_replicas``).
+
+    Typed storage: a plan whose cache is a tier spec
+    (``cache=dram:0.5tb+nvme_gen4:4tb``), or an explicit ``storage=``
+    spec, builds the matching store — a ``TieredKVStore`` for two tiers
+    (shared-store mode only), a flat ``KVStore`` tagged with its device
+    for one — and the engine prices energy/embodied from the devices,
+    with the wear clock (``wear_aware=False`` keeps calendar lifetimes —
+    the flat-default parity configuration).  ``admission`` installs a
+    ``repro.core.storage.WriteAwareAdmission`` gate on the store(s)."""
     if isinstance(plan, str):
         plan = ResourcePlan.parse(plan)
+    if isinstance(storage, str):
+        storage = StorageSpec.parse(storage)
     if plan is not None:
         pre = plan.prefill
         if plan.cache_tb is None:
@@ -1092,19 +1296,32 @@ def make_cluster(model: ServingModel, carbon: CarbonModel, *,
         router = pre.router if router is None else router
         partitioned = pre.partitioned
         balance_eps = pre.resolved_eps
+        if storage is None:
+            storage = plan.storage
+    elif cache_tb is None and storage is not None:
+        cache_tb = storage.total_tb
     elif cache_tb is None:
         raise ValueError("make_cluster needs cache_tb (or a sized plan)")
     if types is not None:
         n_replicas = len(types)
     if router is None:
         router = "single" if n_replicas == 1 else "cache_affinity"
+    if storage is not None and partitioned:
+        raise ValueError("typed storage supports the shared-store mode "
+                         "only")
     if partitioned and n_replicas > 1:
         per = cache_tb * 1e12 / n_replicas
         stores: Union[KVStore, List[KVStore]] = [
             KVStore(per, policy, model.kv_bytes_per_token)
             for _ in range(n_replicas)]
+    elif storage is not None and storage.is_tiered:
+        stores = TieredKVStore(storage, policy, model.kv_bytes_per_token,
+                               admission=admission)
     else:
         stores = KVStore(cache_tb * 1e12, policy, model.kv_bytes_per_token)
+        if storage is not None:
+            stores.spec = storage
+        stores.admission = admission
     if plan is not None and plan.is_disaggregated:
         if router is not None and router != plan.prefill.router:
             # honor an explicit router kwarg, as the fused branch does
@@ -1113,7 +1330,9 @@ def make_cluster(model: ServingModel, carbon: CarbonModel, *,
                 dataclasses.replace(p, router=router)
                 if p.role == "prefill" else p for p in plan.pools))
         return DisaggEngine(model, stores, carbon, plan,
-                            transitions=transitions)
+                            transitions=transitions,
+                            wear_aware=wear_aware)
     return ClusterEngine(model, stores, carbon, n_replicas=n_replicas,
                          router=router, types=types,
-                         balance_eps=balance_eps, transitions=transitions)
+                         balance_eps=balance_eps, transitions=transitions,
+                         wear_aware=wear_aware)

@@ -51,8 +51,8 @@ def lr_schedule(cfg: AdamWConfig, step):
 
 def global_norm(tree):
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
 
 
 def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params):

@@ -2,8 +2,6 @@
 (B, S, vocab) logits — critical for 256k vocabs) + AdamW update."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +26,7 @@ def chunked_softmax_xent(hidden, w_unembed, labels, *, chunk=LOSS_CHUNK):
         chunk = S
     nc = S // chunk
     h = hidden.reshape(B, nc, chunk, d).swapaxes(0, 1)
-    l = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+    lab = labels.reshape(B, nc, chunk).swapaxes(0, 1)
 
     def body(args):
         hc, lc = args
@@ -41,7 +39,7 @@ def chunked_softmax_xent(hidden, w_unembed, labels, *, chunk=LOSS_CHUNK):
         mask = (lc != IGNORE_LABEL).astype(jnp.float32)
         return ((logz - gold) * mask).sum(), mask.sum()
 
-    nll, cnt = jax.lax.map(body, (h, l))
+    nll, cnt = jax.lax.map(body, (h, lab))
     return nll.sum(), cnt.sum()
 
 

@@ -6,8 +6,8 @@ prompts carry > 1000 context tokens; conversations average ~9 turns; the
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Sequence
+from dataclasses import dataclass
+from typing import List, Sequence
 
 import numpy as np
 

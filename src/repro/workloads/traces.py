@@ -18,6 +18,10 @@ HOURS = 24
 def azure_rate_trace(peak_rate: float, days: int = 1, seed: int = 0,
                      noise: float = 0.06) -> np.ndarray:
     """Hourly request rates (req/s), diurnal, scaled so max == peak_rate."""
+    if not peak_rate > 0.0:
+        raise ValueError(f"peak_rate must be > 0, got {peak_rate!r}")
+    if days < 1:
+        raise ValueError(f"days must be >= 1, got {days!r}")
     rng = np.random.default_rng(seed)
     h = np.arange(HOURS)
     base = (0.25
@@ -48,6 +52,11 @@ def ci_trace(grid: str, days: int = 1, seed: int = 1) -> np.ndarray:
     (builtin ``hash`` is salted per interpreter run, which made the
     "same" trace differ between processes — figures must reproduce)."""
     import zlib
+    if grid not in GRID_CI:
+        raise ValueError(f"unknown grid {grid!r}; one of "
+                         f"{sorted(GRID_CI)}")
+    if days < 1:
+        raise ValueError(f"days must be >= 1, got {days!r}")
     rng = np.random.default_rng(seed + zlib.crc32(grid.encode()) % 1000)
     mean = GRID_CI[grid]
     dip, peak, noise = _GRID_SHAPE.get(grid, (0.2, 0.2, 0.1))

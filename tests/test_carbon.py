@@ -1,5 +1,4 @@
 """Unit + property tests for the carbon model (paper Eqs. 1-5)."""
-import math
 
 import pytest
 

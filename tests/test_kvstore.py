@@ -83,3 +83,60 @@ def test_invariants_random_workload(ops):
         assert s.used_bytes == pytest.approx(
             sum(e.size_bytes for e in s.entries.values()))
     assert s.stats.hit_tokens <= s.stats.lookup_tokens
+
+
+def mk_tiered(hot_tokens=40, cold_tokens=120, policy="lcs"):
+    from repro.core.storage import (StorageSpec, StorageTier,
+                                    TieredKVStore)
+    spec = StorageSpec((StorageTier("dram", hot_tokens * BPT / 1e12),
+                        StorageTier("nvme_gen4",
+                                    cold_tokens * BPT / 1e12)))
+    return TieredKVStore(spec, POLICIES[policy], BPT)
+
+
+_OPS = st.lists(
+    st.tuples(st.integers(0, 5),        # op selector
+              st.integers(0, 19),       # key id
+              st.integers(1, 40),       # tokens
+              st.floats(0.4, 1.6)),     # resize factor
+    min_size=1, max_size=200)
+
+
+@given(ops=_OPS, tiered=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_byte_accounting_exact_across_all_ops(ops, tiered):
+    """Satellite invariant: across arbitrary account/insert/evict/
+    ``schedule_resize``/``pop_entry``/``adopt`` sequences, in both flat
+    and tiered modes, ``used_bytes`` equals the sum of entry sizes and
+    the wear clock is monotone (and, tiered, the mirror accounting is
+    exact and within its capacity)."""
+    s = mk_tiered() if tiered else mk(capacity_tokens=120, policy="lcs")
+    donor = []
+    written = 0.0
+    for i, (op, kid, toks, frac) in enumerate(ops):
+        key = f"k{kid}"
+        now = float(i)
+        if op <= 1:
+            s.account(key, toks, toks, now)
+        elif op == 2:
+            s.lookup(key, toks, now)
+            s.insert(key, toks, now)
+        elif op == 3 and key in s.entries:
+            donor.append(s.pop_entry(key))
+        elif op == 4 and donor:
+            s.adopt(donor.pop(), now)
+        elif op == 5:
+            s.schedule_resize(s.capacity_bytes * frac, now, ramp_s=4.0)
+        assert s.used_bytes <= s.capacity_bytes + 1e-6
+        assert s.used_bytes == pytest.approx(
+            sum(e.size_bytes for e in s.entries.values()))
+        assert s.stats.written_bytes >= written     # wear is monotone
+        written = s.stats.written_bytes
+        if tiered:
+            hot = sum(e.size_bytes for e in s.entries.values()
+                      if e.tier == 0)
+            assert s.hot_used_bytes == pytest.approx(hot)
+            assert s.hot_used_bytes <= s.hot_capacity_bytes + 1e-6
+            # the cold (authoritative) wear clock equals the global one
+            assert s.tier_written[1] == pytest.approx(
+                s.stats.written_bytes)

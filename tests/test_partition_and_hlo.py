@@ -7,7 +7,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
 from repro.launch.specs import cache_specs, param_shapes
 from repro.models import partition
-from repro.roofline.hlo_cost import HloCostModel, analyze_hlo, \
+from repro.roofline.hlo_cost import analyze_hlo, \
     shape_numel_bytes
 
 AXES = {"data": 16, "model": 16}

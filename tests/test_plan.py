@@ -5,7 +5,6 @@ pricing), the plan-returning solver, and the vectorized workload
 samplers."""
 import copy
 import time
-import warnings
 
 import numpy as np
 import pytest
@@ -19,7 +18,7 @@ from repro.core.policies import POLICIES
 from repro.core.profiler import Profile, ProfileCell
 from repro.core.solver import (_fleet_cell_metrics, enumerate_fleets,
                                solve_cluster_schedule)
-from repro.serving.cluster import ClusterEngine, DisaggEngine, make_cluster
+from repro.serving.cluster import ClusterEngine, make_cluster
 from repro.serving.perfmodel import SERVING_MODELS, SLO
 from repro.workloads.conversations import ConversationWorkload
 from repro.workloads.documents import DocumentWorkload

@@ -1,5 +1,4 @@
 """LCS replacement policy (paper Eqs. 7-9) scoring properties."""
-import dataclasses
 
 import pytest
 

@@ -1,0 +1,578 @@
+"""Wear-aware tiered storage subsystem: device registry, spec
+round-trips, pricing parity with the legacy flat-SSD model, tiered-store
+physics, write-aware admission, and the solver's storage search."""
+import copy
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.carbon import CarbonModel, HardwareSpec
+from repro.core.kvstore import KVStore
+from repro.core.plan import PlanTransition, ResourcePlan
+from repro.core.policies import POLICIES
+from repro.core.profiler import Profile, ProfileCell
+from repro.core.solver import solve_cluster_schedule
+from repro.core.storage import (DEFAULT_DEVICE, STORAGE_DEVICES,
+                                StorageSpec, StorageTier, TieredKVStore,
+                                WriteAwareAdmission, device_hardware_spec,
+                                enumerate_storage_specs,
+                                write_aware_admission)
+from repro.serving.cluster import ClusterEngine, make_cluster
+from repro.serving.perfmodel import SERVING_MODELS, SLO
+from repro.workloads import sample_many
+from repro.workloads.conversations import ConversationWorkload
+from repro.workloads.traces import make_poisson_arrivals
+
+BPT = 1000.0
+
+
+# --------------------------------------------------------------------- #
+# devices
+# --------------------------------------------------------------------- #
+def test_reference_device_matches_legacy_hardware_scalars():
+    hw = HardwareSpec()
+    dev = STORAGE_DEVICES[DEFAULT_DEVICE]
+    assert dev.embodied_kg_per_tb == hw.ssd_kg_per_tb
+    assert dev.idle_w_per_tb == hw.ssd_power_w_per_tb
+    assert dev.lifetime_years == hw.ssd_lifetime_years
+    assert dev.read_gbps == SERVING_MODELS["llama3-70b"].ssd_read_gbps
+
+
+def test_unknown_device_raises():
+    with pytest.raises(KeyError, match="unknown storage device"):
+        StorageTier("floppy", 1.0)
+
+
+def test_endurance_math():
+    dev = STORAGE_DEVICES["nvme_gen4"]
+    tbw = dev.tbw_bytes(4.0)
+    assert tbw == pytest.approx(3.0 * 4e12 * 365.25 * 5.0)
+    cal = dev.lifetime_years * 365.25 * 24 * 3600
+    # no writes -> calendar exactly
+    assert dev.effective_lifetime_s(4.0) == cal
+    # write rate far over rating -> wear-limited
+    w = 1e9
+    eff = dev.effective_lifetime_s(4.0, w)
+    assert eff == pytest.approx(tbw / (w * dev.write_amp))
+    assert eff < cal
+    # non-endurance devices never wear out
+    assert STORAGE_DEVICES["dram"].effective_lifetime_s(1.0, 1e12) \
+        == pytest.approx(7.0 * 365.25 * 24 * 3600)
+
+
+def test_device_hardware_spec_default_is_seed_spec():
+    hw = device_hardware_spec(STORAGE_DEVICES[DEFAULT_DEVICE])
+    assert hw == HardwareSpec()
+    dev = dataclasses.replace(STORAGE_DEVICES[DEFAULT_DEVICE],
+                              lifetime_years=3.0)
+    assert device_hardware_spec(dev).ssd_lifetime_years == 3.0
+
+
+# --------------------------------------------------------------------- #
+# specs
+# --------------------------------------------------------------------- #
+def test_spec_round_trips():
+    for s in ("nvme_gen4:4tb", "dram:0.5tb+nvme_gen4:4tb",
+              "dram:0tb+qlc_ssd:8tb"):
+        spec = StorageSpec.parse(s)
+        assert str(spec) == s
+        assert StorageSpec.from_json(spec.to_json()) == spec
+    t = StorageSpec.parse("dram:0.5tb+nvme_gen4:4tb")
+    assert t.total_tb == 4.5 and t.usable_tb == 4.0 and t.is_tiered
+    assert t.idle_w == pytest.approx(0.5 * 55.0 + 4.0 * 1.5)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="at least one tier"):
+        StorageSpec(())
+    with pytest.raises(ValueError, match="at most two"):
+        StorageSpec.parse("dram:1tb+nvme_gen4:2tb+hdd:8tb")
+    with pytest.raises(ValueError, match="duplicate"):
+        StorageSpec.parse("nvme_gen4:1tb+nvme_gen4:2tb")
+    with pytest.raises(ValueError):
+        StorageTier("dram", -1.0)
+
+
+def test_normalize_storage_candidates_unifies_topology():
+    from repro.core.storage import normalize_storage_candidates
+    out = normalize_storage_candidates(
+        ["nvme_gen4:8tb", "dram:0.5tb+nvme_gen4:8tb"])
+    assert [str(s) for s in out] == ["dram:0tb+nvme_gen4:8tb",
+                                     "dram:0.5tb+nvme_gen4:8tb"]
+    # all-flat sets stay flat
+    flat = normalize_storage_candidates(["nvme_gen4:4tb", "qlc_ssd:8tb"])
+    assert all(not s.is_tiered for s in flat)
+
+
+def test_enumerate_storage_specs_shares_topology():
+    flat = enumerate_storage_specs([0, 4, 8])
+    assert all(not s.is_tiered for s in flat)
+    tiered = enumerate_storage_specs([0, 4, 8], hot_fracs=[0.0, 0.1])
+    assert all(s.is_tiered for s in tiered)
+    devs = {tuple(t.device for t in s.tiers) for s in tiered}
+    assert devs == {("dram", "nvme_gen4")}
+    assert len({str(s) for s in tiered}) == len(tiered)  # deduped
+
+
+# --------------------------------------------------------------------- #
+# plans
+# --------------------------------------------------------------------- #
+def test_plan_storage_round_trip():
+    p = ResourcePlan.parse("cache=dram:0.5tb+nvme_gen4:4tb fleet=l40:2")
+    assert p.cache_tb == 4.5
+    assert p.storage == StorageSpec.parse("dram:0.5tb+nvme_gen4:4tb")
+    assert ResourcePlan.parse(str(p)) == p
+    assert ResourcePlan.from_json(p.to_json()) == p
+    legacy = ResourcePlan.parse("cache=4tb fleet=l40:2")
+    assert legacy.storage is None
+
+
+def test_plan_storage_cache_mismatch_raises():
+    with pytest.raises(ValueError, match="disagrees"):
+        ResourcePlan.single(5.0, n_replicas=1,
+                            storage="nvme_gen4:4tb")
+
+
+def test_with_cache_rescales_tiers():
+    p = ResourcePlan.single(None, n_replicas=1,
+                            storage="dram:1tb+nvme_gen4:4tb")
+    q = p.with_cache(2.5)
+    assert q.cache_tb == 2.5
+    assert q.storage.hot.capacity_tb == pytest.approx(0.5)
+    assert q.storage.cold.capacity_tb == pytest.approx(2.0)
+
+
+def test_transition_carries_storage():
+    a = ResourcePlan.single(None, n_replicas=1,
+                            storage="dram:0.5tb+nvme_gen4:4tb")
+    b = a.with_storage("dram:0.5tb+nvme_gen4:2tb")
+    tr = PlanTransition.diff(a, b)
+    assert tr.storage_changed and not tr.is_noop
+    rt = PlanTransition.parse(str(tr))
+    assert rt == tr
+    assert PlanTransition.from_json(tr.to_json()) == tr
+    # same spec on both sides: retier is not an event
+    assert PlanTransition.diff(a, a).is_noop
+
+
+# --------------------------------------------------------------------- #
+# carbon pricing parity + wear
+# --------------------------------------------------------------------- #
+def test_flat_default_spec_prices_bit_equal():
+    cm = CarbonModel()
+    spec = StorageSpec.flat(4.0)
+    assert cm.cache_embodied_g(4.0, 3600.0) \
+        == cm.cache_embodied_g(4.0, 3600.0, storage=spec)
+    assert cm.energy_kwh(0.37, 3600.0, ssd_tb=4.0) \
+        == cm.energy_kwh(0.37, 3600.0, ssd_tb=4.0, storage=spec)
+    assert cm.energy_kwh(0.37, 3600.0, ssd_tb=4.0, types=["a100", "l40"]) \
+        == cm.energy_kwh(0.37, 3600.0, ssd_tb=4.0, types=["a100", "l40"],
+                         storage=spec)
+
+
+def test_wear_rate_raises_embodied_monotonically():
+    cm = CarbonModel()
+    spec = StorageSpec.flat(4.0)
+    base = cm.cache_embodied_g(4.0, 3600.0, storage=spec)
+    lo = cm.cache_embodied_g(4.0, 3600.0, storage=spec,
+                             write_bytes_per_s=2e8)
+    hi = cm.cache_embodied_g(4.0, 3600.0, storage=spec,
+                             write_bytes_per_s=1e9)
+    assert base <= lo < hi
+
+
+def test_wear_limited_embodied_rate_is_capacity_independent():
+    """Burning endurance at a fixed write rate costs the same embodied
+    carbon per second whatever the drive size (TBW scales with
+    capacity) — why undersizing a hot cache saves nothing."""
+    cm = CarbonModel()
+    w = 1e9                      # deep in the wear-limited regime
+    small = cm.cache_embodied_g(2.0, 3600.0,
+                                storage=StorageSpec.flat(2.0, "qlc_ssd"),
+                                write_bytes_per_s=w)
+    big = cm.cache_embodied_g(8.0, 3600.0,
+                              storage=StorageSpec.flat(8.0, "qlc_ssd"),
+                              write_bytes_per_s=w)
+    assert small == pytest.approx(big)
+
+
+def test_tier_rates_validation():
+    cm = CarbonModel()
+    spec = StorageSpec.parse("dram:1tb+nvme_gen4:4tb")
+    with pytest.raises(ValueError, match="one write rate per tier"):
+        cm.cache_embodied_g(5.0, 3600.0, storage=spec,
+                            write_bytes_per_s=[1.0, 2.0, 3.0])
+
+
+# --------------------------------------------------------------------- #
+# KVStore wear clock + admission
+# --------------------------------------------------------------------- #
+def mk(capacity_tokens=100, policy="lru"):
+    return KVStore(capacity_tokens * BPT, POLICIES[policy], BPT)
+
+
+def test_written_bytes_monotone_and_exact():
+    s = mk()
+    s.insert("a", 10, now=0.0)
+    assert s.stats.written_bytes == 10 * BPT
+    s.insert("a", 30, now=1.0)                 # grow writes the delta
+    assert s.stats.written_bytes == 30 * BPT
+    s.account("b", 20, 20, now=2.0)
+    assert s.stats.written_bytes == 50 * BPT
+    e = s.pop_entry("a")                       # migration read: no write
+    assert s.stats.written_bytes == 50 * BPT
+    s2 = mk()
+    s2.adopt(e, now=3.0)                       # migration write wears
+    assert s2.stats.written_bytes == 30 * BPT
+
+
+class _RejectAll:
+    def admit(self, store, size_bytes, *, turn=1):
+        return turn > 1
+
+
+def test_admission_gate_refuses_new_inserts():
+    s = mk()
+    s.admission = _RejectAll()
+    assert s.insert("a", 10, now=0.0) is None
+    assert s.account("b", 10, 10, now=1.0) == -3
+    assert s.stats.admit_rejects == 2
+    assert len(s) == 0
+    # later turns are always admitted
+    assert s.insert("c", 10, now=2.0, turn=2) is not None
+
+
+def test_write_aware_admission_cost_model():
+    m = SERVING_MODELS["llama3-70b"]
+    cm = CarbonModel()
+    adm = write_aware_admission(m, cm, "qlc_ssd")
+    assert adm.wear_g_per_byte() > 0
+    # DRAM has no endurance: wear carbon is zero
+    assert write_aware_admission(m, cm, "dram").wear_g_per_byte() == 0.0
+    # a store with zero observed reuse gets gated once warmed up
+    s = mk(capacity_tokens=10_000_000)
+    s.admission = WriteAwareAdmission(STORAGE_DEVICES["qlc_ssd"],
+                                      benefit_j_per_byte=1e-9,
+                                      min_expected_hits=1e-6)
+    for i in range(60):                        # no reuse at all
+        s.account(f"k{i}", 100, 100, now=float(i))
+    before = len(s)
+    ret = s.account("fresh", 100, 100, now=99.0)
+    assert ret == -3 and len(s) == before
+    assert s.stats.admit_rejects >= 1
+
+
+# --------------------------------------------------------------------- #
+# tiered store physics
+# --------------------------------------------------------------------- #
+def mk_tiered(hot_tokens=30, cold_tokens=100, policy="lru"):
+    spec = StorageSpec((StorageTier("dram", hot_tokens * BPT / 1e12),
+                        StorageTier("nvme_gen4",
+                                    cold_tokens * BPT / 1e12)))
+    return TieredKVStore(spec, POLICIES[policy], BPT)
+
+
+def _tier_invariants(s: TieredKVStore):
+    assert s.used_bytes == pytest.approx(
+        sum(e.size_bytes for e in s.entries.values()))
+    hot = [e for e in s.entries.values() if e.tier == 0]
+    assert s.hot_used_bytes == pytest.approx(
+        sum(e.size_bytes for e in hot))
+    assert s.hot_used_bytes <= s.hot_capacity_bytes + 1e-6
+    assert s.used_bytes <= s.capacity_bytes + 1e-6
+    # the mirror index tracks exactly the tier-0 entries
+    assert set(s._hot) == {e.key for e in hot}
+
+
+def test_tiered_mirror_lifecycle():
+    s = mk_tiered(hot_tokens=30, cold_tokens=100)
+    s.account("a", 10, 10, now=0.0)            # fresh: cold write + mirror
+    assert s.entries["a"].tier == 0
+    assert s.last_hit_tier == -1
+    s.account("b", 15, 15, now=1.0)
+    s.account("c", 15, 15, now=2.0)            # mirror pressure drops "a"
+    _tier_invariants(s)
+    assert s.entries["a"].tier == 1 and s.demotions >= 1
+    # cold hit: the request loads at the cold tier, then promotes
+    ret = s.account("a", 10, 10, now=3.0)
+    assert ret == 10 and s.last_hit_tier == 1
+    assert s.entries["a"].tier == 0 and s.promotions >= 1
+    # hot hit: served from the mirror
+    s.account("a", 10, 10, now=4.0)
+    assert s.last_hit_tier == 0
+    _tier_invariants(s)
+
+
+def test_tiered_cold_wear_equals_flat_wear():
+    """The inclusive mirror must not amplify NAND writes: the cold
+    tier's write clock matches a flat store fed the same stream."""
+    rng = np.random.default_rng(3)
+    flat = mk(capacity_tokens=100)
+    tier = mk_tiered(hot_tokens=30, cold_tokens=100)
+    for i in range(300):
+        key = f"k{rng.integers(12)}"
+        toks = int(rng.integers(1, 30))
+        flat.account(key, toks, toks, now=float(i))
+        tier.account(key, toks, toks, now=float(i))
+        _tier_invariants(tier)
+    assert tier.tier_written[1] == pytest.approx(flat.stats.written_bytes)
+    assert tier.stats.written_bytes == pytest.approx(
+        flat.stats.written_bytes)
+    # same usable capacity, same policy -> same contents
+    assert set(tier.entries) == set(flat.entries)
+
+
+def test_tiered_pop_adopt_and_resize_keep_invariants():
+    s = mk_tiered(hot_tokens=40, cold_tokens=120)
+    for i in range(10):
+        s.account(f"k{i}", 12, 12, now=float(i))
+    _tier_invariants(s)
+    e = s.pop_entry("k9")
+    assert e.tier == 1                         # arrives cold downstream
+    _tier_invariants(s)
+    s2 = mk_tiered(hot_tokens=40, cold_tokens=120)
+    assert s2.adopt(e, now=20.0)
+    assert s2.entries["k9"].tier == 1
+    _tier_invariants(s2)
+    # retier: shrink the mirror, then the cold capacity
+    spec = StorageSpec((StorageTier("dram", 15 * BPT / 1e12),
+                        StorageTier("nvme_gen4", 60 * BPT / 1e12)))
+    s.apply_spec(spec, now=30.0)
+    _tier_invariants(s)
+    assert s.capacity_bytes == pytest.approx(60 * BPT)
+    with pytest.raises(ValueError, match="devices are fixed"):
+        s.apply_spec(StorageSpec((StorageTier("dram", 1e9),
+                                  StorageTier("qlc_ssd", 1e10))),
+                     now=31.0)
+
+
+def test_tiered_random_ops_byte_accounting():
+    """Seeded randomized sweep across account/insert/lookup/resize/
+    pop/adopt: byte accounting stays exact and wear counters monotone
+    (the hypothesis twin lives in test_kvstore.py)."""
+    rng = np.random.default_rng(11)
+    s = mk_tiered(hot_tokens=50, cold_tokens=150, policy="lcs")
+    donor = []
+    last_written = 0.0
+    for i in range(500):
+        op = rng.integers(6)
+        key = f"k{rng.integers(25)}"
+        toks = int(rng.integers(1, 40))
+        now = float(i)
+        if op <= 2:
+            s.account(key, toks, toks, now)
+        elif op == 3:
+            s.lookup(key, toks, now)
+            s.insert(key, toks, now)
+        elif op == 4 and key in s.entries:
+            donor.append(s.pop_entry(key))
+        elif op == 5:
+            if donor and rng.random() < 0.5:
+                s.adopt(donor.pop(), now)
+            else:
+                frac = 0.5 + rng.random()
+                s.schedule_resize(s.capacity_bytes * frac, now,
+                                  ramp_s=5.0)
+        _tier_invariants(s)
+        assert s.stats.written_bytes >= last_written
+        last_written = s.stats.written_bytes
+
+
+# --------------------------------------------------------------------- #
+# engine parity + tiered TTFT
+# --------------------------------------------------------------------- #
+def _chat_requests(n=3000, rate=1.2, seed=5):
+    wl = ConversationWorkload(seed=seed)
+    arr = make_poisson_arrivals(np.full(8, rate), seed=seed + 1,
+                                max_requests=n)
+    return sample_many(wl, arr)
+
+
+def _run(eng, reqs, cache_tb):
+    rs = [copy.copy(r) for r in reqs]
+    eng.warm(rs[:1000])
+    return eng.run(rs[1000:], ci_fn=lambda t: 33.0, cache_tb=cache_tb)
+
+
+def test_flat_default_spec_engine_bit_reproduces_legacy():
+    m = SERVING_MODELS["llama3-70b"]
+    cm = CarbonModel()
+    reqs = _chat_requests()
+    legacy = make_cluster(m, cm, cache_tb=4.0, policy=POLICIES["lcs_chat"])
+    typed = make_cluster(m, cm, policy=POLICIES["lcs_chat"],
+                         storage="nvme_gen4:4tb", wear_aware=False)
+    a, b = _run(legacy, reqs, 4.0), _run(typed, reqs, 4.0)
+    assert np.array_equal(a.ttft, b.ttft)
+    assert a.energy_kwh == b.energy_kwh
+    assert a.carbon_g == b.carbon_g
+    assert legacy.stores[0].stats == typed.stores[0].stats
+
+
+def test_wear_aware_engine_raises_embodied_under_churn():
+    m = SERVING_MODELS["llama3-70b"]
+    cm = CarbonModel()
+    reqs = _chat_requests()
+    cal = make_cluster(m, cm, policy=POLICIES["lcs_chat"],
+                       storage="nvme_gen4:4tb", wear_aware=False)
+    wear = make_cluster(m, cm, policy=POLICIES["lcs_chat"],
+                        storage="nvme_gen4:4tb", wear_aware=True)
+    a, b = _run(cal, reqs, 4.0), _run(wear, reqs, 4.0)
+    assert b.embodied_cache_g > a.embodied_cache_g
+
+
+def test_tiered_engine_improves_ttft_not_hits():
+    m = SERVING_MODELS["llama3-70b"]
+    cm = CarbonModel()
+    from repro.workloads.documents import DocumentWorkload
+    wl = DocumentWorkload(seed=5, zipf_alpha=1.0)
+    arr = make_poisson_arrivals(np.full(8, 1.6), seed=6,
+                                max_requests=5000)
+    reqs = sample_many(wl, arr)
+    flat = make_cluster(m, cm, policy=POLICIES["lcs_doc"],
+                        storage="nvme_gen4:4tb")
+    tier = make_cluster(m, cm, policy=POLICIES["lcs_doc"],
+                        storage="dram:0.5tb+nvme_gen4:4tb")
+    a, b = _run(flat, reqs, 4.0), _run(tier, reqs, 4.5)
+    assert b.token_hit_rate == pytest.approx(a.token_hit_rate)
+    assert np.mean(b.ttft) < np.mean(a.ttft)   # mirror strips SSD loads
+    st = tier.stores[0]
+    assert st.tier_written[0] > 0
+
+
+def test_engine_applies_tier_resize_from_plan():
+    m = SERVING_MODELS["llama3-70b"]
+    cm = CarbonModel()
+    eng = make_cluster(m, cm, policy=POLICIES["lcs_chat"],
+                       storage="dram:0.5tb+nvme_gen4:4tb")
+    plan = eng.current_plan()
+    assert plan.storage == StorageSpec.parse("dram:0.5tb+nvme_gen4:4tb")
+    assert eng.apply(plan).is_noop
+    smaller = ResourcePlan.single(
+        None, n_replicas=1, storage="dram:0.25tb+nvme_gen4:2tb")
+    applied = eng.apply(smaller, now=100.0)
+    assert applied.transition.storage_changed
+    assert eng.stores[0].capacity_bytes == pytest.approx(2e12)
+    assert eng.stores[0].hot_capacity_bytes == pytest.approx(0.25e12)
+    # typed plans cannot land on an untyped engine
+    flat_eng = make_cluster(m, cm, cache_tb=4.0,
+                            policy=POLICIES["lcs_chat"])
+    with pytest.raises(ValueError, match="without a StorageSpec"):
+        flat_eng.apply(smaller)
+
+
+def test_partitioned_storage_rejected():
+    m = SERVING_MODELS["llama3-70b"]
+    cm = CarbonModel()
+    with pytest.raises(ValueError, match="shared-store"):
+        make_cluster(m, cm, policy=POLICIES["lcs_chat"],
+                     storage="nvme_gen4:4tb", partitioned=True,
+                     n_replicas=2)
+
+
+# --------------------------------------------------------------------- #
+# solver storage search
+# --------------------------------------------------------------------- #
+def synth_profile(sizes=(0, 1, 4, 8, 16), rates=(0.5, 1.0, 2.0)):
+    prof = Profile("m", "t", rates=list(rates), sizes=list(sizes))
+    for r in rates:
+        for s in sizes:
+            slo = min(1.0, 0.3 + 0.04 * s
+                      + 0.4 / max(r, 0.3) * (0.2 + 0.04 * s))
+            prof.cells[(r, s)] = ProfileCell(
+                rate=r, cache_tb=s, avg_ttft=1.0, p90_ttft=2.0,
+                avg_tpot=0.1, p90_tpot=0.15, slo_frac=slo,
+                hit_rate=min(0.06 * s, 0.9),
+                energy_per_req_kwh=2e-4 * (1.0 - 0.006 * s),
+                duration_per_req_s=1.0 / r, avg_power_w=1000.0,
+                avg_prompt_tokens=3000.0, avg_out_tokens=100.0,
+                write_bytes_per_req=4e8 * (1.0 - 0.05 * min(s, 10)))
+    return prof
+
+
+def test_solver_flat_default_specs_bit_reproduce_untyped():
+    prof = synth_profile()
+    cm = CarbonModel()
+    slo = SLO(2.5, 0.2, 0.6)
+    plans = [ResourcePlan.single(None, fleet=("a100",))]
+    sizes = [0, 4, 8, 16]
+    a = solve_cluster_schedule(prof, [1.0] * 6, [40.0] * 6, slo, cm,
+                               sizes_tb=sizes, plans=plans)
+    b = solve_cluster_schedule(prof, [1.0] * 6, [40.0] * 6, slo, cm,
+                               plans=plans,
+                               storage=[StorageSpec.flat(s)
+                                        for s in sizes],
+                               wear_aware=False)
+    assert a.sizes_tb == b.sizes_tb
+    assert a.objective_g == b.objective_g
+    assert [p.cache_tb for p in a.plans] == [p.cache_tb for p in b.plans]
+    assert all(p.storage is not None for p in b.plans)
+
+
+def test_solver_wear_awareness_changes_schedule():
+    """On a churn-heavy profile, QLC endurance pricing must push the
+    solver off the calendar baseline's choice."""
+    prof = synth_profile()
+    cm = CarbonModel()
+    slo = SLO(2.5, 0.2, 0.5)
+    plans = [ResourcePlan.single(None, fleet=("l40",))]
+    specs = [StorageSpec.flat(s, "qlc_ssd") for s in (0, 4, 8, 16)]
+    cal = solve_cluster_schedule(prof, [1.0] * 6, [40.0] * 6, slo, cm,
+                                 plans=plans, storage=specs,
+                                 wear_aware=False)
+    wear = solve_cluster_schedule(prof, [1.0] * 6, [40.0] * 6, slo, cm,
+                                  plans=plans, storage=specs,
+                                  wear_aware=True)
+    assert wear.sizes_tb != cal.sizes_tb
+    assert wear.objective_g != cal.objective_g
+
+
+def test_solver_storage_plans_carry_specs():
+    prof = synth_profile()
+    cm = CarbonModel()
+    slo = SLO(2.5, 0.2, 0.8)
+    plans = [ResourcePlan.single(None, fleet=("l40", "l40"))]
+    specs = [StorageSpec.tiered(1.0, 8.0), StorageSpec.tiered(0.0, 8.0)]
+    res = solve_cluster_schedule(prof, [2.0] * 4, [40.0] * 4, slo, cm,
+                                 plans=plans, storage=specs,
+                                 model=SERVING_MODELS["llama3-70b"])
+    assert all(p.storage in specs for p in res.plans)
+    assert res.sizes_tb == [p.storage.total_tb for p in res.plans]
+
+
+def test_solver_storage_rejects_bare_cache_pin():
+    prof = synth_profile()
+    cm = CarbonModel()
+    slo = SLO(2.5, 0.2, 0.5)
+    plans = [ResourcePlan.single(4.0, fleet=("l40",))]
+    with pytest.raises(ValueError, match="pins cache=4tb without tiers"):
+        solve_cluster_schedule(prof, [1.0] * 2, [40.0] * 2, slo, cm,
+                               plans=plans,
+                               storage=[StorageSpec.flat(8.0)])
+
+
+def test_solver_storage_rejects_disagg():
+    prof = synth_profile()
+    cm = CarbonModel()
+    slo = SLO(2.5, 0.2, 0.5)
+    plans = [ResourcePlan.disaggregated(None, prefill=("h100",),
+                                        decode=("a100",))]
+    with pytest.raises(ValueError, match="disaggregated"):
+        solve_cluster_schedule(prof, [1.0] * 2, [40.0] * 2, slo, cm,
+                               plans=plans,
+                               storage=[StorageSpec.flat(4.0)])
+
+
+# --------------------------------------------------------------------- #
+# trace validation (bugfix: bare KeyError on unknown grid)
+# --------------------------------------------------------------------- #
+def test_trace_validation():
+    from repro.workloads.traces import azure_rate_trace, ci_trace
+    with pytest.raises(ValueError, match="unknown grid 'XX'.*CISO"):
+        ci_trace("XX")
+    with pytest.raises(ValueError, match="days"):
+        ci_trace("FR", days=0)
+    with pytest.raises(ValueError, match="peak_rate"):
+        azure_rate_trace(0.0)
+    with pytest.raises(ValueError, match="days"):
+        azure_rate_trace(1.0, days=0)

@@ -15,7 +15,6 @@ Exit code 0 on success, 1 with a per-problem report otherwise.
 from __future__ import annotations
 
 import re
-import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
