@@ -40,6 +40,7 @@ MODULES = [
     "disagg",
     "transitions",
     "storage_tiers",
+    "prefix_sharing",
     "roofline_report",
 ]
 

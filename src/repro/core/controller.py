@@ -201,7 +201,7 @@ class GreenCacheController:
                  min_dwell_hours: int = 1,
                  transition_aware_solver: bool = True,
                  storage=None, wear_aware: bool = True,
-                 admission=None):
+                 admission=None, prefix_caching: bool = False):
         self.model = model
         self.profile = profile
         self.carbon = carbon
@@ -231,6 +231,19 @@ class GreenCacheController:
         self.storage_choices = storage
         self.wear_aware = wear_aware
         self.admission = admission
+        # prefix caching: run_day builds a RadixKVStore, so structured
+        # workloads (prefix=True factories) get longest-prefix partial
+        # hits; legacy streams behave bit-identically to the flat store.
+        # Hand the controller a profile measured with
+        # run_profiler(prefix_aware=True) so sizing matches serving.
+        self.prefix_caching = bool(prefix_caching)
+        if self.prefix_caching and storage is not None:
+            raise ValueError("prefix_caching does not combine with the "
+                             "typed-storage search (radix is single-tier "
+                             "for now)")
+        if self.prefix_caching and engine == "legacy":
+            raise ValueError("engine='legacy' does not support "
+                             "prefix_caching")
         self.sizes = list(sizes_tb) if sizes_tb is not None else \
             list(profile.sizes)
         self.max_requests_per_hour = max_requests_per_hour
@@ -386,8 +399,13 @@ class GreenCacheController:
                 warm_spec, POLICIES[self.policy],
                 self.model.kv_bytes_per_token, admission=self.admission)
         else:
-            store = KVStore(max_tb * 1e12, POLICIES[self.policy],
-                            self.model.kv_bytes_per_token)
+            if self.prefix_caching:
+                from repro.core.radix import RadixKVStore
+                store = RadixKVStore(max_tb * 1e12, POLICIES[self.policy],
+                                     self.model.kv_bytes_per_token)
+            else:
+                store = KVStore(max_tb * 1e12, POLICIES[self.policy],
+                                self.model.kv_bytes_per_token)
             store.spec = warm_spec
             store.admission = self.admission
         # fixed modes (and the pre-solve warm window) run the

@@ -15,12 +15,21 @@ the simulation mode leaves it None and accounts bytes analytically.
 """
 from __future__ import annotations
 
+import enum
+import warnings
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import (Any, Callable, Dict, List, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
 
 import numpy as np
 
 TB = 1e12
+
+#: structured prefix segments: ``((block_key, num_tokens), ...)`` covering a
+#: request's reusable context, outermost (system prompt) first. Prefix-aware
+#: stores (``repro.core.radix.RadixKVStore``) match/extend these against a
+#: radix tree; whole-context stores ignore them and key on ``key`` alone.
+PrefixBlocks = Sequence[Tuple[str, int]]
 
 
 @dataclass
@@ -58,6 +67,10 @@ class KVStoreStats:
     # inserts refused by a write-aware admission policy (expected reuse
     # does not amortize the write energy + wear)
     admit_rejects: int = 0
+    # prefix-aware stores only: hits whose matched prefix was shorter than
+    # the request's block path (the unmatched suffix was re-prefetched).
+    # Every partial hit is also counted in ``hits``.
+    partial_hits: int = 0
 
     @property
     def token_hit_rate(self) -> float:
@@ -67,6 +80,115 @@ class KVStoreStats:
     @property
     def request_hit_rate(self) -> float:
         return self.hits / self.lookups if self.lookups else 0.0
+
+
+class HitKind(enum.Enum):
+    """What ``CacheStore.account`` did with the request's context."""
+    HIT = "hit"                  # whole context served from cache
+    PARTIAL = "partial"          # prefix matched, unmatched suffix inserted
+    MISS = "miss"                # nothing matched; new entry/suffix inserted
+    TOO_LARGE = "too_large"      # miss and the context cannot fit at all
+    REJECTED = "rejected"        # miss and the admission gate refused it
+
+
+class AccountResult(int):
+    """``CacheStore.account`` return value.
+
+    Subclasses ``int`` with the legacy sentinel encoding — reused tokens
+    (>= 0) on a hit, -1 miss-inserted, -2 no-fit, -3 admission-reject — so
+    every existing comparison, ``np.fromiter(..., np.int64)`` conversion and
+    batched-stats decode keeps working unchanged, while carrying an explicit
+    :class:`HitKind` plus the matched-token count (which the int encoding
+    cannot express for partial prefix hits, where tokens were matched *and*
+    a suffix was inserted)."""
+
+    kind: HitKind
+    matched_tokens: int
+
+    def __new__(cls, code: int, kind: HitKind,
+                matched_tokens: int = 0) -> "AccountResult":
+        self = super().__new__(cls, code)
+        self.kind = kind
+        self.matched_tokens = matched_tokens
+        return self
+
+    @property
+    def is_hit(self) -> bool:
+        return self.kind is HitKind.HIT or self.kind is HitKind.PARTIAL
+
+    def __repr__(self) -> str:
+        return (f"AccountResult({int(self)}, HitKind.{self.kind.name}, "
+                f"matched_tokens={self.matched_tokens})")
+
+
+# miss results carry no per-request payload: share the singletons
+MISS_INSERTED = AccountResult(-1, HitKind.MISS)
+MISS_TOO_LARGE = AccountResult(-2, HitKind.TOO_LARGE)
+MISS_REJECTED = AccountResult(-3, HitKind.REJECTED)
+
+
+@runtime_checkable
+class CacheStore(Protocol):
+    """The store contract the serving engines program against.
+
+    ``KVStore`` (flat whole-context), ``repro.core.storage.TieredKVStore``
+    (DRAM mirror over bulk) and ``repro.core.radix.RadixKVStore`` (prefix
+    tree) all implement it. Engines must not ``isinstance``/attribute-sniff
+    concrete store classes: behaviour differences are exposed as protocol
+    members (``is_tiered``, ``prefix_aware``, ``spec``,
+    ``drain_io_energy_j``, ``owner_key``, ``clone_empty``)."""
+
+    capacity_bytes: float
+    used_bytes: float
+    kv_bytes_per_token: float
+    entries: Dict[str, CacheEntry]
+    stats: KVStoreStats
+    admission: Any          # optional WriteAwareAdmission gate (None = all)
+    spec: Any               # optional StorageSpec backing the store
+
+    def lookup(self, key: str, context_tokens: int, now: float
+               ) -> Optional[CacheEntry]: ...
+
+    def reusable_tokens(self, key: str, context_tokens: int) -> int: ...
+
+    def insert(self, key: str, num_tokens: int, now: float, *,
+               turn: int = 1, payload: Any = None,
+               size_bytes: Optional[float] = None) -> Optional[CacheEntry]: ...
+
+    def account(self, key: str, context_tokens: int, prompt_tokens: int,
+                now: float, turn: int = 1, collect_stats: bool = True,
+                blocks: Optional[PrefixBlocks] = None) -> AccountResult: ...
+
+    def pop_entry(self, key: str) -> CacheEntry: ...
+
+    def adopt(self, entry: CacheEntry, now: float) -> bool: ...
+
+    def schedule_resize(self, capacity_bytes: float, now: float,
+                        ramp_s: float, steps: int = 4) -> None: ...
+
+    def resize(self, capacity_bytes: float, now: float) -> None: ...
+
+    def enable_vector_evict(self) -> bool: ...
+
+    def owner_key(self, key: str) -> str: ...
+
+    def clone_empty(self, capacity_bytes: float) -> "CacheStore": ...
+
+    def drain_io_energy_j(self) -> float: ...
+
+    @property
+    def is_tiered(self) -> bool: ...
+
+    @property
+    def prefix_aware(self) -> bool: ...
+
+    @property
+    def used_tb(self) -> float: ...
+
+    @property
+    def capacity_tb(self) -> float: ...
+
+    def __len__(self) -> int: ...
 
 
 class _ColumnIndex:
@@ -319,7 +441,8 @@ class KVStore:
 
     # ------------------------------------------------------------------ #
     def account(self, key: str, context_tokens: int, prompt_tokens: int,
-                now: float, turn: int = 1, collect_stats: bool = True) -> int:
+                now: float, turn: int = 1, collect_stats: bool = True,
+                blocks: Optional[PrefixBlocks] = None) -> AccountResult:
         """Fused ``lookup`` + ``insert`` for the simulation hot path: one
         dict probe per request instead of two calls. State transitions are
         identical to ``lookup(key, context_tokens, now)`` followed by
@@ -327,12 +450,18 @@ class KVStore:
         triggered by the grow scores entries post-lookup/pre-grow, exactly
         as in the two-call sequence.
 
-        Returns the reused token count (>= 0) on hit, -1 on miss with a new
+        Returns an :class:`AccountResult` — int-compatible with the legacy
+        sentinel encoding (reused tokens >= 0 on hit, -1 on miss with a new
         entry inserted, -2 on miss where the entry could not fit, -3 on a
-        miss whose insert the write-aware admission policy refused. With
+        miss whose insert the write-aware admission policy refused) plus an
+        explicit :class:`HitKind` and matched-token count. With
         ``collect_stats=False`` the per-request ``stats`` updates are
         skipped so a batch caller can apply them in one shot from the
-        encoded return values (see ``ClusterEngine._account``)."""
+        encoded return values (see ``ClusterEngine._account``).
+
+        ``blocks`` (structured prefix segments) is accepted for protocol
+        uniformity and ignored: a whole-context store keys on ``key``
+        alone. ``RadixKVStore`` overrides this to prefix-match them."""
         if self._resize_steps and now >= self._resize_steps[0][0]:
             self._apply_due_resizes(now)
         ix = self._ix
@@ -353,33 +482,33 @@ class KVStore:
             if ix is not None:
                 ix.write_hit(e)     # hit updates visible to any eviction sort
             if size > cap:
-                return reused
+                return AccountResult(reused, HitKind.HIT, reused)
             delta = size - e.size_bytes
             if delta > 0:
                 if self.used_bytes + delta > cap:   # _make_room early-exit,
                     self._make_room(delta, now, protect=key)   # inlined
                     if self.used_bytes + delta > cap + 1e-6:
-                        return reused
+                        return AccountResult(reused, HitKind.HIT, reused)
                 self.used_bytes += delta
                 self.stats.written_bytes += delta
             self._grow_entry(e, prompt_tokens, size, now, turn)
             if ix is not None:
                 ix.write_grow(e)
-            return reused
+            return AccountResult(reused, HitKind.HIT, reused)
         if collect_stats:
             st = self.stats
             st.lookups += 1
             st.lookup_tokens += context_tokens
         if size > cap:
-            return -2
+            return MISS_TOO_LARGE
         if self.admission is not None \
                 and not self.admission.admit(self, size, turn=turn):
             self.stats.admit_rejects += 1
-            return -3
+            return MISS_REJECTED
         if size > 0 and self.used_bytes + size > cap:
             self._make_room(size, now, protect=key)
             if self.used_bytes + size > cap + 1e-6:
-                return -2
+                return MISS_TOO_LARGE
         e = CacheEntry(key=key, num_tokens=prompt_tokens, size_bytes=size,
                        created_at=now, last_access=now, turn=turn)
         self.entries[key] = e
@@ -389,7 +518,22 @@ class KVStore:
             ix.add(e)
         if collect_stats:
             self.stats.insertions += 1
-        return -1
+        return MISS_INSERTED
+
+    def account_legacy(self, key: str, context_tokens: int,
+                       prompt_tokens: int, now: float, turn: int = 1,
+                       collect_stats: bool = True) -> int:
+        """Deprecated pre-``HitKind`` spelling returning the bare sentinel
+        int. ``account`` itself now returns an int-compatible
+        :class:`AccountResult`, so callers can (and should) just call it
+        directly — this shim exists only for out-of-tree code pinned to the
+        plain-``int`` annotation."""
+        warnings.warn(
+            "KVStore.account_legacy() is deprecated; account() returns an "
+            "int-compatible AccountResult (HitKind + matched tokens)",
+            DeprecationWarning, stacklevel=2)
+        return int(self.account(key, context_tokens, prompt_tokens, now,
+                                turn, collect_stats))
 
     @staticmethod
     def _grow_entry(e: CacheEntry, prompt_tokens: int, size: float,
@@ -515,6 +659,40 @@ class KVStore:
                     if self.used_bytes <= self.capacity_bytes:
                         break
                     self._evict(v.key)
+
+    # --- CacheStore behaviour probes ---------------------------------- #
+    # (what the engines used to isinstance/attribute-sniff: tiered spec
+    # detection, prefix awareness, tier-I/O metering, partition cloning)
+
+    @property
+    def is_tiered(self) -> bool:
+        """True when the store runs a hot/cold tier pair (TieredKVStore)."""
+        return False
+
+    @property
+    def prefix_aware(self) -> bool:
+        """True when ``account`` prefix-matches structured ``blocks``
+        (RadixKVStore); engines then thread per-request prefix segments."""
+        return False
+
+    def drain_io_energy_j(self) -> float:
+        """Storage I/O energy accumulated since the last drain (J). The
+        flat store models no tier I/O; ``TieredKVStore`` meters it."""
+        return 0.0
+
+    def owner_key(self, key: str) -> str:
+        """The routing identity of an entry key — what the consistent-hash
+        ring hashes when deciding which partition owns the entry. Flat
+        stores route on the whole key; ``RadixKVStore`` routes every node
+        of a prefix tree on its root block so subtrees migrate whole."""
+        return key
+
+    def clone_empty(self, capacity_bytes: float) -> "KVStore":
+        """An empty store of the same class/policy/geometry — the ring
+        rebalance uses this to materialize added partitions."""
+        st = type(self)(capacity_bytes, self.policy, self.kv_bytes_per_token)
+        st.admission = self.admission
+        return st
 
     # ------------------------------------------------------------------ #
     @property

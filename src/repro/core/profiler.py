@@ -51,6 +51,15 @@ class ProfileCell:
     # against endurance (profiles recorded before the field default to 0:
     # no wear prediction, calendar lifetimes)
     write_bytes_per_req: float = 0.0
+    # mean per-request fraction of *prompt* tokens served from cache
+    # (reused / prompt).  Under a prefix-aware store this is the
+    # prefix-aware hit-rate curve: partial matches contribute their
+    # matched fraction instead of rounding down to 0, so the curve rises
+    # smoothly with cache size where whole-context keying steps.  It is
+    # exactly the mean prefill-shortening factor (TTFT and prefill energy
+    # scale with 1 - matched_token_frac).  ``hit_rate`` stays the
+    # context-token-weighted ledger ratio both store kinds share.
+    matched_token_frac: float = 0.0
 
     def __post_init__(self):
         if self.slo_ttft_frac is None:
@@ -106,7 +115,8 @@ def run_profiler(model: ServingModel, task: str, workload_factory: Callable,
                  meas_seconds: float = 1200.0, ramp_seconds: float = 420.0,
                  warmup_prompts: int = 30000,
                  policy: str = "lcs", seed: int = 0,
-                 replica_type: Optional[str] = None) -> Profile:
+                 replica_type: Optional[str] = None,
+                 prefix_aware: bool = False) -> Profile:
     """Profile each (rate, size) cell on a warmed cache (paper: profiling is
     collected after warm-up with the LCS policy; distinct prompt sets for
     profiling vs evaluation — we use a distinct seed). The measurement is a
@@ -117,7 +127,13 @@ def run_profiler(model: ServingModel, task: str, workload_factory: Callable,
     serving model's compute throughput is rescaled by the type's
     ``perf_scale`` and energy is metered against the type's power specs.
     Default (None) is the reference platform — the profile the fleet
-    solver's capacity-normalized interpolation expects."""
+    solver's capacity-normalized interpolation expects.
+
+    ``prefix_aware=True`` profiles on a ``RadixKVStore`` so structured
+    workloads (``prefix=True`` factories) get longest-prefix partial
+    hits; every cell's ``matched_token_frac`` then traces the
+    prefix-aware hit-rate curve the solver sizes against.  Legacy
+    workloads measure identically to the flat store (exact-key parity)."""
     from repro.core.carbon import get_replica_type
     from repro.workloads import sample_many
     from repro.workloads.traces import make_poisson_arrivals
@@ -132,8 +148,12 @@ def run_profiler(model: ServingModel, task: str, workload_factory: Callable,
     for size in sizes_tb:
         for rate in rates:
             wl = workload_factory(seed + 17)
-            store = KVStore(size * 1e12, POLICIES[policy],
-                            model.kv_bytes_per_token)
+            store_cls = KVStore
+            if prefix_aware:
+                from repro.core.radix import RadixKVStore
+                store_cls = RadixKVStore
+            store = store_cls(size * 1e12, POLICIES[policy],
+                              model.kv_bytes_per_token)
             # vectorized single-replica cluster: per-server cells, ~5-10x
             # faster than the seed per-request loop
             eng = ClusterEngine(model, store, carbon)
@@ -169,7 +189,10 @@ def run_profiler(model: ServingModel, task: str, workload_factory: Callable,
                 avg_power_w=res.energy_kwh * 3.6e6 / max(res.duration_s,
                                                          1e-9),
                 write_bytes_per_req=(store.stats.written_bytes - w0)
-                / max(res.num_requests, 1))
+                / max(res.num_requests, 1),
+                matched_token_frac=float(np.mean(
+                    [r.reused_tokens / max(r.prompt_tokens, 1)
+                     for r in meas])) if meas else 0.0)
             prof.cells[(rate, size)] = cell
     return prof
 

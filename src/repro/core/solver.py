@@ -37,6 +37,17 @@ per-hour option set (the knapsack classes stay one-choice-per-hour);
   the schedule exhibits hysteresis instead of thrashing between plans
   that are near-tied hour to hour; zero-cost configs fall back to the
   plain solve bit-exactly.
+
+Prefix-aware caching needs no new solver formula: profiles measured on a
+``RadixKVStore`` (``run_profiler(prefix_aware=True)``) already fold
+partial hits into every cell — ``hit_rate`` is the context-token-weighted
+ledger ratio (Σ matched / Σ looked-up tokens), which is exactly the
+quantity ``_storage_cell_adjust`` converts to hit bytes and saved compute
+seconds, and TTFT/energy/``write_bytes_per_req`` were measured under
+suffix-only re-prefill.  The solver therefore sizes against the smooth
+prefix-aware hit-rate curve (``ProfileCell.matched_token_frac`` traces
+the per-request prefill-shortening factor) the moment it is handed such
+a profile, and picks smaller caches where dedup makes small caches good.
 """
 from __future__ import annotations
 

@@ -565,14 +565,25 @@ class TieredKVStore(KVStore):
     def read_gbps_for(self, tier: int) -> float:
         return self.spec.read_gbps(0 if tier <= 0 else 1)
 
+    # ---- CacheStore behaviour probes ---- #
+    @property
+    def is_tiered(self) -> bool:
+        return True
+
+    def clone_empty(self, capacity_bytes: float) -> KVStore:
+        raise NotImplementedError(
+            "TieredKVStore is shared-only: ring rebalance never clones it")
+
     # ---- overridden KVStore surface ---- #
     def account(self, key: str, context_tokens: int, prompt_tokens: int,
-                now: float, turn: int = 1, collect_stats: bool = True
-                ) -> int:
+                now: float, turn: int = 1, collect_stats: bool = True,
+                blocks=None):
+        # ``blocks`` pass through to the (whole-context) base path, which
+        # ignores them — a tiered radix store is a future combination
         e0 = self.entries.get(key)
         pre = (e0, e0.size_bytes, e0.tier) if e0 is not None else None
         ret = super().account(key, context_tokens, prompt_tokens, now,
-                              turn, collect_stats)
+                              turn, collect_stats, blocks)
         # ret >= 0 is the only true hit (a pre-captured entry can still
         # be evicted by a due gradual-resize step inside the base call,
         # making the re-insert a fresh cold write, not a grow)

@@ -105,6 +105,7 @@ def run_simulation(args):
     from repro.core.controller import GreenCacheController
     from repro.core.profiler import run_profiler
     from repro.serving.perfmodel import SERVING_MODELS
+    from repro.workloads.agents import AgentLoopWorkload
     from repro.workloads.conversations import ConversationWorkload
     from repro.workloads.documents import DocumentWorkload
     from repro.workloads.traces import azure_rate_trace, ci_trace
@@ -117,12 +118,19 @@ def run_simulation(args):
     # a disaggregated plan's decode pool adds token throughput, not
     # request admission (for fused plans prefill == the whole fleet)
     scale = max(p.prefill.capacity for p in plans)
+    prefix = args.prefix_caching or args.task == "agent"
     if args.task == "conversation":
-        wf = lambda s: ConversationWorkload(seed=s, load_scale=scale)
+        wf = lambda s: ConversationWorkload(seed=s, load_scale=scale,
+                                            prefix=prefix)
+        policy = "lcs_chat"
+    elif args.task == "agent":
+        # branching agent loops are always structured-prefix (the
+        # whole-context key is derived from the blocks)
+        wf = lambda s: AgentLoopWorkload(seed=s, load_scale=scale)
         policy = "lcs_chat"
     else:
         wf = lambda s: DocumentWorkload(seed=s, zipf_alpha=args.zipf,
-                                        load_scale=scale)
+                                        load_scale=scale, prefix=prefix)
         policy = "lcs_doc"
     sizes = [0, 1, 2, 4, 8, 12, 16] if model.max_cache_tb >= 16 else \
         [0, 1, 2, 4, 6, 8]
@@ -131,7 +139,8 @@ def run_simulation(args):
     print("profiling ...")
     prof = run_profiler(model, args.task, lambda s: wf(s), carbon,
                         rates=rates, sizes_tb=sizes,
-                        warmup_prompts=args.warmup)
+                        warmup_prompts=args.warmup,
+                        prefix_aware=prefix)
     rate_trace = azure_rate_trace(rates[-1] * scale, seed=3)
     cis = ci_trace(args.grid, seed=4)
     # --balance-eps is fully resolved into the candidate plans by
@@ -152,7 +161,8 @@ def run_simulation(args):
                                min_dwell_hours=args.min_dwell,
                                storage=args.storage,
                                wear_aware=not args.calendar_lifetime,
-                               admission=admission)
+                               admission=admission,
+                               prefix_caching=prefix)
     res = ctl.run_day(wf, rate_trace, cis)
     many = len(plans) > 1
     clustered = scale > 1 or plans[0].n_replicas > 1
@@ -211,7 +221,14 @@ def main(argv=None):
     ap.add_argument("--model", default="llama3-70b",
                     choices=["llama3-70b", "llama3-8b"])
     ap.add_argument("--task", default="conversation",
-                    choices=["conversation", "document"])
+                    choices=["conversation", "document", "agent"])
+    ap.add_argument("--prefix-caching", action="store_true",
+                    help="radix prefix-tree KV sharing: workloads emit "
+                         "structured prefix segments (system prompt x "
+                         "document x turn history), partial hits shorten "
+                         "prefill proportionally, and the store/profiler/"
+                         "controller run the RadixKVStore (--task agent "
+                         "implies this)")
     ap.add_argument("--zipf", type=float, default=0.4)
     ap.add_argument("--grid", default="FR")
     ap.add_argument("--mode", default="greencache",

@@ -72,9 +72,10 @@ import numpy as np
 
 from repro.core.carbon import (CarbonModel, get_replica_type,
                                kv_migration_energy_kwh)
-from repro.core.kvstore import KVStore
+from repro.core.kvstore import CacheStore, KVStore
 from repro.core.plan import (UNSET_EPS, PlanTransition, ResourcePlan,
                              TransitionConfig)
+from repro.core.radix import RadixKVStore
 from repro.core.storage import StorageSpec, TieredKVStore
 from repro.serving.engine import SimResult
 from repro.serving.perfmodel import ServingModel
@@ -162,13 +163,16 @@ class AppliedTransition:
 class ClusterEngine:
     """N-replica prefill cluster + analytically coupled decode.
 
-    ``stores``: a single ``KVStore`` (shared across replicas) or a list of
-    per-replica stores (``len == n_replicas``; router should be
-    ``cache_affinity`` for the partitioned mode to retain hits).
+    ``stores``: a single ``CacheStore`` (shared across replicas) or a list
+    of per-replica stores (``len == n_replicas``; router should be
+    ``cache_affinity`` for the partitioned mode to retain hits).  Any
+    ``CacheStore`` implementation works — flat ``KVStore``, tiered, or
+    prefix-aware ``RadixKVStore``; behaviour is detected through the
+    protocol (``is_tiered``/``prefix_aware``), never by class.
     """
 
     def __init__(self, model: ServingModel,
-                 stores: Union[KVStore, Sequence[KVStore]],
+                 stores: Union[CacheStore, Sequence[CacheStore]],
                  carbon: CarbonModel, *,
                  n_replicas: int = 1, router: str = "single",
                  balance_eps: Optional[float] = 0.15,
@@ -187,11 +191,13 @@ class ClusterEngine:
             types = [str(t) for t in types]
             for t in types:
                 get_replica_type(t)
-            if isinstance(stores, KVStore) and n_replicas != 1 \
+            if not isinstance(stores, (list, tuple)) and n_replicas != 1 \
                     and n_replicas != len(types):
                 raise ValueError("n_replicas must match len(types)")
             n_replicas = len(types)
-        if isinstance(stores, KVStore):
+        if not isinstance(stores, (list, tuple)):
+            # a single CacheStore (any implementation) is shared across
+            # replicas; a list/tuple is one partition per replica
             self.shared = True
             self.stores = [stores]
             if int(n_replicas) < 1:
@@ -211,11 +217,15 @@ class ClusterEngine:
         # typed storage: the store(s) may carry a StorageSpec (set by
         # make_cluster / the TieredKVStore constructor).  storage=None is
         # the legacy flat-SSD model — every new code path below is gated
-        # on it, so the seed trajectories stay bit-identical.
+        # on it, so the seed trajectories stay bit-identical.  Behaviour
+        # detection goes through the CacheStore protocol (``spec``,
+        # ``is_tiered``, ``prefix_aware``), never concrete store classes.
         self.storage: Optional[StorageSpec] = next(
-            (st.spec for st in self.stores
-             if getattr(st, "spec", None) is not None), None)
-        self._tiered = isinstance(self.stores[0], TieredKVStore)
+            (st.spec for st in self.stores if st.spec is not None), None)
+        self._tiered = self.stores[0].is_tiered
+        # prefix-aware store(s): the account path threads each request's
+        # structured prefix segments, so partial hits shorten prefill
+        self._prefix = all(st.prefix_aware for st in self.stores)
         if self.storage is not None and not self.shared:
             raise ValueError("typed storage (StorageSpec) supports the "
                              "shared-store mode only")
@@ -255,13 +265,13 @@ class ClusterEngine:
         return self.n_replicas
 
     @property
-    def store(self) -> KVStore:
+    def store(self) -> CacheStore:
         """Shared-mode store (seed-engine compatibility accessor)."""
         if not self.shared:
             raise AttributeError("partitioned cluster has no single store")
         return self.stores[0]
 
-    def _store_for(self, key: str) -> KVStore:
+    def _store_for(self, key: str) -> CacheStore:
         if self.shared:
             return self.stores[0]
         return self.stores[self._ring.owner(key) if self._ring is not None
@@ -424,8 +434,9 @@ class ClusterEngine:
         per = total_cap / n_new
         new_ring = hash_ring(n_new) if self._ring is not None else None
         if n_new > n_old:
-            added = [KVStore(per, ref.policy, ref.kv_bytes_per_token)
-                     for _ in range(n_new - n_old)]
+            # clone through the protocol so a radix partition grows radix
+            # partitions (same policy/admission, empty tree)
+            added = [ref.clone_empty(per) for _ in range(n_new - n_old)]
             for st in added:
                 if ref._vector_policy is not None:
                     st.enable_vector_evict()
@@ -433,12 +444,15 @@ class ClusterEngine:
         else:
             new_stores = self.stores[:n_new]
         # collect moves against the *current* placement (the store index
-        # is the old owner) before any store shrinks
+        # is the old owner) before any store shrinks.  Ownership hashes
+        # ``owner_key`` — the prefix *root* for a radix store — so a
+        # shared subtree never straddles two partitions after a resize.
         moves = []                              # (old_k, new_k, key)
         for k, st in enumerate(self.stores):
             for key in st.entries:
-                nk = int(new_ring.owner(key)) if new_ring is not None \
-                    else _stable_hash(key) % n_new
+                ok = st.owner_key(key)
+                nk = int(new_ring.owner(ok)) if new_ring is not None \
+                    else _stable_hash(ok) % n_new
                 if nk != k:
                     moves.append((k, nk, key))
         # capacity growth is free and must land before adoption (a ring
@@ -617,17 +631,21 @@ class ClusterEngine:
     # ------------------------------------------------------------------ #
     def warm(self, requests: Sequence):
         """Populate the cache(s) without simulating timing; partitioned mode
-        routes each context to its owning replica's store."""
+        routes each context to its owning replica's store (by prefix root
+        when structured, matching ``cache_affinity``)."""
+        prefix = self._prefix
         if self.shared:
             acct = self.stores[0].account
             for r in requests:
                 acct(r.context_key, r.context_tokens, r.prompt_tokens,
-                     r.arrival, r.turn)
+                     r.arrival, r.turn,
+                     blocks=r.prefix_segments if prefix else None)
         else:
             for r in requests:
-                self._store_for(r.context_key).account(
+                self._store_for(r.route_key).account(
                     r.context_key, r.context_tokens, r.prompt_tokens,
-                    r.arrival, r.turn)
+                    r.arrival, r.turn,
+                    blocks=r.prefix_segments if prefix else None)
 
     # ------------------------------------------------------------------ #
     def run(self, requests: Sequence, *,
@@ -666,6 +684,14 @@ class ClusterEngine:
             if self._tiered:
                 reused, kv_load_s = self._account_tiered(
                     requests, assign, arrival, ctx, prompt)
+            elif self._prefix:
+                # partial hits: reused = longest matched prefix, so the
+                # uncached (re-prefilled) fraction — and with it TTFT and
+                # prefill energy — scales with unmatched tokens
+                reused = self._account_prefix(requests, assign, arrival,
+                                              ctx, prompt)
+                kv_load_s = reused * m.kv_bytes_per_token \
+                    / (self._kv_gbps * 1e9)
             else:
                 reused = self._account(requests, assign, arrival, ctx,
                                        prompt)
@@ -889,12 +915,15 @@ class ClusterEngine:
             assign = (np.arange(n, dtype=np.int64) + self._rr_next) % K
             self._rr_next = (self._rr_next + n) % K
             return assign
-        # cache_affinity: hash each context key onto the ring, then apply
-        # bounded-load spill (consistent hashing with bounded loads): no
-        # replica may exceed (1 + eps) of its fair share of the window;
-        # overloaded arrivals spill to the next replica, trading a little
-        # affinity for a hard balance guarantee
-        hashes = np.fromiter((_stable_hash(r.context_key) for r in requests),
+        # cache_affinity: hash each route key (the prefix *root* block for
+        # structured requests, so every context sharing a system prompt
+        # lands on the same replica's tree; the whole context key
+        # otherwise) onto the ring, then apply bounded-load spill
+        # (consistent hashing with bounded loads): no replica may exceed
+        # (1 + eps) of its fair share of the window; overloaded arrivals
+        # spill to the next replica, trading a little affinity for a hard
+        # balance guarantee
+        hashes = np.fromiter((_stable_hash(r.route_key) for r in requests),
                              np.uint64, count=n)
         preferred = self._ring.owners_of(hashes)
         eps = self.balance_eps
@@ -952,6 +981,35 @@ class ClusterEngine:
             s.insertions += int((ret[mask] == -1).sum())
         return reused
 
+    def _account_prefix(self, requests: Sequence, assign: np.ndarray,
+                        arrival: np.ndarray, ctx: np.ndarray,
+                        prompt: np.ndarray) -> np.ndarray:
+        """Ordered accounting pass threading structured prefix segments:
+        the radix store matches/extends each request's block path, and the
+        returned reused counts are the *matched-prefix* tokens (partial
+        hits included). Per-request stats stay inside the store — a
+        partial hit both hits and inserts, which the batch decode of
+        ``_account`` (built on the flat ``ret == -1`` <=> inserted
+        equivalence) cannot reconstruct."""
+        n = len(requests)
+        al, cl, pl = arrival.tolist(), ctx.tolist(), prompt.tolist()
+        if self.shared:
+            acct = self.stores[0].account
+            ret = np.fromiter(
+                (acct(r.context_key, c, p, a, r.turn, True,
+                      r.prefix_segments)
+                 for r, a, c, p in zip(requests, al, cl, pl)),
+                np.int64, count=n)
+        else:
+            stores = self.stores
+            ret = np.fromiter(
+                (stores[k].account(r.context_key, c, p, a, r.turn, True,
+                                   r.prefix_segments)
+                 for r, k, a, c, p in zip(requests, assign.tolist(),
+                                          al, cl, pl)),
+                np.int64, count=n)
+        return np.maximum(ret, 0)
+
     def _run_sequential(self, requests: Sequence, arrival: np.ndarray,
                         prompt: np.ndarray):
         """least_loaded: the routing decision needs the evolving backlog, so
@@ -988,7 +1046,9 @@ class ClusterEngine:
                 k = min(range(K), key=lambda j: free[j])
             st = self.stores[0] if self.shared else self.stores[k]
             ru = max(st.account(r.context_key, r.context_tokens,
-                                int(prompt[i]), r.arrival, r.turn), 0)
+                                int(prompt[i]), r.arrival, r.turn,
+                                blocks=r.prefix_segments
+                                if self._prefix else None), 0)
             un = int(prompt[i]) - ru
             if tiered:
                 kv_load[i] = ru * kv_per_tier[1 if st.last_hit_tier > 0
@@ -1260,7 +1320,8 @@ def make_cluster(model: ServingModel, carbon: CarbonModel, *,
                  transitions: Optional[TransitionConfig] = None,
                  storage: Union[StorageSpec, str, None] = None,
                  wear_aware: bool = True,
-                 admission=None) -> ClusterEngine:
+                 admission=None,
+                 prefix_caching: bool = False) -> ClusterEngine:
     """Convenience constructor: builds the store(s) for a cluster-total
     ``cache_tb`` allocation (partitioned mode splits it evenly).
 
@@ -1280,7 +1341,13 @@ def make_cluster(model: ServingModel, carbon: CarbonModel, *,
     for one — and the engine prices energy/embodied from the devices,
     with the wear clock (``wear_aware=False`` keeps calendar lifetimes —
     the flat-default parity configuration).  ``admission`` installs a
-    ``repro.core.storage.WriteAwareAdmission`` gate on the store(s)."""
+    ``repro.core.storage.WriteAwareAdmission`` gate on the store(s).
+
+    ``prefix_caching=True`` builds ``RadixKVStore`` partitions instead of
+    flat ``KVStore``s: requests carrying ``prefix_blocks`` get
+    longest-prefix partial hits and cache-affinity routing by prefix
+    root; legacy whole-context requests behave bit-identically to the
+    flat store.  Not combinable with tiered storage (yet)."""
     if isinstance(plan, str):
         plan = ResourcePlan.parse(plan)
     if isinstance(storage, str):
@@ -1309,16 +1376,23 @@ def make_cluster(model: ServingModel, carbon: CarbonModel, *,
     if storage is not None and partitioned:
         raise ValueError("typed storage supports the shared-store mode "
                          "only")
+    if prefix_caching and storage is not None and storage.is_tiered:
+        raise ValueError("prefix_caching does not combine with a tiered "
+                         "store (radix is single-tier for now)")
+    store_cls = RadixKVStore if prefix_caching else KVStore
     if partitioned and n_replicas > 1:
         per = cache_tb * 1e12 / n_replicas
         stores: Union[KVStore, List[KVStore]] = [
-            KVStore(per, policy, model.kv_bytes_per_token)
+            store_cls(per, policy, model.kv_bytes_per_token)
             for _ in range(n_replicas)]
+        for st in stores:
+            st.admission = admission
     elif storage is not None and storage.is_tiered:
         stores = TieredKVStore(storage, policy, model.kv_bytes_per_token,
                                admission=admission)
     else:
-        stores = KVStore(cache_tb * 1e12, policy, model.kv_bytes_per_token)
+        stores = store_cls(cache_tb * 1e12, policy,
+                           model.kv_bytes_per_token)
         if storage is not None:
             stores.spec = storage
         stores.admission = admission

@@ -2,6 +2,7 @@ from typing import List, Sequence
 
 from repro.workloads.traces import (azure_rate_trace, ci_trace,
                                     make_poisson_arrivals)
+from repro.workloads.agents import AgentLoopWorkload
 from repro.workloads.conversations import ConversationWorkload
 from repro.workloads.documents import DocumentWorkload
 from repro.workloads.request import Request
@@ -19,5 +20,5 @@ def sample_many(workload, arrivals: Sequence[float]) -> List[Request]:
 
 
 __all__ = ["azure_rate_trace", "ci_trace", "make_poisson_arrivals",
-           "ConversationWorkload", "DocumentWorkload", "Request",
-           "sample_many"]
+           "AgentLoopWorkload", "ConversationWorkload", "DocumentWorkload",
+           "Request", "sample_many"]

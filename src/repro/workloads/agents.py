@@ -1,0 +1,144 @@
+"""Branching agent-loop workload (always structured-prefix).
+
+Episodes model tool-using agents: every request in an episode shares the
+[system prompt][task description] root, and each step appends a tool-call
+block to some *frontier* path of the episode's tree — with probability
+``branch_prob`` the step forks from an interior point instead of extending
+the deepest leaf (retries, parallel tool fan-out, tree search), so one
+episode's KV forms a genuine branching radix tree. Whole-context keying
+gets almost no reuse here (every node's full path is unique and visited
+once); a prefix tree reuses the shared trunk of every branch.
+
+Requests always carry ``prefix_blocks``; the whole-context ``context_key``
+is derived from them (``Request.__post_init__``), which is exactly the
+flat-store view of this trace.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.workloads.request import Request
+
+CONTEXT_WINDOW = 8192
+
+
+@dataclass
+class _Episode:
+    eid: int
+    task_tokens: int
+    total_steps: int
+    step: int = 0
+    # frontier paths: each is the list of (block_key, tokens) step blocks
+    # from the root; forking copies a prefix of one of them
+    paths: List[List[tuple]] = field(default_factory=list)
+    _next_node: int = 0
+
+
+class AgentLoopWorkload:
+    """Stateful generator over a pool of concurrently running episodes."""
+
+    def __init__(self, seed: int = 0, active_pool: int = 3000,
+                 mean_steps: float = 8.0, branch_prob: float = 0.25,
+                 sys_tokens: int = 1200, mean_task_tokens: float = 900.0,
+                 mean_obs_tokens: float = 160.0,
+                 mean_out_tokens: float = 220.0, load_scale: float = 1.0):
+        self.rng = np.random.default_rng(seed)
+        self.active_pool = max(int(active_pool * load_scale), 1)
+        self.mean_steps = mean_steps
+        self.branch_prob = float(branch_prob)
+        self.sys_tokens = int(sys_tokens)
+        self.mean_task = mean_task_tokens
+        self.mean_obs = mean_obs_tokens
+        self.mean_out = mean_out_tokens
+        self._eps: List[_Episode] = []
+        self._next_eid = 0
+        self._rid = 0
+
+    def _new_episode(self) -> _Episode:
+        steps = 1 + int(self.rng.geometric(1.0 / self.mean_steps))
+        task = self._lognormal(self.mean_task, 0.4)
+        ep = _Episode(eid=self._next_eid, task_tokens=task,
+                      total_steps=steps)
+        ep.paths.append([])          # the trunk starts at the task root
+        self._next_eid += 1
+        return ep
+
+    def _lognormal(self, mean: float, sigma: float = 0.5) -> int:
+        mu = np.log(mean) - sigma ** 2 / 2
+        return max(4, int(self.rng.lognormal(mu, sigma)))
+
+    def _emit(self, ep: _Episode, arrival: float, obs: int, out: int,
+              u_pick: float, u_fork: float) -> Request:
+        ep.step += 1
+        pi = int(u_pick * len(ep.paths)) % len(ep.paths)
+        path = ep.paths[pi]
+        if path and u_fork < self.branch_prob:
+            # fork: branch from a random proper prefix of the picked path
+            cut = int(u_fork / self.branch_prob * len(path))
+            path = path[:cut]
+            ep.paths.append(path)
+        blocks = [("asys", self.sys_tokens),
+                  (f"task-{ep.eid}", ep.task_tokens)] + list(path)
+        # window truncation drops the oldest step blocks (never the root)
+        total = sum(t for _, t in blocks)
+        while len(blocks) > 2 and total > CONTEXT_WINDOW - obs:
+            total -= blocks.pop(2)[1]
+        req = Request(rid=self._rid, arrival=float(arrival), context_key="",
+                      context_tokens=int(total), new_tokens=int(obs),
+                      output_tokens=int(out), turn=ep.step,
+                      prefix_blocks=tuple(k for k, _ in blocks),
+                      block_tokens=tuple(t for _, t in blocks))
+        self._rid += 1
+        # the step (tool call + result) joins this branch's history
+        node = f"a{ep.eid}.n{ep._next_node}"
+        ep._next_node += 1
+        path.append((node, int(obs + out)))
+        return req
+
+    def sample(self, arrival: float) -> Request:
+        while len(self._eps) < self.active_pool:
+            self._eps.append(self._new_episode())
+        i = int(self.rng.integers(len(self._eps)))
+        ep = self._eps[i]
+        obs = self._lognormal(self.mean_obs)
+        out = self._lognormal(self.mean_out)
+        u_pick = float(self.rng.random())
+        u_fork = float(self.rng.random())
+        req = self._emit(ep, arrival, obs, out, u_pick, u_fork)
+        if ep.step >= ep.total_steps:
+            self._eps[i] = self._new_episode()
+        return req
+
+    def sample_batch(self, arrivals: Sequence[float]) -> List[Request]:
+        """Vectorized draws (episode pick, obs/out lengths, fork
+        uniforms); the episode state machine stays sequential, as in the
+        other workloads."""
+        n = len(arrivals)
+        if n == 0:
+            return []
+        while len(self._eps) < self.active_pool:
+            self._eps.append(self._new_episode())
+        picks = self.rng.integers(len(self._eps), size=n)
+        obss = self._lognormal_batch(self.mean_obs, n)
+        outs = self._lognormal_batch(self.mean_out, n)
+        u_picks = self.rng.random(size=n)
+        u_forks = self.rng.random(size=n)
+        reqs: List[Request] = []
+        eps = self._eps
+        for arrival, i, obs, out, up, uf in zip(
+                arrivals, picks.tolist(), obss.tolist(), outs.tolist(),
+                u_picks.tolist(), u_forks.tolist()):
+            ep = eps[i]
+            reqs.append(self._emit(ep, arrival, obs, out, up, uf))
+            if ep.step >= ep.total_steps:
+                eps[i] = self._new_episode()
+        return reqs
+
+    def _lognormal_batch(self, mean: float, n: int,
+                         sigma: float = 0.5) -> np.ndarray:
+        mu = np.log(mean) - sigma ** 2 / 2
+        return np.maximum(self.rng.lognormal(mu, sigma, size=n).astype(int),
+                          4)

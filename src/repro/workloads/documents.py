@@ -19,10 +19,18 @@ class DocumentWorkload:
     def __init__(self, seed: int = 0, num_docs: int = 20000,
                  zipf_alpha: float = 0.4, mean_doc_tokens: float = 5880.0,
                  mean_question_tokens: float = 35.0,
-                 mean_answer_tokens: float = 60.0, load_scale: float = 1.0):
+                 mean_answer_tokens: float = 60.0, load_scale: float = 1.0,
+                 prefix: bool = False, num_sys_prompts: int = 4,
+                 mean_sys_tokens: float = 600.0):
         """``load_scale`` widens the document corpus for cluster scenarios
         (N replicas at N× rate query N× the documents, preserving the Zipf
-        reuse skew per unit of traffic)."""
+        reuse skew per unit of traffic).
+
+        ``prefix=True`` emits structured prefix segments — RAG-style
+        [system prompt][document]: the system-prompt block comes from a
+        small shared pool (assigned per document, deterministically), so
+        a radix store shares one copy across the whole corpus slice. The
+        default stream is byte-identical to the legacy workload."""
         self.rng = np.random.default_rng(seed)
         self.alpha = zipf_alpha
         self.num_docs = num_docs = max(int(num_docs * load_scale), 1)
@@ -37,8 +45,26 @@ class DocumentWorkload:
         self.order = self.rng.permutation(num_docs)
         self.mean_q = mean_question_tokens
         self.mean_a = mean_answer_tokens
+        self.prefix = bool(prefix)
+        self.num_sys = int(num_sys_prompts)
+        if self.prefix:
+            s2 = 0.3
+            mu2 = np.log(mean_sys_tokens) - s2 ** 2 / 2
+            self.sys_tokens = np.maximum(
+                self.rng.lognormal(mu2, s2, size=self.num_sys).astype(int),
+                64)
         self._rid = 0
         self._visits = np.zeros(num_docs, dtype=int)
+
+    def _prefix_fields(self, doc: int, dl: int) -> dict:
+        """Structured [system prompt][document] segments for ``doc``; the
+        question is the unique per-request tail (never a cached block)."""
+        if not self.prefix:
+            return {}
+        sid = doc % self.num_sys
+        sys = int(self.sys_tokens[sid])
+        return {"prefix_blocks": (f"dsys-{sid}", f"doc-{doc}"),
+                "block_tokens": (sys, int(dl))}
 
     def _lognormal(self, mean: float, sigma: float = 0.5) -> int:
         mu = np.log(mean) - sigma ** 2 / 2
@@ -50,11 +76,13 @@ class DocumentWorkload:
         self._visits[doc] += 1
         q = self._lognormal(self.mean_q)
         a = self._lognormal(self.mean_a)
+        extra = self._prefix_fields(doc, int(self.doc_len[doc]))
+        ctx = sum(extra["block_tokens"]) if extra else int(self.doc_len[doc])
         req = Request(rid=self._rid, arrival=arrival,
                       context_key=f"doc-{doc}",
-                      context_tokens=int(self.doc_len[doc]),
+                      context_tokens=int(ctx),
                       new_tokens=int(q), output_tokens=int(a),
-                      turn=int(self._visits[doc]))
+                      turn=int(self._visits[doc]), **extra)
         self._rid += 1
         return req
 
@@ -77,11 +105,13 @@ class DocumentWorkload:
                                           doc_lens.tolist(), qs.tolist(),
                                           as_.tolist()):
             self._visits[doc] += 1
+            extra = self._prefix_fields(doc, int(dl))
+            ctx = sum(extra["block_tokens"]) if extra else int(dl)
             reqs.append(Request(rid=self._rid, arrival=float(arrival),
                                 context_key=f"doc-{doc}",
-                                context_tokens=int(dl), new_tokens=q,
+                                context_tokens=int(ctx), new_tokens=q,
                                 output_tokens=a,
-                                turn=int(self._visits[doc])))
+                                turn=int(self._visits[doc]), **extra))
             self._rid += 1
         return reqs
 

@@ -1,0 +1,322 @@
+"""Prefix-caching surface: AccountResult/HitKind shims, the CacheStore
+protocol, the Request prefix API, structured workload segments, the
+RadixKVStore deterministic behaviours and the engine integration.
+
+Runs without hypothesis (the radix *property* tests live in
+``tests/test_radix.py`` behind an importorskip); everything here is
+deterministic so it executes in minimal environments too.
+"""
+import numpy as np
+import pytest
+
+from repro.core.carbon import CarbonModel
+from repro.core.kvstore import (MISS_INSERTED, MISS_REJECTED, MISS_TOO_LARGE,
+                                AccountResult, CacheStore, HitKind, KVStore)
+from repro.core.policies import POLICIES
+from repro.core.radix import RadixEntry, RadixKVStore
+from repro.serving.cluster import make_cluster
+from repro.serving.perfmodel import SERVING_MODELS
+from repro.workloads import (ConversationWorkload, make_poisson_arrivals,
+                             sample_many)
+from repro.workloads.agents import AgentLoopWorkload
+from repro.workloads.documents import DocumentWorkload
+from repro.workloads.request import Request
+
+BPT = 1000.0  # bytes per token
+MODEL = SERVING_MODELS["llama3-70b"]
+
+
+def mk_radix(capacity_tokens=120, policy="lcs"):
+    return RadixKVStore(capacity_tokens * BPT, POLICIES[policy], BPT)
+
+
+def _check_tree(s: RadixKVStore):
+    """Structural invariants (mirrors tests/test_radix.py)."""
+    assert s.used_bytes == pytest.approx(
+        sum(e.size_bytes for e in s.entries.values()))
+    for key, e in s.entries.items():
+        if not isinstance(e, RadixEntry):
+            continue
+        assert e.refcount == len(e.children) >= 0
+        if e.parent is None:
+            assert s.root.get(e.block_key) is e and key == e.block_key
+        else:
+            assert s.entries.get(e.parent.key) is e.parent
+            assert e.parent.children.get(e.block_key) is e
+            assert key == e.parent.key + "/" + e.block_key
+        for ch in e.children.values():
+            assert ch.parent is e and s.entries.get(ch.key) is ch
+
+
+# ---- AccountResult / HitKind ------------------------------------------ #
+def test_account_result_is_int_compatible():
+    r = AccountResult(42, HitKind.PARTIAL, 42)
+    assert r == 42 and int(r) == 42 and r >= 0 and r + 1 == 43
+    assert r.kind is HitKind.PARTIAL and r.matched_tokens == 42
+    assert r.is_hit
+    # numpy batch decode path: sentinel encoding survives the cast
+    arr = np.fromiter((AccountResult(-1, HitKind.MISS), r), np.int64)
+    assert arr.tolist() == [-1, 42]
+
+
+def test_miss_singletons_keep_sentinel_encoding():
+    assert int(MISS_INSERTED) == -1 and MISS_INSERTED.kind is HitKind.MISS
+    assert int(MISS_TOO_LARGE) == -2 \
+        and MISS_TOO_LARGE.kind is HitKind.TOO_LARGE
+    assert int(MISS_REJECTED) == -3 \
+        and MISS_REJECTED.kind is HitKind.REJECTED
+    assert not MISS_INSERTED.is_hit
+
+
+def test_flat_account_kinds():
+    s = KVStore(100 * BPT, POLICIES["lru"], BPT)
+    assert s.account("a", 10, 10, 0.0) is MISS_INSERTED
+    hit = s.account("a", 10, 10, 1.0)
+    assert hit == 10 and hit.kind is HitKind.HIT and hit.matched_tokens == 10
+    assert s.account("big", 500, 500, 2.0) is MISS_TOO_LARGE
+
+
+def test_account_legacy_shim_warns_and_matches():
+    s = KVStore(100 * BPT, POLICIES["lru"], BPT)
+    twin = KVStore(100 * BPT, POLICIES["lru"], BPT)
+    for key, t in [("a", 0.0), ("a", 1.0), ("b", 2.0)]:
+        with pytest.deprecated_call():
+            legacy = s.account_legacy(key, 10, 10, t)
+        assert type(legacy) is int
+        assert legacy == int(twin.account(key, 10, 10, t))
+    assert vars(s.stats) == vars(twin.stats)
+
+
+# ---- CacheStore protocol ---------------------------------------------- #
+def test_stores_satisfy_cache_store_protocol():
+    flat = KVStore(100 * BPT, POLICIES["lru"], BPT)
+    radix = mk_radix()
+    assert isinstance(flat, CacheStore) and isinstance(radix, CacheStore)
+    assert not flat.is_tiered and not radix.is_tiered
+    assert not flat.prefix_aware and radix.prefix_aware
+    assert flat.owner_key("a/b") == "a/b"      # flat: key is the owner
+    assert radix.owner_key("a/b") == "a"       # radix: trees migrate whole
+    clone = radix.clone_empty(50 * BPT)
+    assert isinstance(clone, RadixKVStore) and clone.capacity_bytes == 50 * BPT
+    assert not clone.entries and not clone.root
+
+
+# ---- Request prefix API ----------------------------------------------- #
+def test_request_derives_key_and_route_from_blocks():
+    r = Request(rid=0, arrival=0.0, context_key="", context_tokens=30,
+                new_tokens=5, output_tokens=10,
+                prefix_blocks=("sys-0", "c0:t1"), block_tokens=(20, 10))
+    assert r.context_key == "sys-0/c0:t1"      # legacy whole-context key
+    assert r.route_key == "sys-0"              # affinity on the prefix root
+    assert r.prefix_segments == (("sys-0", 20), ("c0:t1", 10))
+    legacy = Request(rid=1, arrival=0.0, context_key="conv-1",
+                     context_tokens=30, new_tokens=5, output_tokens=10)
+    assert legacy.prefix_segments is None
+    assert legacy.route_key == "conv-1"
+
+
+def test_request_rejects_mismatched_blocks():
+    with pytest.raises(ValueError):
+        Request(rid=0, arrival=0.0, context_key="", context_tokens=30,
+                new_tokens=5, output_tokens=10,
+                prefix_blocks=("a", "b"), block_tokens=(30,))
+
+
+# ---- workload structured segments ------------------------------------- #
+@pytest.mark.parametrize("factory", [
+    lambda: ConversationWorkload(seed=3, prefix=True),
+    lambda: DocumentWorkload(seed=3, prefix=True),
+    lambda: AgentLoopWorkload(seed=3),
+], ids=["conversation", "document", "agent"])
+def test_prefix_workloads_emit_consistent_blocks(factory):
+    wl = factory()
+    arr = make_poisson_arrivals(np.full(2, 1.5), seed=3, max_requests=400)
+    reqs = sample_many(wl, arr)
+    assert reqs and all(r.prefix_blocks for r in reqs)
+    for r in reqs:
+        assert len(r.prefix_blocks) == len(r.block_tokens)
+        assert sum(r.block_tokens) == r.context_tokens
+        assert r.context_key  # whole-context key derived for flat stores
+
+
+def test_legacy_workloads_emit_no_blocks():
+    for wl in (ConversationWorkload(seed=3), DocumentWorkload(seed=3)):
+        arr = make_poisson_arrivals(np.full(2, 1.5), seed=3,
+                                    max_requests=200)
+        assert all(not r.prefix_blocks for r in sample_many(wl, arr))
+
+
+# ---- radix store deterministic behaviour ------------------------------ #
+def test_partial_hit_then_full_hit():
+    s = mk_radix(capacity_tokens=500)
+    blocks = [("sys-0", 30), ("c0:t1", 20)]
+    r0 = s.account("conv-0", 50, 60, 0.0, blocks=blocks)
+    assert int(r0) == -1 and s.stats.partial_hits == 0
+    r1 = s.account("conv-0", 50, 60, 1.0, blocks=blocks)
+    assert int(r1) == 50 and r1.kind is HitKind.HIT
+    grown = blocks + [("c0:t2", 25)]
+    r2 = s.account("conv-0", 75, 85, 2.0, blocks=grown)
+    assert int(r2) == 50 and r2.kind is HitKind.PARTIAL
+    assert s.stats.partial_hits == 1
+    # suffix-only wear: three blocks written once each
+    assert s.stats.written_bytes == 75 * BPT
+
+
+def test_shared_system_prompt_deduplicates():
+    s = mk_radix(capacity_tokens=1000)
+    for cid in range(5):
+        s.account(f"conv-{cid}", 40, 50, float(cid),
+                  blocks=[("sys-0", 30), (f"c{cid}:t1", 10)])
+    # one sys node + five turn leaves, not five whole contexts
+    assert s.used_bytes == (30 + 5 * 10) * BPT
+    assert s.entries["sys-0"].refcount == 5
+
+
+def test_leaf_first_eviction_keeps_shared_root():
+    s = mk_radix(capacity_tokens=100, policy="lru")
+    for cid in range(7):
+        s.account(f"conv-{cid}", 40, 50, float(cid),
+                  blocks=[("sys-0", 30), (f"c{cid}:t1", 10)])
+    # capacity forces eviction of old leaves; the shared root (pinned by
+    # surviving children) must never be evicted before its subtree
+    assert "sys-0" in s.entries
+    _check_tree(s)
+
+
+def test_interior_pop_leaves_stub_and_adopt_refills():
+    s = mk_radix(capacity_tokens=500)
+    s.account("conv-0", 50, 60, 0.0,
+              blocks=[("sys-0", 30), ("c0:t1", 20)])
+    moved = s.pop_entry("sys-0")
+    assert moved.num_tokens == 30 and s.entries["sys-0"].stub
+    _check_tree(s)
+    dst = mk_radix(capacity_tokens=500)
+    leaf = s.pop_entry("sys-0/c0:t1")
+    assert dst.adopt(leaf, 1.0)          # creates a stub ancestor
+    assert dst.entries["sys-0"].stub
+    assert dst.adopt(moved, 2.0)         # fills the stub in place
+    assert not dst.entries["sys-0"].stub
+    assert dst.used_bytes == 50 * BPT
+    _check_tree(dst)
+
+
+def test_fill_stub_under_eviction_pressure_stays_linked():
+    """Regression: filling a migration stub whose last child gets evicted
+    by the same ``_make_room`` call must protect the stub — otherwise the
+    fill lands on a node already removed from ``entries`` and the byte
+    ledger desyncs.  Shrunk from the tests/test_radix.py fuzz (exact
+    floats matter: the mid-ramp resizes set up the eviction pressure)."""
+    ops = [
+        (4, 0, 6, 14, 1.4869368680234398),
+        (1, 2, 5, 20, 0.9014087810429627),
+        (0, 5, 1, 24, 0.6183627066234534),
+        (4, 4, 3, 11, 0.4787450119272769),
+        (2, 2, 4, 13, 1.3720450405807445),
+        (0, 1, 6, 5, 0.6867420401014835),
+        (2, 0, 1, 16, 0.9014392537555536),
+        (3, 4, 6, 3, 1.2082525703194418),
+        (1, 2, 4, 2, 1.1341250371898322),
+    ]
+    s = mk_radix()
+    donor = []
+    for i, (op, cid, depth, toks, frac) in enumerate(ops):
+        now = float(i)
+        blocks = [(f"sys-{cid % 2}", toks)] \
+            + [(f"c{cid}:t{j}", toks) for j in range(depth - 1)]
+        total = sum(t for _, t in blocks)
+        if op <= 1:
+            s.account(f"conv-{cid}", total, total + 5, now, blocks=blocks)
+        elif op == 2 and s.entries:
+            donor.append(s.pop_entry(sorted(s.entries)[cid % len(s.entries)]))
+        elif op == 3 and donor:
+            s.adopt(donor.pop(), now)
+        elif op == 4:
+            s.schedule_resize(s.capacity_bytes * frac, now, ramp_s=4.0)
+        _check_tree(s)
+
+
+# ---- wiring: make_cluster / controller -------------------------------- #
+def test_make_cluster_builds_radix_stores():
+    for partitioned in (False, True):
+        eng = make_cluster(MODEL, CarbonModel(), cache_tb=0.1,
+                           policy=POLICIES["lcs_chat"], n_replicas=2,
+                           partitioned=partitioned, prefix_caching=True)
+        assert all(isinstance(st, RadixKVStore) for st in eng.stores)
+    flat = make_cluster(MODEL, CarbonModel(), cache_tb=0.1,
+                        policy=POLICIES["lcs_chat"], n_replicas=2)
+    assert all(type(st) is KVStore for st in flat.stores)
+
+
+def test_prefix_caching_rejects_tiered_storage():
+    with pytest.raises(ValueError):
+        make_cluster(MODEL, CarbonModel(), cache_tb=4.0,
+                     policy=POLICIES["lcs_chat"], n_replicas=2,
+                     storage="dram:0.5tb+nvme_gen4:4tb",
+                     prefix_caching=True)
+
+
+def test_controller_prefix_guards():
+    from repro.core.controller import GreenCacheController
+    from repro.core.profiler import Profile
+    from repro.core.storage import StorageSpec
+
+    prof = Profile("llama3-70b", "conversation", rates=[0.5], sizes=[1.0])
+    with pytest.raises(ValueError):
+        GreenCacheController(MODEL, prof, CarbonModel(), "conversation",
+                             storage=[StorageSpec.flat(4.0)],
+                             prefix_caching=True)
+    with pytest.raises(ValueError):
+        GreenCacheController(MODEL, prof, CarbonModel(), "conversation",
+                             engine="legacy", prefix_caching=True)
+
+
+# ---- engine integration ----------------------------------------------- #
+def _structured_stream(n=240, sys_tokens=800):
+    """Unique per-request leaves under one shared system prompt: flat
+    keying can never reuse (every whole-context key is new), the radix
+    tree reuses the trunk on every request after the first."""
+    return [Request(rid=i, arrival=0.5 * i, context_key="",
+                    context_tokens=sys_tokens + 50, new_tokens=20,
+                    output_tokens=64,
+                    prefix_blocks=("sys", f"u{i}"),
+                    block_tokens=(sys_tokens, 50))
+            for i in range(n)]
+
+
+def test_partial_hits_shorten_prefill_vs_flat():
+    runs = {}
+    for prefix in (False, True):
+        reqs = _structured_stream()
+        eng = make_cluster(MODEL, CarbonModel(), cache_tb=0.5,
+                           policy=POLICIES["lcs_chat"], n_replicas=2,
+                           router="cache_affinity", prefix_caching=prefix)
+        res = eng.run(reqs, ci_fn=lambda t: 100.0, cache_tb=0.5)
+        runs[prefix] = (res, reqs)
+    flat, radix = runs[False][0], runs[True][0]
+    # radix: every request past the warm-up reuses the shared trunk
+    assert radix.token_hit_rate > 0.8 > flat.token_hit_rate
+    assert float(np.mean(radix.ttft)) < float(np.mean(flat.ttft))
+    assert radix.energy_kwh < flat.energy_kwh
+    reused = [r.reused_tokens for r in runs[True][1]]
+    assert max(reused) == 800      # trunk matched, unique leaf re-prefilled
+
+
+def test_exact_key_engine_parity_small():
+    """Legacy unstructured requests through a radix-store engine must
+    bit-reproduce the flat-store engine."""
+    results = []
+    for prefix in (False, True):
+        wl = ConversationWorkload(seed=7, active_pool=500)
+        arr = make_poisson_arrivals(np.full(2, 1.5), seed=7,
+                                    max_requests=400)
+        reqs = sample_many(wl, arr)
+        eng = make_cluster(MODEL, CarbonModel(), cache_tb=0.2,
+                           policy=POLICIES["lcs_chat"], n_replicas=2,
+                           router="cache_affinity", prefix_caching=prefix)
+        res = eng.run(reqs, ci_fn=lambda t: 100.0, cache_tb=0.2)
+        results.append((res, [vars(st.stats).copy() for st in eng.stores]))
+    (r0, s0), (r1, s1) = results
+    assert np.array_equal(r0.ttft, r1.ttft)
+    assert np.array_equal(r0.tpot, r1.tpot)
+    assert s0 == s1
+    assert r0.carbon_g == r1.carbon_g and r0.energy_kwh == r1.energy_kwh

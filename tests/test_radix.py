@@ -1,0 +1,130 @@
+"""Radix prefix-tree store: hypothesis invariants + exact-key parity."""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the optional hypothesis dev dependency")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.kvstore import KVStore
+from repro.core.policies import POLICIES
+from repro.core.radix import RadixEntry, RadixKVStore
+
+BPT = 1000.0
+
+
+def mk_radix(capacity_tokens=120, policy="lcs"):
+    return RadixKVStore(capacity_tokens * BPT, POLICIES[policy], BPT)
+
+
+# structured ops: (op, conversation id, depth, tokens-per-block, factor)
+_BLOCK_OPS = st.lists(
+    st.tuples(st.integers(0, 4),        # op selector
+              st.integers(0, 5),        # conversation id
+              st.integers(1, 6),        # path depth
+              st.integers(1, 25),       # tokens per block
+              st.floats(0.4, 1.6)),     # resize factor
+    min_size=1, max_size=150)
+
+
+def _blocks(cid: int, depth: int, toks: int):
+    """A conversation-shaped path: shared system root + history blocks."""
+    out = [(f"sys-{cid % 2}", toks)]
+    out += [(f"c{cid}:t{j}", toks) for j in range(depth - 1)]
+    return out
+
+
+def _check_tree(s: RadixKVStore):
+    """Structural invariants after every operation."""
+    # used_bytes is exactly the sum of entry sizes (stubs are 0 bytes)
+    assert s.used_bytes == pytest.approx(
+        sum(e.size_bytes for e in s.entries.values()))
+    assert s.used_bytes <= s.capacity_bytes + 1e-6
+    for key, e in s.entries.items():
+        if not isinstance(e, RadixEntry):
+            continue
+        # refcount is never negative and equals the live child count
+        assert e.refcount == len(e.children) >= 0
+        # no orphans: every node's parent is linked, present in entries,
+        # and holds this node as the child under its block key
+        if e.parent is None:
+            assert s.root.get(e.block_key) is e
+            assert key == e.block_key
+        else:
+            assert s.entries.get(e.parent.key) is e.parent
+            assert e.parent.children.get(e.block_key) is e
+            assert key == e.parent.key + "/" + e.block_key
+        for ch in e.children.values():
+            assert ch.parent is e
+            assert s.entries.get(ch.key) is ch
+
+
+@given(ops=_BLOCK_OPS)
+@settings(max_examples=40, deadline=None)
+def test_radix_invariants_random_structured_ops(ops):
+    """Tentpole invariants: byte accounting exact, refcounts never
+    negative, evicting a shared node never orphans a live child — across
+    arbitrary account/resize/pop_entry/adopt sequences on tree-shaped
+    keys (including migration stubs)."""
+    s = mk_radix()
+    donor = []
+    written = 0.0
+    for i, (op, cid, depth, toks, frac) in enumerate(ops):
+        now = float(i)
+        blocks = _blocks(cid, depth, toks)
+        total = sum(t for _, t in blocks)
+        if op <= 1:
+            ret = s.account(f"conv-{cid}", total, total + 5, now,
+                            blocks=blocks)
+            assert -3 <= int(ret) <= total
+        elif op == 2 and s.entries:
+            key = sorted(s.entries)[cid % len(s.entries)]
+            donor.append(s.pop_entry(key))
+        elif op == 3 and donor:
+            s.adopt(donor.pop(), now)
+        elif op == 4:
+            s.schedule_resize(s.capacity_bytes * frac, now, ramp_s=4.0)
+        _check_tree(s)
+        assert s.stats.written_bytes >= written     # wear is monotone
+        written = s.stats.written_bytes
+    assert s.stats.hit_tokens <= s.stats.lookup_tokens
+
+
+_FLAT_OPS = st.lists(
+    st.tuples(st.integers(0, 5),        # op selector
+              st.integers(0, 19),       # key id
+              st.integers(1, 40),       # tokens
+              st.floats(0.4, 1.6)),     # resize factor
+    min_size=1, max_size=150)
+
+
+@given(ops=_FLAT_OPS)
+@settings(max_examples=40, deadline=None)
+def test_exact_key_mode_byte_equal_to_flat_store(ops):
+    """Satellite: with ``blocks=None`` the radix store must be
+    byte-equal to the flat ``KVStore`` across insert/evict/resize/
+    adopt/pop_entry — same entries, same used_bytes, same stats ledger,
+    step for step."""
+    flat = KVStore(120 * BPT, POLICIES["lcs"], BPT)
+    radix = mk_radix()
+    donors = ([], [])
+    for i, (op, kid, toks, frac) in enumerate(ops):
+        key = f"k{kid}"
+        now = float(i)
+        for s, donor in zip((flat, radix), donors):
+            if op <= 1:
+                s.account(key, toks, toks, now)
+            elif op == 2:
+                s.lookup(key, toks, now)
+                s.insert(key, toks, now)
+            elif op == 3 and key in s.entries:
+                donor.append(s.pop_entry(key))
+            elif op == 4 and donor:
+                s.adopt(donor.pop(), now)
+            elif op == 5:
+                s.schedule_resize(s.capacity_bytes * frac, now, ramp_s=4.0)
+        assert set(flat.entries) == set(radix.entries)
+        assert flat.used_bytes == radix.used_bytes
+        assert vars(flat.stats) == vars(radix.stats)
+    assert flat.capacity_bytes == radix.capacity_bytes
