@@ -39,6 +39,7 @@ MODULES = [
     "fleet_mix",
     "disagg",
     "transitions",
+    "scenarios",
     "storage_tiers",
     "prefix_sharing",
     "roofline_report",

@@ -44,6 +44,7 @@ from repro.serving.cluster import ClusterEngine, DisaggEngine
 from repro.serving.engine import ServingEngine
 from repro.serving.perfmodel import ServingModel
 from repro.workloads import sample_many
+from repro.workloads.tenants import MultiTenantWorkload, normalize_shares
 from repro.workloads.traces import make_poisson_arrivals
 
 
@@ -76,6 +77,10 @@ class HourRecord:
     # typed-storage accounting: the hour's cache churn in host GB written
     # (the wear clock's input) — 0.0 on the legacy flat path
     written_gb: float = 0.0
+    # multi-tenant runs: ``{tier: {requests, slo_frac, carbon_g,
+    # g_per_request}}`` (``SimResult.per_tier``); None on single-tier
+    # hours, so legacy records are unchanged
+    tiers: Optional[Dict] = None
 
 
 @dataclass
@@ -119,6 +124,28 @@ class RunResult:
         """Total reconfiguration carbon (already included in
         ``total_carbon_g``; reported separately for the churn analysis)."""
         return sum(h.transition_g for h in self.hours)
+
+    @property
+    def per_tier(self) -> Dict:
+        """Day-level functional-unit metrics per SLO tier: request count,
+        request-weighted attainment against the *tier's own* SLO, and
+        gCO2e attributed by work share — the reported currency of the
+        scenario gauntlet. Empty for single-tier runs."""
+        agg: Dict[str, Dict[str, float]] = {}
+        for h in self.hours:
+            if not h.tiers:
+                continue
+            for t, d in h.tiers.items():
+                a = agg.setdefault(t, {"requests": 0, "carbon_g": 0.0,
+                                       "_ok": 0.0})
+                a["requests"] += d["requests"]
+                a["carbon_g"] += d["carbon_g"]
+                a["_ok"] += d["slo_frac"] * d["requests"]
+        for a in agg.values():
+            n = max(a["requests"], 1)
+            a["slo_frac"] = a.pop("_ok") / n
+            a["g_per_request"] = a["carbon_g"] / n
+        return agg
 
     @property
     def plan_changes(self) -> int:
@@ -201,7 +228,9 @@ class GreenCacheController:
                  min_dwell_hours: int = 1,
                  transition_aware_solver: bool = True,
                  storage=None, wear_aware: bool = True,
-                 admission=None, prefix_caching: bool = False):
+                 admission=None, prefix_caching: bool = False,
+                 tiers: Optional[Dict[str, float]] = None,
+                 tier_aware_solver: bool = True):
         self.model = model
         self.profile = profile
         self.carbon = carbon
@@ -211,6 +240,15 @@ class GreenCacheController:
         self.transitions = transitions
         self.min_dwell_hours = max(int(min_dwell_hours), 1)
         self.transition_aware_solver = transition_aware_solver
+        # multi-tenant tiers: ``tiers={"gold": 0.25, "standard": 0.45,
+        # "scavenger": 0.30}`` stamps the workload with a tenant mix,
+        # activates the engine's priority queueing, and (with
+        # ``tier_aware_solver``) sizes plans against the protected tiers'
+        # thinned-rate attainment instead of the stream average.  None
+        # keeps the single-tier path bit-identical.
+        self.tier_shares = normalize_shares(tiers) if tiers is not None \
+            else None
+        self.tier_aware_solver = tier_aware_solver
         # typed-storage search: candidate StorageSpecs (or spec strings)
         # the solver sizes alongside the plan candidates; None keeps the
         # legacy flat-SSD size grid (bit-stable).  All candidates must
@@ -339,6 +377,9 @@ class GreenCacheController:
             if engine == "legacy":
                 raise ValueError("engine='legacy' does not model typed "
                                  "storage")
+        if self.tier_shares is not None and engine == "legacy":
+            raise ValueError("engine='legacy' has no priority queueing; "
+                             "multi-tenant tiers need the cluster engine")
 
     def _resolved(self, plan: ResourcePlan, cache_tb: float,
                   storage: Optional[StorageSpec] = None) -> ResourcePlan:
@@ -368,19 +409,40 @@ class GreenCacheController:
                 ci_trace: np.ndarray, *,
                 history_days: int = 3,
                 rate_history: Optional[np.ndarray] = None,
-                ci_history: Optional[np.ndarray] = None) -> RunResult:
+                ci_history: Optional[np.ndarray] = None,
+                scenario=None) -> RunResult:
         """Simulate 24 h (len(rate_trace) hours) of serving with hourly
         decisions. Histories default to noisy repeats of the day (the paper
-        feeds 3 days of history to the predictors)."""
+        feeds 3 days of history to the predictors).
+
+        ``scenario`` (a ``repro.workloads.scenarios.Scenario``) perturbs
+        the day: the rate/CI traces the cluster *experiences* are the
+        scenario's realization, while predictor histories keep the
+        *unperturbed* traces — the surprise is the point (forecasts miss
+        the flash crowd until the online updates catch up).  Mid-hour
+        events (replica failures, storage degradation) split the hour's
+        request stream at the event time; recovery happens through the
+        next plan application.  ``scenario=None`` (and the identity
+        scenario) bit-reproduce the unperturbed trajectory."""
+        base_rates = np.asarray(rate_trace, dtype=float)
+        base_cis = np.asarray(ci_trace, dtype=float)
+        events = ()
+        if scenario is not None:
+            rate_trace, ci_trace, events = scenario.realize(base_rates,
+                                                            base_cis)
+            if events and self.engine_kind == "legacy":
+                raise ValueError("engine='legacy' cannot host scenario "
+                                 "fault events (fail_replica/"
+                                 "degrade_storage)")
         H = len(rate_trace)
         rng = np.random.default_rng(self.seed)
         if rate_history is None:
             rate_history = np.concatenate(
-                [rate_trace * (1 + 0.05 * rng.standard_normal(H))
+                [base_rates * (1 + 0.05 * rng.standard_normal(H))
                  for _ in range(history_days)])
         if ci_history is None:
             ci_history = np.concatenate(
-                [ci_trace * (1 + 0.05 * rng.standard_normal(H))
+                [base_cis * (1 + 0.05 * rng.standard_normal(H))
                  for _ in range(history_days)])
 
         load_pred = LoadPredictor().fit(rate_history)
@@ -433,6 +495,12 @@ class GreenCacheController:
                 transitions=self.transitions,
                 wear_aware=self.wear_aware)
         wl = workload_factory(self.seed)
+        if self.tier_shares is not None \
+                and not isinstance(wl, MultiTenantWorkload):
+            # turnkey multi-tenancy: stamp the factory's requests with
+            # the controller's tier mix (a factory already producing a
+            # MultiTenantWorkload keeps its own shares)
+            wl = MultiTenantWorkload(wl, self.tier_shares, seed=self.seed)
 
         # warm the cache at full size, then resize to the first decision
         arr0 = make_poisson_arrivals(np.full(6, max(rate_trace.mean(), 0.2)),
@@ -523,8 +591,17 @@ class GreenCacheController:
             stores = engine.stores if isinstance(engine, ClusterEngine) \
                 else [store]
             w0 = sum(st.stats.written_bytes for st in stores)
-            res = engine.run(reqs, ci_fn=lambda t: ci_now,
-                             cache_tb=current_tb, rate_hint=lam)
+            ev_h = [e for e in events
+                    if h * 3600.0 <= e.t_s < (h + 1) * 3600.0]
+            if ev_h:
+                res, ev_note = self._run_hour_events(
+                    engine, reqs, ev_h, ci_now, current_tb, lam)
+                if ev_note:
+                    tr_str = (tr_str + " " + ev_note).strip()
+                stores = engine.stores    # a failure may drop a store
+            else:
+                res = engine.run(reqs, ci_fn=lambda t: ci_now,
+                                 cache_tb=current_tb, rate_hint=lam)
             hours.append(HourRecord(
                 hour=h, cache_tb=current_tb, rate=lam, ci=ci_now,
                 carbon_g=res.carbon_g, operational_g=res.operational_g,
@@ -540,13 +617,58 @@ class GreenCacheController:
                 plan=str(current_plan),
                 transition_g=tr_g, transition=tr_str,
                 written_gb=(sum(st.stats.written_bytes
-                                for st in stores) - w0) / 1e9))
+                                for st in stores) - w0) / 1e9,
+                tiers=res.per_tier(self.slo) or None))
 
             # online predictor updates (paper §5.3)
             load_pred.update(lam)
             ci_pred.update(ci_now)
 
+        # expose the live engine for post-run inspection (byte-ledger
+        # checks after injected failures, stats, wear clocks)
+        self.last_engine = engine
         return RunResult(self.mode, hours)
+
+    def _run_hour_events(self, engine: ClusterEngine, reqs, ev_h,
+                         ci_now: float, cache_tb: float, lam: float):
+        """Run one hour whose request stream is split by mid-hour fault
+        events: each segment simulates against the engine's state at
+        that instant, events mutate the engine between segments, and the
+        segments merge into one hour-level result
+        (``repro.serving.engine.combine_results``)."""
+        from repro.serving.engine import combine_results
+        notes = []
+        res = None
+        remaining = list(reqs)
+        for e in sorted(ev_h):
+            seg = [r for r in remaining if r.arrival < e.t_s]
+            remaining = remaining[len(seg):]
+            if seg:
+                part = engine.run(seg, ci_fn=lambda t: ci_now,
+                                  cache_tb=cache_tb, rate_hint=lam)
+                res = part if res is None else combine_results(res, part)
+            if e.kind == "fail_replica":
+                if engine.n_replicas > 1:
+                    ap = engine.fail_replica(int(e.value), now=e.t_s)
+                    note = f"fail_replica({int(e.value)})"
+                    if ap.dropped_keys:
+                        note += f"[-{ap.dropped_keys}keys]"
+                    notes.append(note)
+                else:
+                    notes.append("fail_replica(skipped: last replica)")
+            elif e.kind == "degrade_storage":
+                engine.set_storage_degradation(float(e.value))
+                notes.append(f"degrade_storage({e.value:g})")
+            else:
+                raise ValueError(f"unknown scenario event {e.kind!r}")
+        if remaining:
+            part = engine.run(remaining, ci_fn=lambda t: ci_now,
+                              cache_tb=cache_tb, rate_hint=lam)
+            res = part if res is None else combine_results(res, part)
+        if res is None:
+            res = engine.run([], ci_fn=lambda t: ci_now,
+                             cache_tb=cache_tb)
+        return res, " ".join(notes)
 
     # ------------------------------------------------------------------ #
     def _solve(self, rates: Sequence[float], cis: Sequence[float],
@@ -570,6 +692,10 @@ class GreenCacheController:
                    min_dwell_hours=self.min_dwell_hours,
                    dwell_offset=hour % self.min_dwell_hours,
                    initial_plan=live_plan) if aware else {}
+        if self.tier_shares is not None and self.tier_aware_solver:
+            # protect gold: constrain on the protected tiers' thinned-
+            # rate attainment (scavengers carry no rho weight)
+            tkw["tier_shares"] = self.tier_shares
         if self.storage_choices is not None:
             # typed-storage search: sizes come from the spec candidates
             return solve_cluster_schedule(
@@ -584,7 +710,10 @@ class GreenCacheController:
                 sizes_tb=self.sizes, plans=self.plan_choices,
                 type_profiles=self.type_profiles, model=self.model,
                 rho=rho, **tkw)
-        if co_decide:
+        if co_decide or "tier_shares" in tkw:
+            # the replica co-decision path also hosts the tier-aware
+            # single-candidate solve (solve_cache_schedule has no
+            # per-option rate axis to thin)
             return solve_cluster_schedule(
                 self.profile, rates, cis, self.slo, self.carbon,
                 sizes_tb=self.sizes, replicas=self.replica_choices,

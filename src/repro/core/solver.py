@@ -66,6 +66,7 @@ from repro.core.plan import (PlanTransition, ResourcePlan,
 from repro.core.profiler import Profile
 from repro.core.storage import StorageSpec
 from repro.serving.perfmodel import SLO
+from repro.workloads.tenants import TIERS, normalize_shares
 
 
 @dataclass
@@ -619,6 +620,36 @@ def _solve_dp_transition(C, F, n, options, rho, t_start, E, S, e_init,
                        transition_g=tg)
 
 
+def _tier_protected_slo(cell, rate: float, shares: Dict[str, float]
+                        ) -> float:
+    """Share-weighted attainment of the *protected* tiers under priority
+    rate-thinning.
+
+    The engine serves tiers in strict priority order (scavengers are
+    even preempted), so a request in tier ``t`` effectively queues
+    behind only the traffic at its priority and above — tier ``t``'s
+    attainment is approximated by the profile cell evaluated at
+    ``rate × (cumulative share through t's priority)``.  Gold is
+    predicted at the gold-only rate (the protection the engine actually
+    delivers), and unprotected tiers contribute load to the thinning of
+    everyone below them but no term to the constraint.  The per-tier SLO
+    widening (standard 1.5×, see ``tenants.TIERS``) is *not* credited —
+    the profile measures attainment against the base SLO — which keeps
+    the prediction conservative for the looser tiers."""
+    order = sorted(shares, key=lambda t: TIERS[t].priority)
+    cum = num = den = 0.0
+    for t in order:
+        w = shares[t]
+        cum += w
+        if not TIERS[t].protected or w <= 0.0:
+            continue
+        num += w * cell(rate * cum)[1]
+        den += w
+    if den == 0.0:            # nothing protected: fall back to average
+        return cell(rate)[1]
+    return num / den
+
+
 def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
                            pred_cis: Sequence[float], slo: SLO,
                            carbon: CarbonModel, *,
@@ -641,7 +672,9 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
                            initial_plan: Optional[ResourcePlan] = None,
                            storage: Optional[Sequence[
                                Union[StorageSpec, str]]] = None,
-                           wear_aware: bool = True) -> SolveResult:
+                           wear_aware: bool = True,
+                           tier_shares: Optional[Dict[str, float]] = None
+                           ) -> SolveResult:
     """Joint hourly plan over (cache size, resource plan): the option set
     is the cross product sizes × plan candidates and the same
     multiple-choice knapsack machinery picks one option per hour (paper
@@ -691,7 +724,16 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
     wear-aware schedule is compared against); with the default flat
     spec and ``wear_aware=False`` the solve bit-reproduces the untyped
     path.  Candidates already carrying a ``plan.storage`` pin it.
-    Disaggregated candidates do not support the storage search yet."""
+    Disaggregated candidates do not support the storage search yet.
+
+    ``tier_shares`` (``{tier: traffic share}``, tiers from
+    ``repro.workloads.tenants.TIERS``) makes the SLO constraint
+    *tier-aware*: each option's attainment becomes the share-weighted
+    attainment of the **protected** tiers only, each evaluated under
+    priority rate-thinning (see ``_tier_protected_slo``) — gold is
+    predicted at the rate of gold traffic alone, scavengers drop out of
+    the rho constraint entirely.  Carbon still prices the full stream.
+    ``tier_shares=None`` (default) is the single-tier solve, bit-exact."""
     t_start = time.time()
     rho = rho if rho is not None else slo.rho
     sizes = list(sizes_tb) if sizes_tb is not None else list(profile.sizes)
@@ -738,6 +780,8 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
     T = len(pred_rates)
     n = np.array([max(r, 1e-3) * 3600.0 for r in pred_rates])
 
+    shares = normalize_shares(tier_shares) if tier_shares is not None \
+        else None
     C = np.zeros((T, len(options)))
     F = np.zeros((T, len(options)))
     for t in range(T):
@@ -746,32 +790,46 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
             # queueing/hit behaviour follows the *usable* capacity (the
             # cold tier of an inclusive spec); pricing uses the full spec
             size = spec.usable_tb if spec is not None else s
-            if plans is not None and isinstance(k, ResourcePlan) \
-                    and k.is_disaggregated:
+
+            def cell(rate, s=s, k=k, spec=spec, size=size, t=t):
+                """(carbon/request, slo_frac) for this option at an
+                arbitrary cluster rate — evaluated once at the forecast
+                rate for the single-tier solve, and at thinned rates per
+                protected tier for ``tier_shares``."""
+                if plans is not None and isinstance(k, ResourcePlan) \
+                        and k.is_disaggregated:
+                    if spec is not None:
+                        raise ValueError("the storage search does not "
+                                         "support disaggregated "
+                                         "candidates yet")
+                    return _disagg_cell_metrics(
+                        profile, rate, size, k, pred_cis[t], carbon,
+                        slo=slo, model=model)
+                if plans is not None or fleets is not None:
+                    fl = k.serve.fleet if isinstance(k, ResourcePlan) \
+                        else k
+                    c, f = _fleet_cell_metrics(
+                        profile, rate, size, fl, pred_cis[t], carbon,
+                        type_profiles=type_profiles)
+                    divisor = fleet_capacity(fl)
+                else:
+                    c, f = _cluster_cell_metrics(
+                        profile, rate, size, k, pred_cis[t], carbon)
+                    divisor = float(k)
                 if spec is not None:
-                    raise ValueError("the storage search does not support"
-                                     " disaggregated candidates yet")
-                C[t, oi], F[t, oi] = _disagg_cell_metrics(
-                    profile, pred_rates[t], size, k, pred_cis[t], carbon,
-                    slo=slo, model=model)
-                continue
-            if plans is not None or fleets is not None:
-                fl = k.serve.fleet if isinstance(k, ResourcePlan) else k
-                c, f = _fleet_cell_metrics(
-                    profile, pred_rates[t], size, fl, pred_cis[t], carbon,
-                    type_profiles=type_profiles)
-                divisor = fleet_capacity(fl)
+                    cellp = profile.interpolate(rate / divisor, size)
+                    c, f = _storage_cell_adjust(
+                        profile, rate / divisor, spec, pred_cis[t],
+                        carbon, cellp, c, f, divisor, rate,
+                        model, wear_aware)
+                return c, f
+
+            if shares is None:
+                C[t, oi], F[t, oi] = cell(pred_rates[t])
             else:
-                c, f = _cluster_cell_metrics(
-                    profile, pred_rates[t], size, k, pred_cis[t], carbon)
-                divisor = float(k)
-            if spec is not None:
-                cell = profile.interpolate(pred_rates[t] / divisor, size)
-                c, f = _storage_cell_adjust(
-                    profile, pred_rates[t] / divisor, spec, pred_cis[t],
-                    carbon, cell, c, f, divisor, pred_rates[t],
-                    model, wear_aware)
-            C[t, oi], F[t, oi] = c, f
+                C[t, oi] = cell(pred_rates[t])[0]
+                F[t, oi] = _tier_protected_slo(cell, pred_rates[t],
+                                               shares)
 
     res = None
     if transitions is not None:

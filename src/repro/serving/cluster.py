@@ -62,6 +62,7 @@ from __future__ import annotations
 
 import functools
 import hashlib
+import heapq
 import warnings
 import zlib
 from collections import defaultdict
@@ -79,6 +80,7 @@ from repro.core.radix import RadixKVStore
 from repro.core.storage import StorageSpec, TieredKVStore
 from repro.serving.engine import SimResult
 from repro.serving.perfmodel import ServingModel
+from repro.workloads.tenants import DEFAULT_TIER, tier_spec
 
 ROUTERS = ("single", "round_robin", "least_loaded", "cache_affinity")
 
@@ -140,6 +142,64 @@ def hash_ring(n_replicas: int, vnodes: int = _VNODES) -> HashRing:
     ring.points.setflags(write=False)       # shared: guard against mutation
     ring.owners.setflags(write=False)
     return ring
+
+
+def _sim_priority(a: np.ndarray, s: np.ndarray, p: np.ndarray,
+                  pre: np.ndarray, free0: float):
+    """Single-replica priority queue for a multi-tier request stream:
+    the server always picks the lowest ``p`` (ties FIFO by arrival), a
+    non-preemptible job in service runs to completion, and a
+    *preemptible* (scavenger) job is interrupted the moment any
+    higher-priority request arrives — its remaining work re-enters the
+    heap under its original arrival index, so it resumes FIFO within
+    its class (preempt-resume, no work lost).
+
+    ``a`` must be arrival-sorted (the router preserves order within a
+    replica).  Returns ``(server_free_time, finish_times)`` with finish
+    times indexed like ``a``.  This replaces the vectorized Lindley
+    recurrence only when a stream actually mixes tiers — with a single
+    tier the two agree mathematically but round differently, so the
+    caller gates on tier diversity to keep legacy runs bit-identical."""
+    n = len(a)
+    fin = np.empty(n)
+    rem = s.astype(float).copy()
+    al = a.tolist()
+    heap: list = []          # (priority, arrival index)
+    t = float(free0)
+    i = 0                    # next un-enqueued arrival
+    done = 0
+    while done < n:
+        if not heap:
+            t = max(t, al[i])
+            while i < n and al[i] <= t:
+                heapq.heappush(heap, (int(p[i]), i))
+                i += 1
+            continue
+        pr, j = heapq.heappop(heap)
+        end = t + float(rem[j])
+        if pre[j]:
+            preempted = False
+            while i < n and al[i] < end:
+                if int(p[i]) < pr:   # higher priority: seize the server
+                    rem[j] = end - al[i]
+                    t = al[i]
+                    heapq.heappush(heap, (int(p[i]), i))
+                    i += 1
+                    heapq.heappush(heap, (pr, j))
+                    preempted = True
+                    break
+                heapq.heappush(heap, (int(p[i]), i))
+                i += 1
+            if preempted:
+                continue
+        else:
+            while i < n and al[i] <= end:
+                heapq.heappush(heap, (int(p[i]), i))
+                i += 1
+        t = end
+        fin[j] = end
+        done += 1
+    return t, fin
 
 
 @dataclass
@@ -230,9 +290,13 @@ class ClusterEngine:
             raise ValueError("typed storage (StorageSpec) supports the "
                              "shared-store mode only")
         # effective KV-load bandwidth of the bulk tier (equals the
-        # serving model's ssd_read_gbps for the legacy/flat-default path)
-        self._kv_gbps = model.ssd_read_gbps if self.storage is None \
-            else self.storage.cold.dev.read_gbps
+        # serving model's ssd_read_gbps for the legacy/flat-default path);
+        # _kv_degrade < 1 models an injected SSD fault (×1.0 is bit-exact,
+        # so the healthy path is unchanged)
+        self._kv_degrade = 1.0
+        self._kv_gbps = (model.ssd_read_gbps if self.storage is None
+                         else self.storage.cold.dev.read_gbps) \
+            * self._kv_degrade
         self._set_types(types)
         for st in self.stores:      # batched eviction scoring (same victims)
             st.enable_vector_evict()
@@ -539,7 +603,7 @@ class ClusterEngine:
             cache_tb = storage.total_tb
         if storage is not None:
             self.storage = storage
-            self._kv_gbps = storage.cold.dev.read_gbps
+            self._kv_gbps = storage.cold.dev.read_gbps * self._kv_degrade
             if self._tiered:
                 self.stores[0].apply_spec(storage, now, ramp_s=ramp_s,
                                           steps=steps)
@@ -629,6 +693,54 @@ class ClusterEngine:
         self._free = [0.0] * self.n_replicas
 
     # ------------------------------------------------------------------ #
+    def fail_replica(self, i: int, now: float = 0.0) -> AppliedTransition:
+        """Fail-stop loss of replica ``i`` — an *unplanned* availability
+        event, unlike ``apply``'s graceful drains.  The member leaves the
+        serving set (and the ring) immediately: its backlog is abandoned,
+        a partitioned store's entries die with the device (counted in
+        ``dropped_keys``), and surviving entries whose keys remap under
+        the shrunk ring are orphaned in place — *not* migrated — so they
+        cool down and age out (exactly the cold-miss behaviour a real
+        fail-stop produces).  The failure itself is free; the carbon bill
+        arrives when the controller's next ``apply`` boots replacement
+        capacity through the transition machinery.  On a ``DisaggEngine``
+        this fails a *prefill* replica (the store-owning pool)."""
+        if self.n_replicas <= 1:
+            raise ValueError("cannot fail the last replica")
+        i = int(i)
+        if not 0 <= i < self.n_replicas:
+            raise ValueError(f"replica index {i} out of range "
+                             f"(n_replicas={self.n_replicas})")
+        old = self.current_plan()
+        dropped = 0
+        if not self.shared:
+            dead = self.stores.pop(i)
+            dropped = len(dead.entries)
+            dead.stats.evictions += dropped
+            dead.stats.evicted_bytes += dead.used_bytes
+        self._free.pop(i)
+        fleet = [t for j, t in enumerate(self.types) if j != i] \
+            if self.types is not None else None
+        self.n_replicas -= 1
+        if self._ring is not None:
+            self._ring = hash_ring(self.n_replicas)
+        self._set_types(fleet)
+        tr = PlanTransition.diff(old, self.current_plan())
+        return AppliedTransition(tr, dropped_keys=dropped)
+
+    def set_storage_degradation(self, factor: float):
+        """Degrade (or restore, ``factor=1.0``) the bulk KV tier's read
+        bandwidth — an injected SSD fault.  Applies to flat-store KV
+        loads and the tiered store's cold tier; the DRAM mirror of a
+        tiered store is unaffected (that *is* the mitigation)."""
+        factor = float(factor)
+        if factor <= 0.0:
+            raise ValueError("degradation factor must be > 0")
+        self._kv_degrade = factor
+        self._kv_gbps = (self.model.ssd_read_gbps if self.storage is None
+                         else self.storage.cold.dev.read_gbps) * factor
+
+    # ------------------------------------------------------------------ #
     def warm(self, requests: Sequence):
         """Populate the cache(s) without simulating timing; partitioned mode
         routes each context to its owning replica's store (by prefix root
@@ -674,13 +786,27 @@ class ClusterEngine:
         t0 = float(arrival[0])
         self._free = [max(f, t0) for f in self._free]
 
+        # multi-tenant tiers: a stream with >1 distinct tier activates
+        # priority queueing (and the gold no-spill routing rule); the
+        # ubiquitous single-tier stream keeps the exact Lindley path —
+        # the two resolve float rounding differently, so this gate is
+        # what preserves bit-reproducibility of legacy trajectories
+        tiers_seq = [r.tier for r in requests]
+        prio = None
+        if len(set(tiers_seq)) > 1:
+            prio = np.fromiter((tier_spec(t).priority for t in tiers_seq),
+                               np.int64, count=n)
+            preempt = np.fromiter(
+                (tier_spec(t).preemptible for t in tiers_seq),
+                bool, count=n)
+
         self._mark_wear()
         if self.router == "least_loaded":
             assign, reused, ttft, finish_max, kv_load_s = \
                 self._run_sequential(requests, arrival, prompt)
             uncached = prompt - reused
         else:
-            assign = self._route_static(requests, n)
+            assign = self._route_static(requests, n, prio)
             if self._tiered:
                 reused, kv_load_s = self._account_tiered(
                     requests, assign, arrival, ctx, prompt)
@@ -718,6 +844,14 @@ class ClusterEngine:
                     continue
                 a = arrival[idx]
                 s = service[idx]
+                if prio is not None:
+                    f_last, fin = _sim_priority(a, s, prio[idx],
+                                                preempt[idx],
+                                                self._free[k])
+                    ttft[idx] = fin - a
+                    self._free[k] = f_last
+                    finish_max = max(finish_max, f_last)
+                    continue
                 cs = np.cumsum(s)
                 # Lindley recurrence, vectorized: finish_i =
                 #   P_i + max(F0, max_{j<=i} (a_j - P_{j-1}))
@@ -822,6 +956,7 @@ class ClusterEngine:
         emb_cache = self._cache_embodied(cache_tb, duration)
         emb_comp = self.carbon.compute_embodied_g(duration, n_replicas=K,
                                                   types=self.types)
+        tiers_arr, work_arr = _tier_arrays(requests, uncached, out, record)
         return SimResult(
             ttft=ttft if record else np.array([]),
             tpot=tpots if record else np.array([]),
@@ -829,7 +964,8 @@ class ClusterEngine:
             carbon_g=op + emb_cache + emb_comp, operational_g=op,
             embodied_cache_g=emb_cache, embodied_compute_g=emb_comp,
             token_hit_rate=hit_tokens / max(lookup_tokens, 1),
-            gpu_util=util, num_requests=n, n_replicas=K)
+            gpu_util=util, num_requests=n, n_replicas=K,
+            tiers=tiers_arr, work=work_arr)
 
     # ------------------------------------------------------------------ #
     # typed-storage accounting (all no-ops when ``storage is None``)
@@ -884,7 +1020,8 @@ class ClusterEngine:
         st = self.stores[0]
         acct = st.account
         m = self.model
-        bw = [st.read_gbps_for(0) * 1e9, st.read_gbps_for(1) * 1e9]
+        bw = [st.read_gbps_for(0) * 1e9,
+              st.read_gbps_for(1) * 1e9 * self._kv_degrade]
         kv_bpt = m.kv_bytes_per_token
         rets = np.empty(n, dtype=np.int64)
         kv_load = np.empty(n)
@@ -906,8 +1043,14 @@ class ClusterEngine:
         return reused, kv_load
 
     # ------------------------------------------------------------------ #
-    def _route_static(self, requests: Sequence, n: int) -> np.ndarray:
-        """Routers whose decision is known at arrival (vectorizable)."""
+    def _route_static(self, requests: Sequence, n: int,
+                      prio: Optional[np.ndarray] = None) -> np.ndarray:
+        """Routers whose decision is known at arrival (vectorizable).
+        ``prio`` (per-request tier priorities, multi-tier streams only)
+        makes cache_affinity's spill tier-aware: top-priority (gold)
+        requests never spill off their owning replica — affinity, and
+        with it the hit rate, is preserved for the tier with the
+        tightest TTFT budget, while lower tiers absorb the balancing."""
         K = self.n_replicas
         if K == 1:
             return np.zeros(n, dtype=np.int64)
@@ -938,7 +1081,13 @@ class ClusterEngine:
             fairs = [(1.0 + eps) * float(s) / tot for s in self._scales]
         else:
             fairs = [(1.0 + eps) / K] * K
+        top = int(prio.min()) if prio is not None else 0
+        pl = prio.tolist() if prio is not None else None
         for i, k in enumerate(preferred.tolist()):
+            if pl is not None and pl[i] == top:
+                assign[i] = k        # gold sticks to its owner
+                counts[k] += 1
+                continue
             spill = 0
             while counts[k] >= fairs[k] * (i + 1) + 1.0 and spill < K:
                 k = (k + 1) % K
@@ -1029,7 +1178,9 @@ class ClusterEngine:
         if tiered:
             st0 = self.stores[0]
             kv_per_tier = [m.kv_bytes_per_token
-                           / (st0.read_gbps_for(t) * 1e9) for t in (0, 1)]
+                           / (st0.read_gbps_for(t) * 1e9
+                              * (1.0 if t == 0 else self._kv_degrade))
+                           for t in (0, 1)]
         scales = self._scales.tolist()
         hetero = self._hetero
         uscale = self._uniform_scale
@@ -1292,6 +1443,7 @@ class DisaggEngine(ClusterEngine):
         emb_comp = self.carbon.compute_embodied_g(duration,
                                                   types=plan.all_types)
         util = (Kp * util_p + Kd * util_d) / (Kp + Kd)
+        tiers_arr, work_arr = _tier_arrays(requests, uncached, out, record)
         return SimResult(
             ttft=ttft if record else np.array([]),
             tpot=tpots if record else np.array([]),
@@ -1299,7 +1451,22 @@ class DisaggEngine(ClusterEngine):
             carbon_g=op + emb_cache + emb_comp, operational_g=op,
             embodied_cache_g=emb_cache, embodied_compute_g=emb_comp,
             token_hit_rate=hit_tokens / max(lookup_tokens, 1),
-            gpu_util=util, num_requests=n, n_replicas=Kp + Kd)
+            gpu_util=util, num_requests=n, n_replicas=Kp + Kd,
+            tiers=tiers_arr, work=work_arr)
+
+
+def _tier_arrays(requests: Sequence, uncached: np.ndarray,
+                 out: np.ndarray, record: bool):
+    """Per-request tier labels + work weights (uncached prefill and
+    output tokens — what the fleet actually computed) for functional-unit
+    attribution. ``(None, None)`` for the ubiquitous single-tier default
+    stream, so legacy results carry no extra arrays."""
+    if not record:
+        return None, None
+    tl = [r.tier for r in requests]
+    if len(set(tl)) == 1 and tl[0] == DEFAULT_TIER:
+        return None, None
+    return np.array(tl, dtype=object), (uncached + out).astype(float)
 
 
 def _mean_ci(ci_fn: Callable[[float], float], arrival: np.ndarray) -> float:

@@ -44,6 +44,11 @@ class SimResult:
     gpu_util: float
     num_requests: int
     n_replicas: int = 1
+    # per-request tier labels and work weights (uncached prefill + output
+    # tokens), populated only for multi-tier streams — the functional-unit
+    # attribution base for ``per_tier``. None on single-tier runs.
+    tiers: Optional[np.ndarray] = None
+    work: Optional[np.ndarray] = None
 
     @property
     def carbon_per_request_g(self) -> float:
@@ -69,6 +74,75 @@ class SimResult:
         else:
             raise ValueError(f"which must be ttft/tpot/both, got {which!r}")
         return float(ok.mean())
+
+    def per_tier(self, slo: SLO) -> dict:
+        """Functional-unit metrics per SLO tier: request count, SLO
+        attainment against the *tier's own* latency budget, and gCO2e
+        attributed by each request's share of the work (uncached prefill
+        plus output tokens — the tokens the fleet actually computed).
+        Empty dict on single-tier runs where ``tiers`` was not recorded."""
+        if self.tiers is None or not len(self.ttft):
+            return {}
+        from repro.workloads.tenants import tier_slo
+        out = {}
+        total_work = float(self.work.sum()) or 1.0
+        for t in np.unique(self.tiers):
+            mask = self.tiers == t
+            n = int(mask.sum())
+            ts = tier_slo(slo, str(t))
+            ok = (self.ttft[mask] <= ts.ttft_s) \
+                & (self.tpot[mask] <= ts.tpot_s)
+            g = self.carbon_g * float(self.work[mask].sum()) / total_work
+            out[str(t)] = {"requests": n, "slo_frac": float(ok.mean()),
+                           "carbon_g": g,
+                           "g_per_request": g / max(n, 1)}
+        return out
+
+
+def combine_results(a: SimResult, b: SimResult) -> SimResult:
+    """Merge two sequential segment results into one hour-level result —
+    used when a mid-hour event (replica failure, storage degradation)
+    splits the request stream. Totals add; rates are weighted by their
+    natural denominators (tokens looked up -> request count proxy,
+    busy time -> duration)."""
+    if a.num_requests == 0:
+        return b
+    if b.num_requests == 0:
+        return a
+    n = a.num_requests + b.num_requests
+    dur = a.duration_s + b.duration_s
+
+    def _cat(x, y):
+        if x is None and y is None:
+            return None
+        x = x if x is not None else np.array([])
+        y = y if y is not None else np.array([])
+        return np.concatenate([x, y])
+
+    tiers = None
+    work = None
+    if a.tiers is not None or b.tiers is not None:
+        fill_a = np.full(len(a.ttft), "standard", dtype=object)
+        fill_b = np.full(len(b.ttft), "standard", dtype=object)
+        tiers = np.concatenate([a.tiers if a.tiers is not None else fill_a,
+                                b.tiers if b.tiers is not None else fill_b])
+        work = _cat(a.work if a.work is not None else np.ones(len(a.ttft)),
+                    b.work if b.work is not None else np.ones(len(b.ttft)))
+    return SimResult(
+        ttft=np.concatenate([a.ttft, b.ttft]),
+        tpot=np.concatenate([a.tpot, b.tpot]),
+        energy_kwh=a.energy_kwh + b.energy_kwh,
+        duration_s=dur,
+        carbon_g=a.carbon_g + b.carbon_g,
+        operational_g=a.operational_g + b.operational_g,
+        embodied_cache_g=a.embodied_cache_g + b.embodied_cache_g,
+        embodied_compute_g=a.embodied_compute_g + b.embodied_compute_g,
+        token_hit_rate=(a.token_hit_rate * a.num_requests
+                        + b.token_hit_rate * b.num_requests) / max(n, 1),
+        gpu_util=(a.gpu_util * a.duration_s
+                  + b.gpu_util * b.duration_s) / max(dur, 1e-9),
+        num_requests=n, n_replicas=b.n_replicas,
+        tiers=tiers, work=work)
 
 
 class ServingEngine:

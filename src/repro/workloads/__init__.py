@@ -6,6 +6,14 @@ from repro.workloads.agents import AgentLoopWorkload
 from repro.workloads.conversations import ConversationWorkload
 from repro.workloads.documents import DocumentWorkload
 from repro.workloads.request import Request
+from repro.workloads.scenarios import (CISpike, CompositeScenario, Event,
+                                       FlashCrowd, GreenBackfill,
+                                       ReplicaFailure, Scenario,
+                                       StorageDegradation)
+from repro.workloads.tenants import (DEFAULT_TIER, TIERS,
+                                     MultiTenantWorkload, TierSpec,
+                                     multi_tenant, normalize_shares,
+                                     tier_slo, tier_spec)
 
 
 def sample_many(workload, arrivals: Sequence[float]) -> List[Request]:
@@ -21,4 +29,11 @@ def sample_many(workload, arrivals: Sequence[float]) -> List[Request]:
 
 __all__ = ["azure_rate_trace", "ci_trace", "make_poisson_arrivals",
            "AgentLoopWorkload", "ConversationWorkload", "DocumentWorkload",
-           "Request", "sample_many"]
+           "Request", "sample_many",
+           # scenarios
+           "Event", "Scenario", "CompositeScenario", "FlashCrowd",
+           "CISpike", "ReplicaFailure", "StorageDegradation",
+           "GreenBackfill",
+           # multi-tenant tiers
+           "TierSpec", "TIERS", "DEFAULT_TIER", "tier_spec", "tier_slo",
+           "normalize_shares", "MultiTenantWorkload", "multi_tenant"]

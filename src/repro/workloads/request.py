@@ -23,6 +23,13 @@ class Request:
     prefix_blocks: Tuple[str, ...] = ()
     block_tokens: Tuple[int, ...] = ()
 
+    # multi-tenant identity ("" = anonymous single-tenant traffic) and
+    # SLO tier — one of repro.workloads.tenants.TIERS. The default
+    # "standard" keeps un-stamped streams on the legacy single-tier
+    # engine/solver paths.
+    tenant: str = ""
+    tier: str = "standard"
+
     # filled by the engine
     reused_tokens: int = 0
     ttft: float = 0.0

@@ -1,0 +1,253 @@
+"""Composable hostile-traffic scenarios.
+
+A :class:`Scenario` perturbs a day (or multi-day) simulation along
+three orthogonal channels:
+
+  * an **arrival-rate multiplier** per hour (flash crowds),
+  * a **carbon-intensity multiplier** per hour (regional grid spikes),
+  * an **additive arrival rate** per hour computed from the *base*
+    traces (green-window batch backfill), and
+  * a stream of **mid-hour events** — fail-stop replica failures and
+    SSD-tier degradation — that the controller injects into the engine
+    between requests (``GreenCacheController.run_day(scenario=...)``).
+
+Design rules that make the gauntlet a usable regression oracle:
+
+1. **Pure and seedable.** Every scenario is a frozen dataclass; any
+   randomness (e.g. a flash crowd drawing its onset hour) uses a fresh
+   ``np.random.default_rng`` derived from ``(seed, crc32(class name))``
+   inside the method, so repeated ``realize`` calls — and re-constructed
+   scenarios with the same seed — are bit-identical.
+2. **Composition commutes.** Multipliers are multiplied and additive
+   rates are summed, each computed against the *base* trace, so for any
+   two scenarios ``a | b`` and ``b | a`` produce bit-identical traces
+   (IEEE float multiply/add of two terms is commutative).
+3. **Identity is exact.** The neutral channels are ``×1.0`` and
+   ``+0.0``, which are bit-exact on the non-negative traces used here —
+   an empty ``Scenario()`` reproduces the unperturbed run.
+
+Events carry absolute simulation time in seconds; the controller routes
+``fail_replica`` to :meth:`ClusterEngine.fail_replica` and
+``degrade_storage`` to :meth:`ClusterEngine.set_storage_degradation`.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True, order=True)
+class Event:
+    """A mid-simulation fault/recovery point.
+
+    ``kind`` is one of ``fail_replica`` (value = replica index) or
+    ``degrade_storage`` (value = throughput multiplier; 1.0 restores).
+    Ordering is by time, which is how composites merge streams."""
+    t_s: float
+    kind: str = ""
+    value: float = 0.0
+
+
+def _hours(hour, duration_h, H):
+    """Clip an [hour, hour+duration) window to the trace length."""
+    h0 = int(hour)
+    h1 = min(h0 + int(duration_h), H)
+    return max(h0, 0), h1
+
+
+class Scenario:
+    """Neutral base scenario: no perturbation.  Subclasses override any
+    of the four channels; ``realize`` applies them to base traces."""
+
+    name = "identity"
+
+    def rate_mult(self, H: int) -> np.ndarray:
+        return np.ones(H)
+
+    def ci_mult(self, H: int) -> np.ndarray:
+        return np.ones(H)
+
+    def extra_rate(self, H: int, base_rates: np.ndarray,
+                   base_cis: np.ndarray) -> np.ndarray:
+        return np.zeros(H)
+
+    def events(self, H: int) -> Tuple[Event, ...]:
+        return ()
+
+    def realize(self, rates: np.ndarray, cis: np.ndarray):
+        """Perturbed ``(rates, cis, events)`` for the given base traces.
+        Events are returned time-sorted."""
+        rates = np.asarray(rates, dtype=float)
+        cis = np.asarray(cis, dtype=float)
+        H = len(rates)
+        new_rates = rates * self.rate_mult(H) \
+            + self.extra_rate(H, rates, cis)
+        new_cis = cis * self.ci_mult(H)
+        return new_rates, new_cis, tuple(sorted(self.events(H)))
+
+    def __or__(self, other: "Scenario") -> "CompositeScenario":
+        mine = self.parts if isinstance(self, CompositeScenario) \
+            else (self,)
+        theirs = other.parts if isinstance(other, CompositeScenario) \
+            else (other,)
+        return CompositeScenario(mine + theirs)
+
+
+@dataclass(frozen=True)
+class CompositeScenario(Scenario):
+    parts: Tuple[Scenario, ...] = ()
+
+    @property
+    def name(self):  # type: ignore[override]
+        return "+".join(p.name for p in self.parts) or "identity"
+
+    def rate_mult(self, H):
+        m = np.ones(H)
+        for p in self.parts:
+            m = m * p.rate_mult(H)
+        return m
+
+    def ci_mult(self, H):
+        m = np.ones(H)
+        for p in self.parts:
+            m = m * p.ci_mult(H)
+        return m
+
+    def extra_rate(self, H, base_rates, base_cis):
+        x = np.zeros(H)
+        for p in self.parts:
+            x = x + p.extra_rate(H, base_rates, base_cis)
+        return x
+
+    def events(self, H):
+        ev = []
+        for p in self.parts:
+            ev.extend(p.events(H))
+        return tuple(sorted(ev))
+
+
+def _scenario_rng(seed: int, name: str) -> np.random.Generator:
+    return np.random.default_rng([int(seed) & 0xffffffff,
+                                  zlib.crc32(name.encode())])
+
+
+@dataclass(frozen=True)
+class FlashCrowd(Scenario):
+    """Demand surge: arrival rate × ``magnitude`` for ``duration_h``
+    hours.  ``shape="step"`` holds the multiplier flat; ``"spike"``
+    peaks at onset and decays linearly back to 1.  With ``hour=None``
+    the onset is drawn deterministically from ``seed`` (daytime hours,
+    so the surge lands on already-loaded traffic)."""
+
+    hour: int = None  # type: ignore[assignment]
+    duration_h: int = 2
+    magnitude: float = 4.0
+    shape: str = "step"
+    seed: int = 0
+    name: str = field(default="flash_crowd", init=False)
+
+    def _onset(self, H: int) -> int:
+        if self.hour is not None:
+            return int(self.hour)
+        lo, hi = 8, max(H - self.duration_h - 1, 9)
+        return int(_scenario_rng(self.seed, "FlashCrowd")
+                   .integers(lo, hi))
+
+    def rate_mult(self, H):
+        m = np.ones(H)
+        h0, h1 = _hours(self._onset(H), self.duration_h, H)
+        if self.shape == "step":
+            m[h0:h1] = self.magnitude
+        elif self.shape == "spike":
+            n = h1 - h0
+            decay = 1.0 - np.arange(n) / max(n, 1)
+            m[h0:h1] = 1.0 + (self.magnitude - 1.0) * decay
+        else:
+            raise ValueError(f"unknown flash-crowd shape {self.shape!r}")
+        return m
+
+
+@dataclass(frozen=True)
+class CISpike(Scenario):
+    """Regional grid-carbon spike: CI × ``magnitude`` for
+    ``duration_h`` hours (e.g. a coal peaker covering an outage)."""
+
+    hour: int = None  # type: ignore[assignment]
+    duration_h: int = 3
+    magnitude: float = 2.5
+    seed: int = 0
+    name: str = field(default="ci_spike", init=False)
+
+    def ci_mult(self, H):
+        m = np.ones(H)
+        hour = self.hour
+        if hour is None:
+            hour = int(_scenario_rng(self.seed, "CISpike")
+                       .integers(0, max(H - self.duration_h, 1)))
+        h0, h1 = _hours(hour, self.duration_h, H)
+        m[h0:h1] = self.magnitude
+        return m
+
+
+@dataclass(frozen=True)
+class ReplicaFailure(Scenario):
+    """Fail-stop loss of one replica, ``frac`` of the way through
+    ``hour``.  Keys on the dead partition are lost, survivors' remapped
+    keys orphaned in place; capacity returns at the controller's next
+    plan application, priced through the transition machinery."""
+
+    hour: int = 12
+    frac: float = 0.5
+    replica: int = 0
+    name: str = field(default="replica_failure", init=False)
+
+    def events(self, H):
+        if not 0 <= self.hour < H:
+            return ()
+        t = (self.hour + float(self.frac)) * 3600.0
+        return (Event(t, "fail_replica", float(self.replica)),)
+
+
+@dataclass(frozen=True)
+class StorageDegradation(Scenario):
+    """SSD cold-tier slowdown: read throughput × ``factor`` from the
+    start of ``hour`` for ``duration_h`` hours, then restored."""
+
+    hour: int = 10
+    duration_h: int = 4
+    factor: float = 0.25
+    name: str = field(default="storage_degradation", init=False)
+
+    def events(self, H):
+        if not 0 <= self.hour < H:
+            return ()
+        ev = [Event(self.hour * 3600.0, "degrade_storage",
+                    float(self.factor))]
+        end = self.hour + self.duration_h
+        if end < H:
+            ev.append(Event(end * 3600.0, "degrade_storage", 1.0))
+        return tuple(ev)
+
+
+@dataclass(frozen=True)
+class GreenBackfill(Scenario):
+    """Batch/offline jobs backfilling green windows: hours whose *base*
+    CI sits in the lowest ``quantile`` gain ``boost`` × the base rate
+    of extra (typically scavenger-tier) traffic."""
+
+    quantile: float = 0.3
+    boost: float = 0.5
+    name: str = field(default="green_backfill", init=False)
+
+    def extra_rate(self, H, base_rates, base_cis):
+        cut = np.quantile(base_cis, self.quantile)
+        return np.where(base_cis <= cut,
+                        base_rates * self.boost, 0.0)
+
+
+__all__ = ["Event", "Scenario", "CompositeScenario", "FlashCrowd",
+           "CISpike", "ReplicaFailure", "StorageDegradation",
+           "GreenBackfill"]

@@ -1,0 +1,102 @@
+"""End-to-end determinism: two same-seed ``GreenCacheController.run_day``
+invocations must produce identical ``RunResult`` trajectories on every
+engine configuration — cluster, disaggregated, typed tiered storage and
+radix prefix caching — with and without tier shares and scenarios.
+Guards the gauntlet's value as a regression oracle: a nondeterministic
+run cannot anchor a bit-repro row."""
+import numpy as np
+import pytest
+
+from repro.core.carbon import CarbonModel
+from repro.core.controller import GreenCacheController
+from repro.core.profiler import Profile, ProfileCell
+from repro.serving.perfmodel import SERVING_MODELS
+from repro.workloads import FlashCrowd, ReplicaFailure, StorageDegradation
+from repro.workloads.conversations import ConversationWorkload
+
+M = SERVING_MODELS["llama3-70b"]
+CM = CarbonModel()
+
+
+def synth_profile(sizes=(0, 4), rates=(0.2, 0.5, 1.0, 1.5, 2.0)):
+    prof = Profile("m", "t", rates=list(rates), sizes=list(sizes))
+    for r in rates:
+        for s in sizes:
+            slo = float(np.clip(1.1 - 0.25 * r + 0.02 * s, 0.0, 1.0))
+            prof.cells[(r, s)] = ProfileCell(
+                rate=r, cache_tb=s, avg_ttft=0.5 + 0.5 * r, p90_ttft=1 + r,
+                avg_tpot=0.05, p90_tpot=0.08, slo_frac=slo,
+                hit_rate=min(0.1 * s, 0.8),
+                energy_per_req_kwh=2e-4 * (1 + 1 / max(r, 0.1)),
+                duration_per_req_s=1.0 / max(r, 0.1), avg_power_w=800.0,
+                slo_ttft_frac=min(slo * 1.05, 1.0),
+                slo_tpot_frac=min(slo * 1.1, 1.0), avg_out_tokens=400.0)
+    return prof
+
+
+CONFIGS = {
+    "cluster": dict(plans=["cache=auto fleet=l40:2",
+                           "cache=auto fleet=l40:3"]),
+    "disagg": dict(plans=["cache=auto prefill=l40:2 decode=l40:2"]),
+    "tiered_storage": dict(storage=["dram:0.1tb+nvme_gen4:3.9tb"]),
+    "radix_prefix": dict(prefix_caching=True,
+                         plans=["cache=auto fleet=l40:2"]),
+}
+SCENARIO = (FlashCrowd(hour=1, duration_h=1, magnitude=2.0, seed=5)
+            | ReplicaFailure(hour=2, frac=0.5, replica=0)
+            | StorageDegradation(hour=1, duration_h=1, factor=0.3))
+
+
+def _day(cfg, *, seed=7, tiers=None, scenario=None, hours=4):
+    ctl = GreenCacheController(M, synth_profile(), CM, "conversation",
+                               policy="lcs_chat", warm_requests=600,
+                               max_requests_per_hour=120, seed=seed,
+                               tiers=tiers, **cfg)
+    rates = np.array([0.8, 1.2, 1.5, 1.0])[:hours]
+    cis = np.array([10.0, 500.0, 10.0, 500.0])[:hours]
+    return ctl.run_day(lambda s: ConversationWorkload(seed=s), rates, cis,
+                       scenario=scenario)
+
+
+def _identical(a, b):
+    assert len(a.hours) == len(b.hours)
+    for ha, hb in zip(a.hours, b.hours):
+        assert ha.carbon_g == hb.carbon_g
+        assert ha.operational_g == hb.operational_g
+        assert ha.p90_ttft == hb.p90_ttft
+        assert ha.num_requests == hb.num_requests
+        assert ha.cache_tb == hb.cache_tb
+        assert ha.slo_frac == hb.slo_frac
+        assert ha.hit_rate == hb.hit_rate
+        assert ha.plan == hb.plan
+        assert ha.transition == hb.transition
+        assert ha.transition_g == hb.transition_g
+        assert ha.tiers == hb.tiers
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_same_seed_runs_are_identical(name):
+    _identical(_day(CONFIGS[name]), _day(CONFIGS[name]))
+
+
+@pytest.mark.parametrize("name", ["cluster", "disagg"])
+def test_same_seed_tiered_runs_are_identical(name):
+    shares = {"gold": 0.25, "standard": 0.45, "scavenger": 0.30}
+    a = _day(CONFIGS[name], tiers=shares)
+    b = _day(CONFIGS[name], tiers=shares)
+    _identical(a, b)
+    assert a.per_tier and a.per_tier == b.per_tier
+
+
+def test_same_seed_scenario_runs_are_identical():
+    a = _day(CONFIGS["cluster"], scenario=SCENARIO)
+    b = _day(CONFIGS["cluster"], scenario=SCENARIO)
+    _identical(a, b)
+    assert any("fail_replica" in h.transition for h in a.hours)
+
+
+def test_different_seeds_actually_differ():
+    a = _day(CONFIGS["cluster"], seed=7)
+    b = _day(CONFIGS["cluster"], seed=8)
+    assert any(ha.carbon_g != hb.carbon_g
+               for ha, hb in zip(a.hours, b.hours))

@@ -50,3 +50,70 @@ def test_predictor_handles_short_history():
     assert out.shape == (5,) and np.all(out >= 0)
     cp = CIPredictor().fit([100.0])
     assert cp.predict(3).shape == (3,)
+
+
+# ------------------------------------------------------------------ #
+# regime shifts: scenario perturbations are *designed* to be
+# unforecastable (the controller builds predictor histories from the
+# base traces), so forecast error must explode during the shock while
+# the realized system degrades gracefully — finite carbon, no negative
+# queueing, SLO that dips rather than collapses to NaN.
+# ------------------------------------------------------------------ #
+def test_flash_crowd_explodes_forecast_error():
+    from repro.workloads import FlashCrowd
+    base = azure_rate_trace(2.0, days=1, seed=9, noise=0.03)
+    crowd, _, _ = FlashCrowd(hour=10, duration_h=3, magnitude=4.0) \
+        .realize(base, np.full(24, 100.0))
+    hist = azure_rate_trace(2.0, days=3, seed=0, noise=0.03)
+    pred = LoadPredictor().fit(hist).predict(24)
+    calm = [h for h in range(24) if not 10 <= h < 13]
+    err_calm = mape(pred[calm], crowd[calm])
+    err_shock = mape(pred[10:13], crowd[10:13])
+    assert err_calm < 0.15                 # predictor is fine off-shock
+    assert err_shock > 0.5                 # and blindsided during it
+    assert err_shock > 4 * err_calm
+
+
+def test_ci_spike_explodes_ci_forecast_error():
+    from repro.workloads import CISpike
+    base = ci_trace("FR", days=1, seed=7)
+    _, spiked, _ = CISpike(hour=8, duration_h=4, magnitude=3.0) \
+        .realize(np.ones(24), base)
+    pred = CIPredictor().fit(ci_trace("FR", days=6, seed=1)).predict(24)
+    calm = [h for h in range(24) if not 8 <= h < 12]
+    assert mape(pred[8:12], spiked[8:12]) \
+        > 3 * mape(pred[calm], base[calm])
+
+
+def test_controller_degrades_gracefully_under_regime_shift():
+    """The realized run under an unforecast flash crowd keeps finite,
+    non-negative carbon and latencies: mispredicted load lands in the
+    queue, not in the accounting."""
+    from repro.core.carbon import CarbonModel
+    from repro.core.controller import GreenCacheController
+    from repro.serving.perfmodel import SERVING_MODELS
+    from repro.workloads import FlashCrowd
+    from repro.workloads.conversations import ConversationWorkload
+    from tests.test_determinism import synth_profile
+
+    ctl = GreenCacheController(
+        SERVING_MODELS["llama3-70b"], synth_profile(), CarbonModel(),
+        "conversation", policy="lcs_chat", warm_requests=600,
+        max_requests_per_hour=150, seed=3,
+        plans=["cache=auto fleet=l40:2", "cache=auto fleet=l40:3"])
+    rates = np.array([0.8, 1.0, 1.2, 1.0, 0.9])
+    cis = np.array([40.0, 300.0, 40.0, 300.0, 80.0])
+    sc = FlashCrowd(hour=2, duration_h=1, magnitude=5.0)
+    res = ctl.run_day(lambda s: ConversationWorkload(seed=s), rates, cis,
+                      scenario=sc)
+    calm = ctl.run_day(lambda s: ConversationWorkload(seed=s), rates, cis)
+    for h in res.hours:
+        assert np.isfinite(h.carbon_g) and h.carbon_g >= 0.0
+        assert np.isfinite(h.p90_ttft) and h.p90_ttft >= 0.0
+        assert h.num_requests >= 0
+        assert 0.0 <= h.slo_frac <= 1.0
+    shock = res.hours[2]
+    assert shock.rate == pytest.approx(5.0 * calm.hours[2].rate)
+    # the shock hurts (queueing is real) but does not zero attainment
+    assert shock.slo_frac <= calm.hours[2].slo_frac
+    assert shock.p90_ttft >= calm.hours[2].p90_ttft

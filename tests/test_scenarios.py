@@ -1,0 +1,423 @@
+"""Scenario library, multi-tenant tiers, and fault injection: seedable
+bit-reproducibility, commuting composition, priority queueing, and the
+fail-stop / storage-degradation engine hooks."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.carbon import CarbonModel
+from repro.core.policies import POLICIES
+from repro.serving.cluster import _sim_priority, make_cluster
+from repro.serving.engine import combine_results
+from repro.serving.perfmodel import SERVING_MODELS, SLO
+from repro.workloads import (CISpike, CompositeScenario, Event, FlashCrowd,
+                             GreenBackfill, MultiTenantWorkload,
+                             ReplicaFailure, Scenario, StorageDegradation,
+                             make_poisson_arrivals, normalize_shares,
+                             sample_many, tier_slo, tier_spec)
+from repro.workloads.conversations import ConversationWorkload
+
+M = SERVING_MODELS["llama3-70b"]
+CM = CarbonModel()
+H = 24
+BASE_RATES = 0.8 + 0.4 * np.sin(np.linspace(0, 2 * np.pi, H))
+BASE_CIS = 80.0 + 60.0 * np.cos(np.linspace(0, 2 * np.pi, H))
+
+SCENARIOS = [
+    Scenario(),
+    FlashCrowd(hour=5, duration_h=3, magnitude=3.0),
+    FlashCrowd(hour=None, seed=7, shape="spike"),
+    CISpike(hour=2, duration_h=4, magnitude=2.0),
+    CISpike(hour=None, seed=3),
+    ReplicaFailure(hour=10, frac=0.25, replica=1),
+    StorageDegradation(hour=8, duration_h=3, factor=0.2),
+    GreenBackfill(quantile=0.25, boost=0.4),
+]
+
+
+def _realized(sc, rates=BASE_RATES, cis=BASE_CIS):
+    r, c, ev = sc.realize(rates, cis)
+    return r, c, ev
+
+
+# ------------------------------------------------------------------ #
+# scenario channels
+# ------------------------------------------------------------------ #
+def test_identity_scenario_is_bit_exact():
+    r, c, ev = _realized(Scenario())
+    assert np.array_equal(r, BASE_RATES) and np.array_equal(c, BASE_CIS)
+    assert ev == ()
+
+
+def test_flash_crowd_step_and_spike_shapes():
+    step = FlashCrowd(hour=5, duration_h=3, magnitude=3.0).rate_mult(H)
+    assert np.array_equal(np.flatnonzero(step != 1.0), [5, 6, 7])
+    assert np.all(step[5:8] == 3.0)
+    spike = FlashCrowd(hour=5, duration_h=3, magnitude=3.0,
+                       shape="spike").rate_mult(H)
+    assert spike[5] == 3.0 and spike[5] > spike[6] > spike[7] >= 1.0
+    with pytest.raises(ValueError):
+        FlashCrowd(hour=5, shape="sawtooth").rate_mult(H)
+
+
+def test_flash_crowd_window_clips_to_trace():
+    m = FlashCrowd(hour=22, duration_h=6, magnitude=2.0).rate_mult(H)
+    assert np.all(m[22:] == 2.0) and np.all(m[:22] == 1.0)
+
+
+def test_random_onset_lands_in_daytime_and_is_seed_stable():
+    sc = FlashCrowd(hour=None, duration_h=2, seed=9)
+    onsets = {int(np.flatnonzero(sc.rate_mult(H) != 1.0)[0])
+              for _ in range(5)}
+    assert len(onsets) == 1                      # pure: no hidden state
+    assert 8 <= onsets.pop() < H - 2
+    other = FlashCrowd(hour=None, duration_h=2, seed=10)
+    assert any(not np.array_equal(
+        FlashCrowd(hour=None, duration_h=2, seed=s).rate_mult(H),
+        sc.rate_mult(H)) for s in range(20)) or \
+        np.array_equal(other.rate_mult(H), sc.rate_mult(H))
+
+
+def test_ci_spike_scales_only_ci():
+    r, c, ev = _realized(CISpike(hour=2, duration_h=4, magnitude=2.0))
+    assert np.array_equal(r, BASE_RATES)
+    assert np.array_equal(c[2:6], BASE_CIS[2:6] * 2.0)
+    assert np.array_equal(c[:2], BASE_CIS[:2])
+    assert ev == ()
+
+
+def test_replica_failure_event_time_and_clipping():
+    (ev,) = ReplicaFailure(hour=10, frac=0.25, replica=1).events(H)
+    assert ev == Event(10.25 * 3600.0, "fail_replica", 1.0)
+    assert ReplicaFailure(hour=30).events(H) == ()
+
+
+def test_storage_degradation_emits_degrade_then_restore():
+    ev = StorageDegradation(hour=8, duration_h=3, factor=0.2).events(H)
+    assert ev == (Event(8 * 3600.0, "degrade_storage", 0.2),
+                  Event(11 * 3600.0, "degrade_storage", 1.0))
+    # window running off the end of the trace never restores
+    ev = StorageDegradation(hour=22, duration_h=6, factor=0.2).events(H)
+    assert len(ev) == 1
+
+
+def test_green_backfill_targets_lowest_ci_hours():
+    x = GreenBackfill(quantile=0.25, boost=0.4).extra_rate(
+        H, BASE_RATES, BASE_CIS)
+    cut = np.quantile(BASE_CIS, 0.25)
+    assert np.all(x[BASE_CIS <= cut] > 0)
+    assert np.all(x[BASE_CIS > cut] == 0.0)
+    np.testing.assert_array_equal(
+        x[BASE_CIS <= cut], BASE_RATES[BASE_CIS <= cut] * 0.4)
+
+
+# ------------------------------------------------------------------ #
+# property: bit-reproducible from seed; composition commutes
+# ------------------------------------------------------------------ #
+def _same_realization(a, b):
+    ra, ca, ea = _realized(a)
+    rb, cb, eb = _realized(b)
+    return np.array_equal(ra, rb) and np.array_equal(ca, cb) and ea == eb
+
+
+@pytest.mark.parametrize("sc", SCENARIOS, ids=lambda s: s.name)
+def test_scenarios_bit_reproducible_from_seed(sc):
+    """Same scenario object realized twice, and an identically-constructed
+    clone, produce byte-identical traces and event streams."""
+    assert _same_realization(sc, sc)
+    clone = copy.deepcopy(sc)
+    assert _same_realization(sc, clone)
+
+
+@pytest.mark.parametrize("i", range(len(SCENARIOS)))
+@pytest.mark.parametrize("j", range(len(SCENARIOS)))
+def test_composition_commutes(i, j):
+    a, b = SCENARIOS[i], SCENARIOS[j]
+    assert _same_realization(a | b, b | a)
+
+
+def test_composition_associates_and_flattens():
+    a, b, c = SCENARIOS[1], SCENARIOS[3], SCENARIOS[6]
+    left = (a | b) | c
+    right = a | (b | c)
+    assert isinstance(left, CompositeScenario)
+    assert len(left.parts) == len(right.parts) == 3
+    assert _same_realization(left, right)
+    assert left.name == "flash_crowd+ci_spike+storage_degradation"
+
+
+def test_composite_merges_event_streams_sorted():
+    sc = StorageDegradation(hour=8, duration_h=3) | \
+        ReplicaFailure(hour=9, frac=0.5)
+    _, _, ev = _realized(sc)
+    assert [e.kind for e in ev] == ["degrade_storage", "fail_replica",
+                                   "degrade_storage"]
+    assert list(ev) == sorted(ev)
+
+
+def test_hypothesis_property_seed_reproducibility():
+    """Property-based sweep over (seed, hour, magnitude) — uses
+    hypothesis when the container has it, otherwise a deterministic
+    grid covering the same property."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(seed=st.integers(0, 2**32 - 1),
+               hour=st.one_of(st.none(), st.integers(0, 30)),
+               mag=st.floats(1.0, 10.0, allow_nan=False))
+    @hyp.settings(max_examples=50, deadline=None)
+    def prop(seed, hour, mag):
+        a = FlashCrowd(hour=hour, magnitude=mag, seed=seed)
+        b = FlashCrowd(hour=hour, magnitude=mag, seed=seed)
+        assert _same_realization(a, b)
+        c = CISpike(hour=None, seed=seed)
+        assert _same_realization(a | c, c | a)
+
+    prop()
+
+
+def test_grid_property_seed_reproducibility():
+    """The hypothesis property above, hand-rolled so it always runs
+    (the container may not ship hypothesis)."""
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        seed = int(rng.integers(0, 2**32))
+        hour = None if rng.random() < 0.5 else int(rng.integers(0, 30))
+        mag = float(rng.uniform(1.0, 10.0))
+        a = FlashCrowd(hour=hour, magnitude=mag, seed=seed)
+        b = FlashCrowd(hour=hour, magnitude=mag, seed=seed)
+        assert _same_realization(a, b)
+        c = CISpike(hour=None, seed=seed)
+        assert _same_realization(a | c, c | a)
+
+
+# ------------------------------------------------------------------ #
+# multi-tenant tiers
+# ------------------------------------------------------------------ #
+def test_tier_registry_and_slo_scaling():
+    gold, scav = tier_spec("gold"), tier_spec("scavenger")
+    assert gold.priority < scav.priority
+    assert gold.protected and not scav.protected
+    assert scav.preemptible and not gold.preemptible
+    base = SLO(2.0, 0.1)
+    assert tier_slo(base, "gold") is base          # 1.0 scales: identity
+    s = tier_slo(base, "scavenger")
+    assert s.ttft_s == 12.0 and s.tpot_s == pytest.approx(0.6)
+    with pytest.raises(ValueError):
+        tier_spec("platinum")
+
+
+def test_normalize_shares_validation():
+    n = normalize_shares({"gold": 1.0, "standard": 3.0})
+    assert n["gold"] == pytest.approx(0.25)
+    assert sum(n.values()) == pytest.approx(1.0)
+    with pytest.raises(ValueError):
+        normalize_shares({"platinum": 1.0})
+    with pytest.raises(ValueError):
+        normalize_shares({"gold": 0.0})
+
+
+def test_multi_tenant_stamping_is_seeded_and_share_accurate():
+    shares = {"gold": 0.2, "standard": 0.5, "scavenger": 0.3}
+    arr = np.sort(np.random.default_rng(1).uniform(0, 3600, 4000))
+
+    def stamped(seed, order=shares):
+        wl = MultiTenantWorkload(ConversationWorkload(seed=seed), order,
+                                 seed=seed)
+        return sample_many(wl, arr)
+
+    a, b = stamped(5), stamped(5)
+    assert [r.tier for r in a] == [r.tier for r in b]
+    assert [r.tenant for r in a] == [r.tenant for r in b]
+    # share-stamping independent of dict insertion order
+    rev = dict(reversed(list(shares.items())))
+    c = stamped(5, order=rev)
+    assert [r.tier for r in a] == [r.tier for r in c]
+    frac = np.mean([r.tier == "gold" for r in a])
+    assert frac == pytest.approx(0.2, abs=0.03)
+    assert all(r.tenant.startswith(r.tier) for r in a)
+
+
+# ------------------------------------------------------------------ #
+# priority queueing core
+# ------------------------------------------------------------------ #
+def test_priority_sim_gold_preempts_scavenger():
+    # scavenger starts at 0 (2.0 s service), gold arrives at 0.5 (1.0 s):
+    # gold preempts, finishes at 1.5; scavenger resumes, finishes at 3.0
+    a = np.array([0.0, 0.5])
+    s = np.array([2.0, 1.0])
+    prio = np.array([2, 0])
+    pre = np.array([True, False])
+    free, fin = _sim_priority(a, s, prio, pre, 0.0)
+    assert fin[1] == pytest.approx(1.5)
+    assert fin[0] == pytest.approx(3.0)
+    assert free == pytest.approx(3.0)
+
+
+def test_priority_sim_non_preemptible_runs_to_completion():
+    # standard (non-preemptible) at 0; gold at 0.5 must wait for it
+    a = np.array([0.0, 0.5])
+    s = np.array([2.0, 1.0])
+    prio = np.array([1, 0])
+    pre = np.array([False, False])
+    _, fin = _sim_priority(a, s, prio, pre, 0.0)
+    assert fin[0] == pytest.approx(2.0)
+    assert fin[1] == pytest.approx(3.0)
+
+
+def test_priority_sim_matches_fifo_for_uniform_tier():
+    rng = np.random.default_rng(3)
+    a = np.sort(rng.uniform(0, 100, 200))
+    s = rng.uniform(0.1, 1.5, 200)
+    prio = np.zeros(200, dtype=int)
+    pre = np.zeros(200, dtype=bool)
+    _, fin = _sim_priority(a, s, prio, pre, 0.0)
+    # classic Lindley recurrence
+    free, exp = 0.0, []
+    for ai, si in zip(a, s):
+        start = max(ai, free)
+        free = start + si
+        exp.append(free)
+    np.testing.assert_allclose(fin, exp, atol=1e-9)
+
+
+def _tiered_requests(n=3000, rate=1.2, seed=2):
+    wl = MultiTenantWorkload(
+        ConversationWorkload(seed=seed),
+        {"gold": 0.25, "standard": 0.45, "scavenger": 0.30}, seed=seed)
+    arr = make_poisson_arrivals(np.full(48, rate), seed=seed + 1,
+                                max_requests=n)
+    return sample_many(wl, arr)
+
+
+def test_cluster_priority_protects_gold_ttft():
+    reqs = _tiered_requests()
+    eng = make_cluster(M, CM, cache_tb=2.0, policy=POLICIES["lcs_chat"],
+                       n_replicas=2, router="cache_affinity")
+    eng.warm(reqs[:1500])
+    res = eng.run(reqs[1500:], ci_fn=lambda t: 100.0, cache_tb=2.0)
+    assert res.tiers is not None and res.work is not None
+    pt = res.per_tier(SLO(2.5, 0.2))
+    assert set(pt) == {"gold", "standard", "scavenger"}
+    gold = res.ttft[res.tiers == "gold"].mean()
+    scav = res.ttft[res.tiers == "scavenger"].mean()
+    assert gold <= scav + 1e-9
+    # work-weighted carbon attribution partitions the total exactly
+    assert sum(v["carbon_g"] for v in pt.values()) == \
+        pytest.approx(res.carbon_g, rel=1e-12)
+
+
+def test_single_tier_run_records_no_tier_arrays():
+    wl = ConversationWorkload(seed=2)
+    arr = make_poisson_arrivals(np.full(8, 1.0), seed=3, max_requests=400)
+    reqs = sample_many(wl, arr)
+    eng = make_cluster(M, CM, cache_tb=1.0, policy=POLICIES["lcs_chat"],
+                       n_replicas=2, router="cache_affinity")
+    res = eng.run(reqs, ci_fn=lambda t: 100.0, cache_tb=1.0)
+    assert res.tiers is None and res.work is None
+    assert res.per_tier(SLO(2.5, 0.2)) == {}
+
+
+def test_combine_results_weighted_merge():
+    reqs = _tiered_requests(n=1200)
+    eng = make_cluster(M, CM, cache_tb=1.0, policy=POLICIES["lcs_chat"],
+                       n_replicas=2, router="cache_affinity")
+    half = len(reqs) // 2
+    a = eng.run(reqs[:half], ci_fn=lambda t: 100.0, cache_tb=1.0)
+    b = eng.run(reqs[half:], ci_fn=lambda t: 100.0, cache_tb=1.0)
+    m = combine_results(a, b)
+    assert m.num_requests == a.num_requests + b.num_requests
+    assert m.carbon_g == pytest.approx(a.carbon_g + b.carbon_g)
+    assert len(m.ttft) == len(a.ttft) + len(b.ttft)
+    assert len(m.tiers) == len(m.ttft) and len(m.work) == len(m.ttft)
+    exp_hit = (a.token_hit_rate * a.num_requests
+               + b.token_hit_rate * b.num_requests) / m.num_requests
+    assert m.token_hit_rate == pytest.approx(exp_hit)
+    empty = eng.run([], ci_fn=lambda t: 100.0, cache_tb=1.0)
+    assert combine_results(empty, a) is a
+    assert combine_results(a, empty) is a
+
+
+# ------------------------------------------------------------------ #
+# fail-stop and storage degradation
+# ------------------------------------------------------------------ #
+def _partitioned_cluster(n_replicas=3, cache_tb=1.5):
+    return make_cluster(M, CM, cache_tb=cache_tb,
+                        policy=POLICIES["lcs_chat"],
+                        n_replicas=n_replicas, router="cache_affinity",
+                        partitioned=True)
+
+
+def _ledger_ok(eng):
+    return all(st.used_bytes
+               == sum(e.size_bytes for e in st.entries.values())
+               for st in eng.stores)
+
+
+def test_fail_replica_partitioned_drops_keys_ledger_consistent():
+    eng = _partitioned_cluster()
+    reqs = _tiered_requests(n=2500)
+    eng.warm(reqs[:2000])
+    before_entries = sum(len(st.entries) for st in eng.stores)
+    dead = eng.stores[1]
+    dead_keys = len(dead.entries)
+    assert dead_keys > 0
+    tr = eng.fail_replica(1, now=0.0)
+    assert eng.n_replicas == 2 and len(eng.stores) == 2
+    assert tr.dropped_keys == dead_keys
+    assert sum(len(st.entries) for st in eng.stores) \
+        == before_entries - dead_keys
+    assert _ledger_ok(eng)
+    # the engine still serves, and the ledger stays consistent after
+    res = eng.run(reqs[2000:], ci_fn=lambda t: 100.0, cache_tb=1.0)
+    assert res.num_requests == 500 and np.isfinite(res.carbon_g)
+    assert _ledger_ok(eng)
+
+
+def test_fail_replica_transition_diff_records_ring_shrink():
+    eng = _partitioned_cluster()
+    tr = eng.fail_replica(2, now=100.0)
+    assert tr.transition.ring_from == 3
+    assert tr.transition.ring_to == 2
+
+
+def test_fail_replica_guards():
+    eng = _partitioned_cluster(n_replicas=2)
+    with pytest.raises(ValueError):
+        eng.fail_replica(5)
+    eng.fail_replica(0)
+    with pytest.raises(ValueError):
+        eng.fail_replica(0)            # last replica cannot fail
+
+
+def test_fail_replica_shared_store_keeps_entries():
+    eng = make_cluster(M, CM, cache_tb=2.0, policy=POLICIES["lcs_chat"],
+                       n_replicas=3, router="cache_affinity")
+    reqs = _tiered_requests(n=1500)
+    eng.warm(reqs[:1000])
+    before = sum(len(st.entries) for st in eng.stores)
+    tr = eng.fail_replica(0)
+    assert tr.dropped_keys == 0        # shared store survives the member
+    assert sum(len(st.entries) for st in eng.stores) == before
+    assert eng.n_replicas == 2
+
+
+def test_storage_degradation_slows_kv_loads_and_restores():
+    def p90(factor):
+        eng = make_cluster(M, CM, cache_tb=8.0,
+                           policy=POLICIES["lcs_chat"], n_replicas=2,
+                           router="cache_affinity")
+        if factor is not None:
+            eng.set_storage_degradation(factor)
+        reqs = [copy.copy(r) for r in _tiered_requests(n=2400, rate=1.5)]
+        eng.warm(reqs[:1800])
+        res = eng.run(reqs[1800:], ci_fn=lambda t: 100.0, cache_tb=8.0)
+        return res.p90("ttft")
+
+    base, degraded, restored = p90(None), p90(0.1), p90(1.0)
+    assert degraded > base
+    assert restored == base            # factor=1.0 is bit-exact
+    eng = _partitioned_cluster()
+    with pytest.raises(ValueError):
+        eng.set_storage_degradation(0.0)
