@@ -42,6 +42,7 @@ MODULES = [
     "scenarios",
     "storage_tiers",
     "prefix_sharing",
+    "georouting",
     "roofline_report",
 ]
 

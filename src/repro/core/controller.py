@@ -81,12 +81,22 @@ class HourRecord:
     # g_per_request}}`` (``SimResult.per_tier``); None on single-tier
     # hours, so legacy records are unchanged
     tiers: Optional[Dict] = None
+    # per-tenant chargeback (``SimResult.per_tenant``): ``{tenant:
+    # {tier, requests, slo_frac, carbon_g, g_per_request}}`` whose
+    # carbon_g values partition the hour's bill exactly; None when the
+    # stream carried no tenant identity
+    tenants: Optional[Dict] = None
 
 
 @dataclass
 class RunResult:
     name: str
     hours: List[HourRecord]
+    # geo-distributed runs (``run_day(regions=...)``): the per-region
+    # day results keyed by region name. The top-level ``hours`` are then
+    # the global (combined) records, and the per-region carbon_g values
+    # partition each global hour's bill exactly. None on single-site runs.
+    regions: Optional[Dict[str, "RunResult"]] = None
 
     @property
     def total_carbon_g(self) -> float:
@@ -138,6 +148,29 @@ class RunResult:
             for t, d in h.tiers.items():
                 a = agg.setdefault(t, {"requests": 0, "carbon_g": 0.0,
                                        "_ok": 0.0})
+                a["requests"] += d["requests"]
+                a["carbon_g"] += d["carbon_g"]
+                a["_ok"] += d["slo_frac"] * d["requests"]
+        for a in agg.values():
+            n = max(a["requests"], 1)
+            a["slo_frac"] = a.pop("_ok") / n
+            a["g_per_request"] = a["carbon_g"] / n
+        return agg
+
+    @property
+    def per_tenant(self) -> Dict:
+        """Day-level chargeback per tenant: request count, attainment
+        against the tenant's tier SLO, and the gCO2e invoice (hourly
+        exact partitions summed — the day's invoices add up to the sum
+        of the tenant-carrying hours' bills).  Empty when no hour
+        carried tenant identity."""
+        agg: Dict[str, Dict[str, float]] = {}
+        for h in self.hours:
+            if not h.tenants:
+                continue
+            for t, d in h.tenants.items():
+                a = agg.setdefault(t, {"tier": d["tier"], "requests": 0,
+                                       "carbon_g": 0.0, "_ok": 0.0})
                 a["requests"] += d["requests"]
                 a["carbon_g"] += d["carbon_g"]
                 a["_ok"] += d["slo_frac"] * d["requests"]
@@ -230,7 +263,9 @@ class GreenCacheController:
                  storage=None, wear_aware: bool = True,
                  admission=None, prefix_caching: bool = False,
                  tiers: Optional[Dict[str, float]] = None,
-                 tier_aware_solver: bool = True):
+                 tier_aware_solver: bool = True,
+                 tier_cache_weights: Union[bool, Dict[str, float],
+                                           None] = None):
         self.model = model
         self.profile = profile
         self.carbon = carbon
@@ -249,6 +284,22 @@ class GreenCacheController:
         self.tier_shares = normalize_shares(tiers) if tiers is not None \
             else None
         self.tier_aware_solver = tier_aware_solver
+        # tier-aware cache eviction: ``True`` adopts the standing
+        # TierSpec.cache_weight contract, a dict gives explicit
+        # ``{tier: weight}`` keep-priorities; either wraps the
+        # replacement policy with ``tier_weighted`` and threads the
+        # weights into the engines' accounting, so scavenger churn
+        # cannot flush a gold working set.  None/False (default) keeps
+        # every score and account call bit-identical to the unweighted
+        # path.
+        if tier_cache_weights:
+            from repro.workloads.tenants import default_cache_weights
+            self.tier_weights: Optional[Dict[str, float]] = \
+                dict(tier_cache_weights) \
+                if isinstance(tier_cache_weights, dict) \
+                else default_cache_weights()
+        else:
+            self.tier_weights = None
         # typed-storage search: candidate StorageSpecs (or spec strings)
         # the solver sizes alongside the plan candidates; None keeps the
         # legacy flat-SSD size grid (bit-stable).  All candidates must
@@ -380,6 +431,9 @@ class GreenCacheController:
         if self.tier_shares is not None and engine == "legacy":
             raise ValueError("engine='legacy' has no priority queueing; "
                              "multi-tenant tiers need the cluster engine")
+        if self.tier_weights is not None and engine == "legacy":
+            raise ValueError("engine='legacy' has no tier accounting; "
+                             "tier_cache_weights needs the cluster engine")
 
     def _resolved(self, plan: ResourcePlan, cache_tb: float,
                   storage: Optional[StorageSpec] = None) -> ResourcePlan:
@@ -404,13 +458,69 @@ class GreenCacheController:
         return ResourcePlan(float(cache_tb), tuple(pools),
                             storage=storage)
 
+    def _policy_fn(self):
+        """The replacement-policy callable run_day's stores score with:
+        the registry policy, wrapped with the tier keep-priorities when
+        ``tier_cache_weights`` is active (``tier_weighted`` is memoized,
+        so the wrapper keeps its vectorized twin registered)."""
+        base = POLICIES[self.policy]
+        if self.tier_weights is None:
+            return base
+        from repro.core.policies import tier_weighted
+        return tier_weighted(base)
+
+    def _build_store(self, max_tb: float,
+                     warm_spec: Optional[StorageSpec]) -> KVStore:
+        """One region's KV store at warm (maximum) capacity — typed
+        tiers when the storage search is on, radix when prefix caching
+        is on, flat otherwise."""
+        pol = self._policy_fn()
+        if warm_spec is not None and warm_spec.is_tiered:
+            store: KVStore = TieredKVStore(
+                warm_spec, pol, self.model.kv_bytes_per_token,
+                admission=self.admission)
+        else:
+            if self.prefix_caching:
+                from repro.core.radix import RadixKVStore
+                store = RadixKVStore(max_tb * 1e12, pol,
+                                     self.model.kv_bytes_per_token)
+            else:
+                store = KVStore(max_tb * 1e12, pol,
+                                self.model.kv_bytes_per_token)
+            store.spec = warm_spec
+            store.admission = self.admission
+        return store
+
+    def _build_engine(self, store: KVStore, fixed_plan: ResourcePlan,
+                      max_tb: float, *, disagg: bool, homo_ref: bool):
+        if self.engine_kind == "legacy":
+            return ServingEngine(self.model, store, self.carbon)
+        if disagg:
+            return DisaggEngine(self.model, store, self.carbon,
+                                self._resolved(fixed_plan, max_tb),
+                                transitions=self.transitions,
+                                wear_aware=self.wear_aware,
+                                tier_weights=self.tier_weights)
+        # homogeneous reference candidates start untyped (the seed
+        # configuration); the first apply() types them as all-l40,
+        # which is bit-identical (tested)
+        return ClusterEngine(
+            self.model, store, self.carbon,
+            n_replicas=fixed_plan.prefill.n_replicas,
+            router=self.router,
+            types=None if homo_ref else fixed_plan.serve.fleet,
+            balance_eps=self.balance_eps,
+            transitions=self.transitions,
+            wear_aware=self.wear_aware,
+            tier_weights=self.tier_weights)
+
     # ------------------------------------------------------------------ #
     def run_day(self, workload_factory: Callable, rate_trace: np.ndarray,
                 ci_trace: np.ndarray, *,
                 history_days: int = 3,
                 rate_history: Optional[np.ndarray] = None,
                 ci_history: Optional[np.ndarray] = None,
-                scenario=None) -> RunResult:
+                scenario=None, regions=None, geo=None) -> RunResult:
         """Simulate 24 h (len(rate_trace) hours) of serving with hourly
         decisions. Histories default to noisy repeats of the day (the paper
         feeds 3 days of history to the predictors).
@@ -423,7 +533,23 @@ class GreenCacheController:
         events (replica failures, storage degradation) split the hour's
         request stream at the event time; recovery happens through the
         next plan application.  ``scenario=None`` (and the identity
-        scenario) bit-reproduce the unperturbed trajectory."""
+        scenario) bit-reproduce the unperturbed trajectory.
+
+        ``regions`` (a sequence of ``repro.serving.regions.Region``)
+        switches to geo-distributed serving: one engine per region, the
+        request stream split hourly by the carbon-aware global router
+        configured via ``geo`` (a ``repro.core.georouter
+        .GeoRoutingConfig``; default follow-the-green).  The returned
+        ``RunResult`` then carries global hours plus ``.regions``
+        per-region day results; a single region bit-reproduces this
+        single-site path."""
+        if regions is not None:
+            return self._run_geo_day(
+                workload_factory, rate_trace, ci_trace, regions, geo,
+                history_days=history_days, rate_history=rate_history,
+                ci_history=ci_history, scenario=scenario)
+        if geo is not None:
+            raise ValueError("geo= (a GeoRoutingConfig) needs regions=")
         base_rates = np.asarray(rate_trace, dtype=float)
         base_cis = np.asarray(ci_trace, dtype=float)
         events = ()
@@ -456,44 +582,14 @@ class GreenCacheController:
             warm_spec = max(self.storage_choices,
                             key=lambda s: s.total_tb)
             max_tb = warm_spec.total_tb
-        if warm_spec is not None and warm_spec.is_tiered:
-            store: KVStore = TieredKVStore(
-                warm_spec, POLICIES[self.policy],
-                self.model.kv_bytes_per_token, admission=self.admission)
-        else:
-            if self.prefix_caching:
-                from repro.core.radix import RadixKVStore
-                store = RadixKVStore(max_tb * 1e12, POLICIES[self.policy],
-                                     self.model.kv_bytes_per_token)
-            else:
-                store = KVStore(max_tb * 1e12, POLICIES[self.policy],
-                                self.model.kv_bytes_per_token)
-            store.spec = warm_spec
-            store.admission = self.admission
+        store = self._build_store(max_tb, warm_spec)
         # fixed modes (and the pre-solve warm window) run the
         # largest-capacity candidate plan
         fixed_plan = max(self.plan_choices, key=lambda p: p.capacity)
-        fixed_n = fixed_plan.prefill.n_replicas
         co_decide = len(self.plan_choices) > 1
-        if self.engine_kind == "legacy":
-            engine: Union[ServingEngine, ClusterEngine] = \
-                ServingEngine(self.model, store, self.carbon)
-        elif self.disagg:
-            engine = DisaggEngine(self.model, store, self.carbon,
-                                  self._resolved(fixed_plan, max_tb),
-                                  transitions=self.transitions,
-                                  wear_aware=self.wear_aware)
-        else:
-            # homogeneous reference candidates start untyped (the seed
-            # configuration); the first apply() types them as all-l40,
-            # which is bit-identical (tested)
-            engine = ClusterEngine(
-                self.model, store, self.carbon, n_replicas=fixed_n,
-                router=self.router,
-                types=None if self.homo_ref else fixed_plan.serve.fleet,
-                balance_eps=self.balance_eps,
-                transitions=self.transitions,
-                wear_aware=self.wear_aware)
+        engine: Union[ServingEngine, ClusterEngine] = self._build_engine(
+            store, fixed_plan, max_tb, disagg=self.disagg,
+            homo_ref=self.homo_ref)
         wl = workload_factory(self.seed)
         if self.tier_shares is not None \
                 and not isinstance(wl, MultiTenantWorkload):
@@ -618,7 +714,8 @@ class GreenCacheController:
                 transition_g=tr_g, transition=tr_str,
                 written_gb=(sum(st.stats.written_bytes
                                 for st in stores) - w0) / 1e9,
-                tiers=res.per_tier(self.slo) or None))
+                tiers=res.per_tier(self.slo) or None,
+                tenants=res.per_tenant(self.slo) or None))
 
             # online predictor updates (paper §5.3)
             load_pred.update(lam)
@@ -628,6 +725,408 @@ class GreenCacheController:
         # checks after injected failures, stats, wear clocks)
         self.last_engine = engine
         return RunResult(self.mode, hours)
+
+    # ------------------------------------------------------------------ #
+    def _run_geo_day(self, workload_factory: Callable, rate_trace,
+                     ci_trace, regions, geo, *, history_days: int = 3,
+                     rate_history=None, ci_history=None,
+                     scenario=None) -> RunResult:
+        """Geo-distributed ``run_day``: one engine per region behind the
+        deterministic global router (``repro.serving.regions.GeoCluster``
+        + ``repro.core.georouter``).  Structured as the single-site loop
+        with every per-site step repeated per region; each ``R == 1``
+        gate short-circuits to the exact single-site arithmetic, which
+        is what makes the one-region bit-reproduction test hold.
+        Scenario fault events land on the first region (the
+        ``ZoneFailure`` target); the global router resplits around the
+        lost capacity."""
+        import functools
+        from types import SimpleNamespace
+        from repro.core.georouter import (GeoRoutingConfig, apply_capacity,
+                                          eligible_mask, route_weights)
+        from repro.serving.engine import combine_results
+        from repro.serving.regions import (GeoCluster, GeoHourLedger,
+                                           coerce_regions)
+        from repro.workloads.tenants import TIERS
+
+        regions = coerce_regions(regions)
+        cfg = GeoRoutingConfig(policy=geo) if isinstance(geo, str) \
+            else (geo if geo is not None else GeoRoutingConfig())
+        R = len(regions)
+        if self.engine_kind == "legacy":
+            raise ValueError("engine='legacy' cannot host regions= (one "
+                             "cluster engine per region)")
+
+        base_rates = np.asarray(rate_trace, dtype=float)
+        base_cis = np.asarray(ci_trace, dtype=float)
+        events = ()
+        if scenario is not None:
+            rate_trace, ci_trace, events = scenario.realize(base_rates,
+                                                            base_cis)
+        H = len(rate_trace)
+
+        def _tile(tr):
+            tr = np.asarray(tr, dtype=float)
+            return np.resize(tr, H) if len(tr) != H else tr
+
+        # effective per-region CI traces (PUE/grid factors folded in);
+        # regions without their own trace inherit the run's, including
+        # any scenario CI perturbation — histories stay unperturbed
+        region_cis = [_tile(rg.cis) * rg.ci_scale if rg.cis is not None
+                      else np.asarray(ci_trace, dtype=float) * rg.ci_scale
+                      for rg in regions]
+        region_base = [_tile(rg.cis) * rg.ci_scale if rg.cis is not None
+                       else base_cis * rg.ci_scale for rg in regions]
+
+        rng = np.random.default_rng(self.seed)
+        if rate_history is None:
+            rate_history = np.concatenate(
+                [base_rates * (1 + 0.05 * rng.standard_normal(H))
+                 for _ in range(history_days)])
+        load_pred = LoadPredictor().fit(rate_history)
+        # per-region CI histories, drawn in region order — region 0 of a
+        # one-region run consumes exactly the single-site draws.  An
+        # explicit ``ci_history`` may be one shared trace (1-D) or one
+        # row per region (2-D), e.g. each region's own diurnal trace
+        # tiled over the history window
+        ci_preds = []
+        ch = None if ci_history is None \
+            else np.asarray(ci_history, dtype=float)
+        if ch is not None and ch.ndim == 2 and len(ch) != R:
+            raise ValueError(f"ci_history has {len(ch)} rows for "
+                             f"{R} regions")
+        for r, rb in enumerate(region_base):
+            if ch is not None:
+                hist = ch[r] if ch.ndim == 2 else ch
+            else:
+                hist = np.concatenate(
+                    [rb * (1 + 0.05 * rng.standard_normal(H))
+                     for _ in range(history_days)])
+            ci_preds.append(CIPredictor().fit(hist))
+
+        max_tb = self.model.max_cache_tb
+        warm_spec = None
+        if self.storage_choices is not None:
+            warm_spec = max(self.storage_choices,
+                            key=lambda s: s.total_tb)
+            max_tb = warm_spec.total_tb
+
+        states = []
+        for r, rg in enumerate(regions):
+            st = SimpleNamespace()
+            st.custom = rg.plans is not None
+            st.plans = _coerce_plans(list(rg.plans)) if st.custom \
+                else self.plan_choices
+            st.disagg = st.plans[0].is_disaggregated
+            st.homo_ref = not st.disagg and all(
+                set(p.serve.fleet) == {"l40"} for p in st.plans)
+            st.fixed_plan = max(st.plans, key=lambda p: p.capacity)
+            st.store = self._build_store(max_tb, warm_spec)
+            st.engine = self._build_engine(st.store, st.fixed_plan,
+                                           max_tb, disagg=st.disagg,
+                                           homo_ref=st.homo_ref)
+            st.ci_pred = ci_preds[r]
+            st.current_tb = max_tb if self.mode != "none" else 0.0
+            st.current_shape = st.fixed_plan
+            st.current_storage = warm_spec
+            st.pending_schedule = []
+            st.pending_plans = []
+            states.append(st)
+
+        tier_scales = {t: TIERS[t].ttft_scale for t in self.tier_shares} \
+            if self.tier_shares is not None else {}
+        cluster = GeoCluster(regions, [st.engine for st in states],
+                             model=self.model, carbon=self.carbon,
+                             cfg=cfg, tier_scales=tier_scales)
+        scales = sorted({1.0, *tier_scales.values()})
+        tz = np.array([rg.tz_offset_h for rg in regions], dtype=float)
+
+        def _vectors(cis_now, caps, hour, split=None):
+            """The hour's (population, tier-budget) -> weight table."""
+            vec = {}
+            for p_idx, pop in enumerate(cluster.populations):
+                rtts = cluster.rtts_for(pop)
+                for s in scales:
+                    w = np.asarray(split, dtype=float) \
+                        if split is not None else route_weights(
+                            cfg, rtts_ms=rtts, cis=cis_now,
+                            tz_offsets_h=tz, hour=hour,
+                            ttft_budget_s=self.slo.ttft_s * s)
+                    vec[(p_idx, s)] = apply_capacity(w, caps)
+            return vec
+
+        def _shares(cis_mat, h0):
+            """(T, R) expected split per horizon step — population-mean
+            of the base-budget routing weights on the predicted CIs,
+            the rate thinning each region's own solve sees."""
+            T = cis_mat.shape[1]
+            out = np.zeros((T, R))
+            for t in range(T):
+                ws = [route_weights(cfg, rtts_ms=cluster.rtts_for(pop),
+                                    cis=cis_mat[:, t], tz_offsets_h=tz,
+                                    hour=h0 + t,
+                                    ttft_budget_s=self.slo.ttft_s)
+                      for pop in cluster.populations]
+                out[t] = np.mean(ws, axis=0)
+            return out
+
+        wl = workload_factory(self.seed)
+        if self.tier_shares is not None \
+                and not isinstance(wl, MultiTenantWorkload):
+            wl = MultiTenantWorkload(wl, self.tier_shares, seed=self.seed)
+
+        # warm every region's cache with its own share of the warm
+        # stream, split at the hour-0 weights (single-region clusters
+        # pass the stream through untouched — the vanilla warm)
+        arr0 = make_poisson_arrivals(np.full(6, max(rate_trace.mean(), 0.2)),
+                                     seed=self.seed + 5,
+                                     max_requests=self.warm_requests)
+        warm_reqs = sample_many(wl, arr0 - arr0[-1] - 1.0)
+        prev_tup = {}
+        if R > 1:
+            vec0 = _vectors(np.array([tr[0] for tr in region_cis]),
+                            np.ones(R), 0)
+            cluster.set_weights(vec0)
+            prev_tup = {k: tuple(map(float, w)) for k, w in vec0.items()}
+        per0, _ = cluster.partition(warm_reqs)
+        for st, wreqs in zip(states, per0):
+            st.engine.warm(wreqs)
+
+        hours: List[HourRecord] = []
+        region_hours: List[List[HourRecord]] = [[] for _ in range(R)]
+        geo_splits = None             # the "solve" policy's DP schedule
+
+        for h in range(H):
+            t_solve = 0.0
+            pred_rate = pred_ci = 0.0
+            solve_gate = self.mode in ("greencache", "oracle",
+                                       "lru_optimal") \
+                and h % self.resize_interval_h == 0
+            if cfg.policy == "solve" and geo_splits is not None:
+                solve_gate = False    # one joint solve covers the day
+            if solve_gate:
+                if self.mode == "oracle":
+                    rates = list(rate_trace[h:h + self.horizon])
+                    cis_mat = np.array([tr[h:h + self.horizon]
+                                        for tr in region_cis])
+                else:
+                    rates = list(load_pred.predict(self.horizon))
+                    cis_mat = np.array([st.ci_pred.predict(self.horizon)
+                                        for st in states])
+                rho = min(self.slo.rho + self.rho_margin, 0.995)
+                pred_rate = rates[0]
+                pred_ci = float(cis_mat[0][0]) if R == 1 \
+                    else float(np.mean(cis_mat[:, 0]))
+                if cfg.policy == "solve":
+                    from repro.core.solver import solve_geo_schedule
+                    elig = np.zeros(R, dtype=bool)
+                    for pop in cluster.populations:
+                        elig |= eligible_mask(cluster.rtts_for(pop),
+                                              self.slo.ttft_s,
+                                              cfg.rtt_budget_frac)
+                    gres = solve_geo_schedule(
+                        self.profile, rates,
+                        [list(c) for c in cis_mat], self.slo,
+                        self.carbon,
+                        region_plans=[st.plans for st in states],
+                        sizes_tb=self.sizes,
+                        eligible=[bool(e) for e in elig],
+                        quantum=cfg.quantum, rho=rho, model=self.model,
+                        inter_region_gbps=cfg.inter_region_gbps,
+                        min_dwell_hours=self.min_dwell_hours,
+                        dwell_offset=h % self.min_dwell_hours)
+                    geo_splits = list(gres.splits)
+                    t_solve = gres.solve_time_s
+                    for st, sub in zip(states, gres.per_region):
+                        st.pending_plans = list(sub.plans) \
+                            if sub.plans is not None else []
+                        st.pending_schedule = list(sub.sizes_tb)
+                else:
+                    shares = None if R == 1 else _shares(cis_mat, h)
+                    for r, st in enumerate(states):
+                        rates_r = rates if R == 1 else \
+                            [rates[t] * float(shares[t, r])
+                             for t in range(len(rates))]
+                        res = self._solve(
+                            rates_r, list(cis_mat[r]), rho,
+                            co_decide=len(st.plans) > 1, hour=h,
+                            live_plan=self._resolved(
+                                st.current_shape, st.current_tb,
+                                storage=st.current_storage),
+                            plans=st.plans if st.custom else None)
+                        st.pending_plans = list(res.plans) \
+                            if res.plans is not None else []
+                        st.pending_schedule = list(res.sizes_tb)
+                        t_solve += res.solve_time_s
+            for st in states:
+                if self.mode == "full":
+                    st.current_tb = max_tb
+                elif self.mode == "none":
+                    st.current_tb = 0.0
+                elif st.pending_schedule:
+                    k = min(self.resize_interval_h,
+                            len(st.pending_schedule))
+                    st.current_tb = max(st.pending_schedule[:k])
+                    st.pending_schedule = st.pending_schedule[1:]
+                    if st.pending_plans:
+                        if self.storage_choices is not None:
+                            st.current_storage = max(
+                                st.pending_plans[:k],
+                                key=lambda p: p.cache_tb or 0.0).storage
+                        new_shape = max(st.pending_plans[:k],
+                                        key=lambda p: p.capacity)
+                        st.pending_plans = st.pending_plans[1:]
+                        if self.min_dwell_hours <= 1 \
+                                or h % self.min_dwell_hours == 0:
+                            st.current_shape = new_shape
+
+            ci_now = [float(tr[h]) for tr in region_cis]
+            plans_now: List[ResourcePlan] = []
+            tr_gs: List[float] = []
+            tr_strs: List[str] = []
+            for r, st in enumerate(states):
+                plan_r = self._resolved(st.current_shape, st.current_tb,
+                                        storage=st.current_storage)
+                plans_now.append(plan_r)
+                g, s = 0.0, ""
+                applied = st.engine.apply(plan_r, now=h * 3600.0)
+                if applied.energy_kwh:
+                    g = self.carbon.operational_g(applied.energy_kwh,
+                                                  ci_now[r])
+                if not applied.transition.is_noop:
+                    s = str(applied.transition)
+                tr_gs.append(g)
+                tr_strs.append(s)
+
+            # re-split, reconcile warm KV with the new split, partition
+            ledger = GeoHourLedger(hour=h, weights={}, assigned=())
+            if R > 1:
+                caps = cluster.capacity_fractions(
+                    [p.n_replicas for p in plans_now])
+                split = None
+                if cfg.policy == "solve" and geo_splits is not None:
+                    split = geo_splits[min(h, len(geo_splits) - 1)]
+                vec = _vectors(np.asarray(ci_now), caps, h, split=split)
+                new_tup = {k: tuple(map(float, w))
+                           for k, w in vec.items()}
+                cluster.set_weights(vec)
+                if new_tup != prev_tup:
+                    cluster.shift_kv(ci_now, h * 3600.0, ledger)
+                prev_tup = new_tup
+                ledger.weights = cluster.weights_key()
+
+            lam = float(rate_trace[h])
+            arr = make_poisson_arrivals(
+                np.array([lam]), seed=self.seed + h,
+                max_requests=self.max_requests_per_hour)
+            reqs = sample_many(wl, h * 3600.0 + arr)
+            per, rtts = cluster.partition(reqs)
+            ledger.assigned = tuple(len(x) for x in per)
+            cluster.ledgers.append(ledger)
+
+            ev_h = [e for e in events
+                    if h * 3600.0 <= e.t_s < (h + 1) * 3600.0]
+            results = []
+            for r, st in enumerate(states):
+                w0 = sum(s_.stats.written_bytes
+                         for s_ in st.engine.stores)
+                hint = lam if R == 1 \
+                    else lam * (len(per[r]) / max(len(reqs), 1))
+                if ev_h and r == 0:
+                    res_r, note = self._run_hour_events(
+                        st.engine, per[r], ev_h, ci_now[r],
+                        st.current_tb, hint)
+                    if note:
+                        tr_strs[r] = (tr_strs[r] + " " + note).strip()
+                else:
+                    res_r = st.engine.run(
+                        per[r], ci_fn=lambda t, c=ci_now[r]: c,
+                        cache_tb=st.current_tb, rate_hint=hint)
+                # the network's share of TTFT: one-way RTT per request
+                # (request order is preserved within a region)
+                rt = rtts[r]
+                if rt and any(v > 0.0 for v in rt) \
+                        and len(res_r.ttft) == len(rt):
+                    res_r.ttft = res_r.ttft + np.asarray(rt, dtype=float)
+                results.append(res_r)
+                region_hours[r].append(HourRecord(
+                    hour=h, cache_tb=st.current_tb,
+                    rate=lam if R == 1
+                    else lam * ledger.assigned[r] / max(len(reqs), 1),
+                    ci=ci_now[r], carbon_g=res_r.carbon_g,
+                    operational_g=res_r.operational_g,
+                    embodied_cache_g=res_r.embodied_cache_g,
+                    embodied_compute_g=res_r.embodied_compute_g,
+                    p90_ttft=res_r.p90("ttft"),
+                    p90_tpot=res_r.p90("tpot"),
+                    slo_frac=res_r.slo_attainment(self.slo),
+                    hit_rate=res_r.token_hit_rate,
+                    num_requests=res_r.num_requests,
+                    solve_time_s=t_solve, pred_rate=pred_rate,
+                    pred_ci=pred_ci,
+                    n_replicas=plans_now[r].n_replicas,
+                    fleet="" if st.homo_ref
+                    else fleet_str(plans_now[r].all_types),
+                    plan=str(plans_now[r]),
+                    transition_g=tr_gs[r], transition=tr_strs[r],
+                    written_gb=(sum(s_.stats.written_bytes
+                                    for s_ in st.engine.stores)
+                                - w0) / 1e9,
+                    tiers=res_r.per_tier(self.slo) or None,
+                    tenants=res_r.per_tenant(self.slo) or None))
+
+            res_all = functools.reduce(combine_results, results)
+            if R == 1:
+                g_tb, g_ci = states[0].current_tb, ci_now[0]
+                g_nrep = plans_now[0].n_replicas
+                g_fleet = "" if states[0].homo_ref \
+                    else fleet_str(plans_now[0].all_types)
+                g_plan = str(plans_now[0])
+                g_trg, g_trs = tr_gs[0], tr_strs[0]
+                g_wg = region_hours[0][-1].written_gb
+            else:
+                g_tb = float(sum(st.current_tb for st in states))
+                g_ci = float(np.average(ci_now,
+                                        weights=ledger.assigned)) \
+                    if sum(ledger.assigned) else float(np.mean(ci_now))
+                g_nrep = sum(p.n_replicas for p in plans_now)
+                g_fleet = fleet_str(tuple(t for p in plans_now
+                                          for t in p.all_types))
+                g_plan = " | ".join(f"{rg.name}: {p}" for rg, p
+                                    in zip(regions, plans_now))
+                g_trg = float(sum(tr_gs))
+                g_trs = " ".join(f"{rg.name}:{s}" for rg, s
+                                 in zip(regions, tr_strs) if s)
+                g_wg = sum(rh[-1].written_gb for rh in region_hours)
+            hours.append(HourRecord(
+                hour=h, cache_tb=g_tb, rate=lam, ci=g_ci,
+                carbon_g=res_all.carbon_g,
+                operational_g=res_all.operational_g,
+                embodied_cache_g=res_all.embodied_cache_g,
+                embodied_compute_g=res_all.embodied_compute_g,
+                p90_ttft=res_all.p90("ttft"),
+                p90_tpot=res_all.p90("tpot"),
+                slo_frac=res_all.slo_attainment(self.slo),
+                hit_rate=res_all.token_hit_rate,
+                num_requests=res_all.num_requests,
+                solve_time_s=t_solve, pred_rate=pred_rate,
+                pred_ci=pred_ci, n_replicas=g_nrep, fleet=g_fleet,
+                plan=g_plan, transition_g=g_trg, transition=g_trs,
+                written_gb=g_wg,
+                tiers=res_all.per_tier(self.slo) or None,
+                tenants=res_all.per_tenant(self.slo) or None))
+
+            load_pred.update(lam)
+            for st, c in zip(states, ci_now):
+                st.ci_pred.update(c)
+
+        self.last_engine = states[0].engine
+        self.last_geo = cluster
+        return RunResult(
+            self.mode, hours,
+            regions={rg.name: RunResult(f"{self.mode}:{rg.name}",
+                                        region_hours[r])
+                     for r, rg in enumerate(regions)})
 
     def _run_hour_events(self, engine: ClusterEngine, reqs, ev_h,
                          ci_now: float, cache_tb: float, lam: float):
@@ -673,7 +1172,9 @@ class GreenCacheController:
     # ------------------------------------------------------------------ #
     def _solve(self, rates: Sequence[float], cis: Sequence[float],
                rho: float, co_decide: bool, *, hour: int = 0,
-               live_plan: Optional[ResourcePlan] = None) -> SolveResult:
+               live_plan: Optional[ResourcePlan] = None,
+               plans: Optional[Sequence[ResourcePlan]] = None
+               ) -> SolveResult:
         """One knapsack solve over the remaining horizon, in the numeric
         mode the candidate set implies: the homogeneous-reference paths
         reproduce the pre-plan controller bit-for-bit; typed single-pool
@@ -696,6 +1197,15 @@ class GreenCacheController:
             # protect gold: constrain on the protected tiers' thinned-
             # rate attainment (scavengers carry no rho weight)
             tkw["tier_shares"] = self.tier_shares
+        if plans is not None:
+            # a region's own candidate set (run_day(regions=...)):
+            # always the typed cluster path — the controller-level
+            # homo_ref shortcut only describes the global candidates
+            return solve_cluster_schedule(
+                self.profile, rates, cis, self.slo, self.carbon,
+                sizes_tb=self.sizes, plans=list(plans),
+                type_profiles=self.type_profiles, model=self.model,
+                rho=rho, **tkw)
         if self.storage_choices is not None:
             # typed-storage search: sizes come from the spec candidates
             return solve_cluster_schedule(

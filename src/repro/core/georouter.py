@@ -1,0 +1,183 @@
+"""Carbon-aware global routing for geo-distributed serving.
+
+The grid CI traces (FR/TX/...) stop being alternative worlds and become
+*simultaneous* regions: every hour a global router splits the request
+stream across regions, trading the carbon intensity each region's grid
+shows right now against the network RTT each user population pays to
+reach it.  This module is the pure-policy half — given per-region RTTs,
+carbon intensities and timezone offsets it produces a weight vector over
+regions; ``repro.serving.regions.GeoCluster`` turns weights into a
+deterministic request partition and handles the KV consequences.
+
+Routing policies (``GeoRoutingConfig.policy``):
+
+* ``latency`` — classic geo-DNS: every population goes to its nearest
+  eligible region, carbon-blind.  The baseline the benchmark beats.
+* ``green`` — follow-the-green: weights ∝ ``(ci_min / ci_i) ** gamma``
+  over the eligible regions, so traffic concentrates on whichever grid
+  is cleanest *this hour* (``gamma`` sharpens toward winner-take-all).
+* ``sun`` — follow-the-sun: prefer regions whose *local* clock (via
+  ``tz_offset_h``) sits in the solar window — the hours their grid is
+  sunny — weighted by inverse CI within the window; falls back to
+  ``green`` when no eligible region is in daylight.
+* ``weighted`` — geometric blend of inverse CI and inverse RTT
+  (``alpha`` = carbon share of the exponent budget).
+* ``static`` — uniform over eligible regions (a split-but-carbon-blind
+  control).
+* ``solve`` — the split schedule comes from
+  ``repro.core.solver.solve_geo_schedule`` (joint split × per-region
+  plan DP) instead of the reactive per-hour rules above.
+
+Eligibility: a region is eligible for a request tier when the added
+network RTT stays within ``rtt_budget_frac`` of that tier's TTFT budget
+— gold (tight budget) is confined to nearby regions while scavenger
+traffic may chase green grids anywhere.  When no region is eligible the
+nearest region wins (the request must be served somewhere).
+
+Migrate-vs-re-prefill (``migration_cheaper``): when the split shifts, a
+user population's warm KV sits in the old region.  Moving ``B`` bytes
+costs ``kv_migration_energy_kwh(B, inter_region_gbps)`` priced at the
+mean of the two grids' CI; *not* moving costs the destination a cold
+re-prefill of the same tokens — recompute energy at the destination's
+CI, discounted by ``reuse_frac`` (only that fraction of the moved bytes
+is expected to see another hit).  Migrate iff
+
+    E_mig(B) * (CI_src + CI_dst)/2  <  E_prefill(tokens) * CI_dst * reuse
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.carbon import kv_migration_energy_kwh
+
+GEO_POLICIES = ("green", "latency", "sun", "weighted", "static", "solve")
+
+
+@dataclass(frozen=True)
+class GeoRoutingConfig:
+    """Knobs of the global router (frozen — one config per run).
+
+    ``rtt_budget_frac`` bounds the added RTT to a fraction of the tier's
+    TTFT budget; ``quantum`` is the split granularity of the ``solve``
+    policy's candidate simplex; ``inter_region_gbps`` is the WAN
+    bandwidth KV migrations are priced at (far below the intra-cluster
+    ``kv_transfer_gbps``); ``reuse_frac`` discounts the re-prefill side
+    of the migrate decision by the expected reuse of moved bytes;
+    ``migration`` can pin the decision (``always``/``never``) instead of
+    pricing it (``auto``)."""
+    policy: str = "green"
+    alpha: float = 0.7                  # weighted: CI vs RTT blend
+    gamma: float = 4.0                  # green: inverse-CI sharpness
+    sun_window: Tuple[float, float] = (8.0, 18.0)
+    rtt_budget_frac: float = 0.3
+    quantum: float = 0.25
+    inter_region_gbps: float = 5.0
+    reuse_frac: float = 0.5
+    migration: str = "auto"
+
+    def __post_init__(self):
+        if self.policy not in GEO_POLICIES:
+            raise ValueError(f"unknown geo policy {self.policy!r}; one of "
+                             f"{GEO_POLICIES}")
+        if self.migration not in ("auto", "always", "never"):
+            raise ValueError("migration must be auto|always|never, got "
+                             f"{self.migration!r}")
+        if not 0.0 < self.quantum <= 1.0:
+            raise ValueError(f"quantum must be in (0, 1], got "
+                             f"{self.quantum!r}")
+
+
+def eligible_mask(rtts_ms: np.ndarray, ttft_budget_s: float,
+                  rtt_budget_frac: float) -> np.ndarray:
+    """Regions whose added RTT fits the tier budget; when none does, the
+    nearest region(s) stay eligible — traffic cannot be dropped."""
+    rtts = np.asarray(rtts_ms, dtype=float)
+    m = rtts <= rtt_budget_frac * ttft_budget_s * 1000.0
+    if not m.any():
+        m = rtts == rtts.min()
+    return m
+
+
+def route_weights(cfg: GeoRoutingConfig, *, rtts_ms, cis, tz_offsets_h,
+                  hour: int, ttft_budget_s: float) -> np.ndarray:
+    """Per-region traffic weights (sum 1) for one population × tier
+    budget at one hour.  ``cis`` are the regions' *effective* carbon
+    intensities this hour (PUE/grid factors folded in); ``rtts_ms`` the
+    population's RTT to each region."""
+    rtts = np.asarray(rtts_ms, dtype=float)
+    cis = np.asarray(cis, dtype=float)
+    tz = np.asarray(tz_offsets_h, dtype=float)
+    m = eligible_mask(rtts, ttft_budget_s, cfg.rtt_budget_frac)
+    w = np.zeros(len(rtts))
+    if cfg.policy == "latency":
+        w[int(np.argmin(np.where(m, rtts, np.inf)))] = 1.0
+        return w
+    inv_ci = 1.0 / np.maximum(cis, 1e-9)
+    if cfg.policy == "static":
+        w[m] = 1.0
+    elif cfg.policy in ("green", "solve"):
+        # solve uses the DP schedule when available; this is its
+        # reactive fallback (e.g. the warm window before the first solve)
+        w[m] = (cis[m].min() * inv_ci[m]) ** cfg.gamma
+    elif cfg.policy == "sun":
+        lo, hi = cfg.sun_window
+        local = np.mod(hour + tz, 24.0)
+        day = m & (local >= lo) & (local < hi)
+        if day.any():
+            w[day] = inv_ci[day]
+        else:                            # nobody in daylight: chase green
+            w[m] = (cis[m].min() * inv_ci[m]) ** cfg.gamma
+    elif cfg.policy == "weighted":
+        w[m] = inv_ci[m] ** cfg.alpha \
+            * (1.0 / (rtts[m] + 5.0)) ** (1.0 - cfg.alpha)
+    else:                                # pragma: no cover - validated
+        raise ValueError(f"unknown geo policy {cfg.policy!r}")
+    s = w.sum()
+    if s <= 0.0:                         # degenerate: fall back uniform
+        w[m] = 1.0
+        s = w.sum()
+    return w / s
+
+
+def apply_capacity(weights: np.ndarray,
+                   capacity_frac: np.ndarray) -> np.ndarray:
+    """Failover reweighting: scale each region's weight by its live
+    capacity fraction (replicas alive / replicas planned) and
+    renormalize.  The healthy path (every fraction exactly 1.0) returns
+    ``weights`` unchanged — bit-stable."""
+    cap = np.asarray(capacity_frac, dtype=float)
+    if np.all(cap == 1.0):
+        return weights
+    w = weights * np.maximum(cap, 0.0)
+    s = w.sum()
+    if s <= 0.0:                         # everything down: keep the split
+        return weights
+    return w / s
+
+
+def prefill_recompute_kwh(tokens: float, model, carbon) -> float:
+    """Energy to re-prefill ``tokens`` from scratch at the destination:
+    the uncached prefill span on one reference server."""
+    if tokens <= 0.0:
+        return 0.0
+    return carbon.energy_kwh(model.gpu_util_prefill,
+                             tokens / model.prefill_tok_per_s)
+
+
+def migration_cheaper(bytes_moved: float, tokens: float, ci_src: float,
+                      ci_dst: float, *, model, carbon,
+                      cfg: GeoRoutingConfig) -> bool:
+    """The migrate-vs-re-prefill decision for one (src, dst) shift (see
+    the module docstring for the pricing equation)."""
+    if cfg.migration == "always":
+        return True
+    if cfg.migration == "never":
+        return False
+    mig_g = kv_migration_energy_kwh(bytes_moved, cfg.inter_region_gbps) \
+        * 0.5 * (ci_src + ci_dst)
+    re_g = prefill_recompute_kwh(tokens, model, carbon) \
+        * ci_dst * cfg.reuse_frac
+    return mig_g < re_g

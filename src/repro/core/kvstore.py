@@ -42,6 +42,10 @@ class CacheEntry:
     hits: int = 0
     hit_tokens: int = 0             # accumulated tokens served from this entry
     turn: int = 1                   # conversation turn depth (chat tasks)
+    # eviction-priority multiplier (tier-aware caching: a gold tenant's
+    # working set outscores scavenger churn under a ``tier_weighted``
+    # policy). 1.0 = neutral — every legacy path leaves it there.
+    weight: float = 1.0
     payload: Any = None             # optional real KV arrays
     slot: int = -1                  # columnar-index slot (vector-evict mode)
     # storage tier: 1 = the authoritative cold/bulk tier (every entry a
@@ -153,11 +157,13 @@ class CacheStore(Protocol):
 
     def insert(self, key: str, num_tokens: int, now: float, *,
                turn: int = 1, payload: Any = None,
-               size_bytes: Optional[float] = None) -> Optional[CacheEntry]: ...
+               size_bytes: Optional[float] = None,
+               weight: float = 1.0) -> Optional[CacheEntry]: ...
 
     def account(self, key: str, context_tokens: int, prompt_tokens: int,
                 now: float, turn: int = 1, collect_stats: bool = True,
-                blocks: Optional[PrefixBlocks] = None) -> AccountResult: ...
+                blocks: Optional[PrefixBlocks] = None,
+                weight: float = 1.0) -> AccountResult: ...
 
     def pop_entry(self, key: str) -> CacheEntry: ...
 
@@ -211,7 +217,7 @@ class _ColumnIndex:
     full sort if it runs off the end)."""
 
     FIELDS = ("created_at", "last_access", "size_bytes",
-              "hits", "hit_tokens", "num_tokens", "turn")
+              "hits", "hit_tokens", "num_tokens", "turn", "weight")
 
     def __init__(self, entries=(), cap: int = 1024):
         import array
@@ -254,6 +260,10 @@ class _ColumnIndex:
         c["hit_tokens"][s] = e.hit_tokens
         c["num_tokens"][s] = e.num_tokens
         c["turn"][s] = e.turn
+        c["weight"][s] = e.weight
+
+    def write_weight(self, e: "CacheEntry"):
+        self.cols["weight"][e.slot] = e.weight
 
     def write_hit(self, e: "CacheEntry"):
         c = self.cols
@@ -395,12 +405,15 @@ class KVStore:
     # ------------------------------------------------------------------ #
     def insert(self, key: str, num_tokens: int, now: float, *,
                turn: int = 1, payload: Any = None,
-               size_bytes: Optional[float] = None) -> Optional[CacheEntry]:
+               size_bytes: Optional[float] = None,
+               weight: float = 1.0) -> Optional[CacheEntry]:
         """Insert/extend the cache entry for ``key`` with a prefix of
         ``num_tokens`` tokens. Evicts per policy to fit; returns the entry
         (None if it cannot fit even after eviction). ``size_bytes`` overrides
         the token-proportional size (state-snapshot entries of recurrent
-        archs have constant size)."""
+        archs have constant size). ``weight`` sets the entry's eviction
+        weight (an entry keeps the highest weight it has been touched
+        with — a gold hit promotes a scavenger-inserted prefix)."""
         size = size_bytes if size_bytes is not None \
             else num_tokens * self.kv_bytes_per_token
         if size > self.capacity_bytes:
@@ -425,12 +438,16 @@ class KVStore:
             old.turn = max(old.turn, turn)
             if payload is not None:
                 old.payload = payload
+            if weight > old.weight:
+                old.weight = weight
+                if self._ix is not None:
+                    self._ix.write_weight(old)
             if self._ix is not None:
                 self._ix.write_grow(old)
             return old
         e = CacheEntry(key=key, num_tokens=num_tokens, size_bytes=size,
                        created_at=now, last_access=now, turn=turn,
-                       payload=payload)
+                       weight=weight, payload=payload)
         self.entries[key] = e
         self.used_bytes += size
         self.stats.written_bytes += size
@@ -442,7 +459,8 @@ class KVStore:
     # ------------------------------------------------------------------ #
     def account(self, key: str, context_tokens: int, prompt_tokens: int,
                 now: float, turn: int = 1, collect_stats: bool = True,
-                blocks: Optional[PrefixBlocks] = None) -> AccountResult:
+                blocks: Optional[PrefixBlocks] = None,
+                weight: float = 1.0) -> AccountResult:
         """Fused ``lookup`` + ``insert`` for the simulation hot path: one
         dict probe per request instead of two calls. State transitions are
         identical to ``lookup(key, context_tokens, now)`` followed by
@@ -473,6 +491,10 @@ class KVStore:
             e.hits += 1
             e.hit_tokens += reused
             e.last_access = now
+            if weight > e.weight:       # promote, never demote
+                e.weight = weight
+                if ix is not None:
+                    ix.write_weight(e)
             if collect_stats:
                 st = self.stats
                 st.lookups += 1
@@ -510,7 +532,8 @@ class KVStore:
             if self.used_bytes + size > cap + 1e-6:
                 return MISS_TOO_LARGE
         e = CacheEntry(key=key, num_tokens=prompt_tokens, size_bytes=size,
-                       created_at=now, last_access=now, turn=turn)
+                       created_at=now, last_access=now, turn=turn,
+                       weight=weight)
         self.entries[key] = e
         self.used_bytes += size
         self.stats.written_bytes += size

@@ -111,3 +111,35 @@ VECTOR_POLICIES: Dict[Callable, Callable] = {
     lcs_chat_score: _v_lcs_chat,
     lcs_doc_score: _v_lcs_doc,
 }
+
+
+# --------------------------------------------------------------------- #
+# Tier-aware weighting: score × entry.weight — a gold working set
+# (weight 4) outranks scavenger churn (weight 0.25) at equal base score,
+# so a flash crowd of best-effort traffic cannot flush protected prefixes.
+# --------------------------------------------------------------------- #
+_TIER_WEIGHTED: Dict[Callable, Callable] = {}
+
+
+def tier_weighted(base: Callable[[CacheEntry, float], float]) -> Callable:
+    """The weight-aware twin of a replacement policy: keep-priority
+    becomes ``base(e, now) * e.weight``.  Memoized — the same base policy
+    always maps to the same wrapper object, so ``KVStore
+    .enable_vector_evict`` finds the registered vectorized twin by
+    identity and batch eviction stays bit-identical to the scalar path
+    (the vector twin applies the same ``× weight`` in float64)."""
+    w = _TIER_WEIGHTED.get(base)
+    if w is not None:
+        return w
+
+    def weighted(e: CacheEntry, now: float, _base=base) -> float:
+        return _base(e, now) * e.weight
+
+    weighted.__name__ = "tier_weighted_" + getattr(base, "__name__",
+                                                   "policy")
+    _TIER_WEIGHTED[base] = weighted
+    vb = VECTOR_POLICIES.get(base)
+    if vb is not None:
+        VECTOR_POLICIES[weighted] = \
+            lambda f, now, _vb=vb: _vb(f, now) * f["weight"]
+    return weighted

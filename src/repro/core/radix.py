@@ -83,7 +83,8 @@ class RadixKVStore(KVStore):
     # ------------------------------------------------------------------ #
     def account(self, key: str, context_tokens: int, prompt_tokens: int,
                 now: float, turn: int = 1, collect_stats: bool = True,
-                blocks: Optional[PrefixBlocks] = None) -> AccountResult:
+                blocks: Optional[PrefixBlocks] = None,
+                weight: float = 1.0) -> AccountResult:
         """Longest-prefix match + suffix insert.
 
         With ``blocks=None`` this is exactly the flat whole-context path
@@ -99,7 +100,7 @@ class RadixKVStore(KVStore):
         sentinels (-1 inserted / -2 no-fit / -3 admission-reject)."""
         if blocks is None:
             return super().account(key, context_tokens, prompt_tokens, now,
-                                   turn, collect_stats)
+                                   turn, collect_stats, weight=weight)
         if self._resize_steps and now >= self._resize_steps[0][0]:
             self._apply_due_resizes(now)
         ix = self._ix
@@ -133,6 +134,10 @@ class RadixKVStore(KVStore):
             nd.hits += 1
             nd.hit_tokens += nd.num_tokens
             nd.last_access = now
+            if weight > nd.weight:      # a gold hit promotes shared nodes
+                nd.weight = weight
+                if ix is not None:
+                    ix.write_weight(nd)
             if ix is not None:
                 ix.write_hit(nd)
         if not partial:
@@ -144,14 +149,15 @@ class RadixKVStore(KVStore):
             if not self.admission.admit(self, suffix_bytes, turn=turn):
                 self.stats.admit_rejects += 1
                 return MISS_REJECTED
-        made = self._insert_suffix(node, suffix, now, turn, collect_stats)
+        made = self._insert_suffix(node, suffix, now, turn, collect_stats,
+                                   weight=weight)
         if path:
             return AccountResult(reused, HitKind.PARTIAL, reused)
         return MISS_INSERTED if made else MISS_TOO_LARGE
 
     def _insert_suffix(self, parent: Optional[RadixEntry],
                        suffix: PrefixBlocks, now: float, turn: int,
-                       collect_stats: bool) -> int:
+                       collect_stats: bool, weight: float = 1.0) -> int:
         """Insert the unmatched suffix as a chain of nodes under ``parent``
         (suffix-only wear: only these bytes touch the write clock). Stops
         at the first block that cannot fit — inserting deeper would orphan.
@@ -173,6 +179,10 @@ class RadixKVStore(KVStore):
                 existing.hits += 1
                 existing.hit_tokens += existing.num_tokens
                 existing.last_access = now
+                if weight > existing.weight:
+                    existing.weight = weight
+                    if ix is not None:
+                        ix.write_weight(existing)
                 if ix is not None:
                     ix.write_hit(existing)
                 protect.add(existing.key)
@@ -195,6 +205,10 @@ class RadixKVStore(KVStore):
                 existing.last_access = now
                 existing.turn = max(existing.turn, turn)
                 existing.stub = False
+                if weight > existing.weight:
+                    existing.weight = weight
+                    if ix is not None:
+                        ix.write_weight(existing)
                 if ix is not None:
                     ix.write_grow(existing)
                 node = existing
@@ -202,7 +216,8 @@ class RadixKVStore(KVStore):
                 node = RadixEntry(
                     key=bk if parent is None else parent.key + SEP + bk,
                     num_tokens=bt, size_bytes=size, created_at=now,
-                    last_access=now, turn=turn, block_key=bk, parent=parent)
+                    last_access=now, turn=turn, weight=weight,
+                    block_key=bk, parent=parent)
                 self._attach(node)
                 if ix is not None:
                     ix.add(node)

@@ -151,7 +151,8 @@ def _cluster_cell_metrics(profile: Profile, rate: float, size: float,
     op = carbon.operational_g(c.energy_per_req_kwh, ci)
     emb_cache = carbon.cache_embodied_g(size, c.duration_per_req_s) / n_rep
     emb_comp = carbon.compute_embodied_g(c.duration_per_req_s)
-    return op + emb_cache + emb_comp, \
+    return (op + emb_cache + emb_comp) * _idle_floor(profile,
+                                                     rate / n_rep), \
         _saturated_slo(profile, rate / n_rep, c.slo_frac)
 
 
@@ -187,6 +188,25 @@ def _ref_watts(carbon: CarbonModel, util: float) -> float:
     return hw.gpu_power_idle_w \
         + util * (hw.gpu_power_max_w - hw.gpu_power_idle_w) \
         + hw.cpu_power_w + hw.mem_power_w
+
+
+def _idle_floor(profile: Profile, norm_rate: float) -> float:
+    """Per-request carbon multiplier below the profiled rate floor.
+
+    ``Profile.interpolate`` clamps to the lowest profiled cell, whose
+    energy-per-request already amortizes the (idle-dominated) fleet
+    power over that cell's arrival rate.  Below it the fleet burns
+    roughly the same hourly power over ever fewer requests, so the
+    honest per-request bill grows as ``rmin / rate`` (hourly carbon
+    holds flat at its idle floor).  Without this an almost-idle fleet
+    prices as free and the solver happily parks the *largest* fleet in
+    a starved region — the ``/capacity`` cache amortization even
+    rewards it.  Geo-distributed runs hit this constantly: a green
+    router drains the dirty region to a trickle."""
+    rmin = min(profile.rates)
+    if norm_rate >= rmin or rmin <= 0.0:
+        return 1.0
+    return rmin / max(norm_rate, rmin * 1e-3)
 
 
 def _fleet_cell_metrics(profile: Profile, rate: float, size: float,
@@ -229,7 +249,8 @@ def _fleet_cell_metrics(profile: Profile, rate: float, size: float,
         emb_cache = carbon.cache_embodied_g(size, c.duration_per_req_s) / cap
         emb_comp = sum(get_replica_type(t).embodied_g(c.duration_per_req_s)
                        for t in fleet) / cap
-        return op + emb_cache + emb_comp, slo_frac
+        return (op + emb_cache + emb_comp) \
+            * _idle_floor(profile, norm_rate), slo_frac
 
     from collections import Counter
     c_ref = profile.interpolate(norm_rate, size)
@@ -258,7 +279,8 @@ def _fleet_cell_metrics(profile: Profile, rate: float, size: float,
         / cap
     emb_comp = sum(get_replica_type(t).embodied_g(c_ref.duration_per_req_s)
                    for t in fleet) / cap
-    return op + emb_cache + emb_comp, slo_frac
+    return (op + emb_cache + emb_comp) \
+        * _idle_floor(profile, norm_rate), slo_frac
 
 
 # dedicated decode pools drop the (1 + decode_interference · ū) TPOT
@@ -344,14 +366,17 @@ def _disagg_cell_metrics(profile: Profile, rate: float, size: float,
     wp = sum(get_replica_type(t).server_power_w(util_p)
              for t in plan.prefill.fleet)
     op = carbon.operational_g(c_pre.energy_per_req_kwh, ci) \
-        * wp / (cp * _ref_watts(carbon, util_p))
+        * wp / (cp * _ref_watts(carbon, util_p)) \
+        * _idle_floor(profile, rate / cp)
     util_d = _ref_util(c_dec, carbon)
     cap_frac = model.decode_pool_power_frac if model is not None \
         else DECODE_POOL_POWER_FRAC
     wd = cap_frac * sum(get_replica_type(t).server_power_w(util_d)
                         for t in plan.decode.fleet)
     op += carbon.operational_g(c_dec.energy_per_req_kwh, ci) \
-        * wd / (cd * DISAGG_DECODE_SPEEDUP * _ref_watts(carbon, util_d))
+        * wd / (cd * DISAGG_DECODE_SPEEDUP
+                * _ref_watts(carbon, util_d)) \
+        * _idle_floor(profile, rate_d)
     inv_rate = 1.0 / max(rate, 1e-3)
     emb_cache = carbon.cache_embodied_g(size, inv_rate)
     emb_comp = sum(get_replica_type(t).embodied_g(inv_rate)
@@ -964,3 +989,205 @@ def _solve_dp(C, F, n, sizes, rho, t_start, buckets: int = 400
     obj = float(sum(n[t] * C[t][c] for t, c in enumerate(choice)))
     return SolveResult([sizes[c] for c in choice], obj, True,
                        time.time() - t_start, "dp")
+
+# ---------------------------------------------------------------------------
+# Geo-distributed joint solve: global traffic split × per-region plan
+# ---------------------------------------------------------------------------
+
+@dataclass
+class GeoSolveResult:
+    """Joint schedule over (traffic split, per-region plan).
+
+    ``splits[t]`` is the fraction of the global stream each region serves
+    at hour ``t``; ``per_region[r]`` is the ordinary ``SolveResult`` for
+    region ``r`` solved at its *split-thinned* rates, so
+    ``per_region[r].plans[t]`` is what region ``r`` applies at hour
+    ``t``.  ``transition_g`` is the predicted cross-region KV-migration
+    carbon charged when the split shifts between consecutive hours."""
+    splits: List[Tuple[float, ...]]
+    per_region: List[SolveResult]
+    objective_g: float
+    feasible: bool
+    solve_time_s: float
+    solver: str = "geo-dp"
+    transition_g: Optional[List[float]] = None
+
+
+def _simplex_splits(n_regions: int, quantum: float,
+                    eligible: Optional[Sequence[bool]] = None
+                    ) -> List[Tuple[float, ...]]:
+    """Candidate weight vectors on the ``quantum``-granular simplex over
+    ``n_regions`` (one-hots always included).  ``eligible`` zeroes out
+    regions that no population may use — ineligible regions get weight 0
+    in every candidate."""
+    steps = max(1, int(round(1.0 / quantum)))
+    elig = [True] * n_regions if eligible is None else list(eligible)
+    if not any(elig):
+        elig = [True] * n_regions
+    splits: set = set()
+    idx = [r for r in range(n_regions) if elig[r]]
+
+    def rec(pos: int, left: int, acc: List[int]):
+        if pos == len(idx) - 1:
+            full = [0] * n_regions
+            for i, r in enumerate(idx[:-1]):
+                full[r] = acc[i]
+            full[idx[-1]] = left
+            splits.add(tuple(k / steps for k in full))
+            return
+        for k in range(left + 1):
+            rec(pos + 1, left - k, acc + [k])
+
+    rec(0, steps, [])
+    for r in idx:                         # one-hots, even off-grid quanta
+        oh = [0.0] * n_regions
+        oh[r] = 1.0
+        splits.add(tuple(oh))
+    return sorted(splits, reverse=True)
+
+
+def _region_best_cell(profile: Profile, rate: float, sizes, cands,
+                      ci: float, carbon: CarbonModel, slo: SLO, model,
+                      rho: float) -> Tuple[float, float]:
+    """Cheapest-feasible (carbon/request, slo_frac) over one region's
+    option set (plans × sizes) at one rate/CI — the inner per-hour pick
+    the split DP scores each candidate split with.  Falls back to the
+    max-attainment option when nothing meets ``rho``."""
+    best_feas = best_any = None
+    for p in cands:
+        szs = [p.cache_tb] if p.cache_tb is not None else sizes
+        for s in szs:
+            if p.is_disaggregated:
+                c, f = _disagg_cell_metrics(profile, rate, s, p, ci,
+                                            carbon, slo=slo, model=model)
+            else:
+                c, f = _fleet_cell_metrics(profile, rate, s,
+                                           p.serve.fleet, ci, carbon)
+            if f >= rho and (best_feas is None or c < best_feas[0]):
+                best_feas = (c, f)
+            if best_any is None or (f, -c) > (best_any[1], -best_any[0]):
+                best_any = (c, f)
+    return best_feas if best_feas is not None else best_any
+
+
+def _pareto_prune_splits(splits, C, F):
+    """Drop candidate splits dominated at *every* hour (≥ carbon and
+    ≤ attainment, strict somewhere) — keeps the DP over splits tractable
+    as the region count grows without changing its optimum."""
+    S = len(splits)
+    keep = np.ones(S, dtype=bool)
+    for i in range(S):
+        if not keep[i]:
+            continue
+        for j in range(S):
+            if i == j or not keep[j]:
+                continue
+            if np.all(C[:, i] <= C[:, j]) and np.all(F[:, i] >= F[:, j]) \
+                    and (np.any(C[:, i] < C[:, j])
+                         or np.any(F[:, i] > F[:, j])):
+                keep[j] = False
+    return [s for s, k in zip(splits, keep) if k], C[:, keep], F[:, keep]
+
+
+def solve_geo_schedule(profile: Profile, pred_rates: Sequence[float],
+                       region_cis: Sequence[Sequence[float]], slo: SLO,
+                       carbon: CarbonModel, *,
+                       region_plans: Sequence[Sequence[ResourcePlan]],
+                       sizes_tb: Optional[Sequence[float]] = None,
+                       eligible: Optional[Sequence[bool]] = None,
+                       quantum: float = 0.25,
+                       rho: Optional[float] = None,
+                       model=None,
+                       migrate_gb_per_shift: float = 1.0,
+                       inter_region_gbps: float = 5.0,
+                       min_dwell_hours: int = 1,
+                       dwell_offset: int = 0,
+                       use_ilp: bool = True) -> GeoSolveResult:
+    """Joint hourly solve over (global traffic split, per-region plan).
+
+    Stage 1 runs a DP over candidate splits from the ``quantum``-granular
+    simplex (Pareto-pruned): each (hour, split) is scored by the
+    weight-averaged cheapest-feasible option of every loaded region at
+    its thinned rate and its *effective* CI (``region_cis[r][t]``, PUE/
+    grid factors folded in by the caller), and consecutive differing
+    splits pay cross-region KV-migration carbon
+    (``migrate_gb_per_shift`` GB per unit of total weight moved, priced
+    through ``kv_migration_energy_kwh`` at the hour's mean CI).  Stage 2
+    re-solves each region exactly with ``solve_cluster_schedule`` at its
+    split-thinned rates, so the per-region plan schedules carry all the
+    machinery of the single-site solve (transitions, dwell, storage)."""
+    t_start = time.time()
+    rho = rho if rho is not None else slo.rho
+    R = len(region_cis)
+    T = len(pred_rates)
+    if len(region_plans) != R:
+        raise ValueError(f"region_plans has {len(region_plans)} entries "
+                         f"for {R} regions")
+    sizes = list(sizes_tb) if sizes_tb is not None else list(profile.sizes)
+    cands = [list(ps) or [ResourcePlan.single(None, n_replicas=1)]
+             for ps in region_plans]
+
+    splits = _simplex_splits(R, quantum, eligible)
+    n = np.array([max(r, 1e-3) * 3600.0 for r in pred_rates])
+    cell = functools.lru_cache(maxsize=None)(
+        lambda r, t, w: _region_best_cell(
+            profile, pred_rates[t] * w, sizes, cands[r],
+            region_cis[r][t], carbon, slo, model, rho))
+
+    C = np.zeros((T, len(splits)))
+    F = np.zeros((T, len(splits)))
+    for t in range(T):
+        for si, sp in enumerate(splits):
+            c = f = 0.0
+            for r, w in enumerate(sp):
+                if w <= 0.0:
+                    continue            # idle region: no load, no term
+                cr, fr = cell(r, t, w)
+                c += w * cr
+                f += w * fr
+            C[t, si], F[t, si] = c, f
+
+    splits, C, F = _pareto_prune_splits(splits, C, F)
+    n_sp = len(splits)
+    mean_cis = np.asarray(region_cis, dtype=float).mean(axis=0)
+
+    # cross-region KV-migration energy for a split shift: half the L1
+    # distance is the total weight that changes hands
+    E = np.zeros((n_sp, n_sp))
+    Sm = np.zeros((n_sp, n_sp), dtype=bool)
+    for i, a in enumerate(splits):
+        for j, b in enumerate(splits):
+            if a == b:
+                continue
+            moved = 0.5 * sum(abs(x - y) for x, y in zip(a, b))
+            E[i, j] = kv_migration_energy_kwh(
+                moved * migrate_gb_per_shift * 1e9, inter_region_gbps)
+            Sm[i, j] = True
+
+    if E.any() or min_dwell_hours > 1:
+        res = _solve_dp_transition(C, F, n, splits, rho, t_start, E, Sm,
+                                   None, mean_cis, min_dwell_hours,
+                                   dwell_offset)
+    else:
+        res = _solve_dp(C, F, n, splits, rho, t_start)
+    chosen: List[Tuple[float, ...]] = list(res.sizes_tb)
+    tg = res.transition_g if res.transition_g is not None \
+        else [0.0] * T
+
+    per_region: List[SolveResult] = []
+    feasible = res.feasible
+    objective = float(sum(tg))
+    for r in range(R):
+        rates_r = [pred_rates[t] * chosen[t][r] for t in range(T)]
+        sub = solve_cluster_schedule(
+            profile, rates_r, list(region_cis[r]), slo, carbon,
+            plans=cands[r], sizes_tb=sizes, rho=rho, model=model,
+            use_ilp=use_ilp, min_dwell_hours=min_dwell_hours,
+            dwell_offset=dwell_offset)
+        per_region.append(sub)
+        objective += sub.objective_g
+        # an hour a region serves no traffic cannot violate its SLO
+        loaded = any(chosen[t][r] > 0.0 for t in range(T))
+        feasible = feasible and (sub.feasible or not loaded)
+    return GeoSolveResult(chosen, per_region, objective, feasible,
+                          time.time() - t_start, transition_g=tg)

@@ -577,13 +577,13 @@ class TieredKVStore(KVStore):
     # ---- overridden KVStore surface ---- #
     def account(self, key: str, context_tokens: int, prompt_tokens: int,
                 now: float, turn: int = 1, collect_stats: bool = True,
-                blocks=None):
+                blocks=None, weight: float = 1.0):
         # ``blocks`` pass through to the (whole-context) base path, which
         # ignores them — a tiered radix store is a future combination
         e0 = self.entries.get(key)
         pre = (e0, e0.size_bytes, e0.tier) if e0 is not None else None
         ret = super().account(key, context_tokens, prompt_tokens, now,
-                              turn, collect_stats, blocks)
+                              turn, collect_stats, blocks, weight=weight)
         # ret >= 0 is the only true hit (a pre-captured entry can still
         # be evicted by a due gradual-resize step inside the base call,
         # making the re-insert a fresh cold write, not a grow)
@@ -591,12 +591,13 @@ class TieredKVStore(KVStore):
         return ret
 
     def insert(self, key: str, num_tokens: int, now: float, *,
-               turn: int = 1, payload=None, size_bytes=None
-               ) -> Optional[CacheEntry]:
+               turn: int = 1, payload=None, size_bytes=None,
+               weight: float = 1.0) -> Optional[CacheEntry]:
         e0 = self.entries.get(key)
         pre = (e0, e0.size_bytes, e0.tier) if e0 is not None else None
         out = super().insert(key, num_tokens, now, turn=turn,
-                             payload=payload, size_bytes=size_bytes)
+                             payload=payload, size_bytes=size_bytes,
+                             weight=weight)
         if out is not None:
             # a grow only if the surviving object is the captured one
             self._post_write(key, pre if pre is not None

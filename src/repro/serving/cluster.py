@@ -67,7 +67,7 @@ import warnings
 import zlib
 from collections import defaultdict
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -238,7 +238,8 @@ class ClusterEngine:
                  balance_eps: Optional[float] = 0.15,
                  types: Optional[Sequence[str]] = None,
                  transitions: Optional[TransitionConfig] = None,
-                 wear_aware: bool = True):
+                 wear_aware: bool = True,
+                 tier_weights: Optional[Dict[str, float]] = None):
         if router not in ROUTERS:
             raise ValueError(f"unknown router {router!r}; one of {ROUTERS}")
         self.model = model
@@ -246,6 +247,12 @@ class ClusterEngine:
         self.balance_eps = balance_eps
         self.transitions = transitions
         self.wear_aware = wear_aware
+        # tier-aware eviction weights ({tier: weight}): the account paths
+        # stamp each request's tier weight onto the entries it touches,
+        # for stores running a ``tier_weighted`` policy.  None (default)
+        # keeps every account call byte-for-byte identical to the
+        # weightless path.
+        self.tier_weights = dict(tier_weights) if tier_weights else None
         self._pending_kwh = 0.0        # transition energy awaiting a window
         if types is not None:
             types = [str(t) for t in types]
@@ -356,6 +363,13 @@ class ClusterEngine:
                                    balance_eps=self.balance_eps,
                                    partitioned=not self.shared,
                                    storage=self._live_storage(cache_tb))
+
+    def defer_energy_kwh(self, kwh: float):
+        """Fold externally-caused energy (cross-region KV migration I/O,
+        priced by the geo router) into the next simulated window — the
+        same deferred-accounting path plan transitions use, so the
+        carbon lands at the window's CI."""
+        self._pending_kwh += float(kwh)
 
     def _live_alloc_tb(self) -> float:
         """Live total allocation: store capacity, plus the DRAM mirror
@@ -746,7 +760,15 @@ class ClusterEngine:
         routes each context to its owning replica's store (by prefix root
         when structured, matching ``cache_affinity``)."""
         prefix = self._prefix
-        if self.shared:
+        tw = self.tier_weights
+        if tw is not None:
+            for r in requests:
+                self._store_for(r.route_key).account(
+                    r.context_key, r.context_tokens, r.prompt_tokens,
+                    r.arrival, r.turn,
+                    blocks=r.prefix_segments if prefix else None,
+                    weight=tw.get(r.tier, 1.0))
+        elif self.shared:
             acct = self.stores[0].account
             for r in requests:
                 acct(r.context_key, r.context_tokens, r.prompt_tokens,
@@ -956,7 +978,8 @@ class ClusterEngine:
         emb_cache = self._cache_embodied(cache_tb, duration)
         emb_comp = self.carbon.compute_embodied_g(duration, n_replicas=K,
                                                   types=self.types)
-        tiers_arr, work_arr = _tier_arrays(requests, uncached, out, record)
+        tiers_arr, work_arr, ten_arr = _tier_arrays(requests, uncached,
+                                                    out, record)
         return SimResult(
             ttft=ttft if record else np.array([]),
             tpot=tpots if record else np.array([]),
@@ -965,7 +988,7 @@ class ClusterEngine:
             embodied_cache_g=emb_cache, embodied_compute_g=emb_comp,
             token_hit_rate=hit_tokens / max(lookup_tokens, 1),
             gpu_util=util, num_requests=n, n_replicas=K,
-            tiers=tiers_arr, work=work_arr)
+            tiers=tiers_arr, work=work_arr, tenants=ten_arr)
 
     # ------------------------------------------------------------------ #
     # typed-storage accounting (all no-ops when ``storage is None``)
@@ -1026,8 +1049,12 @@ class ClusterEngine:
         rets = np.empty(n, dtype=np.int64)
         kv_load = np.empty(n)
         al, cl, pl = arrival.tolist(), ctx.tolist(), prompt.tolist()
+        tw = self.tier_weights
         for i, (r, a, c, p) in enumerate(zip(requests, al, cl, pl)):
-            ret = acct(r.context_key, c, p, a, r.turn, False)
+            ret = acct(r.context_key, c, p, a, r.turn, False) \
+                if tw is None else \
+                acct(r.context_key, c, p, a, r.turn, False,
+                     weight=tw.get(r.tier, 1.0))
             rets[i] = ret
             ru = ret if ret >= 0 else 0
             kv_load[i] = ru * kv_bpt / bw[1 if st.last_hit_tier > 0
@@ -1105,7 +1132,17 @@ class ClusterEngine:
         — one dict probe per request."""
         n = len(requests)
         al, cl, pl = arrival.tolist(), ctx.tolist(), prompt.tolist()
-        if self.shared:
+        tw = self.tier_weights
+        if tw is not None:
+            stores = self.stores
+            kl = assign.tolist()
+            ret = np.fromiter(
+                (stores[0 if self.shared else k].account(
+                    r.context_key, c, p, a, r.turn, False,
+                    weight=tw.get(r.tier, 1.0))
+                 for r, k, a, c, p in zip(requests, kl, al, cl, pl)),
+                np.int64, count=n)
+        elif self.shared:
             acct = self.stores[0].account
             ret = np.fromiter(
                 (acct(r.context_key, c, p, a, r.turn, False)
@@ -1142,7 +1179,17 @@ class ClusterEngine:
         equivalence) cannot reconstruct."""
         n = len(requests)
         al, cl, pl = arrival.tolist(), ctx.tolist(), prompt.tolist()
-        if self.shared:
+        tw = self.tier_weights
+        if tw is not None:
+            stores = self.stores
+            kl = assign.tolist()
+            ret = np.fromiter(
+                (stores[0 if self.shared else k].account(
+                    r.context_key, c, p, a, r.turn, True,
+                    r.prefix_segments, weight=tw.get(r.tier, 1.0))
+                 for r, k, a, c, p in zip(requests, kl, al, cl, pl)),
+                np.int64, count=n)
+        elif self.shared:
             acct = self.stores[0].account
             ret = np.fromiter(
                 (acct(r.context_key, c, p, a, r.turn, True,
@@ -1196,10 +1243,17 @@ class ClusterEngine:
             else:
                 k = min(range(K), key=lambda j: free[j])
             st = self.stores[0] if self.shared else self.stores[k]
+            tw = self.tier_weights
             ru = max(st.account(r.context_key, r.context_tokens,
                                 int(prompt[i]), r.arrival, r.turn,
                                 blocks=r.prefix_segments
-                                if self._prefix else None), 0)
+                                if self._prefix else None)
+                     if tw is None else
+                     st.account(r.context_key, r.context_tokens,
+                                int(prompt[i]), r.arrival, r.turn,
+                                blocks=r.prefix_segments
+                                if self._prefix else None,
+                                weight=tw.get(r.tier, 1.0)), 0)
             un = int(prompt[i]) - ru
             if tiered:
                 kv_load[i] = ru * kv_per_tier[1 if st.last_hit_tier > 0
@@ -1255,7 +1309,8 @@ class DisaggEngine(ClusterEngine):
                  stores: Union[KVStore, Sequence[KVStore]],
                  carbon: CarbonModel, plan: ResourcePlan,
                  transitions: Optional[TransitionConfig] = None,
-                 wear_aware: bool = True):
+                 wear_aware: bool = True,
+                 tier_weights: Optional[Dict[str, float]] = None):
         if not plan.is_disaggregated:
             raise ValueError("DisaggEngine needs a disaggregated plan "
                              "(prefill= and decode= pools)")
@@ -1264,7 +1319,8 @@ class DisaggEngine(ClusterEngine):
             ("single" if pre.n_replicas == 1 else "cache_affinity")
         super().__init__(model, stores, carbon, types=pre.fleet,
                          router=router, balance_eps=pre.resolved_eps,
-                         transitions=transitions, wear_aware=wear_aware)
+                         transitions=transitions, wear_aware=wear_aware,
+                         tier_weights=tier_weights)
         self._set_decode(plan.decode.fleet)
 
     def _set_decode(self, types: Sequence[str]):
@@ -1443,7 +1499,8 @@ class DisaggEngine(ClusterEngine):
         emb_comp = self.carbon.compute_embodied_g(duration,
                                                   types=plan.all_types)
         util = (Kp * util_p + Kd * util_d) / (Kp + Kd)
-        tiers_arr, work_arr = _tier_arrays(requests, uncached, out, record)
+        tiers_arr, work_arr, ten_arr = _tier_arrays(requests, uncached,
+                                                    out, record)
         return SimResult(
             ttft=ttft if record else np.array([]),
             tpot=tpots if record else np.array([]),
@@ -1452,21 +1509,28 @@ class DisaggEngine(ClusterEngine):
             embodied_cache_g=emb_cache, embodied_compute_g=emb_comp,
             token_hit_rate=hit_tokens / max(lookup_tokens, 1),
             gpu_util=util, num_requests=n, n_replicas=Kp + Kd,
-            tiers=tiers_arr, work=work_arr)
+            tiers=tiers_arr, work=work_arr, tenants=ten_arr)
 
 
 def _tier_arrays(requests: Sequence, uncached: np.ndarray,
                  out: np.ndarray, record: bool):
-    """Per-request tier labels + work weights (uncached prefill and
-    output tokens — what the fleet actually computed) for functional-unit
-    attribution. ``(None, None)`` for the ubiquitous single-tier default
-    stream, so legacy results carry no extra arrays."""
+    """Per-request tier labels, work weights (uncached prefill and
+    output tokens — what the fleet actually computed) and tenant labels
+    for functional-unit attribution. ``(None, None, None)`` for the
+    ubiquitous single-tier default stream, so legacy results carry no
+    extra arrays; tenants stay None for stamped-tier streams whose
+    requests carry no tenant identity."""
     if not record:
-        return None, None
+        return None, None, None
     tl = [r.tier for r in requests]
     if len(set(tl)) == 1 and tl[0] == DEFAULT_TIER:
-        return None, None
-    return np.array(tl, dtype=object), (uncached + out).astype(float)
+        return None, None, None
+    tenants = None
+    if any(r.tenant for r in requests):
+        tenants = np.array([r.tenant or DEFAULT_TIER + "-0"
+                            for r in requests], dtype=object)
+    return np.array(tl, dtype=object), (uncached + out).astype(float), \
+        tenants
 
 
 def _mean_ci(ci_fn: Callable[[float], float], arrival: np.ndarray) -> float:
@@ -1488,7 +1552,9 @@ def make_cluster(model: ServingModel, carbon: CarbonModel, *,
                  storage: Union[StorageSpec, str, None] = None,
                  wear_aware: bool = True,
                  admission=None,
-                 prefix_caching: bool = False) -> ClusterEngine:
+                 prefix_caching: bool = False,
+                 tier_weights: Optional[Dict[str, float]] = None
+                 ) -> ClusterEngine:
     """Convenience constructor: builds the store(s) for a cluster-total
     ``cache_tb`` allocation (partitioned mode splits it evenly).
 
@@ -1572,8 +1638,9 @@ def make_cluster(model: ServingModel, carbon: CarbonModel, *,
                 if p.role == "prefill" else p for p in plan.pools))
         return DisaggEngine(model, stores, carbon, plan,
                             transitions=transitions,
-                            wear_aware=wear_aware)
+                            wear_aware=wear_aware,
+                            tier_weights=tier_weights)
     return ClusterEngine(model, stores, carbon, n_replicas=n_replicas,
                          router=router, types=types,
                          balance_eps=balance_eps, transitions=transitions,
-                         wear_aware=wear_aware)
+                         wear_aware=wear_aware, tier_weights=tier_weights)

@@ -49,6 +49,10 @@ class SimResult:
     # attribution base for ``per_tier``. None on single-tier runs.
     tiers: Optional[np.ndarray] = None
     work: Optional[np.ndarray] = None
+    # per-request tenant labels ("<tier>-<id>"), populated alongside
+    # ``tiers`` when the stream carries tenant identity — the chargeback
+    # attribution base for ``per_tenant``. None otherwise.
+    tenants: Optional[np.ndarray] = None
 
     @property
     def carbon_per_request_g(self) -> float:
@@ -98,6 +102,48 @@ class SimResult:
                            "g_per_request": g / max(n, 1)}
         return out
 
+    def per_tenant(self, slo: SLO) -> dict:
+        """Chargeback metrics per tenant (``{tenant: {tier, requests,
+        slo_frac, carbon_g, g_per_request}}``): carbon is attributed by
+        each tenant's share of the computed work (as in ``per_tier``),
+        then the float-rounding residual is folded into the largest-work
+        tenant so the invoices partition ``carbon_g`` *exactly* — a
+        chargeback ledger must sum to the bill.  Attainment is judged
+        against the tenant's tier SLO (the tier is the prefix of the
+        tenant label).  Empty when the stream carried no tenant
+        identity."""
+        if self.tenants is None or not len(self.ttft):
+            return {}
+        from repro.workloads.tenants import tier_slo
+        out = {}
+        total_work = float(self.work.sum()) or 1.0
+        for t in np.unique(self.tenants):
+            mask = self.tenants == t
+            n = int(mask.sum())
+            tier = str(t).rsplit("-", 1)[0]
+            ts = tier_slo(slo, tier)
+            ok = (self.ttft[mask] <= ts.ttft_s) \
+                & (self.tpot[mask] <= ts.tpot_s)
+            w = float(self.work[mask].sum())
+            out[str(t)] = {"tier": tier, "requests": n,
+                           "slo_frac": float(ok.mean()),
+                           "carbon_g": self.carbon_g * w / total_work}
+        # fold the float-rounding residual into the *last* invoice in
+        # iteration order: a sequential ``sum`` over the dict re-rounds
+        # every partial after the adjusted entry, so correcting the
+        # final addend leaves all earlier partials untouched and the
+        # fixed-point iteration converges in a step or two
+        last = next(reversed(out))
+        for _ in range(8):
+            resid = self.carbon_g \
+                - sum(d["carbon_g"] for d in out.values())
+            if resid == 0.0:
+                break
+            out[last]["carbon_g"] += resid
+        for d in out.values():
+            d["g_per_request"] = d["carbon_g"] / max(d["requests"], 1)
+        return out
+
 
 def combine_results(a: SimResult, b: SimResult) -> SimResult:
     """Merge two sequential segment results into one hour-level result —
@@ -121,6 +167,7 @@ def combine_results(a: SimResult, b: SimResult) -> SimResult:
 
     tiers = None
     work = None
+    tenants = None
     if a.tiers is not None or b.tiers is not None:
         fill_a = np.full(len(a.ttft), "standard", dtype=object)
         fill_b = np.full(len(b.ttft), "standard", dtype=object)
@@ -128,6 +175,12 @@ def combine_results(a: SimResult, b: SimResult) -> SimResult:
                                 b.tiers if b.tiers is not None else fill_b])
         work = _cat(a.work if a.work is not None else np.ones(len(a.ttft)),
                     b.work if b.work is not None else np.ones(len(b.ttft)))
+    if a.tenants is not None or b.tenants is not None:
+        fa = np.full(len(a.ttft), "standard-0", dtype=object)
+        fb = np.full(len(b.ttft), "standard-0", dtype=object)
+        tenants = np.concatenate(
+            [a.tenants if a.tenants is not None else fa,
+             b.tenants if b.tenants is not None else fb])
     return SimResult(
         ttft=np.concatenate([a.ttft, b.ttft]),
         tpot=np.concatenate([a.tpot, b.tpot]),
@@ -142,7 +195,7 @@ def combine_results(a: SimResult, b: SimResult) -> SimResult:
         gpu_util=(a.gpu_util * a.duration_s
                   + b.gpu_util * b.duration_s) / max(dur, 1e-9),
         num_requests=n, n_replicas=b.n_replicas,
-        tiers=tiers, work=work)
+        tiers=tiers, work=work, tenants=tenants)
 
 
 class ServingEngine:

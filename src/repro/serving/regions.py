@@ -1,0 +1,349 @@
+"""Geo-distributed multi-region serving: ``Region`` specs + ``GeoCluster``.
+
+A ``Region`` is a frozen deployment site: its own carbon-intensity trace
+(or the run's global trace), its own ``ResourcePlan`` candidate set, the
+network RTT each user *population* pays to reach it, and optional
+PUE/grid factors folded into an effective CI.  ``GeoCluster`` runs one
+``ClusterEngine``/``DisaggEngine`` per region over the controller's
+shared simulated clock and owns the deterministic request partition plus
+the cross-region KV placement (migrate-vs-re-prefill — see
+``repro.core.georouter``).
+
+Determinism contract (tested in ``tests/test_determinism.py``):
+
+* Request→region assignment hashes the request's *routing identity*
+  (``Request.route_key``) onto ``[0, 1)`` and maps it through the
+  cumulative weight intervals — the same user lands in the same region
+  while the split holds (KV affinity), and a split change moves exactly
+  the boundary users (total-variation fraction), who become the
+  migrate-vs-re-prefill candidates.
+* With a single region every weight vector is ``[1.0]``, every request
+  maps to region 0 in stream order, no KV ever shifts and no RTT is
+  added — the geo loop then bit-reproduces the single-site ``run_day``.
+* The per-hour ``GeoHourLedger`` partitions the stream and the moved
+  bytes exactly: assigned counts sum to the hour's request count, and
+  ``migrated_bytes == adopted_bytes + dropped_bytes``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.carbon import kv_migration_energy_kwh
+from repro.core.georouter import GeoRoutingConfig, migration_cheaper
+from repro.serving.cluster import _stable_hash
+
+_U64 = float(1 << 64)
+
+
+# --------------------------------------------------------------------- #
+# Region spec
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Region:
+    """One deployment site of the global fleet.
+
+    ``cis`` — the region's hourly carbon-intensity trace (``None`` =
+    the run's global trace; shorter traces tile).  ``plans`` — plan
+    strings/``ResourcePlan`` candidates for this region's solver
+    (``None`` = the controller's candidate set).  ``rtt_ms`` — network
+    RTT per user population, as sorted ``(population, ms)`` pairs.
+    ``pue`` and ``grid_factor`` scale the grid CI into the effective CI
+    every watt is priced at (``ci_scale``); ``tz_offset_h`` is the local
+    clock offset the follow-the-sun policy reads (``Region.make`` also
+    phase-shifts generated grid traces by it)."""
+    name: str
+    cis: Optional[Tuple[float, ...]] = None
+    plans: Optional[Tuple[str, ...]] = None
+    rtt_ms: Tuple[Tuple[str, float], ...] = (("global", 0.0),)
+    pue: float = 1.0
+    grid_factor: float = 1.0
+    tz_offset_h: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "rtt_ms",
+                           tuple(sorted((str(p), float(v))
+                                        for p, v in self.rtt_ms)))
+        if self.cis is not None:
+            object.__setattr__(self, "cis",
+                               tuple(float(c) for c in self.cis))
+        if self.plans is not None:
+            object.__setattr__(self, "plans",
+                               tuple(str(p) for p in self.plans))
+        if self.pue < 1.0:
+            raise ValueError(f"pue must be >= 1.0, got {self.pue!r}")
+
+    @classmethod
+    def make(cls, name: str, *, grid: Optional[str] = None,
+             cis: Optional[Sequence[float]] = None, days: int = 1,
+             seed: int = 1, plans=None,
+             rtt_ms: Optional[Dict[str, float]] = None, pue: float = 1.0,
+             grid_factor: float = 1.0, tz_offset_h: int = 0) -> "Region":
+        """Convenience constructor: ``grid=`` generates the CI trace via
+        ``repro.workloads.traces.ci_trace`` and rolls it by
+        ``tz_offset_h`` so the grid's diurnal shape (solar dip, evening
+        peak) plays out in the region's *local* time."""
+        if grid is not None and cis is not None:
+            raise ValueError("pass grid= or cis=, not both")
+        if grid is not None:
+            from repro.workloads.traces import ci_trace
+            trace = ci_trace(grid, days=days, seed=seed)
+            if tz_offset_h:
+                # value at global hour h = the grid's shape at local
+                # hour h + tz  (roll(-tz)[h] == trace[h + tz])
+                trace = np.roll(trace, -int(tz_offset_h))
+            cis = tuple(float(c) for c in trace)
+        elif cis is not None:
+            cis = tuple(float(c) for c in cis)
+        if plans is not None and not isinstance(plans, (list, tuple)):
+            plans = (plans,)
+        return cls(name=name, cis=cis,
+                   plans=tuple(str(p) for p in plans)
+                   if plans is not None else None,
+                   rtt_ms=tuple((rtt_ms or {"global": 0.0}).items()),
+                   pue=pue, grid_factor=grid_factor,
+                   tz_offset_h=int(tz_offset_h))
+
+    @property
+    def ci_scale(self) -> float:
+        """Effective-CI multiplier: data-center PUE × grid adjustment."""
+        return self.pue * self.grid_factor
+
+    @property
+    def populations(self) -> Tuple[str, ...]:
+        return tuple(p for p, _ in self.rtt_ms)
+
+    def rtt_for(self, population: str) -> float:
+        for p, v in self.rtt_ms:
+            if p == population:
+                return v
+        # an unlisted population pays the region's worst listed RTT
+        return max(v for _, v in self.rtt_ms)
+
+
+def coerce_regions(regions) -> List[Region]:
+    out = []
+    for r in regions:
+        if isinstance(r, Region):
+            out.append(r)
+        elif isinstance(r, str):
+            out.append(Region.make(r))
+        else:
+            raise TypeError(f"expected Region or name, got {type(r)}")
+    if not out:
+        raise ValueError("regions= needs at least one Region")
+    names = [r.name for r in out]
+    if len(names) != len(set(names)):
+        raise ValueError(f"duplicate region names in {names}")
+    return out
+
+
+# --------------------------------------------------------------------- #
+# Deterministic assignment
+# --------------------------------------------------------------------- #
+def geo_u(route_key: str) -> float:
+    """Stable position of a routing identity on ``[0, 1)`` — salted away
+    from the replica ring's hash so region assignment and intra-region
+    replica placement stay uncorrelated."""
+    return _stable_hash("geo|" + route_key) / _U64
+
+
+def population_index(route_key: str, n_populations: int) -> int:
+    if n_populations <= 1:
+        return 0
+    return _stable_hash("pop|" + route_key) % n_populations
+
+
+def split_index(u: float, cum_weights: np.ndarray) -> int:
+    """Region index of a ``[0, 1)`` position under cumulative weights."""
+    return min(int(np.searchsorted(cum_weights, u, side="right")),
+               len(cum_weights) - 1)
+
+
+@dataclass
+class GeoHourLedger:
+    """One hour's routing + KV-placement accounting.  ``weights`` maps
+    ``"population|ttft_scale"`` to the weight vector used; ``assigned``
+    partitions the hour's request count exactly; the byte fields
+    partition every cross-region move (``migrated_bytes ==
+    adopted_bytes + dropped_bytes``; re-prefill bytes never moved)."""
+    hour: int
+    weights: Dict[str, Tuple[float, ...]]
+    assigned: Tuple[int, ...]
+    migrated_bytes: float = 0.0
+    migrated_entries: int = 0
+    migration_kwh: float = 0.0
+    adopted_bytes: float = 0.0
+    dropped_entries: int = 0
+    dropped_bytes: float = 0.0
+    reprefill_bytes: float = 0.0
+    reprefill_tokens: float = 0.0
+    moves: Dict[Tuple[int, int], float] = field(default_factory=dict)
+
+
+class GeoCluster:
+    """The regions' engines behind one deterministic global router.
+
+    The controller owns the clock, the solves and the per-hour records;
+    ``GeoCluster`` owns what is *global*: request→region assignment
+    (``partition``), the population/tier-budget weight-vector table
+    (``set_weights``) and cross-region KV placement (``shift_kv``)."""
+
+    def __init__(self, regions: Sequence[Region], engines: Sequence,
+                 *, model, carbon, cfg: GeoRoutingConfig,
+                 tier_scales: Optional[Dict[str, float]] = None):
+        self.regions = list(regions)
+        self.engines = list(engines)
+        if len(self.regions) != len(self.engines):
+            raise ValueError("one engine per region")
+        self.model = model
+        self.carbon = carbon
+        self.cfg = cfg
+        # tier -> TTFT-budget scale for eligibility; requests whose tier
+        # is unlisted use the base budget (scale 1.0) — the untiered path
+        self.tier_scales = dict(tier_scales or {})
+        self.populations = sorted({p for r in self.regions
+                                   for p in r.populations})
+        # (population_index, scale) -> (weights, cumulative weights)
+        self.vectors: Dict[Tuple[int, float],
+                           Tuple[np.ndarray, np.ndarray]] = {}
+        self.ledgers: List[GeoHourLedger] = []
+
+    @property
+    def n_regions(self) -> int:
+        return len(self.regions)
+
+    def rtts_for(self, population: str) -> np.ndarray:
+        return np.array([r.rtt_for(population) for r in self.regions])
+
+    def set_weights(self, vectors: Dict[Tuple[int, float], np.ndarray]):
+        self.vectors = {k: (np.asarray(w, dtype=float),
+                            np.cumsum(np.asarray(w, dtype=float)))
+                        for k, w in vectors.items()}
+
+    def weights_key(self) -> Dict[str, Tuple[float, ...]]:
+        return {f"{self.populations[p]}|{s:g}": tuple(w)
+                for (p, s), (w, _) in sorted(self.vectors.items())}
+
+    # ---- request partition ---- #
+    def _vector_for(self, request) -> Tuple[int, Tuple[np.ndarray,
+                                                       np.ndarray]]:
+        pop = population_index(request.route_key, len(self.populations))
+        scale = self.tier_scales.get(getattr(request, "tier", ""), 1.0)
+        return pop, self.vectors[(pop, scale)]
+
+    def partition(self, requests: Sequence
+                  ) -> Tuple[List[List], List[List[float]]]:
+        """Split a time-ordered request stream across regions.  Returns
+        per-region request lists (stream order preserved within each
+        region) and the matching per-request added-RTT seconds (one-way
+        RTT applied to TTFT).  Single-region clusters pass the stream
+        through untouched with zero RTT."""
+        R = self.n_regions
+        per: List[List] = [[] for _ in range(R)]
+        rtt: List[List[float]] = [[] for _ in range(R)]
+        if R == 1:
+            per[0] = list(requests)
+            rtt[0] = [0.0] * len(per[0])
+            return per, rtt
+        for r in requests:
+            pop, (_, cum) = self._vector_for(r)
+            k = split_index(geo_u(r.route_key), cum)
+            per[k].append(r)
+            rtt[k].append(self.regions[k]
+                          .rtt_for(self.populations[pop]) / 1000.0)
+        return per, rtt
+
+    # ---- cross-region KV placement ---- #
+    def _kv_region(self, owner: str) -> int:
+        """Region a warm entry belongs to under the *current* split: the
+        tightest tier budget's vector (gold-first — the working set worth
+        protecting follows the most constrained traffic)."""
+        pop = population_index(owner, len(self.populations))
+        scale = min((s for (p, s) in self.vectors if p == pop),
+                    default=1.0)
+        _, cum = self.vectors[(pop, scale)]
+        return split_index(geo_u(owner), cum)
+
+    def shift_kv(self, hour_cis: Sequence[float], now: float,
+                 ledger: GeoHourLedger):
+        """Reconcile warm KV with the new split: entries whose owner now
+        routes elsewhere either migrate (popped from the source store,
+        adopted by the destination, WAN energy deferred into the
+        destination's next window — the PR-4 ``_pending_kwh`` fold) or
+        stay behind to be re-prefilled at the destination (the cost then
+        emerges as real cold misses).  One aggregate migrate-vs-
+        re-prefill decision per (src, dst) pair."""
+        R = self.n_regions
+        if R == 1:
+            return
+        # group movable entries by (src, dst): trees move whole (every
+        # node shares its root's owner_key), stubs hold no bytes
+        moves: Dict[Tuple[int, int], List] = {}
+        for src, engine in enumerate(self.engines):
+            for store in engine.stores:
+                owners: Dict[str, int] = {}
+                for key, e in list(store.entries.items()):
+                    if e.size_bytes <= 0.0:
+                        continue
+                    owner = store.owner_key(key)
+                    dst = owners.get(owner)
+                    if dst is None:
+                        dst = owners[owner] = self._kv_region(owner)
+                    if dst != src:
+                        moves.setdefault((src, dst), []).append(
+                            (store, key, e))
+        for (src, dst), items in sorted(moves.items(),
+                                        key=lambda kv: kv[0]):
+            bytes_moved = sum(e.size_bytes for _, _, e in items)
+            tokens = float(sum(e.num_tokens for _, _, e in items))
+            ci_src, ci_dst = float(hour_cis[src]), float(hour_cis[dst])
+            if not migration_cheaper(bytes_moved, tokens, ci_src, ci_dst,
+                                     model=self.model, carbon=self.carbon,
+                                     cfg=self.cfg):
+                ledger.reprefill_bytes += bytes_moved
+                ledger.reprefill_tokens += tokens
+                continue
+            dst_store = self.engines[dst].stores[0]
+            pair_moved = 0.0
+            for store, key, _ in items:
+                if key not in store.entries:
+                    continue             # evicted by an earlier adopt
+                e = store.pop_entry(key)
+                if e.size_bytes <= 0.0:
+                    continue             # interior node already stubbed
+                pair_moved += e.size_bytes
+                ledger.migrated_bytes += e.size_bytes
+                ledger.migrated_entries += 1
+                if dst_store.adopt(e, now):
+                    ledger.adopted_bytes += e.size_bytes
+                else:
+                    ledger.dropped_entries += 1
+                    ledger.dropped_bytes += e.size_bytes
+            if pair_moved <= 0.0:
+                continue
+            ledger.moves[(src, dst)] = \
+                ledger.moves.get((src, dst), 0.0) + pair_moved
+            kwh = kv_migration_energy_kwh(pair_moved,
+                                          self.cfg.inter_region_gbps)
+            ledger.migration_kwh += kwh
+            self.engines[dst].defer_energy_kwh(kwh)
+
+    # ---- failover ---- #
+    def capacity_fractions(self,
+                           planned: Sequence[int]) -> np.ndarray:
+        """Live replica count over planned, per region — the router's
+        failover signal after a ``ZoneFailure``/``ReplicaFailure`` tore
+        replicas out of a region mid-hour.  Exactly 1.0 everywhere on
+        the healthy path."""
+        out = np.ones(self.n_regions)
+        for i, (eng, plan_n) in enumerate(zip(self.engines, planned)):
+            n = getattr(eng, "n_replicas", plan_n)
+            if plan_n > 0 and n != plan_n:
+                out[i] = n / plan_n
+        return out
+
+
+Regions = Union[Sequence[Region], Sequence[str]]

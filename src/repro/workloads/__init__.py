@@ -9,7 +9,7 @@ from repro.workloads.request import Request
 from repro.workloads.scenarios import (CISpike, CompositeScenario, Event,
                                        FlashCrowd, GreenBackfill,
                                        ReplicaFailure, Scenario,
-                                       StorageDegradation)
+                                       StorageDegradation, ZoneFailure)
 from repro.workloads.tenants import (DEFAULT_TIER, TIERS,
                                      MultiTenantWorkload, TierSpec,
                                      multi_tenant, normalize_shares,
@@ -33,7 +33,7 @@ __all__ = ["azure_rate_trace", "ci_trace", "make_poisson_arrivals",
            # scenarios
            "Event", "Scenario", "CompositeScenario", "FlashCrowd",
            "CISpike", "ReplicaFailure", "StorageDegradation",
-           "GreenBackfill",
+           "ZoneFailure", "GreenBackfill",
            # multi-tenant tiers
            "TierSpec", "TIERS", "DEFAULT_TIER", "tier_spec", "tier_slo",
            "normalize_shares", "MultiTenantWorkload", "multi_tenant"]

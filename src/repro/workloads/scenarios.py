@@ -233,6 +233,34 @@ class StorageDegradation(Scenario):
 
 
 @dataclass(frozen=True)
+class ZoneFailure(Scenario):
+    """Whole-zone outage: ``count`` replicas of one region torn out in
+    quick succession (fail-stop, seconds apart), composed from the same
+    ``fail_replica`` events a :class:`ReplicaFailure` emits.  Replicas
+    fail in *descending* index order so each event's index is still
+    valid after the previous pop shifted the survivors down.  In a
+    geo-distributed run (``run_day(regions=...)``) the events land on
+    the first region — the zone — and the global router resplits the
+    stream around the lost capacity; the engine itself always keeps its
+    last replica (``fail_replica`` skips when one remains)."""
+
+    hour: int = 12
+    frac: float = 0.5
+    count: int = 2
+    stagger_s: float = 5.0
+    name: str = field(default="zone_failure", init=False)
+
+    def events(self, H):
+        if not 0 <= self.hour < H:
+            return ()
+        t0 = (self.hour + float(self.frac)) * 3600.0
+        return tuple(
+            Event(t0 + i * float(self.stagger_s), "fail_replica",
+                  float(self.count - 1 - i))
+            for i in range(max(int(self.count), 0)))
+
+
+@dataclass(frozen=True)
 class GreenBackfill(Scenario):
     """Batch/offline jobs backfilling green windows: hours whose *base*
     CI sits in the lowest ``quantile`` gain ``boost`` × the base rate
@@ -250,4 +278,4 @@ class GreenBackfill(Scenario):
 
 __all__ = ["Event", "Scenario", "CompositeScenario", "FlashCrowd",
            "CISpike", "ReplicaFailure", "StorageDegradation",
-           "GreenBackfill"]
+           "ZoneFailure", "GreenBackfill"]

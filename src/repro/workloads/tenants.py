@@ -39,15 +39,28 @@ class TierSpec:
     tpot_scale: float      # tier TPOT SLO = base tpot_s × tpot_scale
     protected: bool        # counts toward the solver's rho constraint
     preemptible: bool      # in-service work yields to higher tiers
+    # cache eviction weight (``repro.core.policies.tier_weighted``):
+    # keep-priority multiplier on the tier's cached prefixes, so
+    # best-effort churn cannot flush a protected tier's working set
+    cache_weight: float = 1.0
 
 
 TIERS: Dict[str, TierSpec] = {
-    "gold": TierSpec("gold", 0, 1.0, 1.0, True, False),
-    "standard": TierSpec("standard", 1, 1.5, 1.5, True, False),
-    "scavenger": TierSpec("scavenger", 2, 6.0, 6.0, False, True),
+    "gold": TierSpec("gold", 0, 1.0, 1.0, True, False,
+                     cache_weight=4.0),
+    "standard": TierSpec("standard", 1, 1.5, 1.5, True, False,
+                         cache_weight=1.0),
+    "scavenger": TierSpec("scavenger", 2, 6.0, 6.0, False, True,
+                          cache_weight=0.25),
 }
 
 DEFAULT_TIER = "standard"
+
+
+def default_cache_weights() -> Dict[str, float]:
+    """The standing tier → eviction-weight mapping (what
+    ``GreenCacheController(tier_cache_weights=True)`` resolves to)."""
+    return {t: s.cache_weight for t, s in TIERS.items()}
 
 
 def tier_spec(tier: str) -> TierSpec:

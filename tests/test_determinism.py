@@ -100,3 +100,71 @@ def test_different_seeds_actually_differ():
     b = _day(CONFIGS["cluster"], seed=8)
     assert any(ha.carbon_g != hb.carbon_g
                for ha, hb in zip(a.hours, b.hours))
+
+
+# ------------------------------------------------------------------ #
+# geo-distributed runs (run_day(regions=...))
+# ------------------------------------------------------------------ #
+def _geo_day(cfg, regions, *, geo=None, seed=7, tiers=None,
+             scenario=None):
+    ctl = GreenCacheController(M, synth_profile(), CM, "conversation",
+                               policy="lcs_chat", warm_requests=600,
+                               max_requests_per_hour=120, seed=seed,
+                               tiers=tiers, **cfg)
+    rates = np.array([0.8, 1.2, 1.5, 1.0])
+    cis = np.array([10.0, 500.0, 10.0, 500.0])
+    res = ctl.run_day(lambda s: ConversationWorkload(seed=s), rates, cis,
+                      regions=regions, geo=geo, scenario=scenario)
+    return res, ctl
+
+
+def _geo_regions():
+    from repro.serving.regions import Region
+    return [Region.make("west", cis=[10.0, 500.0, 10.0, 500.0],
+                        rtt_ms={"na": 10.0, "eu": 120.0}),
+            Region.make("east", cis=[500.0, 10.0, 500.0, 10.0],
+                        rtt_ms={"na": 120.0, "eu": 10.0})]
+
+
+def test_geo_single_region_bit_reproduces_run_day():
+    """One region, no RTT, global trace: the geo loop must reproduce
+    the single-site ``run_day`` bit for bit."""
+    from repro.serving.regions import Region
+    single = _day(CONFIGS["cluster"])
+    geo, _ = _geo_day(CONFIGS["cluster"], [Region("solo")])
+    _identical(single, geo)
+    _identical(single, geo.regions["solo"])
+
+
+def test_geo_same_seed_runs_are_identical():
+    from repro.core.georouter import GeoRoutingConfig
+    cfg = GeoRoutingConfig(policy="green", migration="always")
+    a, _ = _geo_day(CONFIGS["cluster"], _geo_regions(), geo=cfg)
+    b, _ = _geo_day(CONFIGS["cluster"], _geo_regions(), geo=cfg)
+    _identical(a, b)
+    for name in ("west", "east"):
+        _identical(a.regions[name], b.regions[name])
+
+
+def test_geo_ledgers_partition_requests_bytes_and_carbon():
+    from repro.core.georouter import GeoRoutingConfig
+    cfg = GeoRoutingConfig(policy="green", migration="always")
+    run, ctl = _geo_day({"plans": ["cache=auto fleet=l40:2"],
+                         "mode": "full"}, _geo_regions(), geo=cfg)
+    ledgers = ctl.last_geo.ledgers
+    assert len(ledgers) == len(run.hours)
+    moved = 0.0
+    for h, led in zip(run.hours, ledgers):
+        # the router partitions the hour's stream exactly
+        assert sum(led.assigned) == h.num_requests
+        # every moved byte is adopted or dropped, never lost
+        assert led.migrated_bytes == led.adopted_bytes + led.dropped_bytes
+        assert sum(led.moves.values()) <= led.migrated_bytes + 1e-9
+        moved += led.migrated_bytes
+        # the regions' records partition the global hour exactly
+        hw = run.regions["west"].hours[h.hour]
+        he = run.regions["east"].hours[h.hour]
+        assert h.carbon_g == hw.carbon_g + he.carbon_g
+        assert h.operational_g == hw.operational_g + he.operational_g
+        assert h.num_requests == hw.num_requests + he.num_requests
+    assert moved > 0.0      # anti-phase grids force KV to follow traffic

@@ -1,0 +1,385 @@
+"""Geo-distributed serving: routing policies, the deterministic request
+partition, cross-region KV placement, the joint split×plan solver,
+tier-aware cache eviction weights, per-tenant chargeback, and the
+``ZoneFailure`` scenario."""
+import numpy as np
+import pytest
+
+from repro.core.carbon import CarbonModel
+from repro.core.controller import GreenCacheController
+from repro.core.georouter import (GEO_POLICIES, GeoRoutingConfig,
+                                  apply_capacity, eligible_mask,
+                                  migration_cheaper, prefill_recompute_kwh,
+                                  route_weights)
+from repro.core.kvstore import KVStore
+from repro.core.policies import POLICIES, VECTOR_POLICIES, tier_weighted
+from repro.core.profiler import Profile, ProfileCell
+from repro.core.radix import RadixKVStore
+from repro.core.solver import _simplex_splits, solve_geo_schedule
+from repro.serving.perfmodel import SERVING_MODELS
+from repro.serving.regions import (GeoCluster, Region, coerce_regions,
+                                   geo_u, population_index, split_index)
+from repro.workloads import Event, ZoneFailure
+from repro.workloads.conversations import ConversationWorkload
+from repro.workloads.tenants import default_cache_weights
+
+M = SERVING_MODELS["llama3-70b"]
+CM = CarbonModel()
+
+
+def synth_profile(sizes=(0, 4), rates=(0.2, 0.5, 1.0, 1.5, 2.0)):
+    prof = Profile("m", "t", rates=list(rates), sizes=list(sizes))
+    for r in rates:
+        for s in sizes:
+            slo = float(np.clip(1.1 - 0.25 * r + 0.02 * s, 0.0, 1.0))
+            prof.cells[(r, s)] = ProfileCell(
+                rate=r, cache_tb=s, avg_ttft=0.5 + 0.5 * r, p90_ttft=1 + r,
+                avg_tpot=0.05, p90_tpot=0.08, slo_frac=slo,
+                hit_rate=min(0.1 * s, 0.8),
+                energy_per_req_kwh=2e-4 * (1 + 1 / max(r, 0.1)),
+                duration_per_req_s=1.0 / max(r, 0.1), avg_power_w=800.0,
+                slo_ttft_frac=min(slo * 1.05, 1.0),
+                slo_tpot_frac=min(slo * 1.1, 1.0), avg_out_tokens=400.0)
+    return prof
+
+
+def _controller(mode="greencache", seed=7,
+                plans=("cache=auto fleet=l40:2",), **kw):
+    return GreenCacheController(M, synth_profile(), CM, "conversation",
+                                policy="lcs_chat", warm_requests=600,
+                                max_requests_per_hour=120, seed=seed,
+                                mode=mode, plans=list(plans), **kw)
+
+
+RATES = np.array([0.8, 1.2, 1.5, 1.0])
+CIS = np.array([10.0, 500.0, 10.0, 500.0])
+# two regions on anti-phase grids; each population is near one of them
+REGIONS = [Region.make("west", cis=[10.0, 500.0, 10.0, 500.0],
+                       rtt_ms={"na": 10.0, "eu": 120.0}),
+           Region.make("east", cis=[500.0, 10.0, 500.0, 10.0],
+                       rtt_ms={"na": 120.0, "eu": 10.0})]
+
+
+def _wf(s):
+    return ConversationWorkload(seed=s)
+
+
+# ------------------------------------------------------------------ #
+# routing policy layer (pure functions)
+# ------------------------------------------------------------------ #
+def test_eligible_mask_budget_and_fallback():
+    rtts = np.array([20.0, 200.0, 900.0])
+    m = eligible_mask(rtts, ttft_budget_s=1.0, rtt_budget_frac=0.3)
+    assert m.tolist() == [True, True, False]
+    # nothing within budget: the nearest region stays eligible
+    m = eligible_mask(rtts, ttft_budget_s=0.01, rtt_budget_frac=0.3)
+    assert m.tolist() == [True, False, False]
+
+
+def test_latency_policy_is_nearest_one_hot():
+    w = route_weights(GeoRoutingConfig(policy="latency"),
+                      rtts_ms=[80.0, 15.0], cis=[1.0, 900.0],
+                      tz_offsets_h=[0, 0], hour=0, ttft_budget_s=2.0)
+    assert w.tolist() == [0.0, 1.0]          # carbon-blind
+
+
+def test_green_policy_concentrates_on_clean_grid():
+    cfg = GeoRoutingConfig(policy="green", gamma=4.0)
+    w = route_weights(cfg, rtts_ms=[10.0, 10.0], cis=[20.0, 400.0],
+                      tz_offsets_h=[0, 0], hour=0, ttft_budget_s=2.0)
+    assert w[0] > 0.99 and abs(w.sum() - 1.0) < 1e-12
+    # equal CIs: indifferent
+    w = route_weights(cfg, rtts_ms=[10.0, 10.0], cis=[50.0, 50.0],
+                      tz_offsets_h=[0, 0], hour=0, ttft_budget_s=2.0)
+    assert np.allclose(w, [0.5, 0.5])
+
+
+def test_green_respects_rtt_eligibility():
+    cfg = GeoRoutingConfig(policy="green", rtt_budget_frac=0.3)
+    # the clean region is too far for the budget -> all weight nearby
+    w = route_weights(cfg, rtts_ms=[10.0, 5000.0], cis=[400.0, 10.0],
+                      tz_offsets_h=[0, 0], hour=0, ttft_budget_s=1.0)
+    assert w.tolist() == [1.0, 0.0]
+
+
+def test_sun_policy_follows_local_daylight():
+    cfg = GeoRoutingConfig(policy="sun", sun_window=(8.0, 18.0))
+    # at UTC hour 12, region B (tz -12 -> local 0h) is dark
+    w = route_weights(cfg, rtts_ms=[10.0, 10.0], cis=[100.0, 100.0],
+                      tz_offsets_h=[0, -12], hour=12, ttft_budget_s=2.0)
+    assert w[0] == 1.0 and w[1] == 0.0
+    # nobody in daylight falls back to follow-the-green
+    w = route_weights(cfg, rtts_ms=[10.0, 10.0], cis=[100.0, 10.0],
+                      tz_offsets_h=[-12, -12], hour=12, ttft_budget_s=2.0)
+    assert w[1] > w[0]
+
+
+def test_static_and_weighted_policies():
+    w = route_weights(GeoRoutingConfig(policy="static"),
+                      rtts_ms=[10.0, 10.0, 9000.0], cis=[1.0, 2.0, 3.0],
+                      tz_offsets_h=[0, 0, 0], hour=0, ttft_budget_s=1.0)
+    assert np.allclose(w, [0.5, 0.5, 0.0])
+    wa = route_weights(GeoRoutingConfig(policy="weighted", alpha=1.0),
+                       rtts_ms=[10.0, 200.0], cis=[50.0, 10.0],
+                       tz_offsets_h=[0, 0], hour=0, ttft_budget_s=2.0)
+    wb = route_weights(GeoRoutingConfig(policy="weighted", alpha=0.0),
+                       rtts_ms=[10.0, 200.0], cis=[50.0, 10.0],
+                       tz_offsets_h=[0, 0], hour=0, ttft_budget_s=2.0)
+    assert wa[1] > wb[1]   # more carbon emphasis -> more to the clean one
+
+
+def test_apply_capacity_healthy_path_is_identity():
+    w = np.array([0.7, 0.3])
+    assert apply_capacity(w, np.ones(2)) is w     # bit-stable no-op
+    out = apply_capacity(w, np.array([1.0, 0.0]))
+    assert out.tolist() == [1.0, 0.0]
+    # everything down keeps the split rather than dividing by zero
+    assert apply_capacity(w, np.zeros(2)) is w
+
+
+def test_geo_config_validation():
+    with pytest.raises(ValueError):
+        GeoRoutingConfig(policy="nope")
+    with pytest.raises(ValueError):
+        GeoRoutingConfig(migration="sometimes")
+    with pytest.raises(ValueError):
+        GeoRoutingConfig(quantum=0.0)
+    assert set(GEO_POLICIES) >= {"green", "latency", "sun", "weighted",
+                                 "static", "solve"}
+
+
+def test_migration_cheaper_pricing():
+    cfg = GeoRoutingConfig()
+    assert migration_cheaper(1e9, 1e4, 100.0, 100.0, model=M, carbon=CM,
+                             cfg=GeoRoutingConfig(migration="always"))
+    assert not migration_cheaper(1e9, 1e4, 100.0, 100.0, model=M,
+                                 carbon=CM,
+                                 cfg=GeoRoutingConfig(migration="never"))
+    # few bytes standing in for many tokens: migrating wins
+    assert migration_cheaper(1e6, 1e6, 100.0, 100.0, model=M, carbon=CM,
+                             cfg=cfg)
+    # huge payload for trivial recompute: re-prefill wins
+    assert not migration_cheaper(1e13, 10.0, 100.0, 100.0, model=M,
+                                 carbon=CM, cfg=cfg)
+    assert prefill_recompute_kwh(0.0, M, CM) == 0.0
+
+
+# ------------------------------------------------------------------ #
+# regions + deterministic partition
+# ------------------------------------------------------------------ #
+def test_region_make_rolls_grid_trace_by_timezone():
+    a = Region.make("a", grid="FR", seed=3)
+    b = Region.make("b", grid="FR", seed=3, tz_offset_h=6)
+    assert a.cis[6] == b.cis[0]          # local shape, shifted clock
+    assert Region.make("p", grid="FR", pue=1.4).ci_scale == 1.4
+    with pytest.raises(ValueError):
+        Region.make("x", grid="FR", cis=[1.0])
+    with pytest.raises(ValueError):
+        Region("neg", pue=0.5)
+
+
+def test_coerce_regions_rejects_duplicates():
+    assert [r.name for r in coerce_regions(["a", "b"])] == ["a", "b"]
+    with pytest.raises(ValueError):
+        coerce_regions([Region("a"), Region("a")])
+    with pytest.raises(ValueError):
+        coerce_regions([])
+
+
+def test_geo_assignment_is_stable_and_partitions():
+    cum = np.cumsum([0.5, 0.5])
+    for key in ("user-1", "user-2", "abc"):
+        u = geo_u(key)
+        assert 0.0 <= u < 1.0
+        assert geo_u(key) == u                       # stable
+        assert split_index(u, cum) in (0, 1)
+    assert population_index("user-1", 1) == 0
+    assert 0 <= population_index("user-1", 3) < 3
+    # a one-hot split sends every position to the hot region; positions
+    # past a rounding-short cumulative sum clamp to the last region
+    assert split_index(0.999999, np.cumsum([1.0, 0.0])) == 0
+    assert split_index(0.9999999, np.cumsum([0.3, 0.6999998])) == 1
+
+
+def test_single_region_partition_is_passthrough():
+    cluster = GeoCluster([Region("solo")], [object()], model=M,
+                         carbon=CM, cfg=GeoRoutingConfig())
+    reqs = ["r%d" % i for i in range(5)]             # opaque is fine
+    per, rtt = cluster.partition(reqs)
+    assert per == [reqs] and rtt == [[0.0] * 5]
+
+
+# ------------------------------------------------------------------ #
+# joint split x plan solver
+# ------------------------------------------------------------------ #
+def test_simplex_splits_enumeration():
+    s = _simplex_splits(2, 0.25)
+    assert (1.0, 0.0) in s and (0.5, 0.5) in s and (0.0, 1.0) in s
+    assert all(abs(sum(x) - 1.0) < 1e-9 for x in s)
+    # ineligible regions carry zero weight in every candidate
+    s = _simplex_splits(3, 0.5, eligible=[True, False, True])
+    assert all(x[1] == 0.0 for x in s)
+
+
+def test_solve_geo_schedule_two_regions():
+    prof = synth_profile()
+    cis = [[10.0, 400.0, 10.0, 400.0], [400.0, 10.0, 400.0, 10.0]]
+    from repro.core.profiler import _slo_for
+    res = solve_geo_schedule(
+        prof, [0.8, 1.0, 1.2, 0.9], cis, _slo_for(M.name, "conversation"),
+        CM, region_plans=[[], []], sizes_tb=[0, 4], quantum=0.5, rho=0.5,
+        model=M)
+    assert res.feasible
+    assert len(res.splits) == 4
+    assert all(abs(sum(s) - 1.0) < 1e-9 for s in res.splits)
+    assert len(res.per_region) == 2
+    for sub in res.per_region:
+        assert len(sub.sizes_tb) == 4
+    # anti-phase grids: the chosen split should not sit on the dirty
+    # region when the clean one is wide open
+    assert res.splits[0][0] >= 0.5 and res.splits[1][1] >= 0.5
+
+
+# ------------------------------------------------------------------ #
+# tier-aware cache eviction weights (satellite: gold working sets)
+# ------------------------------------------------------------------ #
+def test_tier_weighted_policy_is_memoized_with_vector_twin():
+    base = POLICIES["lru"]
+    w1, w2 = tier_weighted(base), tier_weighted(base)
+    assert w1 is w2                        # stable identity for the
+    assert w1 in VECTOR_POLICIES           # columnar-evict registry
+    assert default_cache_weights()["gold"] > \
+        default_cache_weights()["standard"] > \
+        default_cache_weights()["scavenger"]
+
+
+def test_weight_promotes_but_never_demotes():
+    store = KVStore(1e6, tier_weighted(POLICIES["lru"]), 1.0)
+    store.account("k", 0, 100, 1.0, weight=4.0)
+    assert store.entries["k"].weight == 4.0
+    store.account("k", 100, 100, 2.0, weight=0.25)   # scavenger rehit
+    assert store.entries["k"].weight == 4.0           # still gold
+
+
+@pytest.mark.parametrize("vector", [False, True])
+def test_gold_survives_scavenger_flood_flat(vector):
+    """A gold working set outlives a scavenger flash crowd under the
+    weighted policy — and is flushed without it (the regression)."""
+    def flood(policy, weights):
+        store = KVStore(20 * 1000.0, policy, 1.0)     # room for 20 keys
+        if vector:
+            assert store.enable_vector_evict()
+        for i in range(10):
+            store.account(f"gold-{i}", 0, 1000, 1000.0 + i,
+                          weight=weights.get("gold", 1.0))
+        for i in range(100):
+            store.account(f"scav-{i}", 0, 1000, 2000.0 + i,
+                          weight=weights.get("scavenger", 1.0))
+        return sum(1 for k in store.entries if k.startswith("gold"))
+    w = default_cache_weights()
+    assert flood(tier_weighted(POLICIES["lru"]), w) == 10
+    assert flood(POLICIES["lru"], {}) == 0
+
+
+def test_gold_prefix_tree_survives_scavenger_flood_radix():
+    store = RadixKVStore(30 * 1000.0, tier_weighted(POLICIES["lru"]), 1.0)
+    for i in range(3):                     # gold conversation trees
+        store.account(f"sys/g{i}/turn1", 0, 3000, 1000.0 + i, weight=4.0)
+    gold_keys = {k for k in store.entries}
+    assert gold_keys
+    for i in range(200):                   # scavenger flash crowd
+        store.account(f"scrape/s{i}", 0, 1000, 2000.0 + i, weight=0.25)
+    survivors = [k for k in gold_keys
+                 if k in store.entries and store.entries[k].size_bytes > 0]
+    assert len(survivors) == len(gold_keys)
+
+
+def test_unweighted_account_is_default_path():
+    # weight=1.0 (the default) leaves legacy entries untouched
+    store = KVStore(1e6, POLICIES["lru"], 1.0)
+    store.account("k", 0, 10, 1.0)
+    assert store.entries["k"].weight == 1.0
+
+
+# ------------------------------------------------------------------ #
+# per-tenant chargeback (satellite: exact partition)
+# ------------------------------------------------------------------ #
+def test_per_tenant_partitions_every_hour_exactly():
+    ctl = _controller(tiers={"gold": 0.3, "standard": 0.4,
+                             "scavenger": 0.3}, tier_cache_weights=True)
+    run = ctl.run_day(_wf, RATES, CIS)
+    seen = 0
+    for h in run.hours:
+        assert h.tenants, "tenant-stamped hours must carry chargeback"
+        total = sum(d["carbon_g"] for d in h.tenants.values())
+        assert total == h.carbon_g          # exact, not approximate
+        assert sum(d["requests"] for d in h.tenants.values()) \
+            == h.num_requests
+        for name, d in h.tenants.items():
+            assert d["tier"] == name.rsplit("-", 1)[0]
+        seen += 1
+    assert seen == len(RATES)
+    day = run.per_tenant
+    assert day
+    assert sum(d["requests"] for d in day.values()) \
+        == sum(h.num_requests for h in run.hours)
+    assert sum(d["carbon_g"] for d in day.values()) \
+        == pytest.approx(run.total_carbon_g, rel=1e-12)
+
+
+def test_single_tier_runs_carry_no_tenant_ledger():
+    run = _controller().run_day(_wf, RATES, CIS)
+    assert all(h.tenants is None for h in run.hours)
+    assert run.per_tenant == {}
+
+
+# ------------------------------------------------------------------ #
+# ZoneFailure (satellite: composed fail-stop at one region)
+# ------------------------------------------------------------------ #
+def test_zone_failure_composes_descending_replica_failures():
+    ev = ZoneFailure(hour=2, frac=0.5, count=3, stagger_s=5.0).events(24)
+    assert len(ev) == 3
+    assert [e.kind for e in ev] == ["fail_replica"] * 3
+    # descending indices so each index survives the previous pop
+    assert [e.value for e in ev] == [2.0, 1.0, 0.0]
+    assert [e.t_s for e in ev] == [9000.0, 9005.0, 9010.0]
+    assert ZoneFailure(hour=30).events(24) == ()
+    assert isinstance(ev[0], Event)
+
+
+def test_zone_failure_in_geo_run_reroutes_traffic():
+    ctl = _controller(plans=["cache=auto fleet=l40:3"])
+    run = ctl.run_day(_wf, RATES, CIS, regions=REGIONS, geo="green",
+                      scenario=ZoneFailure(hour=1, frac=0.1, count=3))
+    notes = " ".join(h.transition for h in run.hours)
+    assert "fail_replica" in notes
+    # the zone (region 0) keeps its last replica, the run completes
+    assert len(run.hours) == len(RATES)
+    assert run.regions["west"].hours[1].transition != ""
+    assert sum(h.num_requests for h in run.hours) > 0
+
+
+# ------------------------------------------------------------------ #
+# geo run_day end-to-end
+# ------------------------------------------------------------------ #
+def test_green_routing_beats_latency_on_antiphase_grids():
+    green = _controller().run_day(_wf, RATES, CIS, regions=REGIONS,
+                                  geo="green")
+    latency = _controller().run_day(_wf, RATES, CIS, regions=REGIONS,
+                                    geo="latency")
+    assert green.total_carbon_g < latency.total_carbon_g
+    assert set(green.regions) == {"west", "east"}
+
+
+def test_geo_requires_regions_and_cluster_engine():
+    with pytest.raises(ValueError):
+        _controller().run_day(_wf, RATES, CIS, geo="green")
+
+
+def test_geo_hour_records_partition_carbon():
+    run = _controller().run_day(_wf, RATES, CIS, regions=REGIONS,
+                                geo="green")
+    for h, hw, he in zip(run.hours, run.regions["west"].hours,
+                         run.regions["east"].hours):
+        assert h.carbon_g == hw.carbon_g + he.carbon_g
+        assert h.num_requests == hw.num_requests + he.num_requests

@@ -452,7 +452,10 @@ def test_solver_switching_costs_suppress_flapping():
     flips between the embodied-cheap a100 and the power-cheap h100 every
     hour; with switching costs the per-hour gain no longer covers the
     boot/drain carbon and the schedule holds."""
-    prof = synth_profile()
+    # the grid extends below the per-unit operating points (0.05/2.4
+    # for h100) so the solver's sub-floor idle pricing stays out of the
+    # near-tied economics this scenario engineers
+    prof = synth_profile(rates=(0.01, 0.05, 0.2, 0.5, 1.0, 2.0))
     slo = SLO(2.5, 0.2, rho=0.7)
     T = 12
     rates = [0.05] * T                      # tiny volume: near-tied hours
