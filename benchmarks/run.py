@@ -36,6 +36,7 @@ MODULES = [
     "fig19_ssd_lifetime",
     "fig20_ssd_embodied",
     "cluster_scaling",
+    "solver_scaling",
     "fleet_mix",
     "disagg",
     "transitions",

@@ -1,0 +1,218 @@
+"""Planning-engine scaling: solve time vs option-space size, 1x-10x.
+
+Times the vectorized, Pareto-pruned transition-aware day solve
+(``solve_cluster_schedule`` defaults) against the pre-PR path (scalar
+per-cell table closures + the per-bucket-loop reference DP) on the same
+instances, sweeping the candidate-plan count to 10x today's fleets.
+Standing bit-repro rows assert the exactness contract: with beam off,
+the pruned vectorized solve returns plans/objectives bit-identical to
+the exhaustive reference path at every scale.
+
+Writes the solve-time / engine-throughput numbers to
+``experiments/results/BENCH_perf.json`` — the artifact the CI
+``perf-smoke`` job records and regression-checks (>2x vs the committed
+``benchmarks/baselines/BENCH_perf_baseline.json`` fails the job).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.plan import ResourcePlan, TransitionConfig
+from repro.core.profiler import Profile, ProfileCell
+from repro.core import solver as solver_mod
+from repro.core.solver import PlannerCache, solve_cluster_schedule
+from repro.serving.perfmodel import SERVING_MODELS, SLOS
+
+from benchmarks.common import CARBON, SMOKE, save_result
+
+SCALES = [1, 2, 4, 10] if not SMOKE else [1, 2]
+HOURS = 24 if not SMOKE else 6
+SIZES = [0, 1, 2, 4, 8, 12, 16]
+TYPES = ["l40", "a100", "h100", "tpu_v5e"]
+
+
+def scaling_profile(rates=(0.2, 0.5, 1.0, 1.6, 2.4), sizes=SIZES):
+    """Deterministic synthetic profile — the perf sweep must not depend
+    on profiling noise, only on instance shape."""
+    prof = Profile("llama3-70b", "conversation",
+                   rates=list(rates), sizes=list(sizes))
+    for r in rates:
+        for s in sizes:
+            slo = min(1.0, 0.35 + 0.03 * s
+                      + 0.4 / max(r, 0.3) * (0.2 + 0.03 * s))
+            prof.cells[(r, s)] = ProfileCell(
+                rate=r, cache_tb=s, avg_ttft=1.0 + 0.2 * r, p90_ttft=2.0,
+                avg_tpot=0.1, p90_tpot=0.15, slo_frac=slo,
+                hit_rate=min(0.85, 0.05 * s),
+                energy_per_req_kwh=2e-4 * (1.0 - 0.006 * s)
+                * (1.0 + 0.05 * r),
+                duration_per_req_s=1.0 / r, avg_power_w=950.0 + 40.0 * r,
+                slo_ttft_frac=min(1.0, slo + 0.05),
+                slo_tpot_frac=min(1.0, slo + 0.1),
+                avg_out_tokens=210.0, avg_prompt_tokens=1600.0,
+                write_bytes_per_req=6e7)
+    return prof
+
+
+def make_plans(mult: int):
+    """Candidate fleets at ``mult``x today's count: every type at
+    1..2*mult replicas (1x = 8 plans, 10x = 80; x 7 sizes = 56..560
+    options in the transition DP)."""
+    return [ResourcePlan.parse(f"serve={t}:{k}")
+            for t in TYPES for k in range(1, 2 * mult + 1)]
+
+
+def _reference_dp_shim(C, F, n, options, rho, t_start, E, S, e_init,
+                       cis, min_dwell, dwell_offset, lock0=None,
+                       buckets=400, prune=False, beam_width=None,
+                       class_keys=None):
+    return solver_mod._solve_dp_transition_reference(
+        C, F, n, options, rho, t_start, E, S, e_init, cis, min_dwell,
+        dwell_offset, lock0=lock0, buckets=buckets)
+
+
+def _plain_reference_shim(C, F, n, sizes, rho, t_start, buckets=400,
+                          prune=False, beam_width=None):
+    return solver_mod._solve_dp_reference(C, F, n, sizes, rho, t_start,
+                                          buckets=buckets)
+
+
+class pre_pr_solver:
+    """Context manager that rewires ``solve_cluster_schedule`` onto the
+    pre-PR path: scalar table closures + per-bucket reference DPs."""
+
+    def __enter__(self):
+        self._dp = solver_mod._solve_dp
+        self._tdp = solver_mod._solve_dp_transition
+        self._tm = solver_mod._transition_matrices
+        solver_mod._solve_dp = _plain_reference_shim
+        solver_mod._solve_dp_transition = _reference_dp_shim
+        solver_mod._transition_matrices = \
+            solver_mod._transition_matrices_reference
+        return self
+
+    def __exit__(self, *a):
+        solver_mod._solve_dp = self._dp
+        solver_mod._solve_dp_transition = self._tdp
+        solver_mod._transition_matrices = self._tm
+
+
+def day_solve(prof, plans, rates, cis, slo, *, vectorize=True, prune=True,
+              beam_width=None, cache=None):
+    return solve_cluster_schedule(
+        prof, rates, cis, slo, CARBON, sizes_tb=SIZES, plans=plans,
+        model=SERVING_MODELS["llama3-70b"], use_ilp=False,
+        transitions=TransitionConfig(), min_dwell_hours=2,
+        initial_plan=plans[0], vectorize=vectorize, prune=prune,
+        beam_width=beam_width, solver_cache=cache)
+
+
+def same_result(a, b) -> bool:
+    return (a.sizes_tb == b.sizes_tb and a.plans == b.plans
+            and a.objective_g == b.objective_g
+            and a.feasible == b.feasible
+            and a.transition_g == b.transition_g)
+
+
+def run():
+    prof = scaling_profile()
+    slo = SLOS[("llama3-70b", "chat")]
+    rng = np.random.default_rng(11)
+    rates = list(rng.uniform(0.3, 2.2, HOURS))
+    cis = list(rng.uniform(30.0, 500.0, HOURS))
+
+    rows = []
+    payload = {"smoke": SMOKE, "hours": HOURS, "scales": {}}
+    exact_ok = True
+    for mult in SCALES:
+        plans = make_plans(mult)
+        n_options = len(plans) * len(SIZES)
+
+        new = day_solve(prof, plans, rates, cis, slo)
+        t0 = time.time()
+        new = day_solve(prof, plans, rates, cis, slo)
+        t_new = time.time() - t0
+
+        # exactness contract: pruned vectorized == exhaustive reference
+        exhaustive = day_solve(prof, plans, rates, cis, slo,
+                               prune=False)
+        with pre_pr_solver():
+            t0 = time.time()
+            old = day_solve(prof, plans, rates, cis, slo,
+                            vectorize=False, prune=False)
+            t_old = time.time() - t0
+        ok = same_result(new, exhaustive) and same_result(new, old)
+        exact_ok = exact_ok and ok
+
+        beam = day_solve(prof, plans, rates, cis, slo, beam_width=4)
+        bound = beam.beam_bound_g if beam.beam_bound_g is not None \
+            else float("nan")
+
+        payload["scales"][str(mult)] = {
+            "n_options": n_options,
+            "solve_s_new": t_new,
+            "solve_s_pre_pr": t_old,
+            "speedup": t_old / max(t_new, 1e-9),
+            "options_per_s": n_options * HOURS / max(t_new, 1e-9),
+            "bit_identical": bool(ok),
+            "beam_bound_g": float(bound),
+            "beam_gap_g": float(beam.objective_g - new.objective_g),
+        }
+        rows += [
+            (f"solver_scaling/{mult}x_solve_s", t_new,
+             f"{n_options} options, {HOURS} h, transition-aware"),
+            (f"solver_scaling/{mult}x_speedup_vs_pre_pr",
+             t_old / max(t_new, 1e-9), f"pre-PR {t_old:.2f}s"),
+            (f"solver_scaling/{mult}x_bit_identical",
+             1.0 if ok else float("nan"),
+             "pruned == exhaustive == pre-PR plans/objective"),
+        ]
+
+    top = payload["scales"][str(SCALES[-1])]
+    rows += [
+        ("solver_scaling/top_scale_solve_s", top["solve_s_new"],
+         f"target < 1 s at {SCALES[-1]}x"),
+        ("solver_scaling/exactness",
+         1.0 if exact_ok else float("nan"),
+         "standing bit-repro row (NaN fails --smoke)"),
+    ]
+
+    # controller-style reuse: PlannerCache amortizes the transition
+    # matrices across re-solves of the same candidate set (MPC cadence)
+    plans = make_plans(SCALES[-1])
+    cache = PlannerCache()
+    day_solve(prof, plans, rates, cis, slo, cache=cache)
+    t0 = time.time()
+    day_solve(prof, plans, rates, cis, slo, cache=cache)
+    t_cached = time.time() - t0
+    payload["resolve_s_cached"] = t_cached
+    rows.append(("solver_scaling/cached_resolve_s", t_cached,
+                 "PlannerCache hit (hourly re-solve cost)"))
+
+    save_result("BENCH_perf", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        import os
+        os.environ["GREENCACHE_SMOKE"] = "1"
+        for m in list(sys.modules):
+            if m.startswith("benchmarks"):
+                del sys.modules[m]
+    # re-import under the (possibly) new smoke setting
+    from benchmarks import solver_scaling as mod
+    nan = 0
+    for name, value, derived in mod.run():
+        if value != value:
+            nan += 1
+            derived = f"NaN! {derived}"
+        print(f"{name},{value:.6g},{derived}")
+    sys.exit(1 if nan else 0)

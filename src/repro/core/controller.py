@@ -38,7 +38,8 @@ from repro.core.storage import StorageSpec, TieredKVStore
 from repro.core.policies import POLICIES
 from repro.core.predictors import CIPredictor, LoadPredictor
 from repro.core.profiler import Profile, _slo_for
-from repro.core.solver import (SolveResult, solve_cache_schedule,
+from repro.core.solver import (PlannerCache, SolveResult,
+                               solve_cache_schedule,
                                solve_cluster_schedule)
 from repro.serving.cluster import ClusterEngine, DisaggEngine
 from repro.serving.engine import ServingEngine
@@ -265,7 +266,9 @@ class GreenCacheController:
                  tiers: Optional[Dict[str, float]] = None,
                  tier_aware_solver: bool = True,
                  tier_cache_weights: Union[bool, Dict[str, float],
-                                           None] = None):
+                                           None] = None,
+                 solver_prune: bool = True,
+                 beam_width: Optional[int] = None):
         self.model = model
         self.profile = profile
         self.carbon = carbon
@@ -275,6 +278,15 @@ class GreenCacheController:
         self.transitions = transitions
         self.min_dwell_hours = max(int(min_dwell_hours), 1)
         self.transition_aware_solver = transition_aware_solver
+        # planning-engine knobs: ``solver_prune`` toggles the lossless
+        # per-hour Pareto dominance filter (bit-identical results, just
+        # faster); ``beam_width`` opts into the approximate beam with a
+        # reported optimality bound (``SolveResult.beam_bound_g``).  The
+        # PlannerCache memoizes transition matrices across the hourly
+        # re-solves of a day (the candidate set is hour-invariant).
+        self.solver_prune = bool(solver_prune)
+        self.beam_width = beam_width
+        self._solver_cache = PlannerCache()
         # multi-tenant tiers: ``tiers={"gold": 0.25, "standard": 0.45,
         # "scavenger": 0.30}`` stamps the workload with a tenant mix,
         # activates the engine's priority queueing, and (with
@@ -934,7 +946,10 @@ class GreenCacheController:
                         quantum=cfg.quantum, rho=rho, model=self.model,
                         inter_region_gbps=cfg.inter_region_gbps,
                         min_dwell_hours=self.min_dwell_hours,
-                        dwell_offset=h % self.min_dwell_hours)
+                        dwell_offset=h % self.min_dwell_hours,
+                        prune=self.solver_prune,
+                        beam_width=self.beam_width,
+                        solver_cache=self._solver_cache)
                     geo_splits = list(gres.splits)
                     t_solve = gres.solve_time_s
                     for st, sub in zip(states, gres.per_region):
@@ -1193,6 +1208,8 @@ class GreenCacheController:
                    min_dwell_hours=self.min_dwell_hours,
                    dwell_offset=hour % self.min_dwell_hours,
                    initial_plan=live_plan) if aware else {}
+        tkw.update(prune=self.solver_prune, beam_width=self.beam_width,
+                   solver_cache=self._solver_cache)
         if self.tier_shares is not None and self.tier_aware_solver:
             # protect gold: constrain on the protected tiers' thinned-
             # rate attainment (scavengers carry no rho weight)

@@ -75,6 +75,43 @@ class ProfileCell:
         return op + emb_c + emb_o
 
 
+_CELL_FIELDS = tuple(f.name for f in dataclasses.fields(ProfileCell))
+_MIX_FIELDS = tuple(n for n in _CELL_FIELDS if n not in ("rate", "cache_tb"))
+
+
+@dataclass
+class CellTable:
+    """Columnar batch of interpolated ``ProfileCell``s: one float64 array
+    per cell field, aligned with the (broadcast) query arrays handed to
+    ``Profile.interpolate_many``.  The solver's vectorized table build
+    consumes these columns directly — one NumPy gather per hour instead
+    of thousands of dataclass constructions."""
+    rate: np.ndarray
+    cache_tb: np.ndarray
+    avg_ttft: np.ndarray
+    p90_ttft: np.ndarray
+    avg_tpot: np.ndarray
+    p90_tpot: np.ndarray
+    slo_frac: np.ndarray
+    hit_rate: np.ndarray
+    energy_per_req_kwh: np.ndarray
+    duration_per_req_s: np.ndarray
+    avg_power_w: np.ndarray
+    slo_ttft_frac: np.ndarray
+    slo_tpot_frac: np.ndarray
+    avg_out_tokens: np.ndarray
+    avg_prompt_tokens: np.ndarray
+    write_bytes_per_req: np.ndarray
+    matched_token_frac: np.ndarray
+
+    def cell(self, i: int) -> ProfileCell:
+        """Materialize entry ``i`` (flat index) as a ProfileCell — the
+        scalar view the equality tests compare against."""
+        kw = {name: float(np.asarray(getattr(self, name)).ravel()[i])
+              for name in _CELL_FIELDS}
+        return ProfileCell(**kw)
+
+
 @dataclass
 class Profile:
     model_name: str
@@ -107,6 +144,68 @@ class Profile:
                for f in dataclasses.fields(ProfileCell)
                if f.name not in ("rate", "cache_tb")}
         return ProfileCell(rate=rate, cache_tb=cache_tb, **mix)
+
+    # ---- batched interpolation (the solver's columnar hot path) ---- #
+    def _columns(self):
+        """Lazy (R, Z) float64 column per cell field over (sorted rates ×
+        sizes in declaration order), rebuilt when the grid changes."""
+        key = (len(self.cells), tuple(self.rates), tuple(self.sizes))
+        cached = getattr(self, "_col_cache", None)
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        rs = sorted(self.rates)
+        cols = {name: np.array([[getattr(self.cells[(r, s)], name)
+                                 for s in self.sizes] for r in rs],
+                               dtype=float)
+                for name in _MIX_FIELDS}
+        data = (np.asarray(rs, dtype=float),
+                np.asarray(self.sizes, dtype=float), cols)
+        self._col_cache = (key, data)
+        return data
+
+    def interpolate_many(self, rates, cache_tbs) -> CellTable:
+        """Vectorized ``interpolate`` over arrays of (rate, cache size).
+
+        ``rates`` and ``cache_tbs`` broadcast against each other; the
+        returned ``CellTable`` columns carry the broadcast shape.  Every
+        entry is bit-identical to the scalar ``interpolate`` call at the
+        same point: sizes snap to the nearest profiled size (first wins
+        on ties, matching ``min(key=abs)`` over the declaration order),
+        rates at or beyond the profiled ends return the stored edge cell
+        verbatim, and interior rates mix the two bracketing cells with
+        the same ``(1-w)·a + w·b`` expression (tested)."""
+        rs, sz, cols = self._columns()
+        r, q = np.broadcast_arrays(np.asarray(rates, dtype=float),
+                                   np.asarray(cache_tbs, dtype=float))
+        shape = r.shape
+        r = r.ravel()
+        q = q.ravel()
+        # nearest-size snap; argmin returns the first minimal index,
+        # matching min(self.sizes, key=abs) tie-breaking
+        j = np.argmin(np.abs(sz[None, :] - q[:, None]), axis=1)
+        R = len(rs)
+        lo_mask = r <= rs[0]
+        hi_mask = r >= rs[-1]
+        if R > 1:
+            i = np.clip(np.searchsorted(rs, r, side="left"), 1, R - 1)
+            ilo, ihi = i - 1, i
+            with np.errstate(divide="ignore", invalid="ignore"):
+                w = (r - rs[ilo]) / (rs[ihi] - rs[ilo])
+        else:                    # single profiled rate: always clamped
+            ilo = ihi = np.zeros(len(r), dtype=int)
+            w = np.zeros(len(r))
+        out = {}
+        for name in _MIX_FIELDS:
+            colf = cols[name]
+            mixed = (1.0 - w) * colf[ilo, j] + w * colf[ihi, j]
+            out[name] = np.where(lo_mask, colf[0, j],
+                                 np.where(hi_mask, colf[-1, j],
+                                          mixed)).reshape(shape)
+        # clamped entries return the stored edge cell, whose .rate is the
+        # profiled edge rate (not the query rate) — mirror that here
+        rate_out = np.where(lo_mask, rs[0], np.where(hi_mask, rs[-1], r))
+        return CellTable(rate=rate_out.reshape(shape),
+                         cache_tb=sz[j].reshape(shape), **out)
 
 
 def run_profiler(model: ServingModel, task: str, workload_factory: Callable,

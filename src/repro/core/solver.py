@@ -59,8 +59,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.carbon import (CarbonModel, fleet_capacity,
-                               get_replica_type, kv_migration_energy_kwh)
+from repro.core.carbon import (SECONDS_PER_YEAR, CarbonModel,
+                               fleet_capacity, get_replica_type,
+                               kv_migration_energy_kwh)
 from repro.core.plan import (PlanTransition, ResourcePlan,
                              TransitionConfig, ring_moved_fraction)
 from repro.core.profiler import Profile
@@ -85,6 +86,10 @@ class SolveResult:
     # transition-aware mode: predicted switching carbon charged at each
     # hour boundary (hour 0 is the switch away from ``initial_plan``)
     transition_g: Optional[List[float]] = None
+    # beam search only (``beam_width=``): upper bound on the extra carbon
+    # (g) of the returned schedule vs the exhaustive optimum — 0.0 means
+    # the beam provably did not change the solution; None = no beam
+    beam_bound_g: Optional[float] = None
 
 
 def _cell_metrics(profile: Profile, rate: float, size: float,
@@ -549,6 +554,63 @@ def _transition_matrices(opt_plans: Sequence[ResourcePlan],
     shapes = [_dc_replace(p, cache_tb=None, storage=None)
               for p in opt_plans]
     keys = [_fleet_key(p) for p in opt_plans]
+    kid_map: Dict[object, int] = {}
+    # (the original O(|options|²) per-pair loop survives as
+    # _transition_matrices_reference for regression tests/benchmarks)
+    kid = np.array([kid_map.setdefault(k, len(kid_map)) for k in keys])
+    S = kid[:, None] != kid[None, :]
+    np.fill_diagonal(S, False)
+
+    # boot/drain energy only depends on the (shape, shape) class pair —
+    # evaluate once per distinct pair instead of per option pair
+    sid_map: Dict[object, int] = {}
+    sid = np.array([sid_map.setdefault(s, len(sid_map)) for s in shapes])
+    D = len(sid_map)
+    rep = np.zeros(D, dtype=np.int64)
+    rep[sid] = np.arange(n_opt)            # any member: shapes identical
+    Esh = np.zeros((D, D))
+    for a in range(D):
+        for b in range(D):
+            if a != b:
+                Esh[a, b] = _shape_switch_kwh(shapes[rep[a]],
+                                              shapes[rep[b]], cfg)
+    E = Esh[sid[:, None], sid[None, :]]
+
+    # partitioned-ring migration term, vectorized over the sized plans
+    if cfg.rebalance == "migrate" and not cfg.is_free:
+        part = np.array([p.prefill.partitioned for p in opt_plans])
+        if part.any():
+            nrep = np.array([p.prefill.n_replicas for p in opt_plans])
+            cache = np.array([p.cache_tb or 0.0 for p in opt_plans])
+            gbps = cfg.kv_transfer_gbps \
+                if cfg.kv_transfer_gbps is not None \
+                else (model.kv_transfer_gbps if model is not None
+                      else 25.0)
+            RMF = np.zeros((n_opt, n_opt))
+            for a in np.unique(nrep):
+                for b in np.unique(nrep):
+                    if a != b:
+                        RMF[np.ix_(nrep == a, nrep == b)] = \
+                            ring_moved_fraction(int(a), int(b))
+            bytes_moved = RMF \
+                * np.minimum(cache[:, None], cache[None, :]) * 1e12
+            mig = kv_migration_energy_kwh(bytes_moved, gbps)
+            E = E + np.where(part[:, None]
+                             & (nrep[:, None] != nrep[None, :]),
+                             mig, 0.0)
+    E = np.where(S, E, 0.0)
+    return E, S
+
+
+def _transition_matrices_reference(opt_plans: Sequence[ResourcePlan],
+                                   cfg: TransitionConfig, model=None
+                                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Pre-vectorization per-pair loop — the oracle
+    ``_transition_matrices`` is regression-tested against."""
+    n_opt = len(opt_plans)
+    shapes = [_dc_replace(p, cache_tb=None, storage=None)
+              for p in opt_plans]
+    keys = [_fleet_key(p) for p in opt_plans]
     E = np.zeros((n_opt, n_opt))
     S = np.zeros((n_opt, n_opt), dtype=bool)
     for i in range(n_opt):
@@ -563,16 +625,144 @@ def _transition_matrices(opt_plans: Sequence[ResourcePlan],
     return E, S
 
 
-def _solve_dp_transition(C, F, n, options, rho, t_start, E, S, e_init,
-                         cis, min_dwell: int, dwell_offset: int,
-                         lock0=None, buckets: int = 400) -> SolveResult:
-    """Transition-aware DP: state = (satisfied-count bucket, option),
-    value = min carbon *including* the switching cost paid at each hour
-    boundary — so the schedule exhibits hysteresis instead of flapping
-    between near-tied options whenever the CI trace wiggles.
-    ``min_dwell`` restricts *shape* changes to hours where
-    ``(t + dwell_offset) % min_dwell == 0`` (block-aligned dwell; cache
-    size may still move hourly).  O(T · buckets · |options|²)."""
+class PlannerCache:
+    """Cross-solve memo for the hourly control loop.
+
+    The controller re-solves every hour with the *same* candidate set;
+    the O(|options|²) pairwise transition diff and the per-shape switch
+    energies do not change between those solves.  A ``PlannerCache``
+    threaded through ``solve_cluster_schedule(solver_cache=...)`` keeps
+    the matrices across calls (``_shape_switch_kwh`` already memoizes the
+    per-pair energies process-wide; this adds the assembled array)."""
+
+    def __init__(self):
+        self._transitions: Dict[tuple, Tuple[np.ndarray, np.ndarray]] = {}
+
+    def transition_matrices(self, opt_plans, cfg: TransitionConfig,
+                            model=None):
+        key = (tuple(opt_plans), cfg,
+               getattr(model, "kv_transfer_gbps", None))
+        hit = self._transitions.get(key)
+        if hit is None:
+            hit = _transition_matrices(opt_plans, cfg, model=model)
+            self._transitions[key] = hit
+        return hit
+
+
+def _pareto_keep(Ct, Ft, class_ids=None) -> np.ndarray:
+    """Indices of options that can appear in *some* optimal DP schedule
+    at this hour (lossless dominance prune).
+
+    Option ``j`` is dropped iff some option ``i`` in the same
+    switching-cost class has strictly lower carbon with at least equal
+    attainment, or is an exact (carbon, attainment) duplicate with a
+    lower index.  Substituting ``i`` for ``j`` in any path leaves every
+    switching cost unchanged (same class), lands at a weakly higher
+    bucket, and strictly lowers the cost (or ties it bit-exactly at the
+    same bucket with a lower index, which every DP tie-break already
+    prefers) — so no reconstructed optimal schedule contains ``j``.
+    Weak dominance with *equal* carbon and higher attainment is NOT
+    taken: the exhaustive DP's earliest-bucket final tie-break could
+    still pick ``j``, changing the returned (equal-cost) plan."""
+    Ct = np.asarray(Ct)
+    Ft = np.asarray(Ft)
+    S = len(Ct)
+    cls = np.zeros(S, dtype=np.int64) if class_ids is None \
+        else np.asarray(class_ids)
+    keep = np.ones(S, dtype=bool)
+    idx = np.arange(S)
+    for u in np.unique(cls):
+        m = idx[cls == u]
+        if len(m) < 2:
+            continue
+        Cm = Ct[m]
+        Fm = Ft[m]
+        order = np.lexsort((m, -Fm, Cm))      # C asc, F desc, idx asc
+        bestF = -np.inf
+        gi = 0
+        while gi < len(order):
+            gj = gi
+            cval = Cm[order[gi]]
+            groupF = bestF
+            seen: set = set()
+            while gj < len(order) and Cm[order[gj]] == cval:
+                o = order[gj]
+                f = Fm[o]
+                if f <= bestF or f in seen:
+                    keep[m[o]] = False
+                else:
+                    seen.add(f)
+                if f > groupF:
+                    groupF = f
+                gj += 1
+            bestF = groupF
+            gi = gj
+    return idx[keep]
+
+
+def _beam_select(kept, Ct, Ft, class_ids, beam_width: int):
+    """Shrink a kept set to ≤ ``beam_width`` options per switching class:
+    the cheapest-carbon members plus the class's max-attainment member
+    (so a feasibility-critical option always survives).  Returns the new
+    kept set and this hour's per-request optimality bound: the max over
+    dropped options of the carbon premium of the cheapest same-class
+    survivor with at least the dropped option's attainment — what
+    patching any exhaustive-optimal path that used a dropped option
+    costs (switching costs are class-invariant, buckets only improve)."""
+    cls = np.zeros(len(Ct), dtype=np.int64) if class_ids is None \
+        else np.asarray(class_ids)
+    sel: List[int] = []
+    bound = 0.0
+    for u in np.unique(cls[kept]):
+        m = kept[cls[kept] == u]
+        if len(m) <= beam_width:
+            sel.extend(int(i) for i in m)
+            continue
+        by_cost = m[np.lexsort((m, Ct[m]))]
+        chosen = set(int(i) for i in by_cost[:beam_width])
+        fbest = int(m[np.lexsort((m, -Ft[m]))[0]])
+        if fbest not in chosen:
+            chosen.discard(int(by_cost[beam_width - 1]))
+            chosen.add(fbest)
+        kept_arr = np.array(sorted(chosen))
+        for j in m:
+            if int(j) in chosen:
+                continue
+            cands = kept_arr[Ft[kept_arr] >= Ft[j]]
+            if len(cands):
+                bound = max(bound,
+                            max(0.0, float(Ct[cands].min() - Ct[j])))
+            else:                   # NaN attainment — no patch target
+                bound = float("inf")
+        sel.extend(int(i) for i in kept_arr)
+    return np.array(sorted(sel)), bound
+
+
+def _hour_keeps(C, F, n, cls, prune: bool, beam_width):
+    """Per-hour kept option sets (and the accumulated beam bound)."""
+    T, n_opt = C.shape
+    bw = beam_width if beam_width is not None and beam_width >= 1 \
+        else None
+    keeps = []
+    bound_total = 0.0
+    for t in range(T):
+        kt = _pareto_keep(C[t], F[t], cls) if prune \
+            else np.arange(n_opt)
+        if bw is not None:
+            # the bound is in grams: per-request premium × hourly requests
+            kt, bnd = _beam_select(kt, C[t], F[t], cls, bw)
+            bound_total += float(n[t]) * bnd
+        keeps.append(kt)
+    return keeps, (bound_total if bw is not None else None)
+
+
+def _solve_dp_transition_reference(C, F, n, options, rho, t_start, E, S,
+                                   e_init, cis, min_dwell: int,
+                                   dwell_offset: int, lock0=None,
+                                   buckets: int = 400) -> SolveResult:
+    """Original per-bucket-loop transition DP — kept as the oracle the
+    vectorized engine is regression-tested (and benchmarked) against.
+    O(T · buckets · |options|²) with a (T, B+1, O) int64 backpointer."""
     T, n_opt = C.shape
     total = float(n.sum())
     target = rho * total
@@ -645,6 +835,181 @@ def _solve_dp_transition(C, F, n, options, rho, t_start, E, S, e_init,
                        transition_g=tg)
 
 
+def _solve_dp_transition(C, F, n, options, rho, t_start, E, S, e_init,
+                         cis, min_dwell: int, dwell_offset: int,
+                         lock0=None, buckets: int = 400,
+                         prune: bool = False, beam_width=None,
+                         class_keys=None) -> SolveResult:
+    """Transition-aware DP: state = (satisfied-count bucket, option),
+    value = min carbon *including* the switching cost paid at each hour
+    boundary — so the schedule exhibits hysteresis instead of flapping
+    between near-tied options whenever the CI trace wiggles.
+    ``min_dwell`` restricts *shape* changes to hours where
+    ``(t + dwell_offset) % min_dwell == 0`` (block-aligned dwell; cache
+    size may still move hourly).
+
+    Vectorized engine (bit-identical to
+    ``_solve_dp_transition_reference``, tested): options are grouped
+    into switching-cost *classes* (``class_keys``; same E/S rows and
+    columns), the old-option axis is collapsed class-first
+    (min within class, then a lexicographic (value, option-index) pass
+    per class — exactly ``np.argmin``'s first-occurrence tie-break),
+    and the bucket scatter uses the per-column constant shift
+    ``nb = b + k`` whenever the float bucket arithmetic admits one
+    (verified cell-exact per column; the rare rounding-broken column
+    falls back to the original per-bucket loop).  ``prune`` applies the
+    per-hour ``_pareto_keep`` dominance filter within classes —
+    lossless — and ``beam_width`` the per-class beam with its reported
+    ``beam_bound_g``.  Backpointers are per-hour ragged
+    (B+1, |kept_t|) int32/int64 arrays instead of the reference's
+    (T, B+1, O) int64 block.  O(T·B·(|kept| + U·|classes|))."""
+    T, n_opt = C.shape
+    total = float(n.sum())
+    target = rho * total
+    scale = buckets / max(total, 1e-9)
+    B = buckets
+    INF = float("inf")
+    cis = np.asarray(cis, dtype=float)
+
+    if class_keys is not None:
+        ids: Dict[object, int] = {}
+        cls = np.empty(n_opt, dtype=np.int64)
+        for i, key in enumerate(class_keys):
+            cls[i] = ids.setdefault(key, len(ids))
+    else:
+        # no class structure known: every option is its own class
+        # (always sound — just prunes/factors nothing across options)
+        cls = np.arange(n_opt)
+
+    keeps, bound_total = _hour_keeps(C, F, n, cls, prune, beam_width)
+
+    enc_dtype = np.int32 if (B + 1) * n_opt < 2**31 else np.int64
+    swg0 = e_init * cis[0] if e_init is not None else np.zeros(n_opt)
+    K0 = keeps[0]
+    cost0 = (n[0] * C[0] + swg0)[K0]
+    if lock0 is not None:
+        # re-solve mid-dwell-block: hour 0 may not change the shape
+        cost0 = np.where(lock0[K0], INF, cost0)
+    nb0 = np.minimum((n[0] * F[0] * scale).astype(int)[K0], B)
+    dp = np.full((B + 1, len(K0)), INF)
+    dp[nb0, np.arange(len(K0))] = cost0
+
+    backs: List[np.ndarray] = []
+    bgrid = np.arange(B + 1)
+    for t in range(1, T):
+        Kp = keeps[t - 1]
+        Kt = keeps[t]
+        nK = len(Kt)
+        switch_ok = min_dwell <= 1 or (t + dwell_offset) % min_dwell == 0
+
+        # ---- collapse the old-option axis class-first ---- #
+        uniq_p, first_p, inv_p = np.unique(cls[Kp], return_index=True,
+                                           return_inverse=True)
+        U = len(uniq_p)
+        G = np.empty((B + 1, U))
+        Garg = np.empty((B + 1, U), dtype=np.int64)   # position in Kp
+        for ui in range(U):
+            pos = np.flatnonzero(inv_p == ui)
+            sub = dp[:, pos]
+            am = sub.argmin(axis=1)       # first min = lowest global idx
+            G[:, ui] = sub[bgrid, am]
+            Garg[:, ui] = pos[am]
+        uniq_t, first_t, inv_t = np.unique(cls[Kt], return_index=True,
+                                           return_inverse=True)
+        V = len(uniq_t)
+        repg_p = Kp[first_p]
+        repg_t = Kt[first_t]
+        W = E[np.ix_(repg_p, repg_t)] * cis[t]
+        if not switch_ok:
+            W = W + np.where(S[np.ix_(repg_p, repg_t)], INF, 0.0)
+
+        # H[b, v] = min_u G[b, u] + W[u, v]; ties resolved on the actual
+        # minimizing *old option's* global index — np.argmin semantics
+        best = np.full((B + 1, V), INF)
+        bestrep = np.full((B + 1, V), np.iinfo(np.int64).max,
+                          dtype=np.int64)
+        for ui in range(U):
+            val = G[:, ui][:, None] + W[ui][None, :]
+            gid = Kp[Garg[:, ui]][:, None]
+            better = (val < best) | ((val == best) & (gid < bestrep))
+            best = np.where(better, val, best)
+            bestrep = np.where(better, gid, bestrep)
+
+        nCt = n[t] * C[t]
+        costm = best[:, inv_t] + nCt[Kt][None, :]         # (B+1, nK)
+        predg = bestrep[:, inv_t]                         # global old opt
+
+        # ---- bucket scatter ---- #
+        # the reference computes nb = min(int(b + n·F·scale), B); the
+        # addend is b-independent, so each column is a constant shift
+        # *unless* float rounding of (b + add) crosses an integer —
+        # verified per column on the identical expression
+        raw = (bgrid[:, None] + (n[t] * F[t] * scale)[Kt][None, :]) \
+            .astype(int)
+        D = raw - bgrid[:, None]
+        const = (D == D[0]).all(axis=0)
+        ndp = np.full((B + 1, nK), INF)
+        nback = np.full((B + 1, nK), -1, dtype=enc_dtype)
+        cols = np.arange(nK)
+        for k in np.unique(D[0][const]):
+            cset = cols[const & (D[0] == k)]
+            k = int(min(k, B))
+            if k < B:
+                # buckets k..B-1: exactly one source bucket each
+                ndp[k:B, cset] = costm[0:B - k, cset]
+                nback[k:B, cset] = \
+                    (bgrid[0:B - k, None] * n_opt
+                     + predg[0:B - k][:, cset]).astype(enc_dtype)
+            lo = max(0, B - k)
+            sub = costm[lo:, cset]         # tail: everything clips to B
+            am = sub.argmin(axis=0)        # first min = lowest bucket
+            ndp[B, cset] = sub[am, np.arange(len(cset))]
+            nback[B, cset] = ((lo + am) * n_opt
+                              + predg[lo + am, cset]).astype(enc_dtype)
+        for j in cols[~const]:             # rounding-broken shift: exact
+            nbc = np.minimum(raw[:, j], B)
+            for b in range(B + 1):
+                c = costm[b, j]
+                if c < ndp[nbc[b], j]:
+                    ndp[nbc[b], j] = c
+                    nback[nbc[b], j] = b * n_opt + predg[b, j]
+        # positions whose best predecessor is itself unreachable stay INF
+        # (INF + W = INF), matching the reference's skipped rows
+        nback[~np.isfinite(ndp)] = -1
+        dp = ndp
+        backs.append(nback)
+
+    tb = int(np.floor(target * scale))
+    KT = keeps[T - 1]
+    flat_best = None
+    for b in range(tb, B + 1):
+        pos = int(np.argmin(dp[b]))
+        if dp[b, pos] < INF and (flat_best is None
+                                 or dp[b, pos] < flat_best[2]):
+            flat_best = (b, pos, dp[b, pos])
+    feasible = flat_best is not None
+    if not feasible:
+        choice = [_best_effort(F[t], C[t]) for t in range(T)]
+    else:
+        b, pos, _ = flat_best
+        o = int(KT[pos])
+        choice = [0] * T
+        for t in range(T - 1, 0, -1):
+            choice[t] = o
+            enc = int(backs[t - 1][b, pos])
+            o = int(enc % n_opt)
+            b = int(enc // n_opt)
+            pos = int(np.searchsorted(keeps[t - 1], o))
+        choice[0] = o
+    tg = [float(swg0[choice[0]])] + [
+        float(E[choice[t - 1], choice[t]] * cis[t]) for t in range(1, T)]
+    obj = float(sum(n[t] * C[t][c] for t, c in enumerate(choice))
+                + sum(tg))
+    return SolveResult([options[c] for c in choice], obj, feasible,
+                       time.time() - t_start, "dp+transition",
+                       transition_g=tg, beam_bound_g=bound_total)
+
+
 def _tier_protected_slo(cell, rate: float, shares: Dict[str, float]
                         ) -> float:
     """Share-weighted attainment of the *protected* tiers under priority
@@ -675,6 +1040,398 @@ def _tier_protected_slo(cell, rate: float, shares: Dict[str, float]
     return num / den
 
 
+# --------------------------------------------------------------------- #
+# Columnar option-table construction
+# --------------------------------------------------------------------- #
+# The scalar closures above (`_cluster_cell_metrics` & co) are the
+# readable specification; `_build_option_tables` below evaluates the same
+# formulas columnar over the whole (hour, option) grid with a handful of
+# `Profile.interpolate_many` calls.  Every array expression mirrors the
+# scalar float-op order term by term (Python's `sum()` accumulation
+# included), so both builders return bit-identical tables — tested, and
+# the `vectorize=False` escape hatch keeps the scalar path reachable.
+
+
+def _sat_arr(rs_max: float, norm, slo_frac):
+    """Array form of ``_saturated_slo`` (same op order)."""
+    with np.errstate(divide="ignore", invalid="ignore"):
+        pen = slo_frac * (rs_max / norm) ** 2
+    return np.where(norm > rs_max, pen, slo_frac)
+
+
+def _floor_arr(rmin: float, norm):
+    """Array form of ``_idle_floor``."""
+    if rmin <= 0.0:
+        return np.ones_like(norm)
+    with np.errstate(divide="ignore"):
+        below = rmin / np.maximum(norm, rmin * 1e-3)
+    return np.where(norm >= rmin, 1.0, below)
+
+
+def _util_arr(avg_power_w, carbon: CarbonModel):
+    """Array form of ``_ref_util``."""
+    hw = carbon.hw
+    base = hw.gpu_power_idle_w + hw.cpu_power_w + hw.mem_power_w
+    span = hw.gpu_power_max_w - hw.gpu_power_idle_w
+    return np.clip((avg_power_w - base) / max(span, 1e-9), 0.0, 1.0)
+
+
+def _ref_watts_arr(carbon: CarbonModel, util):
+    hw = carbon.hw
+    return hw.gpu_power_idle_w \
+        + util * (hw.gpu_power_max_w - hw.gpu_power_idle_w) \
+        + hw.cpu_power_w + hw.mem_power_w
+
+
+def _type_power_arr(rt, util):
+    """``ReplicaType.server_power_w`` over a utilization array."""
+    hw = rt.hw
+    gpu_w = hw.gpu_power_idle_w + util * (hw.gpu_power_max_w
+                                          - hw.gpu_power_idle_w)
+    return gpu_w + hw.cpu_power_w + hw.mem_power_w
+
+
+def _fleet_power_arr(fleet, util):
+    """Termwise ``sum(rt.server_power_w(util) for t in fleet)`` — the
+    accumulation order matches Python's ``sum()`` so the result is
+    bit-identical to the scalar path."""
+    acc = 0.0
+    for t in fleet:
+        acc = acc + _type_power_arr(get_replica_type(t), util)
+    return acc
+
+
+def _fleet_embodied_arr(fleet, seconds):
+    """Termwise ``sum(rt.embodied_g(seconds) for t in fleet)``."""
+    acc = 0.0
+    for t in fleet:
+        rt = get_replica_type(t)
+        lt = rt.hw.lifetime_years * SECONDS_PER_YEAR
+        acc = acc + (seconds / lt) * rt.effective_embodied_kg * 1000.0
+    return acc
+
+
+def _cache_emb_arr(carbon: CarbonModel, alloc_tb, seconds):
+    """Array form of the flat ``CarbonModel.cache_embodied_g``."""
+    lt = carbon.hw.ssd_lifetime_years * SECONDS_PER_YEAR
+    return alloc_tb * (seconds / lt) * carbon.hw.ssd_kg_per_tb * 1000.0
+
+
+def _build_option_tables(profile: Profile, options, pred_rates, pred_cis,
+                         slo: Optional[SLO], carbon: CarbonModel, model,
+                         type_profiles, wear_aware: bool, shares,
+                         plans_mode: bool, fleets_mode: bool):
+    """Vectorized (T, O) carbon / attainment tables for the cluster
+    solve — one ``Profile.interpolate_many`` sweep per table instead of
+    T·O scalar ``interpolate`` calls.  Bit-identical to
+    ``_build_option_tables_scalar`` (the original per-cell closures)."""
+    from collections import Counter      # noqa: F401  (parity with scalar)
+    T = len(pred_rates)
+    O = len(options)          # noqa: E741
+    rates_T = np.asarray(pred_rates, dtype=float)
+    cis = np.asarray(pred_cis, dtype=float)[:, None]
+    rs_max = max(profile.rates)
+    rmin = min(profile.rates)
+
+    specs = [s if isinstance(s, StorageSpec) else None for s, _ in options]
+    sizes_o = np.array([sp.usable_tb if sp is not None else float(s)
+                        for (s, _), sp in zip(options, specs)])
+    div = np.ones(O)
+    is_disagg = np.zeros(O, dtype=bool)
+    groups: Dict[object, List[int]] = {}
+    for i, (s, k) in enumerate(options):
+        if plans_mode and isinstance(k, ResourcePlan) \
+                and k.is_disaggregated:
+            if specs[i] is not None:
+                raise ValueError("the storage search does not support "
+                                 "disaggregated candidates yet")
+            is_disagg[i] = True
+            div[i] = k.prefill.capacity
+        elif plans_mode or fleets_mode:
+            fl = k.serve.fleet if isinstance(k, ResourcePlan) else k
+            div[i] = fleet_capacity(fl)
+        else:
+            div[i] = float(k)
+        groups.setdefault(k, []).append(i)
+
+    st_cols = [i for i in range(O) if specs[i] is not None]
+
+    def eval_tables(rv):
+        """(C, F) over the whole option grid at cluster rates ``rv``."""
+        norm = rv[:, None] / div[None, :]
+        tab = profile.interpolate_many(norm, sizes_o[None, :])
+        floor = _floor_arr(rmin, norm)
+        C = np.zeros((T, O))
+        F = np.zeros((T, O))
+        if not (plans_mode or fleets_mode):
+            # homogeneous replica counts: fully columnar
+            op = tab.energy_per_req_kwh * cis
+            emb_cache = _cache_emb_arr(carbon, sizes_o[None, :],
+                                       tab.duration_per_req_s) \
+                / div[None, :]
+            lt = carbon.hw.lifetime_years * SECONDS_PER_YEAR
+            emb_comp = (tab.duration_per_req_s / lt) \
+                * carbon.hw.embodied_compute_kg * 1000.0
+            C = (op + emb_cache + emb_comp) * floor
+            F = _sat_arr(rs_max, norm, tab.slo_frac)
+        else:
+            for k, idxs in groups.items():
+                cols = np.array(idxs)
+                nm = norm[:, cols]
+                dur = tab.duration_per_req_s[:, cols]
+                if is_disagg[cols[0]]:
+                    p = k
+                    cp = p.prefill.capacity
+                    cd = p.decode.capacity
+                    slo_t = _sat_arr(rs_max, nm,
+                                     tab.slo_ttft_frac[:, cols])
+                    if model is not None:
+                        apt = tab.avg_prompt_tokens[:, cols]
+                        xfer = apt * model.kv_bytes_per_token \
+                            / (model.kv_transfer_gbps * 1e9)
+                        budget = slo.ttft_s if slo is not None else 2.5
+                        fac = np.maximum(0.0, 1.0 - xfer / budget)
+                        slo_t = np.where(apt > 0, slo_t * fac, slo_t)
+                    rate_d = rv / (cd * DISAGG_DECODE_SPEEDUP)
+                    dec = profile.interpolate_many(
+                        rate_d[:, None], sizes_o[None, cols])
+                    slo_p = _sat_arr(rs_max, rate_d[:, None],
+                                     dec.slo_tpot_frac)
+                    if model is not None and slo is not None:
+                        aot = tab.avg_out_tokens[:, cols]
+                        memo: Dict[Tuple[float, float], float] = {}
+                        for ti, ji in np.argwhere(aot > 0):
+                            key = (float(rv[ti]), float(aot[ti, ji]))
+                            v = memo.get(key)
+                            if v is None:
+                                v = _disagg_decode_slo(
+                                    model, slo, key[0], p.decode.fleet,
+                                    key[1])
+                                memo[key] = v
+                            slo_p[ti, ji] = v
+                    F[:, cols] = slo_t * slo_p
+                    util_p = _util_arr(tab.avg_power_w[:, cols], carbon)
+                    wp = _fleet_power_arr(p.prefill.fleet, util_p)
+                    op = tab.energy_per_req_kwh[:, cols] * cis * wp \
+                        / (cp * _ref_watts_arr(carbon, util_p)) \
+                        * _floor_arr(rmin, nm)
+                    util_d = _util_arr(dec.avg_power_w, carbon)
+                    cap_frac = model.decode_pool_power_frac \
+                        if model is not None else DECODE_POOL_POWER_FRAC
+                    wd = cap_frac * _fleet_power_arr(p.decode.fleet,
+                                                     util_d)
+                    op = op + dec.energy_per_req_kwh * cis * wd \
+                        / (cd * DISAGG_DECODE_SPEEDUP
+                           * _ref_watts_arr(carbon, util_d)) \
+                        * _floor_arr(rmin, rate_d[:, None])
+                    inv_rate = (1.0 / np.maximum(rv, 1e-3))[:, None]
+                    emb_cache = _cache_emb_arr(carbon,
+                                               sizes_o[None, cols],
+                                               inv_rate)
+                    emb_comp = _fleet_embodied_arr(p.all_types, inv_rate)
+                    C[:, cols] = op + emb_cache + emb_comp
+                    continue
+                if plans_mode or fleets_mode:
+                    fl = k.serve.fleet if isinstance(k, ResourcePlan) \
+                        else k
+                    cap = fleet_capacity(fl)
+                    if not type_profiles:
+                        slo_g = _sat_arr(rs_max, nm,
+                                         tab.slo_frac[:, cols])
+                        util = _util_arr(tab.avg_power_w[:, cols],
+                                         carbon)
+                        ref_w = _ref_watts_arr(carbon, util)
+                        fleet_w = _fleet_power_arr(fl, util)
+                        op = tab.energy_per_req_kwh[:, cols] * cis \
+                            * fleet_w / (cap * ref_w)
+                    else:
+                        op = 0.0
+                        slo_g = 0.0
+                        for tname, count in Counter(fl).items():
+                            rt = get_replica_type(tname)
+                            share = count * rt.perf_scale / cap
+                            prr = rv * rt.perf_scale / cap
+                            tp = type_profiles.get(tname)
+                            if tp is not None:
+                                ct = tp.interpolate_many(
+                                    prr[:, None], sizes_o[None, cols])
+                                op_t = ct.energy_per_req_kwh * cis
+                                slo_t = _sat_arr(max(tp.rates),
+                                                 prr[:, None],
+                                                 ct.slo_frac)
+                            else:
+                                util = _util_arr(
+                                    tab.avg_power_w[:, cols], carbon)
+                                op_t = tab.energy_per_req_kwh[:, cols] \
+                                    * cis * _type_power_arr(rt, util) \
+                                    / (rt.perf_scale
+                                       * _ref_watts_arr(carbon, util))
+                                slo_t = _sat_arr(rs_max, nm,
+                                                 tab.slo_frac[:, cols])
+                            op = op + share * op_t
+                            slo_g = slo_g + share * slo_t
+                    emb_cache = _cache_emb_arr(carbon,
+                                               sizes_o[None, cols],
+                                               dur) / cap
+                    emb_comp = _fleet_embodied_arr(fl, dur) / cap
+                    C[:, cols] = (op + emb_cache + emb_comp) \
+                        * floor[:, cols]
+                    F[:, cols] = slo_g
+        if st_cols:
+            sc = np.array(st_cols)
+            nm = norm[:, sc]
+            dur = tab.duration_per_req_s[:, sc]
+            size = sizes_o[sc]
+            idle_w = np.array([specs[i].idle_w for i in st_cols])
+            dw = idle_w - size * carbon.hw.ssd_power_w_per_tb
+            Cs = C[:, sc] + cis * dw[None, :] * dur / 3.6e6 \
+                / div[None, sc]
+            rates_w = rv[:, None] * tab.write_bytes_per_req[:, sc] \
+                if wear_aware else None
+            emb_flat = _cache_emb_arr(carbon, size[None, :], dur)
+            emb_spec = np.zeros_like(dur)
+            for ji, i in enumerate(st_cols):
+                spec = specs[i]
+                tot = np.zeros(T)
+                rw = rates_w[:, ji] if rates_w is not None else None
+                for tier in spec.tiers:
+                    cal = tier.dev.lifetime_years * SECONDS_PER_YEAR
+                    lt_t = np.full(T, cal)
+                    if rw is not None:
+                        tbw = tier.dev.tbw_bytes(tier.capacity_tb)
+                        if tbw is not None and tbw > 0.0:
+                            with np.errstate(divide="ignore"):
+                                wear = tbw / (rw * tier.dev.write_amp)
+                            lt_t = np.where((rw > 0.0) & (wear < cal),
+                                            wear, cal)
+                    tot = tot + tier.capacity_tb * (dur[:, ji] / lt_t) \
+                        * tier.dev.embodied_kg_per_tb * 1000.0
+                emb_spec[:, ji] = tot
+            Cs = Cs + (emb_spec - emb_flat) / div[None, sc]
+            C[:, sc] = Cs
+            if model is not None:
+                hr = tab.hit_rate[:, sc]
+                hot_share = np.zeros_like(hr)
+                tiered = np.array([specs[i].is_tiered for i in st_cols])
+                if tiered.any():
+                    hot_caps = np.array(
+                        [specs[i].hot.capacity_tb for i in st_cols
+                         if specs[i].is_tiered])
+                    hot_tab = profile.interpolate_many(
+                        nm[:, tiered], hot_caps[None, :])
+                    hot_share[:, tiered] = np.minimum(
+                        hot_tab.hit_rate
+                        / np.maximum(hr[:, tiered], 1e-9), 1.0)
+                apt = tab.avg_prompt_tokens[:, sc]
+                hit_bytes = hr * apt * model.kv_bytes_per_token
+                compute_s = model.prefill_base_s \
+                    + (1.0 - hr) * apt / model.prefill_tok_per_s
+                inv_ref = 1.0 / (model.ssd_read_gbps * 1e9)
+                hot_g = np.array([specs[i].hot.dev.read_gbps * 1e9
+                                  for i in st_cols])
+                cold_g = np.array([specs[i].cold.dev.read_gbps * 1e9
+                                   for i in st_cols])
+                inv_spec = hot_share / hot_g[None, :] \
+                    + (1.0 - hot_share) / cold_g[None, :]
+                load_ref = hit_bytes * inv_ref
+                load_spec = hit_bytes * inv_spec
+                q = (compute_s + load_spec) \
+                    / np.maximum(compute_s + load_ref, 1e-9)
+                adj = (hr > 0.0) & (q != 1.0)
+                if adj.any():
+                    cq = profile.interpolate_many(nm * q,
+                                                  size[None, :])
+                    fq = _sat_arr(rs_max, nm * q, cq.slo_frac)
+                    f0 = _sat_arr(rs_max, nm, tab.slo_frac[:, sc])
+                    Fs = F[:, sc]
+                    with np.errstate(divide="ignore",
+                                     invalid="ignore"):
+                        f1 = np.minimum(1.0, Fs * fq / f0)
+                    new = np.where(f0 > 0.0, f1,
+                                   np.where(fq > 0.0,
+                                            np.minimum(1.0, fq), Fs))
+                    F[:, sc] = np.where(adj, new, Fs)
+        return C, F
+
+    if shares is None:
+        return eval_tables(rates_T)
+    C_full, F_full = eval_tables(rates_T)
+    order = sorted(shares, key=lambda t: TIERS[t].priority)
+    cum = 0.0
+    den = 0.0
+    num = np.zeros((T, O))
+    for tname in order:
+        w = shares[tname]
+        cum += w
+        if not TIERS[tname].protected or w <= 0.0:
+            continue
+        num = num + w * eval_tables(rates_T * cum)[1]
+        den += w
+    if den == 0.0:
+        return C_full, F_full
+    return C_full, num / den
+
+
+def _build_option_tables_scalar(profile: Profile, options, pred_rates,
+                                pred_cis, slo: Optional[SLO],
+                                carbon: CarbonModel, model, type_profiles,
+                                wear_aware: bool, shares,
+                                plans_mode: bool, fleets_mode: bool):
+    """The original per-(hour, option) scalar closures — kept verbatim as
+    the reference implementation (``vectorize=False``) and the baseline
+    the scaling benchmark measures speedups against."""
+    T = len(pred_rates)
+    C = np.zeros((T, len(options)))
+    F = np.zeros((T, len(options)))
+    for t in range(T):
+        for oi, (s, k) in enumerate(options):
+            spec = s if isinstance(s, StorageSpec) else None
+            # queueing/hit behaviour follows the *usable* capacity (the
+            # cold tier of an inclusive spec); pricing uses the full spec
+            size = spec.usable_tb if spec is not None else s
+
+            def cell(rate, s=s, k=k, spec=spec, size=size, t=t):
+                """(carbon/request, slo_frac) for this option at an
+                arbitrary cluster rate — evaluated once at the forecast
+                rate for the single-tier solve, and at thinned rates per
+                protected tier for ``tier_shares``."""
+                if plans_mode and isinstance(k, ResourcePlan) \
+                        and k.is_disaggregated:
+                    if spec is not None:
+                        raise ValueError("the storage search does not "
+                                         "support disaggregated "
+                                         "candidates yet")
+                    return _disagg_cell_metrics(
+                        profile, rate, size, k, pred_cis[t], carbon,
+                        slo=slo, model=model)
+                if plans_mode or fleets_mode:
+                    fl = k.serve.fleet if isinstance(k, ResourcePlan) \
+                        else k
+                    c, f = _fleet_cell_metrics(
+                        profile, rate, size, fl, pred_cis[t], carbon,
+                        type_profiles=type_profiles)
+                    divisor = fleet_capacity(fl)
+                else:
+                    c, f = _cluster_cell_metrics(
+                        profile, rate, size, k, pred_cis[t], carbon)
+                    divisor = float(k)
+                if spec is not None:
+                    cellp = profile.interpolate(rate / divisor, size)
+                    c, f = _storage_cell_adjust(
+                        profile, rate / divisor, spec, pred_cis[t],
+                        carbon, cellp, c, f, divisor, rate,
+                        model, wear_aware)
+                return c, f
+
+            if shares is None:
+                C[t, oi], F[t, oi] = cell(pred_rates[t])
+            else:
+                C[t, oi] = cell(pred_rates[t])[0]
+                F[t, oi] = _tier_protected_slo(cell, pred_rates[t],
+                                               shares)
+    return C, F
+
+
 def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
                            pred_cis: Sequence[float], slo: SLO,
                            carbon: CarbonModel, *,
@@ -698,7 +1455,11 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
                            storage: Optional[Sequence[
                                Union[StorageSpec, str]]] = None,
                            wear_aware: bool = True,
-                           tier_shares: Optional[Dict[str, float]] = None
+                           tier_shares: Optional[Dict[str, float]] = None,
+                           vectorize: bool = True,
+                           prune: bool = True,
+                           beam_width: Optional[int] = None,
+                           solver_cache: Optional["PlannerCache"] = None
                            ) -> SolveResult:
     """Joint hourly plan over (cache size, resource plan): the option set
     is the cross product sizes × plan candidates and the same
@@ -807,59 +1568,22 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
 
     shares = normalize_shares(tier_shares) if tier_shares is not None \
         else None
-    C = np.zeros((T, len(options)))
-    F = np.zeros((T, len(options)))
-    for t in range(T):
-        for oi, (s, k) in enumerate(options):
-            spec = s if isinstance(s, StorageSpec) else None
-            # queueing/hit behaviour follows the *usable* capacity (the
-            # cold tier of an inclusive spec); pricing uses the full spec
-            size = spec.usable_tb if spec is not None else s
-
-            def cell(rate, s=s, k=k, spec=spec, size=size, t=t):
-                """(carbon/request, slo_frac) for this option at an
-                arbitrary cluster rate — evaluated once at the forecast
-                rate for the single-tier solve, and at thinned rates per
-                protected tier for ``tier_shares``."""
-                if plans is not None and isinstance(k, ResourcePlan) \
-                        and k.is_disaggregated:
-                    if spec is not None:
-                        raise ValueError("the storage search does not "
-                                         "support disaggregated "
-                                         "candidates yet")
-                    return _disagg_cell_metrics(
-                        profile, rate, size, k, pred_cis[t], carbon,
-                        slo=slo, model=model)
-                if plans is not None or fleets is not None:
-                    fl = k.serve.fleet if isinstance(k, ResourcePlan) \
-                        else k
-                    c, f = _fleet_cell_metrics(
-                        profile, rate, size, fl, pred_cis[t], carbon,
-                        type_profiles=type_profiles)
-                    divisor = fleet_capacity(fl)
-                else:
-                    c, f = _cluster_cell_metrics(
-                        profile, rate, size, k, pred_cis[t], carbon)
-                    divisor = float(k)
-                if spec is not None:
-                    cellp = profile.interpolate(rate / divisor, size)
-                    c, f = _storage_cell_adjust(
-                        profile, rate / divisor, spec, pred_cis[t],
-                        carbon, cellp, c, f, divisor, rate,
-                        model, wear_aware)
-                return c, f
-
-            if shares is None:
-                C[t, oi], F[t, oi] = cell(pred_rates[t])
-            else:
-                C[t, oi] = cell(pred_rates[t])[0]
-                F[t, oi] = _tier_protected_slo(cell, pred_rates[t],
-                                               shares)
+    builder = _build_option_tables if vectorize \
+        else _build_option_tables_scalar
+    C, F = builder(profile, options, pred_rates, pred_cis, slo, carbon,
+                   model, type_profiles, wear_aware, shares,
+                   plans is not None, fleets is not None)
 
     res = None
     if transitions is not None:
         opt_plans = [_option_plan(o, sized=True) for o in options]
-        E, S = _transition_matrices(opt_plans, transitions, model=model)
+        if solver_cache is not None:
+            E, S = solver_cache.transition_matrices(opt_plans,
+                                                    transitions,
+                                                    model=model)
+        else:
+            E, S = _transition_matrices(opt_plans, transitions,
+                                        model=model)
         e_init = lock0 = None
         if initial_plan is not None:
             init_key = _fleet_key(initial_plan)
@@ -873,10 +1597,25 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
                 lock0 = fleet_diff0       # mid-block re-solve: hold shape
         if E.any() or min_dwell_hours > 1 \
                 or (e_init is not None and e_init.any()):
+            # switch-cost classes for the dominance prune: two options
+            # with the same structural fleet key (and, when partitioned
+            # ring migration is in play, the same cache size) have
+            # identical E/S rows *and* columns, so pruning within a
+            # class never changes any path's switching cost
+            mig = transitions.rebalance == "migrate" \
+                and not transitions.is_free \
+                and any(p.prefill.partitioned for p in opt_plans)
+            class_keys = [
+                (_fleet_key(p), p.cache_tb if mig else None,
+                 None if e_init is None else float(e_init[i]),
+                 None if lock0 is None else bool(lock0[i]))
+                for i, p in enumerate(opt_plans)]
             res = _solve_dp_transition(C, F, n, options, rho, t_start,
                                        E, S, e_init, pred_cis,
                                        min_dwell_hours, dwell_offset,
-                                       lock0=lock0)
+                                       lock0=lock0, prune=prune,
+                                       beam_width=beam_width,
+                                       class_keys=class_keys)
         # else: every switch is free — the plain solve is identical (and
         # bit-reproduces the pre-transition schedules)
     if res is None:
@@ -884,9 +1623,11 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
             try:
                 res = _solve_ilp(C, F, n, options, rho, t_start)
             except Exception:
-                res = _solve_dp(C, F, n, options, rho, t_start)
+                res = _solve_dp(C, F, n, options, rho, t_start,
+                                prune=prune, beam_width=beam_width)
         else:
-            res = _solve_dp(C, F, n, options, rho, t_start)
+            res = _solve_dp(C, F, n, options, rho, t_start,
+                            prune=prune, beam_width=beam_width)
     chosen = list(res.sizes_tb)       # option tuples, split into the plan
     hourly = [_option_plan(o, sized=True) for o in chosen]
     tg = res.transition_g
@@ -896,17 +1637,18 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
         return SolveResult(szs, res.objective_g,
                            res.feasible, time.time() - t_start, res.solver,
                            replicas=[p.n_replicas for p in hourly],
-                           plans=hourly, transition_g=tg)
+                           plans=hourly, transition_g=tg,
+                           beam_bound_g=res.beam_bound_g)
     if fleets is not None:
         return SolveResult(szs, res.objective_g,
                            res.feasible, time.time() - t_start, res.solver,
                            replicas=[len(f) for _, f in chosen],
                            fleets=[f for _, f in chosen], plans=hourly,
-                           transition_g=tg)
+                           transition_g=tg, beam_bound_g=res.beam_bound_g)
     return SolveResult(szs, res.objective_g,
                        res.feasible, time.time() - t_start, res.solver,
                        replicas=[k for _, k in chosen], plans=hourly,
-                       transition_g=tg)
+                       transition_g=tg, beam_bound_g=res.beam_bound_g)
 
 
 def _solve_ilp(C, F, n, sizes, rho, t_start) -> SolveResult:
@@ -941,10 +1683,11 @@ def _best_effort(Ft, Ct) -> int:
     return min(cand, key=lambda s: Ct[s])
 
 
-def _solve_dp(C, F, n, sizes, rho, t_start, buckets: int = 400
-              ) -> SolveResult:
-    """Exact-to-discretization DP: state = hours processed × satisfied-count
-    bucket; value = min carbon. O(T·S·buckets)."""
+def _solve_dp_reference(C, F, n, sizes, rho, t_start, buckets: int = 400
+                        ) -> SolveResult:
+    """Original triple-loop DP — kept as the oracle the vectorized
+    ``_solve_dp`` is regression-tested (and benchmarked) against.
+    O(T·S·buckets) in Python."""
     T, S = C.shape
     total = float(n.sum())
     target = rho * total
@@ -989,6 +1732,106 @@ def _solve_dp(C, F, n, sizes, rho, t_start, buckets: int = 400
     obj = float(sum(n[t] * C[t][c] for t, c in enumerate(choice)))
     return SolveResult([sizes[c] for c in choice], obj, True,
                        time.time() - t_start, "dp")
+
+
+def _solve_dp(C, F, n, sizes, rho, t_start, buckets: int = 400,
+              prune: bool = False, beam_width=None) -> SolveResult:
+    """Exact-to-discretization DP: state = hours processed × satisfied-count
+    bucket; value = min carbon.
+
+    Vectorized engine, bit-identical to ``_solve_dp_reference`` (tested):
+    the per-hour (bucket × option) relaxation becomes one gathered-matrix
+    ``argmin`` — each option column advances buckets by a constant shift
+    ``k = int(b + n·F·scale) - b`` (verified cell-exact per column on the
+    identical float expression; a rounding-broken column drops the hour
+    back to the reference loop), columns are ordered (k desc, index asc)
+    so the row-wise first-minimum reproduces the reference's
+    (bucket-major, option-minor) strict-< tie-break, and the clipped top
+    bucket takes a flat argmin over the masked cost matrix in the same
+    order.  ``prune``/``beam_width`` apply the per-hour dominance filter
+    and beam of ``_hour_keeps`` (no switching costs here, so dominance
+    needs no class structure)."""
+    T, S = C.shape
+    total = float(n.sum())
+    target = rho * total
+    # satisfied counts scaled to bucket units
+    scale = buckets / max(total, 1e-9)
+    B = buckets
+    NEG = -1
+    INF = float("inf")
+    keeps, bound_total = _hour_keeps(C, F, n, None, prune, beam_width)
+    dp = np.full(B + 1, INF)
+    dp[0] = 0.0
+    back = np.full((T, B + 1), NEG, dtype=np.int64)
+    bgrid = np.arange(B + 1)
+    for t in range(T):
+        kt = keeps[t]
+        nCt = n[t] * C[t]
+        raw = (bgrid[:, None] + (n[t] * F[t] * scale)[kt][None, :]) \
+            .astype(int)
+        D = raw - bgrid[:, None]
+        const = (D == D[0]).all(axis=0)
+        if not const.all():
+            # float rounding broke a column's constant shift: run the
+            # reference inner loop (restricted to the kept set) exactly
+            ndp = np.full(B + 1, INF)
+            for b in range(B + 1):
+                if dp[b] == INF:
+                    continue
+                for j, s in enumerate(kt):
+                    nb = min(raw[b, j], B)
+                    cost = dp[b] + nCt[s]
+                    if cost < ndp[nb]:
+                        ndp[nb] = cost
+                        back[t, nb] = b * S + s
+            dp = ndp
+            continue
+        ks = D[0]
+        order = np.lexsort((kt, -ks))       # k desc, then option asc:
+        k_s = ks[order]                     # == (bucket asc, option asc)
+        s_g = kt[order]
+        nC_s = nCt[s_g]
+        bmat = np.arange(B)[:, None] - k_s[None, :]
+        cand = np.where(bmat >= 0,
+                        dp[np.clip(bmat, 0, B)] + nC_s[None, :], INF)
+        am = cand.argmin(axis=1)
+        v = cand[np.arange(B), am]
+        ndp = np.full(B + 1, INF)
+        ndp[:B] = v
+        fin = np.isfinite(v)
+        enc = (np.arange(B) - k_s[am]) * S + s_g[am]
+        back[t, :B][fin] = enc[fin]
+        # clipped top bucket: flat argmin over (bucket, option) C-order
+        costm = np.where(raw >= B, dp[:, None] + nCt[kt][None, :], INF)
+        flat = int(np.argmin(costm))
+        bB, jB = divmod(flat, len(kt))
+        if np.isfinite(costm[bB, jB]):
+            ndp[B] = costm[bB, jB]
+            back[t, B] = bB * S + int(kt[jB])
+        dp = ndp
+    tb = int(np.floor(target * scale))
+    best_b, best_cost = -1, INF
+    for b in range(tb, B + 1):
+        if dp[b] < best_cost:
+            best_b, best_cost = b, dp[b]
+    feasible = best_b >= 0
+    if not feasible:
+        choice = [_best_effort(F[t], C[t]) for t in range(T)]
+        obj = float(sum(n[t] * C[t][c] for t, c in enumerate(choice)))
+        return SolveResult([sizes[c] for c in choice], obj, False,
+                           time.time() - t_start, "dp",
+                           beam_bound_g=bound_total)
+    # backtrack
+    choice = [0] * T
+    b = best_b
+    for t in range(T - 1, -1, -1):
+        enc = back[t, b]
+        choice[t] = int(enc % S)
+        b = int(enc // S)
+    obj = float(sum(n[t] * C[t][c] for t, c in enumerate(choice)))
+    return SolveResult([sizes[c] for c in choice], obj, True,
+                       time.time() - t_start, "dp",
+                       beam_bound_g=bound_total)
 
 # ---------------------------------------------------------------------------
 # Geo-distributed joint solve: global traffic split × per-region plan
@@ -1070,6 +1913,42 @@ def _region_best_cell(profile: Profile, rate: float, sizes, cands,
     return best_feas if best_feas is not None else best_any
 
 
+def _region_cell_tables(profile: Profile, pred_rates, region_cis, sizes,
+                        cands, weights, slo: SLO, carbon: CarbonModel,
+                        model, rho: float):
+    """Batched ``_region_best_cell`` over every (hour, split weight) a
+    region can see: one columnar table build per region instead of
+    T·|weights|·|options| scalar interpolations.  Returns
+    ``{(t, w): (carbon, slo_frac)}`` — bit-identical to the scalar
+    per-cell picks (same option order, same first-wins tie-breaks)."""
+    T = len(pred_rates)
+    ws = sorted(weights)
+    if not ws:
+        return {}
+    options = [(s, p) for p in cands
+               for s in ([p.cache_tb] if p.cache_tb is not None
+                         else sizes)]
+    # flatten the (hour, weight) grid into the builder's "hours" axis
+    flat_rates = [pred_rates[t] * w for t in range(T) for w in ws]
+    flat_cis = [region_cis[t] for t in range(T) for _ in ws]
+    C, F = _build_option_tables(profile, options, flat_rates, flat_cis,
+                                slo, carbon, model, None, True, None,
+                                True, False)
+    feas = F >= rho
+    cfeas = np.where(feas, C, np.inf)
+    jf = np.argmin(cfeas, axis=1)          # first min = first-wins tie
+    has_f = feas.any(axis=1)
+    fmax = F.max(axis=1)
+    cany = np.where(F == fmax[:, None], C, np.inf)
+    ja = np.argmin(cany, axis=1)           # lexicographic (f, -c) max
+    rows = np.arange(len(flat_rates))
+    j = np.where(has_f, jf, ja)
+    cf = (C[rows, j], F[rows, j])
+    return {(t, w): (float(cf[0][t * len(ws) + wi]),
+                     float(cf[1][t * len(ws) + wi]))
+            for t in range(T) for wi, w in enumerate(ws)}
+
+
 def _pareto_prune_splits(splits, C, F):
     """Drop candidate splits dominated at *every* hour (≥ carbon and
     ≤ attainment, strict somewhere) — keeps the DP over splits tractable
@@ -1079,13 +1958,12 @@ def _pareto_prune_splits(splits, C, F):
     for i in range(S):
         if not keep[i]:
             continue
-        for j in range(S):
-            if i == j or not keep[j]:
-                continue
-            if np.all(C[:, i] <= C[:, j]) and np.all(F[:, i] >= F[:, j]) \
-                    and (np.any(C[:, i] < C[:, j])
-                         or np.any(F[:, i] > F[:, j])):
-                keep[j] = False
+        dom = np.all(C[:, i:i + 1] <= C, axis=0) \
+            & np.all(F[:, i:i + 1] >= F, axis=0) \
+            & (np.any(C[:, i:i + 1] < C, axis=0)
+               | np.any(F[:, i:i + 1] > F, axis=0))
+        dom[i] = False
+        keep &= ~dom
     return [s for s, k in zip(splits, keep) if k], C[:, keep], F[:, keep]
 
 
@@ -1102,7 +1980,11 @@ def solve_geo_schedule(profile: Profile, pred_rates: Sequence[float],
                        inter_region_gbps: float = 5.0,
                        min_dwell_hours: int = 1,
                        dwell_offset: int = 0,
-                       use_ilp: bool = True) -> GeoSolveResult:
+                       use_ilp: bool = True,
+                       prune: bool = True,
+                       beam_width: Optional[int] = None,
+                       solver_cache: Optional["PlannerCache"] = None
+                       ) -> GeoSolveResult:
     """Joint hourly solve over (global traffic split, per-region plan).
 
     Stage 1 runs a DP over candidate splits from the ``quantum``-granular
@@ -1129,10 +2011,15 @@ def solve_geo_schedule(profile: Profile, pred_rates: Sequence[float],
 
     splits = _simplex_splits(R, quantum, eligible)
     n = np.array([max(r, 1e-3) * 3600.0 for r in pred_rates])
-    cell = functools.lru_cache(maxsize=None)(
-        lambda r, t, w: _region_best_cell(
-            profile, pred_rates[t] * w, sizes, cands[r],
-            region_cis[r][t], carbon, slo, model, rho))
+    # lazy: each region's cell table only covers the distinct positive
+    # weights that actually appear in a candidate split — ineligible
+    # regions (weight 0 everywhere) are never evaluated at all
+    weights_r = [{sp[r] for sp in splits if sp[r] > 0.0}
+                 for r in range(R)]
+    tbl = [_region_cell_tables(profile, pred_rates, region_cis[r], sizes,
+                               cands[r], weights_r[r], slo, carbon,
+                               model, rho)
+           for r in range(R)]
 
     C = np.zeros((T, len(splits)))
     F = np.zeros((T, len(splits)))
@@ -1142,7 +2029,7 @@ def solve_geo_schedule(profile: Profile, pred_rates: Sequence[float],
             for r, w in enumerate(sp):
                 if w <= 0.0:
                     continue            # idle region: no load, no term
-                cr, fr = cell(r, t, w)
+                cr, fr = tbl[r][(t, w)]
                 c += w * cr
                 f += w * fr
             C[t, si], F[t, si] = c, f
@@ -1153,16 +2040,11 @@ def solve_geo_schedule(profile: Profile, pred_rates: Sequence[float],
 
     # cross-region KV-migration energy for a split shift: half the L1
     # distance is the total weight that changes hands
-    E = np.zeros((n_sp, n_sp))
-    Sm = np.zeros((n_sp, n_sp), dtype=bool)
-    for i, a in enumerate(splits):
-        for j, b in enumerate(splits):
-            if a == b:
-                continue
-            moved = 0.5 * sum(abs(x - y) for x, y in zip(a, b))
-            E[i, j] = kv_migration_energy_kwh(
-                moved * migrate_gb_per_shift * 1e9, inter_region_gbps)
-            Sm[i, j] = True
+    A = np.array(splits, dtype=float)
+    moved = 0.5 * np.abs(A[:, None, :] - A[None, :, :]).sum(axis=2)
+    Sm = moved > 0.0
+    E = np.where(Sm, kv_migration_energy_kwh(
+        moved * migrate_gb_per_shift * 1e9, inter_region_gbps), 0.0)
 
     if E.any() or min_dwell_hours > 1:
         res = _solve_dp_transition(C, F, n, splits, rho, t_start, E, Sm,
@@ -1183,7 +2065,8 @@ def solve_geo_schedule(profile: Profile, pred_rates: Sequence[float],
             profile, rates_r, list(region_cis[r]), slo, carbon,
             plans=cands[r], sizes_tb=sizes, rho=rho, model=model,
             use_ilp=use_ilp, min_dwell_hours=min_dwell_hours,
-            dwell_offset=dwell_offset)
+            dwell_offset=dwell_offset, prune=prune,
+            beam_width=beam_width, solver_cache=solver_cache)
         per_region.append(sub)
         objective += sub.objective_g
         # an hour a region serves no traffic cannot violate its SLO

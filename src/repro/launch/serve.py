@@ -162,7 +162,9 @@ def run_simulation(args):
                                storage=args.storage,
                                wear_aware=not args.calendar_lifetime,
                                admission=admission,
-                               prefix_caching=prefix)
+                               prefix_caching=prefix,
+                               solver_prune=not args.no_solver_prune,
+                               beam_width=args.beam_width)
     res = ctl.run_day(wf, rate_trace, cis)
     many = len(plans) > 1
     clustered = scale > 1 or plans[0].n_replicas > 1
@@ -280,6 +282,15 @@ def main(argv=None):
                     help="minimum hours a plan shape must dwell before "
                          "the solver may switch it again (>1 implies "
                          "--transitions)")
+    ap.add_argument("--beam-width", type=int, default=None,
+                    help="approximate planning: keep only the K cheapest "
+                         "options per (hour, switch class) in the DP; the "
+                         "result reports an optimality bound "
+                         "(SolveResult.beam_bound_g). Default: exact")
+    ap.add_argument("--no-solver-prune", action="store_true",
+                    help="disable the lossless Pareto dominance pruning "
+                         "in the planning DP (debugging knob; results "
+                         "are bit-identical either way)")
     ap.add_argument("--storage", nargs="+", default=None,
                     help="typed cache tier spec(s) like 'nvme_gen4:8tb' "
                          "or 'dram:0.5tb+nvme_gen4:4tb'; several specs "

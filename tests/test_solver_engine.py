@@ -1,0 +1,377 @@
+"""Vectorized planning core: bit-exactness contracts.
+
+The PR-9 engine (columnar option tables, Pareto-pruned vectorized DPs,
+class-collapsed transition matrices) must return results *bit-identical*
+to the scalar/reference paths it replaced — these tests are the standing
+guarantee, with always-on seeded twins plus hypothesis property tests.
+"""
+import numpy as np
+
+from repro.core import solver as S
+from repro.core.carbon import CarbonModel
+from repro.core.plan import ResourcePlan, TransitionConfig
+from repro.core.profiler import Profile, ProfileCell
+from repro.core.solver import (PlannerCache, solve_cluster_schedule)
+from repro.serving.perfmodel import SERVING_MODELS, SLO
+
+CM = CarbonModel()
+MODEL = SERVING_MODELS["llama3-70b"]
+SLO_CHAT = SLO(2.5, 0.2, 0.7)
+SIZES = [0, 2, 4, 8, 16]
+
+
+def rich_profile(sizes=tuple(SIZES), rates=(0.2, 0.5, 1.0, 2.0, 4.0)):
+    """Synthetic profile populating every ProfileCell field, so the
+    batched interpolation sweeps the full column set."""
+    prof = Profile("m", "t", rates=list(rates), sizes=list(sizes))
+    for r in rates:
+        for s in sizes:
+            slo = min(1.0, 0.3 + 0.04 * s
+                      + 0.4 / max(r, 0.3) * (0.2 + 0.04 * s))
+            prof.cells[(r, s)] = ProfileCell(
+                rate=r, cache_tb=s, avg_ttft=1.0 + 0.1 * r, p90_ttft=2.0,
+                avg_tpot=0.1, p90_tpot=0.15, slo_frac=slo,
+                hit_rate=min(0.9, 0.05 * s + 0.01 * r),
+                energy_per_req_kwh=2e-4 * (1.0 - 0.006 * s)
+                * (1 + 0.03 * r),
+                duration_per_req_s=1.0 / r, avg_power_w=900.0 + 30 * r,
+                slo_ttft_frac=min(1.0, slo + 0.05),
+                slo_tpot_frac=min(1.0, slo + 0.1),
+                avg_out_tokens=200.0 + 10 * r,
+                avg_prompt_tokens=1500.0 + 100 * s,
+                write_bytes_per_req=5e7 * (1 + 0.1 * s),
+                matched_token_frac=0.3)
+    return prof
+
+
+PROF = rich_profile()
+
+
+# ------------------------------------------------------------------ #
+# Profile.interpolate_many == scalar interpolate, bitwise
+# ------------------------------------------------------------------ #
+def test_interpolate_many_matches_scalar_on_grid_and_off_grid():
+    rng = np.random.default_rng(3)
+    grid_r = list(PROF.rates)
+    grid_s = list(PROF.sizes)
+    off_r = list(rng.uniform(0.05, 5.0, 40))        # incl. out-of-range
+    off_s = list(rng.uniform(-1.0, 20.0, 10))
+    rates = np.array(grid_r + off_r)
+    sizes = np.array(grid_s + off_s)
+    tab = PROF.interpolate_many(rates[:, None], sizes[None, :])
+    import dataclasses
+    fields = [f.name for f in dataclasses.fields(ProfileCell)]
+    for i, r in enumerate(rates):
+        for j, s in enumerate(sizes):
+            cell = PROF.interpolate(float(r), float(s))
+            batched = tab.cell(i * len(sizes) + j)
+            for f in fields:
+                assert getattr(batched, f) == getattr(cell, f), \
+                    (f, r, s)
+
+
+def test_interpolate_many_broadcasts():
+    tab = PROF.interpolate_many(np.array([0.7, 1.3]), 4.0)
+    for i, r in enumerate([0.7, 1.3]):
+        cell = PROF.interpolate(r, 4.0)
+        assert tab.cell(i).energy_per_req_kwh == cell.energy_per_req_kwh
+        assert tab.cell(i).slo_frac == cell.slo_frac
+
+
+# ------------------------------------------------------------------ #
+# columnar option tables == scalar closures, bitwise, every mode
+# ------------------------------------------------------------------ #
+def _tables_equal(args):
+    Cv, Fv = S._build_option_tables(*args)
+    Cs, Fs = S._build_option_tables_scalar(*args)
+    assert np.array_equal(Cv, Cs)
+    assert np.array_equal(Fv, Fs)
+
+
+RNG = np.random.default_rng(7)
+T = 6
+RATES = list(RNG.uniform(0.1, 4.5, T))
+CIS = list(RNG.uniform(20, 600, T))
+
+
+def test_tables_replica_mode():
+    opts = [(s, k) for k in (1, 2, 3) for s in SIZES]
+    _tables_equal((PROF, opts, RATES, CIS, SLO_CHAT, CM, None, None,
+                   True, None, False, False))
+
+
+def test_tables_fleet_modes():
+    fleets = [("l40", "l40"), ("a100",) * 3, ("h100", "a100")]
+    opts = [(s, f) for f in fleets for s in SIZES]
+    _tables_equal((PROF, opts, RATES, CIS, SLO_CHAT, CM, None, None,
+                   True, None, False, True))
+    tp = {"a100": rich_profile(rates=(0.3, 0.8, 1.6, 3.0))}
+    _tables_equal((PROF, opts, RATES, CIS, SLO_CHAT, CM, None, tp,
+                   True, None, False, True))
+
+
+def test_tables_plans_and_disagg():
+    plans = [ResourcePlan.parse("cache=4tb serve=a100:2"),
+             ResourcePlan.parse("serve=l40:3"),
+             ResourcePlan.parse("cache=8tb prefill=h100:2 decode=a100:3")]
+    opts = []
+    for p in plans:
+        szs = [p.cache_tb] if p.cache_tb is not None else SIZES
+        opts += [(s, p) for s in szs]
+    for model in (MODEL, None):
+        _tables_equal((PROF, opts, RATES, CIS, SLO_CHAT, CM, model,
+                       None, True, None, True, False))
+
+
+def test_tables_storage_specs():
+    from repro.core.storage import StorageSpec
+    specs = [StorageSpec.parse("nvme_gen4:8tb"),
+             StorageSpec.parse("dram:0.5tb+qlc_ssd:8tb")]
+    p = ResourcePlan.parse("serve=a100:2")
+    opts = [(sp, p) for sp in specs] + [(s, p) for s in SIZES]
+    for wear in (True, False):
+        for model in (MODEL, None):
+            _tables_equal((PROF, opts, RATES, CIS, SLO_CHAT, CM, model,
+                           None, wear, None, True, False))
+
+
+def test_tables_tier_shares():
+    shares = {"gold": 0.3, "standard": 0.5, "scavenger": 0.2}
+    opts = [(s, k) for k in (1, 2) for s in SIZES]
+    _tables_equal((PROF, opts, RATES, CIS, SLO_CHAT, CM, None, None,
+                   True, shares, False, False))
+
+
+# ------------------------------------------------------------------ #
+# vectorized DPs == reference DPs; pruning is lossless
+# ------------------------------------------------------------------ #
+def _dp_instance(T, n_opt, seed):
+    r = np.random.default_rng(seed)
+    C = np.round(r.uniform(0.01, 5.0, (T, n_opt)), 4)
+    F = np.round(r.uniform(0.0, 1.0, (T, n_opt)), 3)
+    if n_opt >= 4:                 # duplicates exercise the tie-breaks
+        C[:, 1] = C[:, 0]
+        F[:, 1] = F[:, 0]
+        C[:, 3] = C[:, 2]
+    n = r.uniform(100, 5000, T)
+    return C, F, n
+
+
+def _same(a, b):
+    assert list(a.sizes_tb) == list(b.sizes_tb)
+    assert a.objective_g == b.objective_g
+    assert a.feasible == b.feasible
+    assert a.transition_g == b.transition_g
+
+
+def _check_plain_dp(seed):
+    C, F, n = _dp_instance(6, 12, seed)
+    rho = [0.3, 0.6, 0.95][seed % 3]
+    ref = S._solve_dp_reference(C, F, n, list(range(12)), rho, 0.0,
+                                buckets=200)
+    for prune in (False, True):
+        v = S._solve_dp(C, F, n, list(range(12)), rho, 0.0,
+                        buckets=200, prune=prune)
+        _same(v, ref)
+
+
+def _check_transition_dp(seed):
+    n_opt = 10
+    r = np.random.default_rng(1000 + seed)
+    C, F, n = _dp_instance(6, n_opt, 1000 + seed)
+    rho = [0.3, 0.6, 0.95][seed % 3]
+    E = np.round(r.uniform(0, 0.5, (n_opt, n_opt)), 3)
+    np.fill_diagonal(E, 0.0)
+    Sw = E > 0.1
+    E[~Sw] = 0.0
+    e_init = np.round(r.uniform(0, 0.3, n_opt), 3) if seed % 2 else None
+    cis = r.uniform(20, 600, 6)
+    lock0 = (r.integers(0, 2, n_opt) == 1) if seed % 4 == 1 else None
+    dwell = [1, 2, 3][seed % 3]
+    # options 0/1 share a switch class: identical E/S rows+cols
+    E[1] = E[0]
+    E[:, 1] = E[:, 0]
+    Sw[1] = Sw[0]
+    Sw[:, 1] = Sw[:, 0]
+    if e_init is not None:
+        e_init[1] = e_init[0]
+    if lock0 is not None:
+        lock0[1] = lock0[0]
+    keys = [(0 if i == 1 else i,) for i in range(n_opt)]
+    ref = S._solve_dp_transition_reference(
+        C, F, n, list(range(n_opt)), rho, 0.0, E, Sw, e_init, cis,
+        dwell, 0,
+        lock0=lock0, buckets=200)
+    for prune in (False, True):
+        for ck in (None, keys):
+            v = S._solve_dp_transition(
+                C, F, n, list(range(n_opt)), rho, 0.0, E, Sw, e_init,
+                cis, dwell, 0, lock0=lock0, buckets=200, prune=prune,
+                class_keys=ck)
+            _same(v, ref)
+
+
+def test_dp_engines_bit_identical_seeded_twin():
+    for seed in range(12):
+        _check_plain_dp(seed)
+        _check_transition_dp(seed)
+
+
+def test_cluster_solve_prune_is_lossless_all_modes():
+    """End-to-end: prune on/off and vectorize on/off return identical
+    SolveResults through solve_cluster_schedule, including the
+    transition-aware and tier-share paths."""
+    plans = [ResourcePlan.parse(f"serve={t}:{k}")
+             for t in ("l40", "a100") for k in (1, 2)]
+    rng = np.random.default_rng(11)
+    rates = list(rng.uniform(0.3, 2.0, 6))
+    cis = list(rng.uniform(30, 400, 6))
+    cases = [
+        dict(),
+        dict(transitions=TransitionConfig(), min_dwell_hours=2,
+             initial_plan=plans[0]),
+        dict(tier_shares={"gold": 0.3, "standard": 0.5,
+                          "scavenger": 0.2}),
+        dict(transitions=TransitionConfig(), min_dwell_hours=3,
+             tier_shares={"gold": 0.4, "standard": 0.6}),
+    ]
+    for kw in cases:
+        base = solve_cluster_schedule(
+            PROF, rates, cis, SLO_CHAT, CM, sizes_tb=SIZES, plans=plans,
+            model=MODEL, use_ilp=False, prune=False, **kw)
+        for prune, vec in [(True, True), (True, False), (False, False)]:
+            res = solve_cluster_schedule(
+                PROF, rates, cis, SLO_CHAT, CM, sizes_tb=SIZES,
+                plans=plans, model=MODEL, use_ilp=False, prune=prune,
+                vectorize=vec, **kw)
+            _same(res, base)
+            assert res.plans == base.plans
+            assert res.beam_bound_g is None
+
+
+def test_transition_matrices_match_reference():
+    plans = [ResourcePlan.parse(f"serve={t}:{k}").with_cache(c)
+             for t in ("l40", "a100") for k in (1, 2, 3)
+             for c in (2.0, 8.0)]
+    cfg = TransitionConfig()
+    E, Sw = S._transition_matrices(plans, cfg, model=MODEL)
+    Er, Sr = S._transition_matrices_reference(plans, cfg, model=MODEL)
+    assert np.array_equal(E, Er)
+    assert np.array_equal(Sw, Sr)
+    # partitioned prefill exercises the ring-migration term
+    part = [ResourcePlan.parse(
+        f"cache={c}tb serve=l40:{k} partitioned")
+        for k in (1, 2, 3) for c in (2, 8)]
+    E, Sw = S._transition_matrices(part, cfg, model=MODEL)
+    Er, Sr = S._transition_matrices_reference(part, cfg, model=MODEL)
+    assert np.array_equal(E, Er)
+    assert np.array_equal(Sw, Sr)
+
+
+def test_planner_cache_reuses_matrices():
+    plans = [ResourcePlan.parse("serve=l40:1"),
+             ResourcePlan.parse("serve=a100:2")]
+    cache = PlannerCache()
+    cfg = TransitionConfig()
+    a = cache.transition_matrices(plans, cfg, model=MODEL)
+    b = cache.transition_matrices(plans, cfg, model=MODEL)
+    assert a[0] is b[0] and a[1] is b[1]       # cache hit, same arrays
+    rng = np.random.default_rng(5)
+    rates = list(rng.uniform(0.3, 2.0, 4))
+    cis = list(rng.uniform(30, 400, 4))
+    kw = dict(sizes_tb=SIZES, plans=plans, model=MODEL, use_ilp=False,
+              transitions=cfg, min_dwell_hours=2)
+    with_cache = solve_cluster_schedule(PROF, rates, cis, SLO_CHAT, CM,
+                                        solver_cache=cache, **kw)
+    without = solve_cluster_schedule(PROF, rates, cis, SLO_CHAT, CM,
+                                     **kw)
+    _same(with_cache, without)
+
+
+# ------------------------------------------------------------------ #
+# beam: approximate, but the reported bound is honest
+# ------------------------------------------------------------------ #
+def test_beam_bound_is_valid():
+    for seed in range(8):
+        C, F, n = _dp_instance(6, 12, 40 + seed)
+        rho = 0.5
+        exact = S._solve_dp(C, F, n, list(range(12)), rho, 0.0,
+                            buckets=200, prune=True)
+        for bw in (1, 2, 4):
+            beam = S._solve_dp(C, F, n, list(range(12)), rho, 0.0,
+                               buckets=200, prune=True, beam_width=bw)
+            assert beam.beam_bound_g is not None
+            assert beam.beam_bound_g >= 0.0
+            if exact.feasible and beam.feasible:
+                assert beam.objective_g >= exact.objective_g - 1e-9
+                assert beam.objective_g <= exact.objective_g \
+                    + beam.beam_bound_g + 1e-6
+
+
+def test_beam_off_reports_no_bound():
+    C, F, n = _dp_instance(4, 6, 3)
+    res = S._solve_dp(C, F, n, list(range(6)), 0.5, 0.0, buckets=100,
+                      prune=True)
+    assert res.beam_bound_g is None
+
+
+# ------------------------------------------------------------------ #
+# geo: batched region cells == scalar picks; split prune is unchanged
+# ------------------------------------------------------------------ #
+def test_region_cell_tables_match_scalar():
+    gp = rich_profile(sizes=(0, 4), rates=(0.2, 0.5, 1.0, 1.5, 2.0))
+    cands = [ResourcePlan.parse("serve=a100:2"),
+             ResourcePlan.parse("cache=4tb serve=l40:3")]
+    rng = np.random.default_rng(9)
+    rates = list(rng.uniform(0.2, 2.5, 5))
+    cis = list(rng.uniform(20, 500, 5))
+    weights = {0.25, 0.5, 0.75, 1.0}
+    tbl = S._region_cell_tables(gp, rates, cis, [0, 4], cands, weights,
+                                SLO_CHAT, CM, MODEL, 0.7)
+    for t in range(5):
+        for w in weights:
+            ref = S._region_best_cell(gp, rates[t] * w, [0, 4], cands,
+                                      cis[t], CM, SLO_CHAT, MODEL, 0.7)
+            assert tbl[(t, w)] == tuple(ref)
+
+
+# ------------------------------------------------------------------ #
+# hypothesis property tests (skipped when the optional dep is absent)
+# ------------------------------------------------------------------ #
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 100_000))
+    def test_plain_dp_property(seed):
+        _check_plain_dp(seed % 50_000)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 100_000))
+    def test_transition_dp_property(seed):
+        _check_transition_dp(seed % 50_000)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 100_000))
+    def test_pareto_keep_is_lossless_property(seed):
+        """Every dropped option is dominated by a kept one in its own
+        switch class (strictly cheaper at >= attainment, or an exact
+        later duplicate)."""
+        r = np.random.default_rng(seed)
+        n_opt = int(r.integers(2, 20))
+        Ct = np.round(r.uniform(0.0, 1.0, n_opt), 2)
+        Ft = np.round(r.uniform(0.0, 1.0, n_opt), 2)
+        cls = r.integers(0, 3, n_opt)
+        kept = S._pareto_keep(Ct, Ft, cls)
+        kset = set(kept.tolist())
+        for j in range(n_opt):
+            if j in kset:
+                continue
+            dom = [i for i in kset if cls[i] == cls[j]
+                   and ((Ct[i] < Ct[j] and Ft[i] >= Ft[j])
+                        or (Ct[i] == Ct[j] and Ft[i] == Ft[j]
+                            and i < j))]
+            assert dom, (j, Ct, Ft, cls)
+except ImportError:           # pragma: no cover
+    pass

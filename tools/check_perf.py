@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Perf-regression gate (run by the CI perf-smoke job; stdlib only).
+
+Compares the ``BENCH_perf.json`` a fresh
+``python -m benchmarks.solver_scaling --smoke`` run just wrote against
+the committed ``benchmarks/baselines/BENCH_perf_baseline.json``:
+
+  1. every scale's ``bit_identical`` flag must be true (the exactness
+     contract — a correctness failure, not a perf one);
+  2. no scale's ``solve_s_new`` may exceed ``--max-ratio`` (default 2.0)
+     times the baseline's at the same scale — a >2x solve-time
+     regression fails the job;
+  3. the cached re-solve (``resolve_s_cached``) gets the same bound.
+
+Absolute times differ across runners, so the gate is a *ratio* against
+a baseline recorded under the same smoke instance sizes; refresh the
+baseline (copy the fresh artifact over it) when the engine gets
+intentionally slower-but-better.
+
+Exit code 0 on success, 1 with a per-problem report otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current",
+                    default=REPO / "experiments/results/BENCH_perf.json")
+    ap.add_argument("--baseline",
+                    default=REPO / "benchmarks/baselines/"
+                                   "BENCH_perf_baseline.json")
+    ap.add_argument("--max-ratio", type=float, default=2.0)
+    args = ap.parse_args()
+
+    cur = json.loads(Path(args.current).read_text())
+    base = json.loads(Path(args.baseline).read_text())
+    problems = []
+
+    for scale, c in sorted(cur.get("scales", {}).items(),
+                           key=lambda kv: int(kv[0])):
+        if not c.get("bit_identical", False):
+            problems.append(f"scale {scale}x: bit_identical is false — "
+                            f"pruned solve diverged from the exhaustive "
+                            f"reference (correctness, not perf)")
+        b = base.get("scales", {}).get(scale)
+        if b is None:
+            print(f"scale {scale}x: no baseline entry, skipping ratio")
+            continue
+        ratio = c["solve_s_new"] / max(b["solve_s_new"], 1e-9)
+        line = (f"scale {scale}x: {c['solve_s_new'] * 1e3:.1f} ms vs "
+                f"baseline {b['solve_s_new'] * 1e3:.1f} ms "
+                f"({ratio:.2f}x)")
+        if ratio > args.max_ratio:
+            problems.append(f"{line} exceeds --max-ratio "
+                            f"{args.max_ratio}")
+        else:
+            print(line)
+
+    if "resolve_s_cached" in cur and "resolve_s_cached" in base:
+        ratio = cur["resolve_s_cached"] / max(base["resolve_s_cached"],
+                                              1e-9)
+        line = (f"cached re-solve: {cur['resolve_s_cached'] * 1e3:.1f} "
+                f"ms vs baseline "
+                f"{base['resolve_s_cached'] * 1e3:.1f} ms "
+                f"({ratio:.2f}x)")
+        if ratio > args.max_ratio:
+            problems.append(f"{line} exceeds --max-ratio "
+                            f"{args.max_ratio}")
+        else:
+            print(line)
+
+    for p in problems:
+        print(f"PERF FAIL: {p}", file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
