@@ -192,10 +192,18 @@ def _routing_rows(out, payload):
         out.append((f"georouting/green_wins_seed{seed}", float(ok),
                     f"saves {g_l - g_g:.1f}g vs latency, "
                     f"{g_s - g_g:.1f}g vs {name_s}"))
+        lat_pcts = green.latency
+        for metric in ("ttft", "tpot"):
+            for q in ("p50", "p95", "p99"):
+                out.append((
+                    f"georouting/green_latency_seed{seed}/{metric}_{q}",
+                    lat_pcts[metric][q],
+                    f"day {metric.upper()} {q} under follow-the-green "
+                    f"(estimator={lat_pcts['estimator']})"))
         payload[f"seed{seed}"] = dict(
             green_g=g_g, latency_g=g_l, single_g=g_s,
             single_region=name_s, green_slo=s_g, latency_slo=s_l,
-            single_slo=s_s, wins=ok)
+            single_slo=s_s, wins=ok, green_latency=lat_pcts)
     return ok_all
 
 

@@ -44,6 +44,7 @@ MODULES = [
     "storage_tiers",
     "prefix_sharing",
     "georouting",
+    "tracing_overhead",
     "roofline_report",
 ]
 

@@ -213,6 +213,18 @@ def run():
                 "Scenario() hour records == scenario=None"))
     payload["identity_bit_repro"] = repro_ok
 
+    # day-level latency percentiles (tracing is off here, so these are
+    # the streaming P² estimates; HourRecord carries the exact per-hour
+    # p50/p95/p99 alongside)
+    lat = vanilla.latency
+    for metric in ("ttft", "tpot"):
+        for q in ("p50", "p95", "p99"):
+            out.append((f"scenarios/{GRID}/latency/{metric}_{q}",
+                        lat[metric][q],
+                        f"day {metric.upper()} {q} "
+                        f"(estimator={lat['estimator']})"))
+    payload["latency"] = lat
+
     gauntlet = pareto_ok and fail_ok and part_ok and repro_ok
     out.append(("scenarios/gauntlet_pass", float(gauntlet),
                 f"pareto={pareto_ok} failure={fail_ok} "

@@ -1,0 +1,148 @@
+"""Flight-recorder cost: tracing-off bit-identity + tracing-on overhead.
+
+Runs the same simulated day through ``GreenCacheController.run_day``
+with the recorder detached (the default) and attached
+(``trace=True, metrics=True``) across every engine family — flat
+cluster, prefill/decode disaggregation, DRAM+SSD tiered storage, radix
+prefix sharing, and two-region geo routing — and asserts the
+observability contract of PR 10:
+
+  1. ``bit_identical``: the traced day reproduces the untraced day's
+     per-hour carbon/SLO/hit-rate/latency numbers bit-exactly (every
+     recording branch is gated on ``recorder is not None``; attaching
+     the recorder must only *observe*);
+  2. ``overhead_ratio``: wall-clock of the traced day over the untraced
+     day (min over ``REPS`` runs each) stays within the CI bound
+     (≤ 1.10 enforced by ``tools/check_perf.py`` against
+     ``benchmarks/baselines/BENCH_trace_baseline.json``).
+
+Writes ``experiments/results/BENCH_trace.json``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.controller import GreenCacheController
+from repro.core.profiler import Profile, ProfileCell
+from repro.serving.perfmodel import SERVING_MODELS
+from repro.serving.regions import Region
+from repro.workloads.conversations import ConversationWorkload
+from repro.workloads.traces import azure_rate_trace, ci_trace
+
+from benchmarks.common import CARBON, SMOKE, clip_day, save_result
+
+REPS = 2 if SMOKE else 3
+HOURS = 4 if SMOKE else 8
+MAX_REQS = 120 if SMOKE else 240
+
+
+def synth_profile(sizes=(0, 2, 4), rates=(0.2, 0.5, 1.0, 1.5, 2.0)):
+    """Deterministic synthetic profile — overhead must be measured on a
+    fixed instance, not on profiling noise."""
+    prof = Profile("llama3-70b", "conversation",
+                   rates=list(rates), sizes=list(sizes))
+    for r in rates:
+        for s in sizes:
+            slo = float(np.clip(1.1 - 0.25 * r + 0.02 * s, 0.0, 1.0))
+            prof.cells[(r, s)] = ProfileCell(
+                rate=r, cache_tb=s, avg_ttft=0.5 + 0.5 * r, p90_ttft=1 + r,
+                avg_tpot=0.05, p90_tpot=0.08, slo_frac=slo,
+                hit_rate=min(0.1 * s, 0.8),
+                energy_per_req_kwh=2e-4 * (1 + 1 / max(r, 0.1)),
+                duration_per_req_s=1.0 / max(r, 0.1), avg_power_w=800.0,
+                slo_ttft_frac=min(slo * 1.05, 1.0),
+                slo_tpot_frac=min(slo * 1.1, 1.0), avg_out_tokens=400.0)
+    return prof
+
+
+GEO_REGIONS = [Region.make("west", cis=[10.0, 500.0] * 12,
+                           rtt_ms={"na": 10.0, "eu": 120.0}),
+               Region.make("east", cis=[500.0, 10.0] * 12,
+                           rtt_ms={"na": 120.0, "eu": 10.0})]
+
+# engine family -> (controller kwargs, run_day kwargs)
+CONFIGS = {
+    "cluster": (dict(plans=["cache=auto fleet=l40:2"]), {}),
+    "disagg": (dict(plans=["cache=auto prefill=l40:1 decode=l40:2"]), {}),
+    "tiered": (dict(storage=["dram:0.25tb+nvme_gen4:4tb"]), {}),
+    "radix": (dict(prefix_caching=True), {}),
+    "geo": (dict(plans=["cache=auto fleet=l40:2"]),
+            dict(regions=GEO_REGIONS, geo="green")),
+}
+
+
+def day_kwargs(name):
+    prefix = name == "radix"
+    wf = lambda s: ConversationWorkload(seed=s, prefix=prefix)
+    rates, cis = clip_day(azure_rate_trace(1.5, seed=3),
+                          ci_trace("FR", seed=4), hours=HOURS)
+    return wf, rates[:HOURS], cis[:HOURS]
+
+
+def make_controller(name, *, trace):
+    ckw, _ = CONFIGS[name]
+    return GreenCacheController(
+        SERVING_MODELS["llama3-70b"], synth_profile(), CARBON,
+        "conversation", mode="greencache", policy="lcs_chat",
+        warm_requests=400, max_requests_per_hour=MAX_REQS, seed=7,
+        trace=trace, metrics=trace, **ckw)
+
+
+def fingerprint(res):
+    return [(h.carbon_g, h.operational_g, h.slo_frac, h.hit_rate,
+             h.num_requests, h.p95_ttft, h.p99_tpot) for h in res.hours]
+
+
+def run_config(name):
+    _, rkw = CONFIGS[name]
+    wf, rates, cis = day_kwargs(name)
+    results, times = {}, {}
+    for traced in (False, True):
+        best, res = float("inf"), None
+        for _ in range(REPS):
+            ctl = make_controller(name, trace=traced)
+            t0 = time.time()
+            res = ctl.run_day(wf, rates, cis, **rkw)
+            best = min(best, time.time() - t0)
+        results[traced], times[traced] = res, best
+        if traced:
+            spans = ctl.trace.n
+    ok = fingerprint(results[False]) == fingerprint(results[True])
+    ratio = times[True] / max(times[False], 1e-9)
+    return {"bit_identical": bool(ok), "overhead_ratio": float(ratio),
+            "t_off_s": times[False], "t_on_s": times[True],
+            "spans": int(spans),
+            "requests": int(sum(h.num_requests
+                                for h in results[False].hours))}
+
+
+def run():
+    payload = {"smoke": SMOKE, "hours": HOURS, "reps": REPS,
+               "configs": {}}
+    rows = []
+    for name in CONFIGS:
+        c = payload["configs"][name] = run_config(name)
+        rows += [
+            (f"tracing_overhead/{name}_bit_identical",
+             1.0 if c["bit_identical"] else float("nan"),
+             "traced day == untraced day per-hour numbers"),
+            (f"tracing_overhead/{name}_overhead_ratio",
+             c["overhead_ratio"],
+             f"{c['spans']} spans, off {c['t_off_s']:.2f}s / "
+             f"on {c['t_on_s']:.2f}s (CI bound 1.10)"),
+        ]
+    save_result("BENCH_trace", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    nan = 0
+    for name, value, derived in run():
+        if value != value:
+            nan += 1
+            derived = f"NaN! {derived}"
+        print(f"{name},{value:.6g},{derived}")
+    sys.exit(1 if nan else 0)

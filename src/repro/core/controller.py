@@ -87,6 +87,18 @@ class HourRecord:
     # carbon_g values partition the hour's bill exactly; None when the
     # stream carried no tenant identity
     tenants: Optional[Dict] = None
+    # tail latency beyond p90: exact per-hour percentiles of the hour's
+    # recorded TTFT/TPOT distributions (always on — a handful of
+    # np.percentile calls per hour)
+    p50_ttft: float = 0.0
+    p95_ttft: float = 0.0
+    p99_ttft: float = 0.0
+    p50_tpot: float = 0.0
+    p95_tpot: float = 0.0
+    p99_tpot: float = 0.0
+    # MetricsRegistry JSON snapshot taken after this hour completed;
+    # None unless the controller was built with ``metrics=``
+    metrics: Optional[Dict] = None
 
 
 @dataclass
@@ -98,6 +110,15 @@ class RunResult:
     # the global (combined) records, and the per-region carbon_g values
     # partition each global hour's bill exactly. None on single-site runs.
     regions: Optional[Dict[str, "RunResult"]] = None
+    # day-level latency percentiles: ``{"ttft": {p50, p95, p99},
+    # "tpot": {...}, "estimator": "trace" | "p2"}`` — exact from the
+    # trace buffers when tracing was on, streaming P² estimates
+    # otherwise (see ``repro.obs.percentiles``)
+    latency: Optional[Dict] = None
+    # the audited carbon ledger (``repro.obs.ledger.CarbonLedger``),
+    # attached by run_day when ``conservation_check`` is on — building
+    # it already proved every partition reproduces ``total_carbon_g``
+    ledger: Optional[object] = None
 
     @property
     def total_carbon_g(self) -> float:
@@ -268,7 +289,10 @@ class GreenCacheController:
                  tier_cache_weights: Union[bool, Dict[str, float],
                                            None] = None,
                  solver_prune: bool = True,
-                 beam_width: Optional[int] = None):
+                 beam_width: Optional[int] = None,
+                 trace=None, metrics=None,
+                 conservation_check: bool = True,
+                 overload_warnings: bool = True):
         self.model = model
         self.profile = profile
         self.carbon = carbon
@@ -287,6 +311,30 @@ class GreenCacheController:
         self.solver_prune = bool(solver_prune)
         self.beam_width = beam_width
         self._solver_cache = PlannerCache()
+        # flight recorder (repro/obs): ``trace`` attaches a columnar
+        # TraceRecorder to every engine (True builds one); ``metrics``
+        # publishes Prometheus-style counters/gauges/histograms to a
+        # MetricsRegistry (True builds one).  Both default off — the
+        # detached path is bit-identical and pays no recording cost.
+        # ``conservation_check`` audits the finished day's carbon with a
+        # CarbonLedger (every cut must reproduce the run total;
+        # corruption raises LedgerError); ``overload_warnings`` emits a
+        # GeoOverloadWarning when a geo split sends a region more
+        # traffic than its plan can serve within SLO.
+        if trace is True or metrics is True:
+            from repro.obs import MetricsRegistry, TraceRecorder
+            if trace is True:
+                trace = TraceRecorder()
+            if metrics is True:
+                metrics = MetricsRegistry()
+        self.trace = trace or None
+        self.metrics = metrics or None
+        self.conservation_check = bool(conservation_check)
+        self.overload_warnings = bool(overload_warnings)
+        self._mprev: Dict = {}        # per-store cumulative-stat marks
+        self._slo_cap_cache: Dict = {}
+        self.last_overloads: List[Dict] = []
+        self.last_solve: Optional[SolveResult] = None
         # multi-tenant tiers: ``tiers={"gold": 0.25, "standard": 0.45,
         # "scavenger": 0.30}`` stamps the workload with a tenant mix,
         # activates the engine's priority queueing, and (with
@@ -527,6 +575,175 @@ class GreenCacheController:
             tier_weights=self.tier_weights)
 
     # ------------------------------------------------------------------ #
+    # observability plumbing (all no-ops when trace/metrics are off)
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _pct6(res) -> Dict[str, float]:
+        """Exact per-hour p50/p95/p99 of the hour's TTFT/TPOT arrays."""
+        out = {}
+        for name in ("ttft", "tpot"):
+            a = getattr(res, name)
+            p = np.percentile(a, [50, 95, 99]) if len(a) else (0.0,) * 3
+            for q, v in zip(("p50", "p95", "p99"), p):
+                out[f"{q}_{name}"] = float(v)
+        return out
+
+    def _publish_solve(self, res: SolveResult, region: str = ""):
+        self.last_solve = res       # for SolveResult.explain() post-hoc
+        if self.metrics is None:
+            return
+        m = self.metrics
+        m.gauge("solver_solve_time_seconds",
+                "wall time of the latest knapsack solve",
+                ("region",)).labels(region=region).set(res.solve_time_s)
+        ps = res.prune_stats()
+        if ps is not None:
+            m.gauge("solver_prune_ratio",
+                    "fraction of candidate cells removed by the Pareto "
+                    "prune/beam before the DP",
+                    ("region",)).labels(region=region) \
+                .set(ps["prune_ratio"])
+            m.counter("solver_pruned_cells_total",
+                      "candidate (hour, option) cells pruned",
+                      ("region",)).labels(region=region) \
+                .inc(ps["cells"] - ps["kept_cells"])
+
+    def _publish_hour(self, region: str, engine, res, *, cache_tb: float,
+                      n_replicas: int, transition: str, solve_time: float,
+                      slo_frac: float):
+        """Publish one finished hour to the MetricsRegistry: request/
+        carbon/cache-activity counters (cumulative store stats are
+        converted to per-hour increments via high-water marks), level
+        gauges and latency histograms."""
+        if self.metrics is None:
+            return
+        m = self.metrics
+        lab = {"region": region}
+        m.counter("requests_total", "requests served",
+                  ("region",)).labels(**lab).inc(res.num_requests)
+        cg = m.counter("carbon_grams_total",
+                       "accrued gCO2e by accounting category",
+                       ("region", "category"))
+        cg.labels(region=region, category="operational") \
+            .inc(res.operational_g)
+        cg.labels(region=region, category="embodied_cache") \
+            .inc(res.embodied_cache_g)
+        cg.labels(region=region, category="embodied_compute") \
+            .inc(res.embodied_compute_g)
+        for k, store in enumerate(getattr(engine, "stores", [])):
+            s = store.stats
+            key = (region, id(store))
+            prev = self._mprev.get(key, {})
+            cur = {"lookups": s.lookups, "hits": s.hits,
+                   "hit_tokens": s.hit_tokens,
+                   "insertions": s.insertions,
+                   "written_bytes": s.written_bytes,
+                   **{f"ev_{c}": v
+                      for c, v in s.evicted_by_cause.items()}}
+            self._mprev[key] = cur
+            d = {f: cur[f] - prev.get(f, 0) for f in cur}
+            kc = m.counter("kv_lookups_total", "cache lookups by outcome",
+                           ("region", "replica", "outcome"))
+            kc.labels(region=region, replica=str(k), outcome="hit") \
+                .inc(d["hits"])
+            kc.labels(region=region, replica=str(k), outcome="miss") \
+                .inc(d["lookups"] - d["hits"])
+            m.counter("kv_wear_bytes_total",
+                      "host bytes written to the cache device",
+                      ("region", "replica")) \
+                .labels(region=region, replica=str(k)) \
+                .inc(d["written_bytes"])
+            ev = m.counter("kv_evictions_total", "evictions by cause",
+                           ("region", "replica", "cause"))
+            for c in s.evicted_by_cause:
+                ev.labels(region=region, replica=str(k), cause=c) \
+                    .inc(d[f"ev_{c}"])
+        if transition:
+            m.counter("plan_transitions_total",
+                      "applied plan/scenario transitions",
+                      ("region",)).labels(**lab).inc()
+        m.gauge("cache_tb", "current cache allocation",
+                ("region",)).labels(**lab).set(cache_tb)
+        m.gauge("replicas", "current replica count",
+                ("region",)).labels(**lab).set(n_replicas)
+        m.gauge("slo_attainment", "last hour's SLO attainment",
+                ("region",)).labels(**lab).set(slo_frac)
+        if len(res.ttft):
+            m.histogram("ttft_seconds", "time to first token",
+                        ("region",)).labels(**lab) \
+                .observe_many(res.ttft)
+            m.histogram("tpot_seconds", "time per output token",
+                        ("region",), buckets=(0.01, 0.025, 0.05, 0.1,
+                                              0.25, 0.5, 1.0)) \
+                .labels(**lab).observe_many(res.tpot)
+
+    def _within_slo_capacity(self, cache_tb: float, capacity: float,
+                             rho: float) -> float:
+        """Largest cluster arrival rate (req/s) the profile predicts a
+        ``capacity``-reference-unit fleet can serve within SLO at this
+        cache size — the provisioning line the geo overload check
+        compares realized splits against."""
+        key = (round(float(cache_tb), 6), round(float(rho), 6))
+        per_unit = self._slo_cap_cache.get(key)
+        if per_unit is None:
+            per_unit = 0.0
+            for r in sorted(self.profile.rates):
+                if self.profile.interpolate(r, cache_tb).slo_frac >= rho:
+                    per_unit = max(per_unit, float(r))
+            self._slo_cap_cache[key] = per_unit
+        return per_unit * float(capacity)
+
+    def _check_overload(self, region: str, hour: int, realized_rate: float,
+                        cache_tb: float, capacity: float):
+        """Satellite of the geo router: realized split beyond the
+        region's provisioned within-SLO capacity raises a structured
+        ``GeoOverloadWarning`` (+ counter / trace event) instead of
+        failing silently into missed SLOs."""
+        cap = self._within_slo_capacity(cache_tb, capacity, self.slo.rho)
+        if cap <= 0.0 or realized_rate <= cap:
+            return
+        from repro.serving.regions import GeoOverloadWarning
+        info = {"region": region, "hour": hour,
+                "realized_rate": float(realized_rate),
+                "capacity_rate": float(cap)}
+        self.last_overloads.append(info)
+        warnings.warn(GeoOverloadWarning(
+            f"hour {hour}: region {region!r} received "
+            f"{realized_rate:.2f} req/s against a within-SLO capacity "
+            f"of {cap:.2f} req/s — the realized split exceeds its "
+            f"provisioning"), stacklevel=2)
+        if self.metrics is not None:
+            self.metrics.counter(
+                "geo_overload_hours_total",
+                "hours a region's realized split exceeded its "
+                "within-SLO capacity", ("region",)) \
+                .labels(region=region).inc()
+        if self.trace is not None:
+            self.trace.record_event("overload", hour * 3600.0,
+                                    region=region, **{
+                                        k: v for k, v in info.items()
+                                        if k != "region"})
+
+    def _finalize_run(self, result: RunResult, pcts) -> RunResult:
+        """Attach the day-level latency percentiles and (when
+        ``conservation_check`` is on) the audited carbon ledger —
+        building the ledger proves every partition bit-exactly and
+        raises ``LedgerError`` on the dropped/double-counted-gram bug
+        class."""
+        if self.trace is not None and self.trace.n:
+            result.latency = {"ttft": self.trace.percentiles("ttft_s"),
+                              "tpot": self.trace.percentiles("tpot_s"),
+                              "estimator": "trace"}
+        else:
+            result.latency = {"ttft": pcts["ttft"].values(),
+                              "tpot": pcts["tpot"].values(),
+                              "estimator": "p2"}
+        if self.conservation_check:
+            from repro.obs.ledger import CarbonLedger
+            result.ledger = CarbonLedger.from_run(result)
+        return result
+
+    # ------------------------------------------------------------------ #
     def run_day(self, workload_factory: Callable, rate_trace: np.ndarray,
                 ci_trace: np.ndarray, *,
                 history_days: int = 3,
@@ -616,6 +833,15 @@ class GreenCacheController:
                                      max_requests=self.warm_requests)
         engine.warm(sample_many(wl, arr0 - arr0[-1] - 1.0))
 
+        # flight recorder: attach after the warm window so the trace
+        # holds exactly the day's request stream; P² estimators carry
+        # the day-level percentiles when the trace buffers are off
+        if self.trace is not None and isinstance(engine, ClusterEngine):
+            engine.recorder = self.trace
+        from repro.obs.percentiles import StreamingPercentiles
+        pcts = {"ttft": StreamingPercentiles(),
+                "tpot": StreamingPercentiles()}
+
         hours: List[HourRecord] = []
         current_tb = max_tb if self.mode != "none" else 0.0
         current_shape = fixed_plan
@@ -644,6 +870,7 @@ class GreenCacheController:
                 pending_schedule = list(res.sizes_tb)
                 t_solve = res.solve_time_s
                 pred_rate, pred_ci = rates[0], cis[0]
+                self._publish_solve(res)
             if self.mode == "full":
                 current_tb = max_tb
             elif self.mode == "none":
@@ -684,6 +911,11 @@ class GreenCacheController:
                                                      ci_now)
                 if not applied.transition.is_noop:
                     tr_str = str(applied.transition)
+                    if self.trace is not None:
+                        self.trace.record_event(
+                            "transition", h * 3600.0,
+                            region=engine.obs_region, detail=tr_str,
+                            energy_kwh=applied.energy_kwh)
             else:
                 store.resize(current_tb * 1e12, now=h * 3600.0)
 
@@ -710,13 +942,21 @@ class GreenCacheController:
             else:
                 res = engine.run(reqs, ci_fn=lambda t: ci_now,
                                  cache_tb=current_tb, rate_hint=lam)
+            if self.trace is None and len(res.ttft):
+                pcts["ttft"].extend(res.ttft)
+                pcts["tpot"].extend(res.tpot)
+            slo_frac = res.slo_attainment(self.slo)
+            self._publish_hour("", engine, res, cache_tb=current_tb,
+                               n_replicas=current_plan.n_replicas,
+                               transition=tr_str, solve_time=t_solve,
+                               slo_frac=slo_frac)
             hours.append(HourRecord(
                 hour=h, cache_tb=current_tb, rate=lam, ci=ci_now,
                 carbon_g=res.carbon_g, operational_g=res.operational_g,
                 embodied_cache_g=res.embodied_cache_g,
                 embodied_compute_g=res.embodied_compute_g,
                 p90_ttft=res.p90("ttft"), p90_tpot=res.p90("tpot"),
-                slo_frac=res.slo_attainment(self.slo),
+                slo_frac=slo_frac,
                 hit_rate=res.token_hit_rate, num_requests=res.num_requests,
                 solve_time_s=t_solve, pred_rate=pred_rate, pred_ci=pred_ci,
                 n_replicas=current_plan.n_replicas,
@@ -727,7 +967,10 @@ class GreenCacheController:
                 written_gb=(sum(st.stats.written_bytes
                                 for st in stores) - w0) / 1e9,
                 tiers=res.per_tier(self.slo) or None,
-                tenants=res.per_tenant(self.slo) or None))
+                tenants=res.per_tenant(self.slo) or None,
+                **self._pct6(res),
+                metrics=None if self.metrics is None
+                else self.metrics.snapshot()))
 
             # online predictor updates (paper §5.3)
             load_pred.update(lam)
@@ -736,7 +979,7 @@ class GreenCacheController:
         # expose the live engine for post-run inspection (byte-ledger
         # checks after injected failures, stats, wear clocks)
         self.last_engine = engine
-        return RunResult(self.mode, hours)
+        return self._finalize_run(RunResult(self.mode, hours), pcts)
 
     # ------------------------------------------------------------------ #
     def _run_geo_day(self, workload_factory: Callable, rate_trace,
@@ -904,6 +1147,17 @@ class GreenCacheController:
         for st, wreqs in zip(states, per0):
             st.engine.warm(wreqs)
 
+        # flight recorder: one shared TraceRecorder across the regions
+        # (rows carry the region label), attached after the warm window
+        if self.trace is not None:
+            cluster.recorder = self.trace
+            for st, rg in zip(states, regions):
+                st.engine.recorder = self.trace
+                st.engine.obs_region = rg.name
+        from repro.obs.percentiles import StreamingPercentiles
+        pcts = {"ttft": StreamingPercentiles(),
+                "tpot": StreamingPercentiles()}
+
         hours: List[HourRecord] = []
         region_hours: List[List[HourRecord]] = [[] for _ in range(R)]
         geo_splits = None             # the "solve" policy's DP schedule
@@ -973,6 +1227,7 @@ class GreenCacheController:
                             if res.plans is not None else []
                         st.pending_schedule = list(res.sizes_tb)
                         t_solve += res.solve_time_s
+                        self._publish_solve(res, regions[r].name)
             for st in states:
                 if self.mode == "full":
                     st.current_tb = max_tb
@@ -1010,6 +1265,11 @@ class GreenCacheController:
                                                   ci_now[r])
                 if not applied.transition.is_noop:
                     s = str(applied.transition)
+                    if self.trace is not None:
+                        self.trace.record_event(
+                            "transition", h * 3600.0,
+                            region=regions[r].name, detail=s,
+                            energy_kwh=applied.energy_kwh)
                 tr_gs.append(g)
                 tr_strs.append(s)
 
@@ -1039,6 +1299,13 @@ class GreenCacheController:
             ledger.assigned = tuple(len(x) for x in per)
             cluster.ledgers.append(ledger)
 
+            if self.overload_warnings and R > 1:
+                for r, st in enumerate(states):
+                    self._check_overload(
+                        regions[r].name, h,
+                        lam * len(per[r]) / max(len(reqs), 1),
+                        st.current_tb, plans_now[r].capacity)
+
             ev_h = [e for e in events
                     if h * 3600.0 <= e.t_s < (h + 1) * 3600.0]
             results = []
@@ -1064,6 +1331,13 @@ class GreenCacheController:
                         and len(res_r.ttft) == len(rt):
                     res_r.ttft = res_r.ttft + np.asarray(rt, dtype=float)
                 results.append(res_r)
+                slo_frac_r = res_r.slo_attainment(self.slo)
+                self._publish_hour(regions[r].name, st.engine, res_r,
+                                   cache_tb=st.current_tb,
+                                   n_replicas=plans_now[r].n_replicas,
+                                   transition=tr_strs[r],
+                                   solve_time=t_solve,
+                                   slo_frac=slo_frac_r)
                 region_hours[r].append(HourRecord(
                     hour=h, cache_tb=st.current_tb,
                     rate=lam if R == 1
@@ -1074,7 +1348,7 @@ class GreenCacheController:
                     embodied_compute_g=res_r.embodied_compute_g,
                     p90_ttft=res_r.p90("ttft"),
                     p90_tpot=res_r.p90("tpot"),
-                    slo_frac=res_r.slo_attainment(self.slo),
+                    slo_frac=slo_frac_r,
                     hit_rate=res_r.token_hit_rate,
                     num_requests=res_r.num_requests,
                     solve_time_s=t_solve, pred_rate=pred_rate,
@@ -1088,7 +1362,8 @@ class GreenCacheController:
                                     for s_ in st.engine.stores)
                                 - w0) / 1e9,
                     tiers=res_r.per_tier(self.slo) or None,
-                    tenants=res_r.per_tenant(self.slo) or None))
+                    tenants=res_r.per_tenant(self.slo) or None,
+                    **self._pct6(res_r)))
 
             res_all = functools.reduce(combine_results, results)
             if R == 1:
@@ -1113,6 +1388,9 @@ class GreenCacheController:
                 g_trs = " ".join(f"{rg.name}:{s}" for rg, s
                                  in zip(regions, tr_strs) if s)
                 g_wg = sum(rh[-1].written_gb for rh in region_hours)
+            if self.trace is None and len(res_all.ttft):
+                pcts["ttft"].extend(res_all.ttft)
+                pcts["tpot"].extend(res_all.tpot)
             hours.append(HourRecord(
                 hour=h, cache_tb=g_tb, rate=lam, ci=g_ci,
                 carbon_g=res_all.carbon_g,
@@ -1129,7 +1407,10 @@ class GreenCacheController:
                 plan=g_plan, transition_g=g_trg, transition=g_trs,
                 written_gb=g_wg,
                 tiers=res_all.per_tier(self.slo) or None,
-                tenants=res_all.per_tenant(self.slo) or None))
+                tenants=res_all.per_tenant(self.slo) or None,
+                metrics=None if self.metrics is None
+                else self.metrics.snapshot(),
+                **self._pct6(res_all)))
 
             load_pred.update(lam)
             for st, c in zip(states, ci_now):
@@ -1137,11 +1418,11 @@ class GreenCacheController:
 
         self.last_engine = states[0].engine
         self.last_geo = cluster
-        return RunResult(
+        return self._finalize_run(RunResult(
             self.mode, hours,
             regions={rg.name: RunResult(f"{self.mode}:{rg.name}",
                                         region_hours[r])
-                     for r, rg in enumerate(regions)})
+                     for r, rg in enumerate(regions)}), pcts)
 
     def _run_hour_events(self, engine: ClusterEngine, reqs, ev_h,
                          ci_now: float, cache_tb: float, lam: float):
@@ -1154,6 +1435,7 @@ class GreenCacheController:
         notes = []
         res = None
         remaining = list(reqs)
+        rec = getattr(engine, "recorder", None)
         for e in sorted(ev_h):
             seg = [r for r in remaining if r.arrival < e.t_s]
             remaining = remaining[len(seg):]
@@ -1161,6 +1443,15 @@ class GreenCacheController:
                 part = engine.run(seg, ci_fn=lambda t: ci_now,
                                   cache_tb=cache_tb, rate_hint=lam)
                 res = part if res is None else combine_results(res, part)
+            if rec is not None:
+                rec.record_event(e.kind, e.t_s,
+                                 region=getattr(engine, "obs_region", ""),
+                                 value=float(e.value))
+            if self.metrics is not None:
+                self.metrics.counter(
+                    "scenario_events_total",
+                    "Mid-hour fault-injection events applied.",
+                    ("kind",)).labels(kind=e.kind).inc()
             if e.kind == "fail_replica":
                 if engine.n_replicas > 1:
                     ap = engine.fail_replica(int(e.value), now=e.t_s)

@@ -75,6 +75,16 @@ class KVStoreStats:
     # the request's block path (the unmatched suffix was re-prefetched).
     # Every partial hit is also counted in ``hits``.
     partial_hits: int = 0
+    # eviction attribution (observability): why each eviction happened —
+    # "capacity" (policy made room for an insert/adoption), "resize"
+    # (the controller shrank the allocation), "rebalance" (ring resize
+    # cold-dropped a reassigned key), "failure" (the entries died with
+    # their replica).  Counts sum to ``evictions``.
+    evicted_by_cause: Dict[str, int] = field(default_factory=dict)
+
+    def count_eviction(self, cause: str, n: int = 1):
+        self.evicted_by_cause[cause] = \
+            self.evicted_by_cause.get(cause, 0) + n
 
     @property
     def token_hit_rate(self) -> float:
@@ -594,6 +604,12 @@ class KVStore:
                     break
                 self._evict(v.key)
 
+    # eviction-cause attribution: the single ``_evict`` choke point tags
+    # each eviction with the store's current cause ("capacity" unless a
+    # resize/rebalance/failure path overrides it) — radix and tiered
+    # subclasses funnel through here, so the attribution is store-wide
+    _evict_cause = "capacity"
+
     def _evict(self, key: str):
         e = self.entries.pop(key)
         self.used_bytes -= e.size_bytes
@@ -601,6 +617,7 @@ class KVStore:
             self._ix.remove(e)
         self.stats.evictions += 1
         self.stats.evicted_bytes += e.size_bytes
+        self.stats.count_eviction(self._evict_cause)
 
     # ------------------------------------------------------------------ #
     def pop_entry(self, key: str) -> CacheEntry:
@@ -670,18 +687,23 @@ class KVStore:
     def _shrink_to(self, capacity_bytes: float, now: float):
         self.capacity_bytes = float(capacity_bytes)
         if self.used_bytes > self.capacity_bytes:
-            victims, partial = self._victims_sorted(
-                now, deficit_bytes=self.used_bytes - self.capacity_bytes)
-            for v in victims:
-                if self.used_bytes <= self.capacity_bytes:
-                    break
-                self._evict(v.key)
-            if partial and self.used_bytes > self.capacity_bytes:
-                victims, _ = self._victims_sorted(now)
+            self._evict_cause = "resize"
+            try:
+                victims, partial = self._victims_sorted(
+                    now,
+                    deficit_bytes=self.used_bytes - self.capacity_bytes)
                 for v in victims:
                     if self.used_bytes <= self.capacity_bytes:
                         break
                     self._evict(v.key)
+                if partial and self.used_bytes > self.capacity_bytes:
+                    victims, _ = self._victims_sorted(now)
+                    for v in victims:
+                        if self.used_bytes <= self.capacity_bytes:
+                            break
+                        self._evict(v.key)
+            finally:
+                self._evict_cause = "capacity"
 
     # --- CacheStore behaviour probes ---------------------------------- #
     # (what the engines used to isinstance/attribute-sniff: tiered spec

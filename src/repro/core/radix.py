@@ -272,7 +272,11 @@ class RadixKVStore(KVStore):
     def _shrink_to(self, capacity_bytes: float, now: float):
         self.capacity_bytes = float(capacity_bytes)
         if self.used_bytes > self.capacity_bytes:
-            self._evict_leaves_to(self.capacity_bytes, now, set())
+            self._evict_cause = "resize"
+            try:
+                self._evict_leaves_to(self.capacity_bytes, now, set())
+            finally:
+                self._evict_cause = "capacity"
 
     def _evict_pass(self, victims: Iterable[CacheEntry], target: float,
                     protect: Set[str]) -> int:

@@ -54,7 +54,7 @@ from __future__ import annotations
 import functools
 import itertools
 import time
-from dataclasses import dataclass, replace as _dc_replace
+from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -90,6 +90,92 @@ class SolveResult:
     # (g) of the returned schedule vs the exhaustive optimum — 0.0 means
     # the beam provably did not change the solution; None = no beam
     beam_bound_g: Optional[float] = None
+    # flight-recorder payload: the raw per-hour candidate tables the DP
+    # chose from (labels, C, F, n, choice indices, prune/beam config) —
+    # consumed lazily by ``explain()``/``prune_stats()``.  Excluded from
+    # comparison/repr so solver results stay comparable across modes.
+    explain_data: Optional[Dict] = field(default=None, compare=False,
+                                         repr=False)
+
+    # ------------------------------------------------------------------ #
+    def _keeps(self, beam_width="cfg"):
+        """Reconstruct the per-hour survivor sets exactly as the solve's
+        dominance prune / beam saw them (lazy — only on explain)."""
+        ed = self.explain_data
+        cls = None
+        if ed.get("class_keys") is not None:
+            ids: Dict[object, int] = {}
+            cls = np.array([ids.setdefault(k, len(ids))
+                            for k in ed["class_keys"]], dtype=np.int64)
+        bw = ed["beam_width"] if beam_width == "cfg" else beam_width
+        return _hour_keeps(ed["C"], ed["F"], ed["n"], cls,
+                           ed["prune"], bw)[0]
+
+    def prune_stats(self) -> Optional[Dict]:
+        """Pareto-prune effectiveness of this solve: candidate counts
+        and the fraction of (hour, option) cells the dominance filter
+        (plus beam, when configured) removed before the DP ran.
+        ``None`` when no candidate table was recorded."""
+        ed = self.explain_data
+        if ed is None:
+            return None
+        T, n_opt = ed["C"].shape
+        kept = sum(len(k) for k in self._keeps())
+        total = T * n_opt
+        return {"hours": T, "options": n_opt, "cells": total,
+                "kept_cells": kept,
+                "prune_ratio": 1.0 - kept / max(total, 1)}
+
+    def explain(self, hours: Optional[Sequence[int]] = None,
+                top: Optional[int] = 12) -> str:
+        """Human-readable dump of each hour's surviving candidate table:
+        per-request carbon, predicted attainment, the switching carbon
+        paid on entry (transition mode), and why each losing option lost
+        (``dominated`` = removed by the Pareto prune, ``beam`` = cut by
+        the beam, ``kept`` = survived but cost more).  ``hours`` limits
+        the dump; ``top`` caps rows per hour (chosen row always shown;
+        ``None`` = all)."""
+        ed = self.explain_data
+        if ed is None:
+            return ("explain: no candidate table recorded "
+                    f"(solver={self.solver})")
+        C, F, n = ed["C"], ed["F"], ed["n"]
+        labels, choice = ed["labels"], ed["choice"]
+        T, n_opt = C.shape
+        keeps = [set(int(i) for i in k) for k in self._keeps()]
+        pareto = keeps if ed["beam_width"] is None else \
+            [set(int(i) for i in k) for k in self._keeps(beam_width=None)]
+        tg = ed.get("transition_g")
+        out = [f"solver={ed['solver']} rho={ed['rho']:g} "
+               f"feasible={self.feasible} objective={self.objective_g:.1f}g "
+               f"options={n_opt}"]
+        for t in (range(T) if hours is None else hours):
+            out.append(f"hour {t:02d}  n={n[t]:.0f} req"
+                       + (f"  switch={tg[t]:.2f}g" if tg else ""))
+            out.append(f"  {'option':<44s} {'g/req':>9s} {'attain':>7s} "
+                       f"{'hour g':>10s}  status")
+            order = np.lexsort((np.arange(n_opt), C[t]))
+            rows = 0
+            for o in order:
+                o = int(o)
+                if o == choice[t]:
+                    status = "chosen"
+                elif o in keeps[t]:
+                    status = "kept"
+                elif o in pareto[t]:
+                    status = "beam"
+                else:
+                    status = "dominated"
+                if top is not None and rows >= top \
+                        and status != "chosen":
+                    continue
+                out.append(f"  {labels[o]:<44s} {C[t][o]:>9.4f} "
+                           f"{F[t][o]:>7.3f} {n[t] * C[t][o]:>10.1f}  "
+                           f"{status}")
+                rows += 1
+            if top is not None and n_opt > top:
+                out.append(f"  ... ({n_opt - top} more options)")
+        return "\n".join(out)
 
 
 def _cell_metrics(profile: Profile, rate: float, size: float,
@@ -97,6 +183,31 @@ def _cell_metrics(profile: Profile, rate: float, size: float,
     c = profile.interpolate(rate, size)
     carbon_req = c.carbon_per_req_g(ci, carbon)
     return carbon_req, c.slo_frac
+
+
+def _option_label(o) -> str:
+    """Short human label for one knapsack option (see ``explain()``)."""
+    if isinstance(o, tuple) and len(o) == 2:
+        return str(_option_plan(o, sized=True))
+    return f"cache={o:g}tb" if isinstance(o, (int, float)) else str(o)
+
+
+def _explain_payload(options, C, F, n, rho, res: SolveResult, *,
+                     prune: bool = False, beam_width=None,
+                     class_keys=None) -> Dict:
+    """Candidate-table payload for ``SolveResult.explain()``.  Choice
+    indices are recovered by identity: every solver mode returns the
+    very option objects it was handed."""
+    pos = {id(o): i for i, o in enumerate(options)}
+    if res.solver == "cbc":                 # the ILP never prunes
+        prune, beam_width = False, None
+    return {"labels": [_option_label(o) for o in options],
+            "C": np.asarray(C), "F": np.asarray(F),
+            "n": np.asarray(n), "rho": float(rho),
+            "choice": [pos.get(id(o), -1) for o in res.sizes_tb],
+            "transition_g": res.transition_g, "solver": res.solver,
+            "prune": bool(prune), "beam_width": beam_width,
+            "class_keys": class_keys}
 
 
 def solve_cache_schedule(profile: Profile, pred_rates: Sequence[float],
@@ -120,12 +231,16 @@ def solve_cache_schedule(profile: Profile, pred_rates: Sequence[float],
             C[t, si], F[t, si] = _cell_metrics(
                 profile, pred_rates[t], s, pred_cis[t], carbon)
 
+    res = None
     if use_ilp:
         try:
-            return _solve_ilp(C, F, n, sizes, rho, t_start)
+            res = _solve_ilp(C, F, n, sizes, rho, t_start)
         except Exception:       # CBC unavailable/failed -> exact DP
             pass
-    return _solve_dp(C, F, n, sizes, rho, t_start)
+    if res is None:
+        res = _solve_dp(C, F, n, sizes, rho, t_start)
+    res.explain_data = _explain_payload(sizes, C, F, n, rho, res)
+    return res
 
 
 def _saturated_slo(profile: Profile, norm_rate: float,
@@ -1575,6 +1690,7 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
                    plans is not None, fleets is not None)
 
     res = None
+    class_keys = None
     if transitions is not None:
         opt_plans = [_option_plan(o, sized=True) for o in options]
         if solver_cache is not None:
@@ -1631,6 +1747,8 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
     chosen = list(res.sizes_tb)       # option tuples, split into the plan
     hourly = [_option_plan(o, sized=True) for o in chosen]
     tg = res.transition_g
+    ed = _explain_payload(options, C, F, n, rho, res, prune=prune,
+                          beam_width=beam_width, class_keys=class_keys)
     szs = [s.total_tb if isinstance(s, StorageSpec) else s
            for s, _ in chosen]
     if plans is not None:
@@ -1638,17 +1756,20 @@ def solve_cluster_schedule(profile: Profile, pred_rates: Sequence[float],
                            res.feasible, time.time() - t_start, res.solver,
                            replicas=[p.n_replicas for p in hourly],
                            plans=hourly, transition_g=tg,
-                           beam_bound_g=res.beam_bound_g)
+                           beam_bound_g=res.beam_bound_g,
+                           explain_data=ed)
     if fleets is not None:
         return SolveResult(szs, res.objective_g,
                            res.feasible, time.time() - t_start, res.solver,
                            replicas=[len(f) for _, f in chosen],
                            fleets=[f for _, f in chosen], plans=hourly,
-                           transition_g=tg, beam_bound_g=res.beam_bound_g)
+                           transition_g=tg, beam_bound_g=res.beam_bound_g,
+                           explain_data=ed)
     return SolveResult(szs, res.objective_g,
                        res.feasible, time.time() - t_start, res.solver,
                        replicas=[k for _, k in chosen], plans=hourly,
-                       transition_g=tg, beam_bound_g=res.beam_bound_g)
+                       transition_g=tg, beam_bound_g=res.beam_bound_g,
+                       explain_data=ed)
 
 
 def _solve_ilp(C, F, n, sizes, rho, t_start) -> SolveResult:

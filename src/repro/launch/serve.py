@@ -164,8 +164,11 @@ def run_simulation(args):
                                admission=admission,
                                prefix_caching=prefix,
                                solver_prune=not args.no_solver_prune,
-                               beam_width=args.beam_width)
+                               beam_width=args.beam_width,
+                               trace=bool(args.trace),
+                               metrics=bool(args.trace or args.metrics))
     res = ctl.run_day(wf, rate_trace, cis)
+    write_observability(args, ctl, res)
     many = len(plans) > 1
     clustered = scale > 1 or plans[0].n_replicas > 1
     print(f"mode={args.mode} grid={args.grid} task={args.task}")
@@ -186,6 +189,41 @@ def run_simulation(args):
         print(f"  plan changes:   {res.plan_changes} "
               f"(transition carbon {res.total_transition_g:.1f} g)")
     return res
+
+
+def write_observability(args, ctl, res):
+    """Flight-recorder exports after a simulated day: the JSONL span
+    trace plus its Chrome ``trace_event`` twin (``--trace out.jsonl`` →
+    ``out.jsonl`` + ``out.trace.json``), the Prometheus text exposition
+    (``--metrics out.prom``), and the final hour's solver candidate
+    table (``--explain``)."""
+    if args.trace:
+        ctl.trace.write_jsonl(args.trace)
+        chrome = args.trace
+        for suf in (".jsonl", ".json"):
+            if chrome.endswith(suf):
+                chrome = chrome[:-len(suf)]
+                break
+        chrome += ".trace.json"
+        ctl.trace.write_chrome(chrome)
+        s = ctl.trace.summary()
+        print(f"  trace:          {ctl.trace.n} spans, "
+              f"{len(ctl.trace.events)} events -> {args.trace} "
+              f"(+ {chrome}); render with tools/trace_report.py")
+        print(f"  traced p99 TTFT {s['ttft']['p99']:.3f}s  "
+              f"p99 TPOT {s['tpot']['p99'] * 1000:.1f}ms")
+    if args.metrics:
+        with open(args.metrics, "w") as f:
+            f.write(ctl.metrics.expose_text())
+        print(f"  metrics:        -> {args.metrics}")
+    if args.explain and ctl.last_solve is not None:
+        print("\nfinal solve, surviving candidates per hour "
+              "(SolveResult.explain):")
+        print(ctl.last_solve.explain(hours=range(3)))
+    if res.ledger is not None:
+        by_cat = res.ledger.by("category")
+        cuts = "  ".join(f"{k}={v:.1f}g" for k, v in by_cat.items())
+        print(f"  carbon ledger:  audited, {cuts}")
 
 
 def run_real(args):
@@ -307,6 +345,17 @@ def main(argv=None):
                     help="cache admission policy: write_aware only "
                          "caches contexts whose expected reuse amortizes"
                          " the insert's write energy + wear")
+    ap.add_argument("--trace", default=None, metavar="OUT.jsonl",
+                    help="record the flight-recorder span trace and "
+                         "write it as JSONL plus a Chrome trace_event "
+                         "file (OUT.trace.json); tracing off is the "
+                         "default and bit-reproduces the untraced run")
+    ap.add_argument("--metrics", default=None, metavar="OUT.prom",
+                    help="write the Prometheus-style text exposition of "
+                         "the run's MetricsRegistry")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the final solve's surviving candidate "
+                         "table (SolveResult.explain)")
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--arch", default="yi-6b")
     args = ap.parse_args(argv)

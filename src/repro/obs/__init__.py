@@ -1,0 +1,36 @@
+"""Observability layer — the flight recorder threaded through the stack.
+
+Three cooperating, individually optional parts (see
+``docs/observability.md``):
+
+* ``TraceRecorder`` (``repro.obs.trace``) — opt-in columnar per-request
+  span recording (PR-1 idiom: preallocated NumPy buffers, zero
+  per-request Python objects on the hot path), serialized to JSONL and
+  Chrome ``trace_event`` format.
+* ``MetricsRegistry`` (``repro.obs.metrics``) — dependency-free
+  Prometheus-style counters/gauges/histograms with labels, text
+  exposition + JSON snapshots.
+* ``CarbonLedger`` (``repro.obs.ledger``) — double-entry carbon audit:
+  every gram accrued at its source under a (source, category, region,
+  tier, tenant) key; each cut must partition the run total bit-exactly
+  or ``LedgerError`` raises.
+
+Everything here is read-only with respect to the simulation: with the
+recorder detached (the default) every engine/controller/solver path is
+bit-identical to the pre-observability code.
+"""
+from repro.obs.ledger import CarbonLedger, LedgerError, exact_partition
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.percentiles import P2Quantile, StreamingPercentiles
+from repro.obs.trace import SPAN_FIELDS, TraceRecorder
+
+__all__ = [
+    "CarbonLedger",
+    "LedgerError",
+    "MetricsRegistry",
+    "P2Quantile",
+    "SPAN_FIELDS",
+    "StreamingPercentiles",
+    "TraceRecorder",
+    "exact_partition",
+]

@@ -1,0 +1,305 @@
+"""Dependency-free Prometheus-style metrics registry.
+
+``MetricsRegistry`` hosts counters, gauges and histograms with label
+dimensions (replica, type, region, tier, tenant, cache tier, cause, …).
+Children are cached per label-value tuple, so the steady-state publish
+path is a dict probe plus a float add — cheap enough to call once per
+simulated hour per region without showing up in the tracing-overhead
+gate.
+
+Two export surfaces:
+
+* ``expose_text()`` — the Prometheus text exposition format
+  (``# HELP`` / ``# TYPE`` + one sample line per child), for humans and
+  scrape-compatible tooling;
+* ``snapshot()`` — a plain-JSON nested dict, the per-``HourRecord``
+  snapshot the controller stamps onto its records when metrics are
+  enabled.
+
+No external dependency, no background thread, no global state: a
+registry is an ordinary object owned by whoever wants the numbers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "DEFAULT_BUCKETS"]
+
+# generic latency-friendly buckets (seconds); callers can override
+DEFAULT_BUCKETS = (0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0,
+                   2.5, 5.0, 10.0)
+
+
+def _fmt(v: float) -> str:
+    """Prometheus sample formatting: integers stay integral."""
+    f = float(v)
+    return str(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
+
+
+class _Metric:
+    """Shared parent: name, help text, label schema, child table."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help_: str,
+                 labelnames: Sequence[str] = ()):
+        self.name = name
+        self.help = help_
+        self.labelnames = tuple(labelnames)
+        self._children: Dict[Tuple[str, ...], object] = {}
+
+    def labels(self, *values, **kv):
+        """Child for one label-value combination (created on first use).
+        Positional values follow ``labelnames`` order; keywords may name
+        any subset as long as every label gets a value."""
+        if kv:
+            if values:
+                raise ValueError("pass label values positionally or by "
+                                 "keyword, not both")
+            try:
+                values = tuple(str(kv[k]) for k in self.labelnames)
+            except KeyError as e:
+                raise ValueError(f"missing label {e} for {self.name}; "
+                                 f"schema is {self.labelnames}") from None
+            if len(kv) != len(self.labelnames):
+                extra = set(kv) - set(self.labelnames)
+                raise ValueError(f"unknown labels {sorted(extra)} for "
+                                 f"{self.name}")
+        else:
+            values = tuple(str(v) for v in values)
+        if len(values) != len(self.labelnames):
+            raise ValueError(f"{self.name} wants {len(self.labelnames)} "
+                             f"label values {self.labelnames}, got "
+                             f"{len(values)}")
+        child = self._children.get(values)
+        if child is None:
+            child = self._children[values] = self._make_child()
+        return child
+
+    def _make_child(self):  # pragma: no cover - overridden
+        raise NotImplementedError
+
+    def _default(self):
+        """The label-less child (metrics declared without labels)."""
+        if self.labelnames:
+            raise ValueError(f"{self.name} has labels {self.labelnames}; "
+                             "call .labels(...) first")
+        return self.labels()
+
+    # ---- export ---- #
+    def _label_str(self, values: Tuple[str, ...],
+                   extra: Tuple[Tuple[str, str], ...] = ()) -> str:
+        pairs = list(zip(self.labelnames, values)) + list(extra)
+        if not pairs:
+            return ""
+        inner = ",".join(f'{k}="{v}"' for k, v in pairs)
+        return "{" + inner + "}"
+
+    def expose(self) -> List[str]:
+        lines = [f"# HELP {self.name} {self.help}",
+                 f"# TYPE {self.name} {self.kind}"]
+        for values in sorted(self._children):
+            lines.extend(self._sample_lines(values,
+                                            self._children[values]))
+        return lines
+
+    def _sample_lines(self, values, child) -> List[str]:
+        return [f"{self.name}{self._label_str(values)} "
+                f"{_fmt(child.value)}"]
+
+    def snapshot(self):
+        out = {}
+        for values, child in sorted(self._children.items()):
+            key = ",".join(f"{k}={v}" for k, v
+                           in zip(self.labelnames, values)) or ""
+            out[key] = child.snapshot_value()
+        return out
+
+
+class _CounterChild:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0):
+        if amount < 0:
+            raise ValueError("counters only go up; use a gauge")
+        self.value += amount
+
+    def snapshot_value(self):
+        return self.value
+
+
+class _GaugeChild:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, value: float):
+        self.value = float(value)
+
+    def inc(self, amount: float = 1.0):
+        self.value += amount
+
+    def dec(self, amount: float = 1.0):
+        self.value -= amount
+
+    def snapshot_value(self):
+        return self.value
+
+
+class _HistogramChild:
+    __slots__ = ("buckets", "counts", "count", "total")
+
+    def __init__(self, buckets: Tuple[float, ...]):
+        self.buckets = buckets
+        self.counts = [0] * len(buckets)
+        self.count = 0
+        self.total = 0.0
+
+    def observe(self, value: float):
+        v = float(value)
+        self.count += 1
+        self.total += v
+        for i, edge in enumerate(self.buckets):
+            if v <= edge:
+                self.counts[i] += 1
+
+    def observe_many(self, values: Iterable[float]):
+        """Vectorized fill — one pass per bucket edge, no per-sample
+        Python objects (the path the trace-off latency metrics use)."""
+        import numpy as np
+        arr = np.asarray(list(values) if not hasattr(values, "__len__")
+                         else values, dtype=float)
+        if not len(arr):
+            return
+        self.count += int(len(arr))
+        self.total += float(arr.sum())
+        for i, edge in enumerate(self.buckets):
+            self.counts[i] += int((arr <= edge).sum())
+
+    def snapshot_value(self):
+        return {"count": self.count, "sum": self.total,
+                "buckets": {_fmt(e): c for e, c
+                            in zip(self.buckets, self.counts)}}
+
+
+class Counter(_Metric):
+    kind = "counter"
+
+    def _make_child(self):
+        return _CounterChild()
+
+    def inc(self, amount: float = 1.0):
+        self._default().inc(amount)
+
+
+class Gauge(_Metric):
+    kind = "gauge"
+
+    def _make_child(self):
+        return _GaugeChild()
+
+    def set(self, value: float):
+        self._default().set(value)
+
+    def inc(self, amount: float = 1.0):
+        self._default().inc(amount)
+
+
+class Histogram(_Metric):
+    kind = "histogram"
+
+    def __init__(self, name: str, help_: str,
+                 labelnames: Sequence[str] = (),
+                 buckets: Sequence[float] = DEFAULT_BUCKETS):
+        super().__init__(name, help_, labelnames)
+        self.buckets = tuple(sorted(float(b) for b in buckets))
+
+    def _make_child(self):
+        return _HistogramChild(self.buckets)
+
+    def observe(self, value: float):
+        self._default().observe(value)
+
+    def observe_many(self, values):
+        self._default().observe_many(values)
+
+    def _sample_lines(self, values, child) -> List[str]:
+        lines = []
+        cum = 0
+        for edge, c in zip(child.buckets, child.counts):
+            cum = c  # counts are already cumulative per edge
+            lines.append(f"{self.name}_bucket"
+                         f"{self._label_str(values, (('le', _fmt(edge)),))}"
+                         f" {cum}")
+        lines.append(f"{self.name}_bucket"
+                     f"{self._label_str(values, (('le', '+Inf'),))}"
+                     f" {child.count}")
+        lines.append(f"{self.name}_sum{self._label_str(values)} "
+                     f"{_fmt(child.total)}")
+        lines.append(f"{self.name}_count{self._label_str(values)} "
+                     f"{child.count}")
+        return lines
+
+
+class MetricsRegistry:
+    """A named collection of metrics.  Re-registering an existing name
+    returns the existing metric (so engines/controller/solver can all
+    idempotently declare what they publish) but raises on a kind or
+    label-schema mismatch — silent schema drift is how metrics lie."""
+
+    def __init__(self):
+        self._metrics: Dict[str, _Metric] = {}
+
+    def _register(self, cls, name: str, help_: str, labelnames, **kw):
+        m = self._metrics.get(name)
+        if m is not None:
+            if not isinstance(m, cls) \
+                    or m.labelnames != tuple(labelnames):
+                raise ValueError(
+                    f"metric {name!r} already registered as "
+                    f"{m.kind}{m.labelnames}, cannot re-register as "
+                    f"{cls.kind}{tuple(labelnames)}")
+            return m
+        m = cls(name, help_, labelnames, **kw)
+        self._metrics[name] = m
+        return m
+
+    def counter(self, name: str, help_: str = "",
+                labelnames: Sequence[str] = ()) -> Counter:
+        return self._register(Counter, name, help_, labelnames)
+
+    def gauge(self, name: str, help_: str = "",
+              labelnames: Sequence[str] = ()) -> Gauge:
+        return self._register(Gauge, name, help_, labelnames)
+
+    def histogram(self, name: str, help_: str = "",
+                  labelnames: Sequence[str] = (),
+                  buckets: Sequence[float] = DEFAULT_BUCKETS
+                  ) -> Histogram:
+        m = self._metrics.get(name)
+        if m is None:
+            return self._register(Histogram, name, help_, labelnames,
+                                  buckets=buckets)
+        if not isinstance(m, Histogram) \
+                or m.labelnames != tuple(labelnames):
+            raise ValueError(f"metric {name!r} already registered with a "
+                             "different kind/schema")
+        return m
+
+    def get(self, name: str) -> Optional[_Metric]:
+        return self._metrics.get(name)
+
+    def expose_text(self) -> str:
+        lines: List[str] = []
+        for name in sorted(self._metrics):
+            lines.extend(self._metrics[name].expose())
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def snapshot(self) -> Dict[str, Dict]:
+        return {name: m.snapshot()
+                for name, m in sorted(self._metrics.items())}

@@ -1,0 +1,112 @@
+"""Streaming quantile estimation — the P² (P-squared) algorithm.
+
+When tracing is on, latency percentiles come from the recorder's exact
+column buffers.  When it is off nothing retains the per-request arrays
+past each hour, so the day-level p50/p95/p99 on ``RunResult`` use this
+constant-memory estimator instead (Jain & Chlamtac 1985): five markers
+per quantile, adjusted with a piecewise-parabolic interpolation on
+every observation.  Deterministic — same sample stream, same estimate.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Sequence
+
+__all__ = ["P2Quantile", "StreamingPercentiles"]
+
+
+class P2Quantile:
+    """One streaming quantile (``q`` in (0, 1)) in O(1) memory."""
+
+    def __init__(self, q: float):
+        if not 0.0 < q < 1.0:
+            raise ValueError(f"q must be in (0, 1), got {q}")
+        self.q = float(q)
+        self.n = 0                       # observations seen
+        self._heights: list = []         # marker heights (first 5 samples)
+        self._pos = [1, 2, 3, 4, 5]      # marker positions (1-based)
+        self._desired = [1.0, 1.0 + 2 * q, 1.0 + 4 * q, 3.0 + 2 * q, 5.0]
+        self._inc = [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0]
+
+    def add(self, x: float):
+        x = float(x)
+        self.n += 1
+        h = self._heights
+        if self.n <= 5:
+            h.append(x)
+            h.sort()
+            return
+        # locate the cell, clamping into the marker range
+        if x < h[0]:
+            h[0] = x
+            k = 0
+        elif x >= h[4]:
+            h[4] = x
+            k = 3
+        else:
+            k = 0
+            while k < 3 and x >= h[k + 1]:
+                k += 1
+        for i in range(k + 1, 5):
+            self._pos[i] += 1
+        for i in range(5):
+            self._desired[i] += self._inc[i]
+        # adjust interior markers
+        for i in (1, 2, 3):
+            d = self._desired[i] - self._pos[i]
+            if (d >= 1 and self._pos[i + 1] - self._pos[i] > 1) or \
+                    (d <= -1 and self._pos[i - 1] - self._pos[i] < -1):
+                d = 1 if d > 0 else -1
+                hp = self._parabolic(i, d)
+                if not h[i - 1] < hp < h[i + 1]:
+                    hp = self._linear(i, d)
+                h[i] = hp
+                self._pos[i] += d
+
+    def _parabolic(self, i: int, d: int) -> float:
+        h, p = self._heights, self._pos
+        return h[i] + d / (p[i + 1] - p[i - 1]) * (
+            (p[i] - p[i - 1] + d) * (h[i + 1] - h[i])
+            / (p[i + 1] - p[i])
+            + (p[i + 1] - p[i] - d) * (h[i] - h[i - 1])
+            / (p[i] - p[i - 1]))
+
+    def _linear(self, i: int, d: int) -> float:
+        h, p = self._heights, self._pos
+        return h[i] + d * (h[i + d] - h[i]) / (p[i + d] - p[i])
+
+    def extend(self, xs: Iterable[float]):
+        for x in xs:
+            self.add(x)
+
+    @property
+    def value(self) -> float:
+        """Current estimate (exact order statistic while n <= 5)."""
+        h = self._heights
+        if not h:
+            return 0.0
+        if self.n <= 5:
+            # exact small-sample quantile (nearest-rank)
+            idx = min(int(self.q * self.n), self.n - 1)
+            return float(h[idx])
+        return float(h[2])
+
+
+class StreamingPercentiles:
+    """A labelled bundle of P² estimators (default p50/p95/p99) fed with
+    per-hour sample arrays; ``values()`` returns ``{"p50": ..., ...}``."""
+
+    def __init__(self, qs: Sequence[float] = (0.50, 0.95, 0.99)):
+        self._est = {q: P2Quantile(q) for q in qs}
+
+    def extend(self, xs: Iterable[float]):
+        xs = list(xs)
+        for est in self._est.values():
+            est.extend(xs)
+
+    @property
+    def n(self) -> int:
+        return next(iter(self._est.values())).n if self._est else 0
+
+    def values(self) -> Dict[str, float]:
+        return {f"p{round(q * 100):d}": est.value
+                for q, est in self._est.items()}

@@ -145,7 +145,8 @@ def hash_ring(n_replicas: int, vnodes: int = _VNODES) -> HashRing:
 
 
 def _sim_priority(a: np.ndarray, s: np.ndarray, p: np.ndarray,
-                  pre: np.ndarray, free0: float):
+                  pre: np.ndarray, free0: float,
+                  on_preempt=None):
     """Single-replica priority queue for a multi-tier request stream:
     the server always picks the lowest ``p`` (ties FIFO by arrival), a
     non-preemptible job in service runs to completion, and a
@@ -187,6 +188,9 @@ def _sim_priority(a: np.ndarray, s: np.ndarray, p: np.ndarray,
                     i += 1
                     heapq.heappush(heap, (pr, j))
                     preempted = True
+                    if on_preempt is not None:
+                        # flight recorder: (when, which request, work left)
+                        on_preempt(t, j, float(rem[j]))
                     break
                 heapq.heappush(heap, (int(p[i]), i))
                 i += 1
@@ -254,6 +258,15 @@ class ClusterEngine:
         # weightless path.
         self.tier_weights = dict(tier_weights) if tier_weights else None
         self._pending_kwh = 0.0        # transition energy awaiting a window
+        # flight recorder (repro.obs.trace.TraceRecorder): attached by the
+        # controller (or directly) to record per-request span rows.  None
+        # (the default) skips every recording branch — the bit-identity
+        # contract.  ``obs_region`` labels this engine's rows/events in
+        # geo-distributed runs.
+        self.recorder = None
+        self.obs_region = ""
+        self._last_ret = None          # recorder-only: last account codes
+        self._last_hit_tier = None     # recorder-only: tiered hit tiers
         if types is not None:
             types = [str(t) for t in types]
             for t in types:
@@ -553,6 +566,7 @@ class ClusterEngine:
                 st = self.stores[k]
                 st.stats.evictions += 1
                 st.stats.evicted_bytes += entry.size_bytes
+                st.stats.count_eviction("rebalance")
                 applied.dropped_keys += 1
                 continue
             applied.migrated_bytes += entry.size_bytes
@@ -566,6 +580,7 @@ class ClusterEngine:
                 # (cold mode does) so store stats stay comparable
                 self.stores[k].stats.evictions += 1
                 self.stores[k].stats.evicted_bytes += entry.size_bytes
+                self.stores[k].stats.count_eviction("rebalance")
                 applied.dropped_keys += 1
         if applied.migrated_bytes > 0.0 and not cfg.is_free:
             applied.energy_kwh += kv_migration_energy_kwh(
@@ -732,6 +747,7 @@ class ClusterEngine:
             dropped = len(dead.entries)
             dead.stats.evictions += dropped
             dead.stats.evicted_bytes += dead.used_bytes
+            dead.stats.count_eviction("failure", dropped)
         self._free.pop(i)
         fleet = [t for j, t in enumerate(self.types) if j != i] \
             if self.types is not None else None
@@ -823,6 +839,8 @@ class ClusterEngine:
                 bool, count=n)
 
         self._mark_wear()
+        self._last_ret = None
+        self._last_hit_tier = None
         if self.router == "least_loaded":
             assign, reused, ttft, finish_max, kv_load_s = \
                 self._run_sequential(requests, arrival, prompt)
@@ -867,9 +885,19 @@ class ClusterEngine:
                 a = arrival[idx]
                 s = service[idx]
                 if prio is not None:
+                    cb = None
+                    if self.recorder is not None:
+                        il = idx.tolist()
+                        cb = (lambda t, j, rem, _k=k, _il=il:
+                              self.recorder.record_event(
+                                  "preempt", t, region=self.obs_region,
+                                  replica=_k,
+                                  rid=int(requests[_il[j]].rid),
+                                  remaining_s=rem))
                     f_last, fin = _sim_priority(a, s, prio[idx],
                                                 preempt[idx],
-                                                self._free[k])
+                                                self._free[k],
+                                                on_preempt=cb)
                     ttft[idx] = fin - a
                     self._free[k] = f_last
                     finish_max = max(finish_max, f_last)
@@ -978,6 +1006,10 @@ class ClusterEngine:
         emb_cache = self._cache_embodied(cache_tb, duration)
         emb_comp = self.carbon.compute_embodied_g(duration, n_replicas=K,
                                                   types=self.types)
+        if self.recorder is not None:
+            self._record_window(requests, arrival, out, prompt, reused,
+                                uncached, assign, ttft, tpots, e_req,
+                                ci_avg, kv_load_s)
         tiers_arr, work_arr, ten_arr = _tier_arrays(requests, uncached,
                                                     out, record)
         return SimResult(
@@ -989,6 +1021,70 @@ class ClusterEngine:
             token_hit_rate=hit_tokens / max(lookup_tokens, 1),
             gpu_util=util, num_requests=n, n_replicas=K,
             tiers=tiers_arr, work=work_arr, tenants=ten_arr)
+
+    # ------------------------------------------------------------------ #
+    def _record_window(self, requests: Sequence, arrival: np.ndarray,
+                       out: np.ndarray, prompt: np.ndarray,
+                       reused: np.ndarray, uncached: np.ndarray,
+                       assign: np.ndarray, ttft: np.ndarray,
+                       tpots: np.ndarray, e_req: float, ci_avg: float,
+                       kv_load_s: Optional[np.ndarray],
+                       extra_ttft_s=0.0):
+        """Emit this window's span rows to the attached flight recorder.
+        Only ever called when ``self.recorder`` is set (the detached
+        default skips the branch entirely — the bit-identity contract),
+        and everything here reads arrays the window already produced."""
+        from repro.obs.trace import HIT_KIND_CODES
+
+        rec = self.recorder
+        m = self.model
+        n = len(requests)
+        ctx = np.fromiter((r.context_tokens for r in requests),
+                          np.int64, count=n)
+        # HitKind from the stashed raw account() returns when the window
+        # went through an _account* pass; the least_loaded router calls
+        # account() inline, so there we reconstruct hit/partial/miss from
+        # matched-vs-context alone (too_large/rejected fold into miss)
+        kinds = np.full(n, HIT_KIND_CODES["miss"], dtype=np.int8)
+        ret = self._last_ret
+        if ret is not None and len(ret) == n:
+            kinds[ret == -2] = HIT_KIND_CODES["too_large"]
+            kinds[ret == -3] = HIT_KIND_CODES["rejected"]
+        pos = reused > 0
+        kinds[pos & (reused < ctx)] = HIT_KIND_CODES["partial"]
+        kinds[pos & (reused >= ctx)] = HIT_KIND_CODES["hit"]
+        hit_tier = self._last_hit_tier
+        if hit_tier is not None and len(hit_tier) != n:
+            hit_tier = None
+
+        if self._hetero:
+            prefill_s = (m.prefill_base_s
+                         + uncached / m.prefill_tok_per_s) \
+                / self._scales[assign]
+        else:
+            prefill_s = (m.prefill_base_s
+                         + uncached / m.prefill_tok_per_s) \
+                / self._uniform_scale
+        if kv_load_s is None:
+            kv_load_s = reused * m.kv_bytes_per_token \
+                / (self._kv_gbps * 1e9)
+        queue_s = np.clip(ttft - prefill_s - kv_load_s - extra_ttft_s,
+                          0.0, None)
+
+        tl = [r.tier for r in requests]
+        tiers = tl if len(set(tl)) > 1 or tl[0] != DEFAULT_TIER else None
+        tenants = [r.tenant or "" for r in requests] \
+            if any(r.tenant for r in requests) else None
+        rec.record_window(
+            rids=np.fromiter((r.rid for r in requests), np.int64,
+                             count=n),
+            arrival=arrival, ttft=ttft, tpot=tpots,
+            prefill_s=prefill_s, kv_load_s=kv_load_s, queue_s=queue_s,
+            prompt_tokens=prompt, output_tokens=out,
+            matched_tokens=reused, hit_kind=kinds, hit_tier=hit_tier,
+            replica=assign, energy_j_per_req=e_req * 3.6e6,
+            ci_g_per_kwh=ci_avg, region=self.obs_region,
+            tiers=tiers, tenants=tenants)
 
     # ------------------------------------------------------------------ #
     # typed-storage accounting (all no-ops when ``storage is None``)
@@ -1050,6 +1146,8 @@ class ClusterEngine:
         kv_load = np.empty(n)
         al, cl, pl = arrival.tolist(), ctx.tolist(), prompt.tolist()
         tw = self.tier_weights
+        hit_tiers = np.empty(n, dtype=np.int8) \
+            if self.recorder is not None else None
         for i, (r, a, c, p) in enumerate(zip(requests, al, cl, pl)):
             ret = acct(r.context_key, c, p, a, r.turn, False) \
                 if tw is None else \
@@ -1059,6 +1157,11 @@ class ClusterEngine:
             ru = ret if ret >= 0 else 0
             kv_load[i] = ru * kv_bpt / bw[1 if st.last_hit_tier > 0
                                           else 0]
+            if hit_tiers is not None:
+                hit_tiers[i] = st.last_hit_tier
+        if self.recorder is not None:
+            self._last_ret = rets
+            self._last_hit_tier = hit_tiers
         reused = np.maximum(rets, 0)
         # batched stats from the encoded returns (>=0 hit, -1 inserted)
         s = st.stats
@@ -1155,6 +1258,8 @@ class ClusterEngine:
                  for r, k, a, c, p in zip(requests, assign.tolist(),
                                           al, cl, pl)),
                 np.int64, count=n)
+        if self.recorder is not None:
+            self._last_ret = ret
         reused = np.maximum(ret, 0)
         # batched stats from the encoded returns (>=0 hit, -1 inserted)
         for k, st in enumerate(self.stores):
@@ -1204,6 +1309,8 @@ class ClusterEngine:
                  for r, k, a, c, p in zip(requests, assign.tolist(),
                                           al, cl, pl)),
                 np.int64, count=n)
+        if self.recorder is not None:
+            self._last_ret = ret
         return np.maximum(ret, 0)
 
     def _run_sequential(self, requests: Sequence, arrival: np.ndarray,
@@ -1498,6 +1605,12 @@ class DisaggEngine(ClusterEngine):
         emb_cache = self._cache_embodied(cache_tb, duration)
         emb_comp = self.carbon.compute_embodied_g(duration,
                                                   types=plan.all_types)
+        if self.recorder is not None:
+            # the KV handoff already inside ttft is not queueing time
+            self._record_window(requests, arrival, out, prompt, reused,
+                                uncached, assign, ttft, tpots, e_req,
+                                ci_avg, kv_load_s,
+                                extra_ttft_s=prompt * xfer_s_tok)
         util = (Kp * util_p + Kd * util_d) / (Kp + Kd)
         tiers_arr, work_arr, ten_arr = _tier_arrays(requests, uncached,
                                                     out, record)

@@ -84,6 +84,9 @@ class SimResult:
         attainment against the *tier's own* latency budget, and gCO2e
         attributed by each request's share of the work (uncached prefill
         plus output tokens — the tokens the fleet actually computed).
+        The float-rounding residual is folded into the last tier (as in
+        ``per_tenant``) so the tier cut partitions ``carbon_g`` exactly —
+        the carbon-ledger audit treats any larger residual as an error.
         Empty dict on single-tier runs where ``tiers`` was not recorded."""
         if self.tiers is None or not len(self.ttft):
             return {}
@@ -98,8 +101,16 @@ class SimResult:
                 & (self.tpot[mask] <= ts.tpot_s)
             g = self.carbon_g * float(self.work[mask].sum()) / total_work
             out[str(t)] = {"requests": n, "slo_frac": float(ok.mean()),
-                           "carbon_g": g,
-                           "g_per_request": g / max(n, 1)}
+                           "carbon_g": g}
+        last = next(reversed(out))
+        for _ in range(8):
+            resid = self.carbon_g \
+                - sum(d["carbon_g"] for d in out.values())
+            if resid == 0.0:
+                break
+            out[last]["carbon_g"] += resid
+        for d in out.values():
+            d["g_per_request"] = d["carbon_g"] / max(d["requests"], 1)
         return out
 
     def per_tenant(self, slo: SLO) -> dict:
@@ -145,12 +156,36 @@ class SimResult:
         return out
 
 
+def _check_conservation(merged: "SimResult"):
+    """Carbon/attribution conservation self-check on every merge (cheap,
+    read-only, on by default): the component carbons must re-sum to the
+    bill within float dust, and every per-request attribution array must
+    cover every merged request.  A violation is the PR-8 bug class
+    (dropped arrays, mispriced components) and raises ``LedgerError``."""
+    from repro.obs.ledger import LedgerError
+    comp = merged.operational_g + merged.embodied_cache_g \
+        + merged.embodied_compute_g
+    scale = max(abs(merged.carbon_g), abs(comp), 1e-12)
+    if abs(merged.carbon_g - comp) > 1e-9 * scale:
+        raise LedgerError(
+            f"combine_results dropped carbon: components sum to "
+            f"{comp:.9g}, bill is {merged.carbon_g:.9g}")
+    n = len(merged.ttft)
+    for name in ("tiers", "work", "tenants"):
+        arr = getattr(merged, name)
+        if arr is not None and len(arr) != n:
+            raise LedgerError(
+                f"combine_results merged {name} covers {len(arr)} of "
+                f"{n} requests — attribution would drop carbon")
+
+
 def combine_results(a: SimResult, b: SimResult) -> SimResult:
     """Merge two sequential segment results into one hour-level result —
     used when a mid-hour event (replica failure, storage degradation)
     splits the request stream. Totals add; rates are weighted by their
     natural denominators (tokens looked up -> request count proxy,
-    busy time -> duration)."""
+    busy time -> duration). The merged result is conservation-checked
+    (``_check_conservation``) before being returned."""
     if a.num_requests == 0:
         return b
     if b.num_requests == 0:
@@ -181,7 +216,7 @@ def combine_results(a: SimResult, b: SimResult) -> SimResult:
         tenants = np.concatenate(
             [a.tenants if a.tenants is not None else fa,
              b.tenants if b.tenants is not None else fb])
-    return SimResult(
+    merged = SimResult(
         ttft=np.concatenate([a.ttft, b.ttft]),
         tpot=np.concatenate([a.tpot, b.tpot]),
         energy_kwh=a.energy_kwh + b.energy_kwh,
@@ -196,6 +231,8 @@ def combine_results(a: SimResult, b: SimResult) -> SimResult:
                   + b.gpu_util * b.duration_s) / max(dur, 1e-9),
         num_requests=n, n_replicas=b.n_replicas,
         tiers=tiers, work=work, tenants=tenants)
+    _check_conservation(merged)
+    return merged
 
 
 class ServingEngine:

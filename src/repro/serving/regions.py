@@ -38,6 +38,15 @@ from repro.serving.cluster import _stable_hash
 _U64 = float(1 << 64)
 
 
+class GeoOverloadWarning(UserWarning):
+    """A realized region split exceeded the region's provisioned
+    within-SLO capacity for the hour — the router sent more traffic than
+    the plan the solver picked can serve at the attainment target.
+    Raised as a *warning* (the hour still simulates; the SLO miss shows
+    up in the record) so forecast-miss hours surface instead of passing
+    silently."""
+
+
 # --------------------------------------------------------------------- #
 # Region spec
 # --------------------------------------------------------------------- #
@@ -210,6 +219,7 @@ class GeoCluster:
         self.vectors: Dict[Tuple[int, float],
                            Tuple[np.ndarray, np.ndarray]] = {}
         self.ledgers: List[GeoHourLedger] = []
+        self.recorder = None    # optional repro.obs.trace.TraceRecorder
 
     @property
     def n_regions(self) -> int:
@@ -330,6 +340,13 @@ class GeoCluster:
                                           self.cfg.inter_region_gbps)
             ledger.migration_kwh += kwh
             self.engines[dst].defer_energy_kwh(kwh)
+            if self.recorder is not None:
+                self.recorder.record_event(
+                    "wan_migrate", now,
+                    region=self.regions[src].name,
+                    dst=self.regions[dst].name,
+                    bytes=pair_moved, energy_kwh=kwh,
+                    carbon_g=kwh * float(hour_cis[dst]))
 
     # ---- failover ---- #
     def capacity_fractions(self,

@@ -12,10 +12,20 @@ the committed ``benchmarks/baselines/BENCH_perf_baseline.json``:
      regression fails the job;
   3. the cached re-solve (``resolve_s_cached``) gets the same bound.
 
-Absolute times differ across runners, so the gate is a *ratio* against
-a baseline recorded under the same smoke instance sizes; refresh the
-baseline (copy the fresh artifact over it) when the engine gets
-intentionally slower-but-better.
+When a fresh ``BENCH_trace.json`` (from
+``python -m benchmarks.tracing_overhead``) is present, it additionally
+gates the flight recorder:
+
+  4. every engine family's ``bit_identical`` flag must be true —
+     tracing off/on must reproduce the same day (the observability
+     contract);
+  5. no family's ``overhead_ratio`` (traced wall clock over untraced)
+     may exceed ``--max-trace-overhead`` (default 1.10).
+
+Absolute times differ across runners, so the solve-time gate is a
+*ratio* against a baseline recorded under the same smoke instance
+sizes; refresh the baselines (copy the fresh artifacts over them) when
+the engine gets intentionally slower-but-better.
 
 Exit code 0 on success, 1 with a per-problem report otherwise.
 """
@@ -29,6 +39,37 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 
 
+def check_trace(current: Path, baseline: Path,
+                max_overhead: float) -> list:
+    """Flight-recorder gate over ``BENCH_trace.json``: bit-identity is
+    mandatory per engine family, traced-over-untraced wall clock is
+    bounded by ``max_overhead`` (the committed baseline is printed for
+    context — the bound itself is absolute, since tracing's cost model
+    does not depend on runner speed)."""
+    problems = []
+    cur = json.loads(Path(current).read_text())
+    base = {}
+    if Path(baseline).exists():
+        base = json.loads(Path(baseline).read_text()).get("configs", {})
+    for name, c in sorted(cur.get("configs", {}).items()):
+        if not c.get("bit_identical", False):
+            problems.append(f"tracing {name}: bit_identical is false — "
+                            f"attaching the recorder changed the day's "
+                            f"numbers (correctness, not perf)")
+        ratio = c["overhead_ratio"]
+        ref = base.get(name, {}).get("overhead_ratio")
+        line = (f"tracing {name}: overhead {ratio:.3f}x "
+                f"({c['spans']} spans"
+                + (f", baseline {ref:.3f}x" if ref is not None else "")
+                + ")")
+        if ratio > max_overhead:
+            problems.append(f"{line} exceeds --max-trace-overhead "
+                            f"{max_overhead}")
+        else:
+            print(line)
+    return problems
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--current",
@@ -37,6 +78,12 @@ def main() -> int:
                     default=REPO / "benchmarks/baselines/"
                                    "BENCH_perf_baseline.json")
     ap.add_argument("--max-ratio", type=float, default=2.0)
+    ap.add_argument("--trace-current",
+                    default=REPO / "experiments/results/BENCH_trace.json")
+    ap.add_argument("--trace-baseline",
+                    default=REPO / "benchmarks/baselines/"
+                                   "BENCH_trace_baseline.json")
+    ap.add_argument("--max-trace-overhead", type=float, default=1.10)
     args = ap.parse_args()
 
     cur = json.loads(Path(args.current).read_text())
@@ -75,6 +122,12 @@ def main() -> int:
                             f"{args.max_ratio}")
         else:
             print(line)
+
+    if Path(args.trace_current).exists():
+        problems += check_trace(args.trace_current, args.trace_baseline,
+                                args.max_trace_overhead)
+    else:
+        print(f"no {args.trace_current}, skipping tracing-overhead gate")
 
     for p in problems:
         print(f"PERF FAIL: {p}", file=sys.stderr)

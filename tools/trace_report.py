@@ -1,0 +1,143 @@
+#!/usr/bin/env python3
+"""Render a flight-recorder JSONL trace (``serve.py --trace out.jsonl``)
+as a terminal report — stdlib only, no repo imports, so it works on any
+machine the trace file lands on.
+
+    python tools/trace_report.py out.jsonl [--buckets 24] [--events]
+
+Sections:
+
+  1. day summary — request count, cache-outcome mix, span-time budget
+     (queue / KV load / prefill / decode), energy and operational
+     carbon, p50/p95/p99 TTFT and TPOT;
+  2. per-bucket timeline — one row per wall-clock bucket (default
+     hourly): requests, hit %, p95 TTFT, mean queue, attributed gCO₂e;
+  3. control-plane events (``--events`` lists every one; the summary
+     always counts them by kind).
+
+The Chrome twin (``out.trace.json``) opens in chrome://tracing or
+https://ui.perfetto.dev for the zoomable per-replica span view.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import Counter
+from pathlib import Path
+
+
+def pct(sorted_vals, q: float) -> float:
+    """Linear-interpolated percentile of a pre-sorted list (the same
+    definition as ``numpy.percentile``)."""
+    if not sorted_vals:
+        return 0.0
+    k = (len(sorted_vals) - 1) * q / 100.0
+    lo = int(k)
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    return sorted_vals[lo] + (sorted_vals[hi] - sorted_vals[lo]) * (k - lo)
+
+
+def load(path: str):
+    reqs, events = [], []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            row = json.loads(line)
+            (events if row.get("type") == "event" else reqs).append(row)
+    return reqs, events
+
+
+def fmt_s(x: float) -> str:
+    return f"{x * 1000:.0f}ms" if x < 1.0 else f"{x:.2f}s"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="render a GreenCache span trace")
+    ap.add_argument("trace", help="JSONL trace from serve.py --trace")
+    ap.add_argument("--buckets", type=int, default=24,
+                    help="timeline rows (arrival range split evenly)")
+    ap.add_argument("--events", action="store_true",
+                    help="list every control-plane event")
+    args = ap.parse_args(argv)
+
+    if not Path(args.trace).exists():
+        print(f"no such trace: {args.trace}", file=sys.stderr)
+        return 1
+    reqs, events = load(args.trace)
+    if not reqs:
+        print("trace holds no request rows")
+        return 0
+
+    # ---- day summary ---- #
+    n = len(reqs)
+    kinds = Counter(r["hit_kind"] for r in reqs)
+    spans = {k: sum(r[k] for r in reqs)
+             for k in ("queue_s", "kv_load_s", "prefill_s", "decode_s")}
+    energy_kwh = sum(r["energy_j"] for r in reqs) / 3.6e6
+    carbon_g = sum(r["carbon_g"] for r in reqs)
+    matched = sum(r["matched_tokens"] for r in reqs)
+    prompt = sum(r["prompt_tokens"] for r in reqs)
+    ttft = sorted(r["ttft_s"] for r in reqs)
+    tpot = sorted(r["tpot_s"] for r in reqs)
+    regions = sorted({r["region"] for r in reqs} - {""})
+
+    print(f"trace: {args.trace}")
+    print(f"  requests      {n}"
+          + (f"   regions {', '.join(regions)}" if regions else ""))
+    mix = "  ".join(f"{k}={v} ({v / n * 100:.0f}%)"
+                    for k, v in kinds.most_common())
+    print(f"  cache         {mix}")
+    if prompt:
+        print(f"  token reuse   {matched}/{prompt} prompt tokens "
+              f"({matched / prompt * 100:.1f}%)")
+    total_span = sum(spans.values()) or 1.0
+    budget = "  ".join(
+        f"{k[:-2]}={v:.0f}s ({v / total_span * 100:.0f}%)"
+        for k, v in spans.items())
+    print(f"  span budget   {budget}")
+    print(f"  energy        {energy_kwh:.3f} kWh   "
+          f"operational carbon {carbon_g:.1f} g")
+    print(f"  TTFT          p50={fmt_s(pct(ttft, 50))}  "
+          f"p95={fmt_s(pct(ttft, 95))}  p99={fmt_s(pct(ttft, 99))}")
+    print(f"  TPOT          p50={fmt_s(pct(tpot, 50))}  "
+          f"p95={fmt_s(pct(tpot, 95))}  p99={fmt_s(pct(tpot, 99))}")
+
+    # ---- timeline ---- #
+    t0 = min(r["arrival_s"] for r in reqs)
+    t1 = max(r["arrival_s"] for r in reqs)
+    width = max((t1 - t0) / max(args.buckets, 1), 1e-9)
+    buckets: dict[int, list] = {}
+    for r in reqs:
+        b = min(int((r["arrival_s"] - t0) / width), args.buckets - 1)
+        buckets.setdefault(b, []).append(r)
+    print(f"\n  {'bucket':>6} {'t_start':>9} {'reqs':>6} {'hit%':>6} "
+          f"{'p95 TTFT':>9} {'avg queue':>10} {'gCO2e':>8}")
+    for b in sorted(buckets):
+        rows = buckets[b]
+        hits = sum(1 for r in rows if r["hit_kind"] in ("hit", "partial"))
+        tt = sorted(r["ttft_s"] for r in rows)
+        qs = sum(r["queue_s"] for r in rows) / len(rows)
+        cg = sum(r["carbon_g"] for r in rows)
+        print(f"  {b:>6} {t0 + b * width:>8.0f}s {len(rows):>6} "
+              f"{hits / len(rows) * 100:>5.0f}% {fmt_s(pct(tt, 95)):>9} "
+              f"{fmt_s(qs):>10} {cg:>8.2f}")
+
+    # ---- events ---- #
+    if events:
+        ev_kinds = Counter(e["kind"] for e in events)
+        summary = "  ".join(f"{k}={v}" for k, v in ev_kinds.most_common())
+        print(f"\n  events        {summary}")
+        if args.events:
+            for e in sorted(events, key=lambda e: e["ts"]):
+                extra = " ".join(f"{k}={v}" for k, v in e.items()
+                                 if k not in ("kind", "ts", "type"))
+                print(f"    t={e['ts']:>8.0f}s  {e['kind']:<16} {extra}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
